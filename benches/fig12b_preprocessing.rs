@@ -1,0 +1,38 @@
+//! Bench for Fig. 12(b): regenerates the preprocessing-energy table and
+//! times both the analytic sweep and the *bit-exact* engine simulation of
+//! one tile (the expensive path the analytic model summarizes).
+//!
+//! Run with: `cargo bench --bench fig12b_preprocessing`
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::cim::apd_cim::{ApdCim, ApdCimConfig};
+use pc2im::cim::max_cam::{CamArray, CamConfig};
+use pc2im::coordinator::Pipeline;
+use pc2im::experiments;
+use pc2im::pointcloud::synthetic::make_street_cloud;
+use pc2im::quant::quantize_cloud;
+
+fn main() {
+    // the figure itself
+    experiments::run("fig12b", "artifacts").unwrap();
+
+    harness::header("Fig. 12(b) machinery");
+    harness::bench("analytic 3-scale preprocessing-energy sweep", 50, || {
+        pc2im::experiments::fig12b::preprocessing_energy()
+    });
+
+    let tile = quantize_cloud(&make_street_cloud(2048, 3));
+    harness::bench("bit-exact APD+CAM FPS, 2048-pt tile, 512 samples", 5, || {
+        let mut apd = ApdCim::new(ApdCimConfig::default());
+        apd.load_tile(&tile);
+        let mut cam = CamArray::new(CamConfig::default());
+        Pipeline::cam_fps(&mut apd, &mut cam, 512, 0)
+    });
+    harness::bench("APD-CIM single full-array scan (2048 dists)", 200, || {
+        let mut apd = ApdCim::new(ApdCimConfig::default());
+        apd.load_tile(&tile);
+        apd.scan_distances(0)
+    });
+}

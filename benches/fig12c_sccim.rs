@@ -1,0 +1,31 @@
+//! Bench for Fig. 12(c): regenerates the CIM design-metric sweep and times
+//! the bit-exact MAC datapaths (SC vs BS vs BT) on identical dot products.
+//!
+//! Run with: `cargo bench --bench fig12c_sccim`
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::cim::bs_cim::BsCim;
+use pc2im::cim::bt_cim::BtCim;
+use pc2im::cim::sc_cim::{ScCim, ScCimConfig};
+use pc2im::experiments;
+use pc2im::rng::Rng64;
+
+fn main() {
+    experiments::run("fig12c", "artifacts").unwrap();
+
+    let mut rng = Rng64::new(1);
+    let x: Vec<u16> = (0..4096).map(|_| rng.next_u64() as u16).collect();
+    let w: Vec<i16> = (0..4096).map(|_| rng.next_u64() as i16).collect();
+
+    harness::header("bit-exact MAC datapath simulations (4096-elem dot)");
+    harness::bench("SC-CIM  (4-bit cluster select/concat)", 50, || {
+        ScCim::new(ScCimConfig::default()).dot(&x, &w)
+    });
+    harness::bench("BS-CIM  (bit-serial)", 50, || BsCim::new().dot(&x, &w));
+    harness::bench("BT-CIM  (radix-4 Booth)", 50, || BtCim::new().dot(&x, &w));
+    harness::bench("FoM sweep across 6 SCR points", 200, || {
+        pc2im::experiments::fig12c::SCRS.map(pc2im::experiments::fig12c::sweep_point)
+    });
+}

@@ -1,0 +1,42 @@
+//! Bench for Fig. 13(a)/(b): regenerates the system-level latency and
+//! energy tables and times the end-to-end classifier pipeline (the real
+//! request path: CIM preprocessing + PJRT feature computing).
+//!
+//! Run with: `cargo bench --bench fig13a_system`
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::config::PipelineConfig;
+use pc2im::coordinator::Pipeline;
+use pc2im::experiments;
+use pc2im::pointcloud::synthetic::make_class_cloud;
+
+fn main() {
+    experiments::run("fig13a", "artifacts").unwrap();
+    println!();
+    experiments::run("fig13b", "artifacts").unwrap();
+
+    harness::header("end-to-end request path (1024-pt cloud)");
+    harness::bench("analytic 3-scale latency sweep", 100, || {
+        pc2im::experiments::fig13a::latencies()
+    });
+
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        let mut approx = Pipeline::new(PipelineConfig::default()).unwrap();
+        let cloud = make_class_cloud(2, approx.meta().model.n_points, 77);
+        harness::bench("full pipeline classify (approx L1 + PJRT)", 10, || {
+            approx.classify(&cloud).unwrap()
+        });
+        let mut exact = Pipeline::new(PipelineConfig {
+            exact_sampling: true,
+            ..PipelineConfig::default()
+        })
+        .unwrap();
+        harness::bench("full pipeline classify (exact L2 + PJRT)", 10, || {
+            exact.classify(&cloud).unwrap()
+        });
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench for Fig. 13(c): regenerates the GPU-vs-PC2IM comparison and
+//! sweeps the GPU-model sensitivity (how the headline ratios move with the
+//! calibration constants — the honesty check for an analytic baseline).
+//!
+//! Run with: `cargo bench --bench fig13c_gpu`
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::accel::gpu::{GpuModel, GpuParams};
+use pc2im::accel::{Accelerator, Pc2imModel};
+use pc2im::config::HardwareConfig;
+use pc2im::experiments;
+use pc2im::network::pointnet2::NetworkDef;
+
+fn main() {
+    experiments::run("fig13c", "artifacts").unwrap();
+
+    // sensitivity: halve/double each GPU constant, report the ratio band
+    println!("\nGPU-model sensitivity (speedup x / energy-eff x vs PC2IM @16k):");
+    let hw = HardwareConfig::default();
+    let net = NetworkDef::pointnet2_s(16384);
+    let pc = Pc2imModel.run(&net, &hw);
+    let pc_lat = pc.latency_s(&hw);
+    let pc_e = pc.energy_pj(&hw.energy()) * 1e-12;
+    for (label, params) in [
+        ("baseline calibration", GpuParams::default()),
+        ("2x faster dist kernels", GpuParams { dist_evals_per_s: 2.4e11, ..GpuParams::default() }),
+        ("0.5x dist kernels", GpuParams { dist_evals_per_s: 0.6e11, ..GpuParams::default() }),
+        ("2x MLP throughput", GpuParams { mlp_macs_per_s: 8.0e12, ..GpuParams::default() }),
+        ("450 W TGP draw", GpuParams { power_w: 450.0, ..GpuParams::default() }),
+    ] {
+        let gpu = GpuModel { params };
+        println!(
+            "  {label:24} {:5.1}x / {:6.0}x",
+            gpu.latency_s(&net) / pc_lat,
+            gpu.energy_j(&net) / pc_e
+        );
+    }
+
+    harness::header("model evaluation costs");
+    harness::bench("GPU analytic model (16k cloud)", 1000, || {
+        GpuModel::default().latency_s(&net)
+    });
+    harness::bench("PC2IM analytic model (16k cloud)", 1000, || {
+        Pc2imModel.run(&net, &hw)
+    });
+}

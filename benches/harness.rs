@@ -1,0 +1,45 @@
+//! Criterion-lite timing harness shared by all bench targets (criterion is
+//! not in the offline vendored crate set). Each bench is a `harness =
+//! false` binary that includes this file via `#[path]`.
+
+use std::time::Instant;
+
+/// Time `f` with warmup; prints min/mean/max over `iters` runs and returns
+/// the mean seconds.
+pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
+    // warmup
+    std::hint::black_box(f());
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!(
+        "{name:56} {:>10} {:>10} {:>10}   ({iters} iters)",
+        fmt(min),
+        fmt(mean),
+        fmt(max)
+    );
+    mean
+}
+
+pub fn header(title: &str) {
+    println!("\n### {title}");
+    println!("{:56} {:>10} {:>10} {:>10}", "benchmark", "min", "mean", "max");
+}
+
+fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}

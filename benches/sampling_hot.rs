@@ -1,0 +1,48 @@
+//! Hot-path benches for the L3 coordinator's software substrate: FPS,
+//! MSP, queries and the bit-exact engine inner loops — the profile targets
+//! of EXPERIMENTS.md §Perf.
+//!
+//! Run with: `cargo bench --bench sampling_hot`
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::cim::max_cam::{CamArray, CamConfig};
+use pc2im::pointcloud::synthetic::{make_street_cloud, make_workload_cloud, DatasetScale};
+use pc2im::quant::quantize_cloud;
+use pc2im::rng::Rng64;
+use pc2im::sampling::{ball_query, fps_l1_grid, fps_l2, lattice_query, msp_partition};
+
+fn main() {
+    let cloud = make_workload_cloud(DatasetScale::Small, 3);
+    let big = make_street_cloud(16384, 4);
+    let q = quantize_cloud(&cloud);
+
+    harness::header("sampling substrate");
+    harness::bench("exact L2 FPS, 1024 -> 256", 20, || fps_l2(&cloud.points, 256, 0));
+    harness::bench("grid L1 FPS, 1024 -> 256", 20, || fps_l1_grid(&q, 256, 0));
+    harness::bench("MSP partition, 16k -> 2k tiles", 50, || msp_partition(&big, 2048));
+    let (centroids, _) = fps_l2(&cloud.points, 256, 0);
+    harness::bench("ball query, 256 centroids x 1024 pts, k=32", 20, || {
+        ball_query(&cloud.points, &centroids, 0.2, 32)
+    });
+    harness::bench("lattice query, 256 centroids x 1024 pts, k=32", 20, || {
+        lattice_query(&cloud.points, &centroids, 0.2, 32)
+    });
+
+    harness::header("CAM inner loops");
+    let mut rng = Rng64::new(9);
+    let tds: Vec<u32> = (0..2048).map(|_| rng.below(1 << 19) as u32).collect();
+    harness::bench("bit-CAM max search over 2048 TDs", 200, || {
+        let mut cam = CamArray::new(CamConfig::default());
+        cam.load_initial(&tds);
+        cam.bit_cam_max()
+    });
+    harness::bench("2048 CAM min-updates", 200, || {
+        let mut cam = CamArray::new(CamConfig::default());
+        cam.load_initial(&tds);
+        for j in 0..2048 {
+            cam.update_min(j, tds[(j * 7 + 13) % 2048]);
+        }
+    });
+}

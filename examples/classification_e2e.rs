@@ -1,0 +1,77 @@
+//! **End-to-end validation driver** (the EXPERIMENTS.md §E2E run).
+//!
+//! Loads the build-time-trained PointNet2(c) artifacts, runs the *full*
+//! PC2IM system — median-ready quantization, APD-CIM approximate FPS,
+//! Ping-Pong-MAX CAM arg-max, lattice query, delayed-aggregation
+//! gather/group, SC-CIM-scheduled MLPs executed numerically via PJRT —
+//! over the held-out synthetic test set exported by `make artifacts`, and
+//! reports:
+//!
+//!   - classification accuracy, exact-vs-approximate sampling (Fig. 12(a))
+//!   - per-cloud simulated latency/energy on the modeled 40 nm hardware
+//!   - host wall-clock throughput of the software pipeline itself
+//!
+//! Run with: `cargo run --release --example classification_e2e [limit]`
+
+use pc2im::config::PipelineConfig;
+use pc2im::coordinator::{BatchScheduler, BatchStats};
+use pc2im::energy::Event;
+use pc2im::pointcloud::io::read_testset;
+use std::path::Path;
+use std::time::Instant;
+
+fn eval(name: &str, cfg: PipelineConfig, limit: usize) -> anyhow::Result<BatchStats> {
+    let dir = cfg.artifacts_dir.clone();
+    let mut sched = BatchScheduler::new(cfg)?;
+    let ts = read_testset(Path::new(&dir).join(&sched.pipeline().meta().testset_file))?;
+    let n = ts.len().min(limit);
+    let hw = *sched.pipeline().hardware();
+    let t0 = Instant::now();
+    let (_, stats) = sched.classify_batch(&ts.clouds[..n], &ts.labels[..n])?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:32} acc {:5.1}% | sim {:.3} ms/cloud, {:.1} uJ/cloud | host {:.1} clouds/s",
+        stats.accuracy() * 100.0,
+        stats.mean_latency_s(&hw) * 1e3,
+        stats.mean_energy_pj(&hw.energy()) * 1e-6,
+        n as f64 / wall,
+    );
+    Ok(stats)
+}
+
+fn main() -> anyhow::Result<()> {
+    let limit: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(200);
+    println!("PC2IM end-to-end validation over {limit} held-out clouds\n");
+
+    let base = PipelineConfig::default();
+    let exact = eval(
+        "exact L2 FPS + ball (fp32)",
+        PipelineConfig { exact_sampling: true, ..base.clone() },
+        limit,
+    )?;
+    let approx = eval("approx L1 + lattice (PC2IM)", base.clone(), limit)?;
+    let q16 = eval(
+        "approx + PTQ16 weights",
+        PipelineConfig { quantized: true, ..base },
+        limit,
+    )?;
+
+    println!(
+        "\naccuracy deltas: approx {:+.1}%, +PTQ16 {:+.1}% (paper: <2% approx, <0.3% PTQ)",
+        (approx.accuracy() - exact.accuracy()) * 100.0,
+        (q16.accuracy() - exact.accuracy()) * 100.0,
+    );
+    let hw = pc2im::config::HardwareConfig::default();
+    let c = hw.energy();
+    println!(
+        "approx pipeline energy breakdown: APD {:.0}%, CAM {:.0}%, MACs {:.0}%, SRAM {:.0}%",
+        approx.ledger.share(Event::ApdDistanceOp, &c) * 100.0,
+        (approx.ledger.share(Event::CamComparePair, &c)
+            + approx.ledger.share(Event::CamSearchCell, &c)
+            + approx.ledger.share(Event::CamWriteBit, &c))
+            * 100.0,
+        approx.ledger.share(Event::MacSc, &c) * 100.0,
+        approx.ledger.share(Event::SramBit, &c) * 100.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Generates one synthetic cloud per class, runs each through the full
+//! PC2IM pipeline (CIM preprocessing + AOT-compiled PJRT feature
+//! computing) and prints the classification plus the simulated hardware
+//! cost.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use pc2im::config::PipelineConfig;
+use pc2im::coordinator::Pipeline;
+use pc2im::pointcloud::synthetic::{make_class_cloud, CLASS_NAMES, NUM_CLASSES};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PipelineConfig::default();
+    let mut pipeline = Pipeline::new(cfg)?;
+    let hw = *pipeline.hardware();
+    println!(
+        "PC2IM quickstart — {} classes, {} points/cloud",
+        NUM_CLASSES,
+        pipeline.meta().model.n_points
+    );
+
+    let mut correct = 0;
+    for label in 0..NUM_CLASSES {
+        let cloud = make_class_cloud(label, pipeline.meta().model.n_points, 42 + label as u64);
+        let result = pipeline.classify(&cloud)?;
+        correct += (result.pred == label) as usize;
+        println!(
+            "true {:8} -> pred {:8} {} | sim latency {:.3} ms | energy {:.1} uJ",
+            CLASS_NAMES[label],
+            CLASS_NAMES[result.pred],
+            if result.pred == label { "OK  " } else { "MISS" },
+            result.stats.simulated_latency_s(&hw) * 1e3,
+            result.stats.energy_pj(&hw.energy()) * 1e-6,
+        );
+    }
+    println!("{correct}/{NUM_CLASSES} correct");
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT compile path: train (cached) -> lower to HLO text -> export test data.
+
+HLO *text* (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/.
+
+Artifacts produced (all consumed by the Rust runtime):
+
+  params.npz        cached trained parameters (build cache only)
+  train_log.json    training loss curve (recorded in EXPERIMENTS.md)
+  sa1.hlo.txt       g1[S1*K1 flattened groups]  -> f1[S1, 128]
+  sa2.hlo.txt       g2                          -> f2[S2, 256]
+  head.hlo.txt      g3[S2, 259]                 -> logits[8]
+  sa1_q16 / sa2_q16 / head_q16 .hlo.txt   16-bit PTQ weight variants
+  l1_distance.hlo.txt   APD-CIM numeric twin (runtime self-test)
+  testset.bin       held-out synthetic clouds + labels (Rust reads)
+  meta.json         shapes/dims contract for the Rust side
+
+Python runs ONCE at build time; the Rust binary is then self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+from .kernels import l1_distance as l1k
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big weight tensors
+    # as `constant({...})`, which would not round-trip through the text
+    # parser on the Rust side. The baked-weights design requires full dumps.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def quantize_params(params: dict, bits: int = 16) -> dict:
+    """Symmetric per-tensor post-training quantization (paper's 16-bit PTQ)."""
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def q(t):
+        t = np.asarray(t)
+        scale = np.abs(t).max() / qmax
+        if scale == 0.0:
+            return jnp.asarray(t)
+        return jnp.asarray(np.round(t / scale) * scale, dtype=np.float32)
+
+    return {
+        name: [(q(w), q(b)) for (w, b) in layers] for name, layers in params.items()
+    }
+
+
+def lower_model_artifacts(params: dict, out_dir: str, suffix: str = "") -> dict:
+    """Lower the three request-path graphs with weights baked as constants."""
+    shapes = {
+        "sa1": (model.S1, model.K1, 3),
+        "sa2": (model.S2, model.K2, model.MLP2[0]),
+        "head": (model.S2, model.MLP3[0]),
+    }
+    fns = {
+        "sa1": lambda g: (model.sa1_forward(params, g, use_pallas=True),),
+        "sa2": lambda g: (model.sa2_forward(params, g, use_pallas=True),),
+        "head": lambda g: (model.head_forward(params, g, use_pallas=True),),
+    }
+    meta = {}
+    for name, shape in shapes.items():
+        spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+        lowered = jax.jit(fns[name]).lower(spec)
+        text = to_hlo_text(lowered)
+        fname = f"{name}{suffix}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fns[name], spec)[0].shape
+        meta[name + suffix] = {
+            "file": fname,
+            "input_shape": list(shape),
+            "output_shape": list(out_shape),
+        }
+        print(f"lowered {fname}: {shape} -> {tuple(out_shape)}, {len(text)} chars")
+    return meta
+
+
+def lower_l1_distance(out_dir: str, n: int = 2048) -> dict:
+    """APD-CIM's numeric twin: L1 distances of n points to a reference."""
+    pts = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+    ref = jax.ShapeDtypeStruct((3,), jnp.float32)
+    lowered = jax.jit(lambda p, r: (l1k.l1_distance(p, r),)).lower(pts, ref)
+    fname = "l1_distance.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"lowered {fname}: ({n}, 3) -> ({n},)")
+    return {"file": fname, "n_points": n}
+
+
+def export_testset(out_dir: str) -> dict:
+    """Held-out clouds + labels in a simple binary layout for Rust.
+
+    Layout: b"PC2IMTST" | u32 n_clouds | u32 n_points | per cloud:
+    i32 label + f32[n_points*3] (little-endian, xyz interleaved).
+    """
+    clouds, labels = data.make_dataset(
+        train.TEST_PER_CLASS, model.N_POINTS, seed=2
+    )
+    path = os.path.join(out_dir, "testset.bin")
+    with open(path, "wb") as f:
+        f.write(b"PC2IMTST")
+        f.write(struct.pack("<II", len(labels), model.N_POINTS))
+        for xyz, lab in zip(clouds, labels):
+            f.write(struct.pack("<i", int(lab)))
+            f.write(xyz.astype("<f4").tobytes())
+    print(f"exported testset.bin: {len(labels)} clouds x {model.N_POINTS} pts")
+    return {"file": "testset.bin", "n_clouds": int(len(labels)),
+            "n_points": model.N_POINTS, "num_classes": data.NUM_CLASSES}
+
+
+def ensure_params(out_dir: str):
+    path = os.path.join(out_dir, "params.npz")
+    if os.path.exists(path):
+        print(f"using cached {path}")
+        return train.load_params(path)
+    params, log = train.train()
+    train.save_params(params, path)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = ensure_params(args.out_dir)
+    meta = {
+        "model": {
+            "n_points": model.N_POINTS,
+            "s1": model.S1, "k1": model.K1, "r1": model.R1,
+            "s2": model.S2, "k2": model.K2, "r2": model.R2,
+            "mlp1": model.MLP1, "mlp2": model.MLP2, "mlp3": model.MLP3,
+            "head": model.HEAD, "num_classes": data.NUM_CLASSES,
+        },
+        "artifacts": {},
+    }
+    meta["artifacts"].update(lower_model_artifacts(params, args.out_dir))
+    qparams = quantize_params(params, bits=16)
+    meta["artifacts"].update(
+        lower_model_artifacts(qparams, args.out_dir, suffix="_q16")
+    )
+    meta["artifacts"]["l1_distance"] = lower_l1_distance(args.out_dir)
+    meta["testset"] = export_testset(args.out_dir)
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

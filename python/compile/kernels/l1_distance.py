@@ -1,0 +1,37 @@
+"""Layer-1 Pallas kernel: batched L1 (Manhattan) distance — the APD-CIM op.
+
+APD-CIM activates one PTG row per cycle and emits 16 19-bit L1 distances;
+the Pallas mapping (DESIGN.md §Hardware-Adaptation) treats a coordinate
+tile as the VMEM-resident operand and the reference point as the streamed
+scalar, vectorizing |dx|+|dy|+|dz| across the lane dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256  # points per grid step; 256 x 3 f32 is tiny in VMEM terms
+
+
+def _l1_kernel(pts_ref, ref_ref, o_ref):
+    d = jnp.abs(pts_ref[...] - ref_ref[...][None, :])
+    o_ref[...] = d.sum(axis=-1)
+
+
+def l1_distance(points: jnp.ndarray, ref: jnp.ndarray) -> jnp.ndarray:
+    """L1 distance of points[N, 3] to ref[3]; N multiple of BLOCK_N."""
+    n = points.shape[0]
+    assert n % BLOCK_N == 0, f"N={n} not a multiple of {BLOCK_N}"
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, 3), lambda i: (i, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(points, ref)

@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernel: grouped max-pool over the neighbor axis.
+
+PointNet2 aggregates each point set with max over its K neighbors; in the
+accelerator this is the post-MLP pooling stage. One grid step owns a block
+of point sets; the reduction is over the (small) K axis in VMEM.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 32  # point sets per grid step
+
+
+def _max_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].max(axis=1)
+
+
+def grouped_max(x: jnp.ndarray) -> jnp.ndarray:
+    """Max over axis 1: x[S, K, C] -> [S, C]."""
+    s, k, c = x.shape
+    block_s = math.gcd(s, BLOCK_S)
+    return pl.pallas_call(
+        _max_kernel,
+        grid=(s // block_s,),
+        in_specs=[pl.BlockSpec((block_s, k, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_s, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, c), jnp.float32),
+        interpret=True,
+    )(x)

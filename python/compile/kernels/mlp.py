@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: point-wise MLP layer (the SC-CIM hot spot).
+
+The SC-CIM macro is weight-stationary: 4-bit weight blocks stay resident
+while 4-bit input clusters stream through. The TPU analogue (DESIGN.md
+§Hardware-Adaptation) keeps the full weight tile pinned in VMEM across the
+point-grid dimension while `BlockSpec` streams point tiles HBM->VMEM, with
+the matmul hitting the MXU. On this image the kernel runs `interpret=True`
+(CPU) for numerics; the VMEM/MXU analysis lives in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Point-tile size: 128 rows x f32 keeps x-tile + w + acc comfortably inside
+# a ~16 MB VMEM budget for every layer shape in PointNet2 (see DESIGN.md).
+BLOCK_N = 128
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    # One grid step owns a [BLOCK_N, Cin] tile of points; weights/bias are
+    # broadcast (index_map pins them to block 0) — weight-stationary.
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def mlp_layer(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = True):
+    """Pallas point-wise dense layer: x[N, Cin] @ w[Cin, Cout] + b (+ReLU).
+
+    N must be a multiple of BLOCK_N (callers pad; PointNet2 shapes already
+    are). Matches kernels.ref.mlp_layer_ref exactly under interpret=True.
+    """
+    n, cin = x.shape
+    cout = w.shape[1]
+    # Largest tile <= BLOCK_N that divides N (PointNet2 shapes are powers of
+    # two, so this is BLOCK_N for the big layers and N itself for tiny ones).
+    block_n = math.gcd(n, BLOCK_N)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b)

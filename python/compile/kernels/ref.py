@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness signal).
+
+Every kernel in this package is verified against these references by
+``python/tests/test_kernels.py`` (exact shapes + hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlp_layer_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = True):
+    """Point-wise dense layer: x[N, Cin] @ w[Cin, Cout] + b, optional ReLU."""
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def l1_distance_ref(points: jnp.ndarray, ref: jnp.ndarray) -> jnp.ndarray:
+    """Manhattan distance of points[N, 3] to ref[3] (paper eq. 2)."""
+    return jnp.abs(points - ref[None, :]).sum(axis=-1)
+
+
+def grouped_max_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Max-pool over the neighbor axis: x[S, K, C] -> [S, C]."""
+    return x.max(axis=1)

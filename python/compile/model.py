@@ -1,0 +1,130 @@
+"""Layer-2 JAX model: a small PointNet2(c) classifier (paper's PC model).
+
+The network follows the paper's point-set-abstraction structure [1]:
+
+  SA1: sample 256 centroids, group K=32 (r=0.2),  MLP [3 -> 64 -> 64 -> 128]
+  SA2: sample  64 centroids, group K=16 (r=0.4),  MLP [131 -> 128 -> 128 -> 256]
+  SA3: global,                                    MLP [259 -> 256 -> 512] + max
+  head: [512 -> 256 -> 128 -> NUM_CLASSES]
+
+Sampling/grouping (the paper's *preprocessing* stage) is NOT part of these
+graphs — it is the Rust coordinator's job (APD-CIM + Ping-Pong-MAX CAM).
+The lowered artifacts consume already-grouped tensors:
+
+  sa1:  g1[S1, K1, 3]    -> f1[S1, 128]
+  sa2:  g2[S2, K2, 131]  -> f2[S2, 256]
+  head: g3[S2, 259]      -> logits[NUM_CLASSES]
+
+`use_pallas=True` routes all dense layers / pools through the Layer-1
+Pallas kernels so the same ops land in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .data import NUM_CLASSES
+from .kernels import maxpool, mlp
+from .kernels import ref as kref
+
+# Architecture constants (mirrored by rust/src/network/pointnet2.rs).
+N_POINTS = 1024
+S1, K1, R1 = 256, 32, 0.2
+S2, K2, R2 = 64, 16, 0.4
+MLP1 = [3, 64, 64, 128]
+MLP2 = [128 + 3, 128, 128, 256]
+MLP3 = [256 + 3, 256, 512]
+HEAD = [512, 256, 128, NUM_CLASSES]
+
+
+def init_params(key: jax.Array) -> dict:
+    """He-initialized parameters for all four MLP stacks."""
+
+    def stack(key, dims):
+        layers = []
+        for cin, cout in zip(dims[:-1], dims[1:]):
+            key, kw = jax.random.split(key)
+            w = jax.random.normal(kw, (cin, cout)) * jnp.sqrt(2.0 / cin)
+            layers.append((w.astype(jnp.float32), jnp.zeros((cout,), jnp.float32)))
+        return key, layers
+
+    key, p1 = stack(key, MLP1)
+    key, p2 = stack(key, MLP2)
+    key, p3 = stack(key, MLP3)
+    key, ph = stack(key, HEAD)
+    return {"mlp1": p1, "mlp2": p2, "mlp3": p3, "head": ph}
+
+
+def _apply_stack(layers, x, *, use_pallas: bool, last_relu: bool = True):
+    f = mlp.mlp_layer if use_pallas else kref.mlp_layer_ref
+    for i, (w, b) in enumerate(layers):
+        relu = last_relu or i < len(layers) - 1
+        x = f(x, w, b, relu=relu)
+    return x
+
+
+def _grouped_max(x, *, use_pallas: bool):
+    return maxpool.grouped_max(x) if use_pallas else kref.grouped_max_ref(x)
+
+
+def sa1_forward(params, g1, *, use_pallas: bool = False):
+    """g1[S1, K1, 3] -> f1[S1, 128]: point-wise MLP1 then max over K."""
+    s, k, _ = g1.shape
+    h = _apply_stack(params["mlp1"], g1.reshape(s * k, -1), use_pallas=use_pallas)
+    return _grouped_max(h.reshape(s, k, -1), use_pallas=use_pallas)
+
+
+def sa2_forward(params, g2, *, use_pallas: bool = False):
+    """g2[S2, K2, 131] -> f2[S2, 256]: point-wise MLP2 then max over K."""
+    s, k, _ = g2.shape
+    h = _apply_stack(params["mlp2"], g2.reshape(s * k, -1), use_pallas=use_pallas)
+    return _grouped_max(h.reshape(s, k, -1), use_pallas=use_pallas)
+
+
+def head_forward(params, g3, *, use_pallas: bool = False):
+    """g3[S2, 259] -> logits[NUM_CLASSES]: MLP3, global max, head MLP."""
+    h = _apply_stack(params["mlp3"], g3, use_pallas=use_pallas)
+    pooled = h.max(axis=0, keepdims=True)  # global max over the S2 sets
+    logits = _apply_stack(
+        params["head"], pooled, use_pallas=use_pallas, last_relu=False
+    )
+    return logits[0]
+
+
+def gather_group(xyz, features, idx, grp):
+    """Build a grouped tensor: relative coords (+ optional features) per set.
+
+    xyz[N, 3], idx[S] centroid indices, grp[S, K] neighbor indices.
+    Returns [S, K, 3 (+C)] — the exact tensor layout the Rust coordinator
+    assembles on the request path.
+    """
+    centroids = xyz[idx]
+    rel = xyz[grp] - centroids[:, None, :]
+    if features is None:
+        return rel
+    return jnp.concatenate([rel, features[grp]], axis=-1)
+
+
+def forward(params, xyz, idx1, grp1, idx2, grp2, *, use_pallas: bool = False):
+    """Full classifier forward from coordinates + precomputed group indices."""
+    g1 = gather_group(xyz, None, idx1, grp1)
+    f1 = sa1_forward(params, g1, use_pallas=use_pallas)
+    c1 = xyz[idx1]
+    g2 = gather_group(c1, f1, idx2, grp2)
+    f2 = sa2_forward(params, g2, use_pallas=use_pallas)
+    c2 = c1[idx2]
+    g3 = jnp.concatenate([c2, f2], axis=-1)
+    return head_forward(params, g3, use_pallas=use_pallas)
+
+
+def loss_fn(params, batch):
+    """Mean softmax cross-entropy over a batch of pre-indexed clouds."""
+    logits = jax.vmap(
+        lambda xyz, i1, g1, i2, g2: forward(params, xyz, i1, g1, i2, g2)
+    )(batch["xyz"], batch["idx1"], batch["grp1"], batch["idx2"], batch["grp2"])
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(axis=1) == labels).mean()
+    return nll, acc

@@ -1,0 +1,152 @@
+"""Reference sampling/grouping algorithms (numpy), mirroring `rust/src/sampling/`.
+
+These implement both the exact pipeline (L2 FPS + ball query) and the paper's
+approximate pipeline (median spatial partitioning + L1 FPS + lattice query
+with L = 1.6R). They are used for
+
+- training-time index precomputation (grouping depends only on coordinates),
+- the Fig. 12(a) software validation of approximate sampling, and
+- cross-checking the Rust implementations (same algorithms, same seeds).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LATTICE_SCALE = 1.6  # paper's empirical L = 1.6 * R ball-query radius
+
+
+def l2_sq(points: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    d = points - ref
+    return (d * d).sum(axis=-1)
+
+
+def l1(points: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    return np.abs(points - ref).sum(axis=-1)
+
+
+def fps(points: np.ndarray, m: int, metric: str = "l2", start: int = 0) -> np.ndarray:
+    """Farthest point sampling; returns ``m`` indices into ``points``.
+
+    metric='l2' is the exact Euclidean FPS; metric='l1' is the paper's
+    CIM-friendly Manhattan approximation (eq. 2).
+    """
+    n = len(points)
+    assert m <= n, f"cannot sample {m} from {n}"
+    dist = l2_sq(points, points[start]) if metric == "l2" else l1(points, points[start])
+    idx = np.empty(m, dtype=np.int64)
+    idx[0] = start
+    for i in range(1, m):
+        nxt = int(np.argmax(dist))
+        idx[i] = nxt
+        d = l2_sq(points, points[nxt]) if metric == "l2" else l1(points, points[nxt])
+        np.minimum(dist, d, out=dist)
+    return idx
+
+
+def random_sample(n: int, m: int, rng: np.random.Generator) -> np.ndarray:
+    """Uniform sampling without replacement (training-time stand-in for FPS)."""
+    return rng.choice(n, size=m, replace=False)
+
+
+def ball_query(
+    points: np.ndarray, centroids: np.ndarray, radius: float, k: int
+) -> np.ndarray:
+    """Exact L2 ball query: up to ``k`` neighbors within ``radius`` of each
+    centroid; short groups are padded with the first hit (PointNet++ style).
+    Returns indices [S, k] into ``points``."""
+    out = np.empty((len(centroids), k), dtype=np.int64)
+    r2 = radius * radius
+    for s, c in enumerate(centroids):
+        hits = np.nonzero(l2_sq(points, c) <= r2)[0]
+        if len(hits) == 0:  # fall back to the nearest point
+            hits = np.array([int(np.argmin(l2_sq(points, c)))])
+        take = hits[:k]
+        out[s, : len(take)] = take
+        out[s, len(take) :] = take[0]
+    return out
+
+
+def lattice_query(
+    points: np.ndarray, centroids: np.ndarray, radius: float, k: int
+) -> np.ndarray:
+    """Paper's lattice query: L1 ball of range L = LATTICE_SCALE * radius."""
+    out = np.empty((len(centroids), k), dtype=np.int64)
+    rng_l = LATTICE_SCALE * radius
+    for s, c in enumerate(centroids):
+        d = l1(points, c)
+        hits = np.nonzero(d <= rng_l)[0]
+        if len(hits) == 0:
+            hits = np.array([int(np.argmin(d))])
+        take = hits[np.argsort(d[hits], kind="stable")][:k]  # sorter: k nearest
+        out[s, : len(take)] = take
+        out[s, len(take) :] = take[0]
+    return out
+
+
+def knn(points: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:
+    """k nearest neighbors (L2) of each query; used by feature propagation."""
+    out = np.empty((len(queries), k), dtype=np.int64)
+    for i, q in enumerate(queries):
+        out[i] = np.argsort(l2_sq(points, q))[:k]
+    return out
+
+
+def msp(points: np.ndarray, tile_size: int) -> list[np.ndarray]:
+    """Median spatial partitioning (paper Fig. 5(b)): recursively split along
+    the widest axis at the median until every tile holds <= tile_size points.
+    Produces equal-population (±1) tiles with unfixed shapes."""
+
+    def split(idx: np.ndarray) -> list[np.ndarray]:
+        if len(idx) <= tile_size:
+            return [idx]
+        sub = points[idx]
+        axis = int(np.argmax(sub.max(axis=0) - sub.min(axis=0)))
+        order = idx[np.argsort(sub[:, axis], kind="stable")]
+        mid = len(order) // 2
+        return split(order[:mid]) + split(order[mid:])
+
+    return split(np.arange(len(points), dtype=np.int64))
+
+
+def group_indices(
+    xyz: np.ndarray,
+    *,
+    approximate: bool,
+    n_sample1: int,
+    k1: int,
+    r1: float,
+    n_sample2: int,
+    k2: int,
+    r2: float,
+    rng: np.random.Generator | None = None,
+    train_random: bool = False,
+) -> dict[str, np.ndarray]:
+    """Full two-level sampling/grouping index computation for PointNet2(c).
+
+    Grouping depends only on coordinates, so indices can be precomputed once
+    per cloud (used for both training and AOT test export).
+    """
+    n = len(xyz)
+    if train_random:
+        assert rng is not None
+        idx1 = random_sample(n, n_sample1, rng)
+    elif approximate:
+        idx1 = fps(xyz, n_sample1, metric="l1")
+    else:
+        idx1 = fps(xyz, n_sample1, metric="l2")
+    c1 = xyz[idx1]
+    grp1 = (
+        lattice_query(xyz, c1, r1, k1) if approximate else ball_query(xyz, c1, r1, k1)
+    )
+    if train_random:
+        idx2 = random_sample(n_sample1, n_sample2, rng)
+    elif approximate:
+        idx2 = fps(c1, n_sample2, metric="l1")
+    else:
+        idx2 = fps(c1, n_sample2, metric="l2")
+    c2 = c1[idx2]
+    grp2 = (
+        lattice_query(c1, c2, r2, k2) if approximate else ball_query(c1, c2, r2, k2)
+    )
+    return {"idx1": idx1, "grp1": grp1, "idx2": idx2, "grp2": grp2}

@@ -1,0 +1,152 @@
+"""Build-time training of the PointNet2(c) classifier on synthetic shapes.
+
+Runs once inside ``make artifacts`` (cached via artifacts/params.npz). Uses
+hand-rolled Adam to avoid extra dependencies; training-time sampling is
+uniform-random (standard PointNet++ practice), evaluation uses exact FPS.
+The loss curve is printed and saved so EXPERIMENTS.md can record it.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, sampling
+
+TRAIN_PER_CLASS = 100
+TEST_PER_CLASS = 25
+BATCH = 32
+STEPS = 350
+LR = 1e-3
+SEED = 0
+
+
+def precompute_indices(clouds: np.ndarray, *, approximate: bool, rng=None,
+                       train_random: bool = False,
+                       mixed: bool = False) -> dict[str, np.ndarray]:
+    """Sampling/grouping indices for every cloud (coordinates-only, so this
+    is done once, not per step).
+
+    ``mixed=True`` alternates exact ball-query and approximate lattice
+    grouping across clouds so the trained model is robust to both — the
+    deployment path (Fig. 12(a)) groups with the L1 lattice.
+    """
+    keys = ("idx1", "grp1", "idx2", "grp2")
+    acc: dict[str, list] = {k: [] for k in keys}
+    for i, xyz in enumerate(clouds):
+        approx_i = (i % 2 == 1) if mixed else approximate
+        g = sampling.group_indices(
+            xyz,
+            approximate=approx_i,
+            n_sample1=model.S1, k1=model.K1, r1=model.R1,
+            n_sample2=model.S2, k2=model.K2, r2=model.R2,
+            rng=rng, train_random=train_random,
+        )
+        for k in keys:
+            acc[k].append(g[k])
+    return {k: np.stack(v).astype(np.int32) for k, v in acc.items()}
+
+
+def _adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def _adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def evaluate(params, clouds, labels, idx) -> float:
+    """Accuracy with the given (precomputed) grouping indices."""
+    correct = 0
+    fwd = jax.jit(lambda p, xyz, i1, g1, i2, g2: model.forward(p, xyz, i1, g1, i2, g2))
+    for i in range(len(labels)):
+        logits = fwd(
+            params, clouds[i], idx["idx1"][i], idx["grp1"][i],
+            idx["idx2"][i], idx["grp2"][i],
+        )
+        correct += int(logits.argmax()) == int(labels[i])
+    return correct / len(labels)
+
+
+def train(verbose: bool = True) -> tuple[dict, list[dict]]:
+    """Train the classifier; returns (params, loss-curve log)."""
+    rng = np.random.default_rng(SEED)
+    clouds, labels = data.make_dataset(TRAIN_PER_CLASS, model.N_POINTS, seed=1)
+    idx = precompute_indices(clouds, approximate=False, rng=rng, train_random=True,
+                             mixed=True)
+
+    params = model.init_params(jax.random.PRNGKey(SEED))
+    opt = _adam_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, acc), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt = _adam_step(params, grads, opt, LR)
+        return params, opt, loss, acc
+
+    n = len(labels)
+    log, t0 = [], time.time()
+    for s in range(STEPS):
+        take = rng.choice(n, size=BATCH, replace=False)
+        batch = {
+            "xyz": jnp.asarray(clouds[take]),
+            "label": jnp.asarray(labels[take]),
+            **{k: jnp.asarray(v[take]) for k, v in idx.items()},
+        }
+        params, opt, loss, acc = step(params, opt, batch)
+        if s % 25 == 0 or s == STEPS - 1:
+            rec = {"step": s, "loss": float(loss), "acc": float(acc),
+                   "elapsed_s": round(time.time() - t0, 1)}
+            log.append(rec)
+            if verbose:
+                print(f"step {s:4d}  loss {rec['loss']:.4f}  "
+                      f"batch-acc {rec['acc']:.3f}  ({rec['elapsed_s']}s)")
+    return params, log
+
+
+def save_params(params, path):
+    flat = {}
+    for stack_name, layers in params.items():
+        for i, (w, b) in enumerate(layers):
+            flat[f"{stack_name}.{i}.w"] = np.asarray(w)
+            flat[f"{stack_name}.{i}.b"] = np.asarray(b)
+    np.savez(path, **flat)
+
+
+def load_params(path) -> dict:
+    flat = np.load(path)
+    stacks: dict[str, list] = {}
+    names = sorted({k.rsplit(".", 2)[0] for k in flat.files})
+    for name in names:
+        n_layers = len({k for k in flat.files if k.startswith(name + ".")}) // 2
+        stacks[name] = [
+            (jnp.asarray(flat[f"{name}.{i}.w"]), jnp.asarray(flat[f"{name}.{i}.b"]))
+            for i in range(n_layers)
+        ]
+    return stacks
+
+
+def main():
+    params, log = train()
+    save_params(params, "../artifacts/params.npz")
+    with open("../artifacts/train_log.json", "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

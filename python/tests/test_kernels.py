@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE build-time correctness
+signal, including hypothesis sweeps over shapes/dtypes/values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import l1_distance, maxpool, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(scale=scale, size=shape), jnp.float32
+    )
+
+
+class TestMlpLayer:
+    @pytest.mark.parametrize(
+        "n,cin,cout",
+        [
+            (128, 3, 64),  # SA1 first layer tile
+            (8192, 3, 64),  # SA1 full flatten (S1*K1)
+            (1024, 131, 128),  # SA2 full flatten (S2*K2)
+            (64, 259, 256),  # MLP3 (N < BLOCK_N path)
+            (1, 512, 256),  # head on pooled vector (N=1 path)
+        ],
+    )
+    def test_matches_ref(self, n, cin, cout):
+        x, w, b = _rand((n, cin), 1), _rand((cin, cout), 2), _rand((cout,), 3)
+        got = mlp.mlp_layer(x, w, b)
+        want = ref.mlp_layer_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_no_relu(self):
+        x, w, b = _rand((128, 8), 1), _rand((8, 8), 2), _rand((8,), 3)
+        got = mlp.mlp_layer(x, w, b, relu=False)
+        want = ref.mlp_layer_ref(x, w, b, relu=False)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert (np.asarray(got) < 0).any(), "no-relu output should go negative"
+
+    def test_relu_clamps(self):
+        x = _rand((128, 4), 5)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        got = np.asarray(mlp.mlp_layer(x, w, b))
+        assert (got >= 0).all()
+
+    def test_bias_applied(self):
+        x = jnp.zeros((128, 4), jnp.float32)
+        w = jnp.zeros((4, 6), jnp.float32)
+        b = jnp.arange(6, dtype=jnp.float32)
+        got = np.asarray(mlp.mlp_layer(x, w, b))
+        np.testing.assert_allclose(got, np.tile(np.arange(6.0), (128, 1)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        cin=st.integers(1, 16),
+        cout=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_hypothesis_sweep(self, n_blocks, cin, cout, seed, scale):
+        n = 128 * n_blocks
+        x = _rand((n, cin), seed, scale)
+        w = _rand((cin, cout), seed + 1, scale)
+        b = _rand((cout,), seed + 2, scale)
+        got = mlp.mlp_layer(x, w, b)
+        want = ref.mlp_layer_ref(x, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+class TestL1Distance:
+    @pytest.mark.parametrize("n", [256, 1024, 2048])
+    def test_matches_ref(self, n):
+        pts, r = _rand((n, 3), 1), _rand((3,), 2)
+        np.testing.assert_allclose(
+            l1_distance.l1_distance(pts, r),
+            ref.l1_distance_ref(pts, r),
+            rtol=1e-6, atol=1e-6,
+        )
+
+    def test_zero_at_self(self):
+        pts = jnp.tile(jnp.asarray([[1.0, -2.0, 3.0]]), (256, 1))
+        d = np.asarray(l1_distance.l1_distance(pts, jnp.asarray([1.0, -2.0, 3.0])))
+        np.testing.assert_allclose(d, 0.0, atol=1e-7)
+
+    def test_triangle_inequality_vs_l2(self):
+        # ||.||_1 >= ||.||_2 always (the paper's approximation is an upper
+        # bound on the Euclidean distance).
+        pts, r = _rand((512, 3), 3), _rand((3,), 4)
+        l1 = np.asarray(l1_distance.l1_distance(pts, r))
+        l2 = np.linalg.norm(np.asarray(pts) - np.asarray(r), axis=1)
+        assert (l1 >= l2 - 1e-5).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(n_blocks=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_hypothesis_sweep(self, n_blocks, seed):
+        pts = _rand((256 * n_blocks, 3), seed)
+        r = _rand((3,), seed + 1)
+        np.testing.assert_allclose(
+            l1_distance.l1_distance(pts, r),
+            ref.l1_distance_ref(pts, r),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+class TestGroupedMax:
+    @pytest.mark.parametrize("s,k,c", [(256, 32, 128), (64, 16, 256), (32, 8, 4)])
+    def test_matches_ref(self, s, k, c):
+        x = _rand((s, k, c), 1)
+        np.testing.assert_allclose(
+            maxpool.grouped_max(x), ref.grouped_max_ref(x), rtol=0, atol=0
+        )
+
+    def test_picks_injected_max(self):
+        x = _rand((32, 8, 16), 2)
+        x = x.at[:, 3, :].set(100.0)
+        got = np.asarray(maxpool.grouped_max(x))
+        np.testing.assert_allclose(got, 100.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s_blocks=st.integers(1, 4),
+        k=st.integers(1, 16),
+        c=st.integers(1, 32),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, s_blocks, k, c, seed):
+        x = _rand((32 * s_blocks, k, c), seed)
+        np.testing.assert_allclose(
+            maxpool.grouped_max(x), ref.grouped_max_ref(x), rtol=0, atol=0
+        )

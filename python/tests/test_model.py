@@ -1,0 +1,137 @@
+"""PointNet2(c) model graph tests: shapes, pallas-vs-ref parity, grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model, sampling
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    xyz = data.make_cloud(0, model.N_POINTS, rng)
+    g = sampling.group_indices(
+        xyz, approximate=False,
+        n_sample1=model.S1, k1=model.K1, r1=model.R1,
+        n_sample2=model.S2, k2=model.K2, r2=model.R2,
+    )
+    params = model.init_params(jax.random.PRNGKey(0))
+    return params, jnp.asarray(xyz), {k: jnp.asarray(v) for k, v in g.items()}
+
+
+class TestShapes:
+    def test_sa1(self, setup):
+        params, xyz, g = setup
+        g1 = model.gather_group(xyz, None, g["idx1"], g["grp1"])
+        assert g1.shape == (model.S1, model.K1, 3)
+        f1 = model.sa1_forward(params, g1)
+        assert f1.shape == (model.S1, model.MLP1[-1])
+
+    def test_sa2(self, setup):
+        params, xyz, g = setup
+        g2 = jnp.zeros((model.S2, model.K2, model.MLP2[0]), jnp.float32)
+        assert model.sa2_forward(params, g2).shape == (model.S2, model.MLP2[-1])
+
+    def test_head(self, setup):
+        params, _, _ = setup
+        g3 = jnp.zeros((model.S2, model.MLP3[0]), jnp.float32)
+        assert model.head_forward(params, g3).shape == (data.NUM_CLASSES,)
+
+    def test_full_forward(self, setup):
+        params, xyz, g = setup
+        logits = model.forward(
+            params, xyz, g["idx1"], g["grp1"], g["idx2"], g["grp2"]
+        )
+        assert logits.shape == (data.NUM_CLASSES,)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestPallasParity:
+    def test_forward_pallas_matches_ref(self, setup):
+        params, xyz, g = setup
+        ref = model.forward(params, xyz, g["idx1"], g["grp1"], g["idx2"], g["grp2"])
+        pal = model.forward(
+            params, xyz, g["idx1"], g["grp1"], g["idx2"], g["grp2"], use_pallas=True
+        )
+        np.testing.assert_allclose(ref, pal, rtol=1e-4, atol=1e-4)
+
+
+class TestTraining:
+    def test_loss_and_grads_finite(self, setup):
+        params, xyz, g = setup
+        batch = {
+            "xyz": xyz[None],
+            "label": jnp.asarray([3]),
+            **{k: v[None] for k, v in g.items()},
+        }
+        (loss, acc), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        assert np.isfinite(float(loss)) and 0.0 <= float(acc) <= 1.0
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+        assert any(np.abs(np.asarray(g)).max() > 0 for g in leaves)
+
+    def test_one_adam_step_reduces_loss(self, setup):
+        from compile import train as T
+
+        params, xyz, g = setup
+        batch = {
+            "xyz": xyz[None],
+            "label": jnp.asarray([3]),
+            **{k: v[None] for k, v in g.items()},
+        }
+        opt = T._adam_init(params)
+        loss0 = float(model.loss_fn(params, batch)[0])
+        for _ in range(5):
+            (_, _), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+                params, batch
+            )
+            params, opt = T._adam_step(params, grads, opt, 1e-2)
+        loss1 = float(model.loss_fn(params, batch)[0])
+        assert loss1 < loss0
+
+
+class TestQuantization:
+    def test_q16_close_to_fp(self, setup):
+        from compile import aot
+
+        params, xyz, g = setup
+        qp = aot.quantize_params(params, bits=16)
+        ref = model.forward(params, xyz, g["idx1"], g["grp1"], g["idx2"], g["grp2"])
+        q = model.forward(qp, xyz, g["idx1"], g["grp1"], g["idx2"], g["grp2"])
+        # 16-bit symmetric PTQ should be nearly lossless (paper: <0.3% acc)
+        np.testing.assert_allclose(ref, q, rtol=5e-3, atol=5e-3)
+
+    def test_q16_values_on_grid(self):
+        from compile import aot
+
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)), jnp.float32)
+        qp = aot.quantize_params({"m": [(w, jnp.zeros(32))]})["m"][0][0]
+        scale = float(np.abs(np.asarray(w)).max() / 32767.0)
+        ticks = np.asarray(qp) / scale
+        np.testing.assert_allclose(ticks, np.round(ticks), atol=1e-3)
+
+
+class TestData:
+    def test_dataset_shapes_and_labels(self):
+        clouds, labels = data.make_dataset(2, 128, seed=0)
+        assert clouds.shape == (16, 128, 3)
+        assert set(labels) == set(range(data.NUM_CLASSES))
+
+    def test_normalized(self):
+        clouds, _ = data.make_dataset(1, 256, seed=1)
+        assert np.abs(clouds).max() <= 1.0 + 1e-5
+
+    def test_classes_distinguishable(self):
+        # Coarse geometric check: mean radial profile differs across classes.
+        rng = np.random.default_rng(2)
+        profiles = []
+        for c in range(data.NUM_CLASSES):
+            r = np.linalg.norm(data.make_cloud(c, 512, rng), axis=1)
+            profiles.append((r.mean(), r.std()))
+        assert len({tuple(np.round(p, 2)) for p in profiles}) >= 5

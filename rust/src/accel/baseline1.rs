@@ -1,0 +1,118 @@
+//! Baseline-1: digital units with *global* PC access for preprocessing +
+//! near-memory (bit-serial) computing for MLPs.
+//!
+//! Global FPS re-traverses the whole cloud every sampling iteration
+//! (the paper's §II-B premise). The current cloud is staged in on-chip
+//! SRAM after one DRAM pass when it fits (16k x 6 B = 98 KB < 512 KB);
+//! the energy pain comes from re-reading every point record per iteration
+//! through the digital distance datapath, L2's ~2x-wide temporary
+//! distances, and the digital arg-max scan. No tiling, no pipelining:
+//! sampling of the whole cloud must finish before features start.
+
+use super::{Accelerator, RunCost, StageCost};
+use crate::config::HardwareConfig;
+use crate::energy::{EnergyConstants, Event};
+use crate::network::pointnet2::NetworkDef;
+
+/// Points the digital distance datapath consumes per cycle (a 768-bit
+/// internal SRAM read port — B1 is a throughput-oriented digital design;
+/// its pain is energy and the unpipelined global flow, not port width).
+const DIGITAL_POINTS_PER_CYCLE: u64 = 16;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Baseline1;
+
+impl Baseline1 {
+    fn fps_layer(n_in: u64, n_out: u64, cost: &mut StageCost) {
+        let scans = n_out * n_in;
+        // Point records re-read from on-chip SRAM every iteration.
+        cost.ledger.charge(Event::SramBit, scans * EnergyConstants::POINT_BITS);
+        // L2 distance: 3 squared deltas = 3 multiply-accumulates each.
+        cost.ledger.charge(Event::MacDigital, scans * 3);
+        // Temporary distances at the squared-L2 width: read-compare-write
+        // (write fires on ~half the updates), plus the full arg-max scan.
+        let l2 = EnergyConstants::L2_BITS;
+        cost.ledger.charge(Event::SramBit, scans * l2 + scans * l2 / 2);
+        cost.ledger.charge(Event::DigitalCompareBit, 2 * scans * l2);
+        cost.cycles += scans.div_ceil(DIGITAL_POINTS_PER_CYCLE);
+        // The arg-max scan shares the TD pass above (distances compared as
+        // they stream), so no extra cycles — but the *query* stage below
+        // cannot reuse them: neighbor search needs per-centroid distances.
+    }
+
+    fn query_layer(n_in: u64, n_out: u64, cost: &mut StageCost) {
+        let scans = n_out * n_in;
+        cost.ledger.charge(Event::SramBit, scans * EnergyConstants::POINT_BITS);
+        cost.ledger.charge(Event::MacDigital, scans * 3);
+        cost.ledger
+            .charge(Event::DigitalCompareBit, scans * EnergyConstants::L2_BITS);
+        cost.cycles += scans.div_ceil(DIGITAL_POINTS_PER_CYCLE);
+    }
+}
+
+impl Accelerator for Baseline1 {
+    fn name(&self) -> &'static str {
+        "Baseline-1 (global digital)"
+    }
+
+    fn run(&self, net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
+        let mut pre = StageCost::default();
+        let n0 = net.sa_layers.first().map(|l| l.n_in as u64).unwrap_or(0);
+        // one DRAM pass to stage the cloud
+        pre.ledger.charge(Event::DramBit, n0 * 48);
+        pre.cycles += (n0 * 48).div_ceil(hw.dram_bits_per_cycle);
+
+        for l in &net.sa_layers {
+            if l.n_out > 1 {
+                Self::fps_layer(l.n_in as u64, l.n_out as u64, &mut pre);
+                Self::query_layer(l.n_in as u64, l.n_out as u64, &mut pre);
+            }
+        }
+        for l in &net.fp_layers {
+            // global kNN: every fine query scans all coarse points
+            Self::query_layer(l.n_coarse as u64, l.n_fine as u64, &mut pre);
+        }
+
+        // Bit-serial near-memory MACs (16 cycles per 16-bit input wave).
+        let mut feat = StageCost::default();
+        let macs = net.total_macs();
+        feat.ledger.charge(Event::MacBs, macs);
+        feat.cycles += macs.div_ceil(hw.parallel_macs()) * 16;
+        let feat_bits: u64 = net
+            .sa_layers
+            .iter()
+            .map(|l| (l.n_out * l.mlp.last().unwrap()) as u64 * 16)
+            .sum();
+        feat.ledger.charge(Event::SramBit, 2 * feat_bits);
+
+        RunCost { preprocessing: pre, feature: feat, pipelined: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Pc2imModel;
+
+    #[test]
+    fn slower_and_hungrier_than_pc2im() {
+        let hw = HardwareConfig::default();
+        let net = NetworkDef::pointnet2_s(16384);
+        let b1 = Baseline1.run(&net, &hw);
+        let pc = Pc2imModel.run(&net, &hw);
+        let c = hw.energy();
+        let speedup = b1.latency_s(&hw) / pc.latency_s(&hw);
+        let energy_ratio = b1.energy_pj(&c) / pc.energy_pj(&c);
+        // Paper headline territory: ~6x speedup, big energy gap.
+        assert!(speedup > 3.0, "speedup {speedup:.1}");
+        assert!(energy_ratio > 5.0, "energy ratio {energy_ratio:.1}");
+    }
+
+    #[test]
+    fn preprocessing_dominates_b1_on_large_pc() {
+        let hw = HardwareConfig::default();
+        let net = NetworkDef::pointnet2_s(16384);
+        let b1 = Baseline1.run(&net, &hw);
+        assert!(b1.preprocessing.cycles > b1.feature.cycles);
+    }
+}

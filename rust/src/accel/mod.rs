@@ -1,0 +1,108 @@
+//! Architecture-level accelerator simulators for the paper's comparison
+//! (Figs. 12(b), 13): PC2IM and the three baselines.
+//!
+//! These are *analytic event models*: they derive memory-traffic, cycle and
+//! energy counts from the workload description ([`crate::network::Workload`])
+//! and the Table II hardware parameters. The bit-exact engine models in
+//! [`crate::cim`] validate the event counts at small scale (see
+//! `experiments/claims.rs` for the cross-check), and the PJRT-backed
+//! coordinator produces the real numerics; these models make the full
+//! figure sweeps instant and deterministic.
+
+pub mod baseline1;
+pub mod baseline2;
+pub mod gpu;
+pub mod pc2im_model;
+
+use crate::config::HardwareConfig;
+use crate::energy::{EnergyConstants, EnergyLedger};
+use crate::network::pointnet2::NetworkDef;
+
+/// Cost of one pipeline stage.
+#[derive(Debug, Clone, Default)]
+pub struct StageCost {
+    pub cycles: u64,
+    pub ledger: EnergyLedger,
+}
+
+impl StageCost {
+    pub fn time_s(&self, hw: &HardwareConfig) -> f64 {
+        self.cycles as f64 * hw.cycle_time_s()
+    }
+
+    pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
+        self.ledger.total_pj(c)
+    }
+}
+
+/// Cost of a full forward pass, split the way the paper reports it.
+#[derive(Debug, Clone, Default)]
+pub struct RunCost {
+    pub preprocessing: StageCost,
+    pub feature: StageCost,
+    /// True if the design overlaps preprocessing with feature computing
+    /// (tile-level pipelining): latency = max of stages instead of sum.
+    pub pipelined: bool,
+}
+
+impl RunCost {
+    pub fn total_cycles(&self) -> u64 {
+        if self.pipelined {
+            self.preprocessing.cycles.max(self.feature.cycles)
+        } else {
+            self.preprocessing.cycles + self.feature.cycles
+        }
+    }
+
+    pub fn latency_s(&self, hw: &HardwareConfig) -> f64 {
+        self.total_cycles() as f64 * hw.cycle_time_s()
+    }
+
+    pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
+        self.preprocessing.energy_pj(c) + self.feature.energy_pj(c)
+    }
+
+    pub fn merged_ledger(&self) -> EnergyLedger {
+        let mut l = self.preprocessing.ledger.clone();
+        l.merge(&self.feature.ledger);
+        l
+    }
+}
+
+/// An accelerator that can execute a PCN workload (cost-model view).
+pub trait Accelerator {
+    fn name(&self) -> &'static str;
+    /// Simulate one forward pass of the given network's workload.
+    fn run(&self, net: &NetworkDef, hw: &HardwareConfig) -> RunCost;
+}
+
+pub use baseline1::Baseline1;
+pub use baseline2::Baseline2;
+pub use gpu::GpuModel;
+pub use pc2im_model::Pc2imModel;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::Event;
+
+    #[test]
+    fn run_cost_pipelining_semantics() {
+        let mut rc = RunCost::default();
+        rc.preprocessing.cycles = 100;
+        rc.feature.cycles = 60;
+        assert_eq!(rc.total_cycles(), 160);
+        rc.pipelined = true;
+        assert_eq!(rc.total_cycles(), 100);
+    }
+
+    #[test]
+    fn stage_cost_pricing() {
+        let hw = HardwareConfig::default();
+        let mut s = StageCost::default();
+        s.cycles = 250_000; // 1 ms at 250 MHz
+        s.ledger.charge(Event::DramBit, 1000);
+        assert!((s.time_s(&hw) - 1e-3).abs() < 1e-9);
+        assert!((s.energy_pj(&hw.energy()) - 4500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! Gate-level arithmetic primitives mirroring the paper's dynamic-logic
+//! sense amplifiers and near-memory units (Fig. 6).
+//!
+//! The APD-CIM computes |x - x_r| with inverted-operand addition: the
+//! dynamic-logic SA produces NAND/OR of a stored bit and an input bit, the
+//! near-memory unit combines them into a full adder, and "abstraction
+//! [subtraction] is achieved by inverting inputs and setting C0 to 1"
+//! (two's complement). We reproduce that structure literally — every
+//! arithmetic result in the CIM models flows through these gates — and
+//! property-test it against native integer ops.
+
+/// NAND of two bits (the dynamic-logic SA's native function).
+#[inline]
+pub fn nand(a: bool, b: bool) -> bool {
+    !(a && b)
+}
+
+/// OR of two bits (the SA's second native function, pull-down N2 path).
+#[inline]
+pub fn or(a: bool, b: bool) -> bool {
+    a || b
+}
+
+/// Full adder built only from the SA's NAND/OR outputs plus inverters —
+/// the near-memory unit of Fig. 6.
+///
+/// sum = a XOR b XOR cin, cout = majority(a, b, cin), both expressed via
+/// NAND/OR: xor(a,b) = nand(nand(a, nand(a,b)), nand(b, nand(a,b))).
+#[inline]
+pub fn full_adder(a: bool, b: bool, cin: bool) -> (bool, bool) {
+    let nab = nand(a, b);
+    let axb = nand(nand(a, nab), nand(b, nab)); // a XOR b
+    let nsc = nand(axb, cin);
+    let sum = nand(nand(axb, nsc), nand(cin, nsc)); // (a^b) XOR cin
+    // cout = (a AND b) OR ((a^b) AND cin) = NOT nand(..) OR NOT nand(..)
+    let cout = or(!nab, !nsc);
+    (sum, cout)
+}
+
+/// Ripple-carry addition of two `width`-bit operands with carry-in,
+/// returning a `width+1`-bit result (the extra bit is the carry-out).
+pub fn ripple_add(a: u32, b: u32, cin: bool, width: u32) -> u32 {
+    debug_assert!(width <= 31);
+    let mut carry = cin;
+    let mut out: u32 = 0;
+    for i in 0..width {
+        let (s, c) = full_adder((a >> i) & 1 == 1, (b >> i) & 1 == 1, carry);
+        out |= (s as u32) << i;
+        carry = c;
+    }
+    out | ((carry as u32) << width)
+}
+
+/// 16-bit absolute difference, computed the way APD-CIM does: subtract via
+/// inverted-operand add with C0 = 1; if the carry-out says the result went
+/// negative, invert-and-add-one again (second pass through the same adder).
+pub fn abs_diff_16(a: u16, b: u16) -> u16 {
+    let raw = ripple_add(a as u32, (!b) as u32 & 0xFFFF, true, 16);
+    let borrowed = raw & (1 << 16) == 0; // no carry-out => a < b
+    let diff = raw & 0xFFFF;
+    if borrowed {
+        (ripple_add(!diff & 0xFFFF, 0, true, 16) & 0xFFFF) as u16
+    } else {
+        diff as u16
+    }
+}
+
+/// The full APD-CIM distance: |ax-bx| + |ay-by| + |az-bz|, all additions
+/// through the ripple adder (19-bit result, as in the paper).
+pub fn l1_distance_19b(a: (u16, u16, u16), b: (u16, u16, u16)) -> u32 {
+    let dx = abs_diff_16(a.0, b.0) as u32;
+    let dy = abs_diff_16(a.1, b.1) as u32;
+    let dz = abs_diff_16(a.2, b.2) as u32;
+    let partial = ripple_add(dx, dy, false, 17) & 0x3FFFF;
+    ripple_add(partial, dz, false, 18) & 0x7FFFF
+}
+
+/// MSB-first bitwise comparison between two `width`-bit values, as the
+/// MAX-CAM in-situ compare does over the shared ripple path (Fig. 9(a)).
+/// Returns true if `a > b`.
+pub fn msb_compare_gt(a: u32, b: u32, width: u32) -> bool {
+    for i in (0..width).rev() {
+        let (ba, bb) = ((a >> i) & 1, (b >> i) & 1);
+        if ba != bb {
+            return ba == 1;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_adder_truth_table() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    let (s, cout) = full_adder(a, b, c);
+                    let total = a as u8 + b as u8 + c as u8;
+                    assert_eq!(s, total & 1 == 1);
+                    assert_eq!(cout, total >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ripple_add_matches_native() {
+        let cases = [(0u32, 0u32), (1, 1), (0xFFFF, 1), (0xABCD, 0x1234), (65535, 65535)];
+        for (a, b) in cases {
+            assert_eq!(ripple_add(a, b, false, 16), a + b);
+            assert_eq!(ripple_add(a, b, true, 16), a + b + 1);
+        }
+    }
+
+    #[test]
+    fn abs_diff_matches_native() {
+        let cases = [(0u16, 0u16), (5, 3), (3, 5), (0, 65535), (65535, 0), (1234, 4321)];
+        for (a, b) in cases {
+            assert_eq!(abs_diff_16(a, b), a.abs_diff(b), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn l1_matches_native() {
+        let a = (100u16, 65000u16, 32768u16);
+        let b = (65535u16, 0u16, 32760u16);
+        let want = (100u32.abs_diff(65535)) + 65000 + 8;
+        assert_eq!(l1_distance_19b(a, b), want);
+    }
+
+    #[test]
+    fn msb_compare_matches_native() {
+        let vals = [0u32, 1, 2, 0x7FFFF, 0x40000, 0x3FFFF, 12345];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(msb_compare_gt(a, b, 19), a > b, "a={a} b={b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! BS-CIM: the conventional bit-serial digital SRAM-CIM baseline.
+//!
+//! One input *bit* streams per cycle; each memory cluster multiplies it
+//! with the resident weight via a single AND gate and a narrow adder tree
+//! accumulates, shifting between cycles. High area efficiency, but a
+//! 16-bit input takes 16 cycles and energy scales linearly with input
+//! length — the paper's *Challenge II*.
+
+use crate::energy::{EnergyLedger, Event};
+
+/// Bit-serial engine with cycle/energy accounting; arithmetic is carried
+/// out serially (shift-add) exactly as the hardware would.
+#[derive(Debug, Clone, Default)]
+pub struct BsCim {
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl BsCim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bit-serial dot product: for each of the 16 input bit-planes, AND the
+    /// plane with each weight and accumulate with the plane's significance.
+    pub fn dot(&mut self, x: &[u16], w: &[i16]) -> i64 {
+        assert_eq!(x.len(), w.len());
+        let mut acc: i64 = 0;
+        for bit in 0..16u32 {
+            let mut plane: i64 = 0;
+            for (xi, wi) in x.iter().zip(w) {
+                // 1-bit multiplier: the AND gate
+                if (xi >> bit) & 1 == 1 {
+                    plane += *wi as i64;
+                }
+            }
+            acc += plane << bit;
+            self.cycles += 1;
+        }
+        self.ledger.charge(Event::MacBs, x.len() as u64);
+        acc
+    }
+
+    /// Macro-level cost of an `n x k . k x m` matmul at 16 cycles/input.
+    pub fn matmul_cost(&mut self, n: usize, k: usize, m: usize, parallel_macs: u64) -> u64 {
+        let macs = (n as u64) * (k as u64) * (m as u64);
+        self.ledger.charge(Event::MacBs, macs);
+        let waves = macs.div_ceil(parallel_macs);
+        let cycles = waves * 16;
+        self.cycles += cycles;
+        cycles
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn native(x: &[u16], w: &[i16]) -> i64 {
+        x.iter().zip(w).map(|(&a, &b)| a as i64 * b as i64).sum()
+    }
+
+    #[test]
+    fn dot_matches_native() {
+        let mut rng = Rng64::new(11);
+        let mut bs = BsCim::new();
+        for len in [1usize, 3, 16, 100] {
+            let x: Vec<u16> = (0..len).map(|_| rng.next_u64() as u16).collect();
+            let w: Vec<i16> = (0..len).map(|_| rng.next_u64() as i16).collect();
+            assert_eq!(bs.dot(&x, &w), native(&x, &w));
+        }
+    }
+
+    #[test]
+    fn sixteen_cycles_per_input_wave() {
+        let mut bs = BsCim::new();
+        assert_eq!(bs.matmul_cost(1, 64, 1, 64), 16);
+        assert_eq!(bs.matmul_cost(2, 64, 1, 64), 32);
+    }
+
+    #[test]
+    fn four_x_slower_than_sc() {
+        use crate::cim::sc_cim::{ScCim, ScCimConfig};
+        let mut bs = BsCim::new();
+        let mut sc = ScCim::new(ScCimConfig::default());
+        let par = sc.config().parallel_macs();
+        let cb = bs.matmul_cost(8, par as usize, 1, par);
+        let cs = sc.matmul_cost(8, par as usize, 1);
+        assert_eq!(cb, 4 * cs);
+    }
+}

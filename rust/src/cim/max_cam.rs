@@ -1,0 +1,389 @@
+//! The two-level Ping-Pong-MAX CAM (paper Figs. 7-10).
+//!
+//! Each CAM array holds temporary distances (TDs) in *paired* MAX-CAM
+//! cells. The pair mechanism implements the FPS min-update without any
+//! read-modify-write traffic: a new distance is written over the pair's
+//! *larger* cell (selected by the in-situ MSB-ripple comparison latched in
+//! AS-LA), so the live TD — `min(upper, lower)` — is always
+//! `min(old_td, new_distance)`; the superseded larger value simply gets
+//! overwritten next time.
+//!
+//! The arg-max search ("bit CAM") proceeds MSB -> LSB over the live TDs:
+//! at each of the 19 bit cycles, rows whose live bit is 0 while any active
+//! row has 1 are excluded (their precharger is disabled by CAM-LA). After
+//! 19 cycles the survivors hold the maximum; a final bit-parallel "data
+//! CAM" cycle resolves the row index (lowest match-line priority). The
+//! zero-detector (pure OR across each 128-pair TDG) lets whole groups drop
+//! out of a search cycle, which the energy model credits.
+//!
+//! Two arrays ping-pong at tile level: one is in search mode while the
+//! other loads the next tile's initial distances (Fig. 7's global
+//! selector), hiding the load latency — [`PingPongMaxCam`] models that.
+
+use super::bitops;
+use crate::energy::{EnergyLedger, Event};
+use crate::quant::TD_BITS;
+
+/// One TD pair: two 19-bit cells with shared compare/CAM paths.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct TdPair {
+    upper: u32,
+    lower: u32,
+    occupied: bool,
+}
+
+impl TdPair {
+    /// The live temporary distance: min of the two cells.
+    #[inline]
+    fn live(&self) -> u32 {
+        self.upper.min(self.lower)
+    }
+}
+
+/// Geometry of one CAM array (paper: 16 TDGs x 128 TDPs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CamConfig {
+    pub n_groups: usize,
+    pub pairs_per_group: usize,
+}
+
+impl Default for CamConfig {
+    fn default() -> Self {
+        Self { n_groups: 16, pairs_per_group: 128 }
+    }
+}
+
+impl CamConfig {
+    pub fn capacity(&self) -> usize {
+        self.n_groups * self.pairs_per_group
+    }
+}
+
+/// A single MAX-CAM array.
+#[derive(Debug, Clone)]
+pub struct CamArray {
+    cfg: CamConfig,
+    pairs: Vec<TdPair>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl CamArray {
+    pub fn new(cfg: CamConfig) -> Self {
+        Self { cfg, pairs: vec![TdPair::default(); cfg.capacity()], cycles: 0, ledger: EnergyLedger::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity()
+    }
+
+    /// Load initial distances for a fresh tile. Both cells of each pair are
+    /// set to the initial TD (so `live()` is well defined); the rest of the
+    /// array is marked unoccupied and ignored by searches.
+    pub fn load_initial(&mut self, tds: &[u32]) {
+        assert!(tds.len() <= self.capacity(), "tile TDs exceed CAM capacity");
+        for p in &mut self.pairs {
+            p.occupied = false;
+        }
+        for (i, &d) in tds.iter().enumerate() {
+            debug_assert!(d < (1 << TD_BITS));
+            self.pairs[i] = TdPair { upper: d, lower: d, occupied: true };
+        }
+        self.ledger.charge(Event::CamWriteBit, tds.len() as u64 * TD_BITS as u64 * 2);
+        // Bit-parallel row writes: one pair per cycle per group, groups in
+        // parallel -> pairs_per_group cycles for a full load.
+        self.cycles += tds.len().div_ceil(self.cfg.n_groups) as u64;
+    }
+
+    /// The FPS min-update for entry `i`: in-situ compare picks the larger
+    /// cell, the new distance overwrites it. No TD is ever read out.
+    pub fn update_min(&mut self, i: usize, new_distance: u32) {
+        debug_assert!(new_distance < (1 << TD_BITS));
+        let p = &mut self.pairs[i];
+        assert!(p.occupied, "update of unoccupied TD {i}");
+        // In-situ MSB ripple compare (AS-LA latches the result). Native
+        // `>` is bit-identical to the modeled MSB ripple for unsigned
+        // fields (proven by bitops::msb_compare_matches_native); keep the
+        // gate-level path as a debug check only.
+        let upper_is_larger = p.upper > p.lower;
+        debug_assert_eq!(
+            upper_is_larger,
+            bitops::msb_compare_gt(p.upper, p.lower, TD_BITS)
+        );
+        // ...then the local selector steers the write to the larger cell.
+        if upper_is_larger {
+            p.upper = new_distance;
+        } else {
+            p.lower = new_distance;
+        }
+        self.ledger.charge(Event::CamComparePair, 1);
+        self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
+        // No cycle charge: updates stream into the load-mode array at the
+        // APD row rate (16 TDs/cycle) and are fully hidden behind the
+        // distance scan whose cycles the APD model already counts.
+    }
+
+    /// Current live TD of entry `i` (test/diagnostic view; the hardware
+    /// never reads TDs out — that is the point).
+    pub fn live_td(&self, i: usize) -> u32 {
+        self.pairs[i].live()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.pairs.iter().filter(|p| p.occupied).count()
+    }
+
+    /// Exclude entry `i` from future searches (a sampled centroid's TD
+    /// becomes 0 in FPS; the hardware writes an all-zero TD).
+    pub fn invalidate(&mut self, i: usize) {
+        let p = &mut self.pairs[i];
+        p.upper = 0;
+        p.lower = 0;
+        self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
+        self.cycles += 1;
+    }
+
+    /// The bit-CAM max search: MSB -> LSB exclusion over live TDs, then one
+    /// data-CAM cycle to resolve the index. Returns `(max_value, index)`.
+    ///
+    /// Energy: every still-active occupied pair participates in each bit
+    /// cycle; TDGs whose zero-detector shows no active member drop out of
+    /// the cycle entirely (pure-OR detector, Fig. 7).
+    pub fn bit_cam_max(&mut self) -> (u32, usize) {
+        let n = self.pairs.len();
+        // TDs are static during a search; snapshot the live values once
+        // (the hardware equivalent: the pair mux output is latched).
+        let live: Vec<u32> = self.pairs.iter().map(|p| p.live()).collect();
+        // Active set per group, maintained incrementally so the
+        // zero-detector is O(groups) per cycle like the OR tree it models.
+        let mut active: Vec<bool> = self.pairs.iter().map(|p| p.occupied).collect();
+        let mut grp_active: Vec<u64> = (0..self.cfg.n_groups)
+            .map(|g| {
+                let base = g * self.cfg.pairs_per_group;
+                (base..(base + self.cfg.pairs_per_group).min(n))
+                    .filter(|&i| active[i])
+                    .count() as u64
+            })
+            .collect();
+        let mut value: u32 = 0;
+        for bit in (0..TD_BITS).rev() {
+            let mut searched: u64 = 0;
+            let mut any_one = false;
+            for g in 0..self.cfg.n_groups {
+                if grp_active[g] == 0 {
+                    continue; // zero-detector: idle group costs nothing
+                }
+                searched += grp_active[g];
+                let base = g * self.cfg.pairs_per_group;
+                for i in base..(base + self.cfg.pairs_per_group).min(n) {
+                    if active[i] && (live[i] >> bit) & 1 == 1 {
+                        any_one = true;
+                        break;
+                    }
+                }
+            }
+            self.ledger.charge(Event::CamSearchCell, searched);
+            self.cycles += 1;
+            if any_one {
+                value |= 1 << bit;
+                // CAM-LA disables the prechargers of mismatching rows.
+                for g in 0..self.cfg.n_groups {
+                    if grp_active[g] == 0 {
+                        continue;
+                    }
+                    let base = g * self.cfg.pairs_per_group;
+                    for i in base..(base + self.cfg.pairs_per_group).min(n) {
+                        if active[i] && (live[i] >> bit) & 1 == 0 {
+                            active[i] = false;
+                            grp_active[g] -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        // Data CAM: bit-parallel search for `value`; lowest index wins
+        // (match-line priority encoder). The survivors of the bit search
+        // all hold `value`, so the first still-active row is the match.
+        let idx = (0..n)
+            .find(|&i| active[i])
+            .expect("bit-CAM value must exist in the array");
+        debug_assert_eq!(live[idx], value);
+        self.ledger.charge(Event::CamSearchCell, self.occupied() as u64);
+        self.cycles += 1;
+        (value, idx)
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+/// The two-array ping-pong wrapper: `search()` runs on the active array
+/// while `preload()` fills the shadow array for the next tile; `swap()`
+/// flips roles (the paper's global selector).
+#[derive(Debug, Clone)]
+pub struct PingPongMaxCam {
+    arrays: [CamArray; 2],
+    active: usize,
+}
+
+impl PingPongMaxCam {
+    pub fn new(cfg: CamConfig) -> Self {
+        Self { arrays: [CamArray::new(cfg), CamArray::new(cfg)], active: 0 }
+    }
+
+    /// Total storage in bytes across both arrays plus index latches —
+    /// sanity-checked against Table II's 19 KB in tests.
+    pub fn storage_bytes(&self) -> usize {
+        // 2 arrays x capacity pairs x 2 cells x 19 bits, plus an 11-bit
+        // index latch per pair.
+        let cfg = self.arrays[0].cfg;
+        let bits = 2 * cfg.capacity() * (2 * TD_BITS as usize + 11);
+        bits.div_ceil(8)
+    }
+
+    pub fn active_mut(&mut self) -> &mut CamArray {
+        &mut self.arrays[self.active]
+    }
+
+    pub fn active(&self) -> &CamArray {
+        &self.arrays[self.active]
+    }
+
+    pub fn shadow_mut(&mut self) -> &mut CamArray {
+        &mut self.arrays[1 - self.active]
+    }
+
+    /// Flip search/load roles (one global-selector cycle).
+    pub fn swap(&mut self) {
+        self.active = 1 - self.active;
+    }
+
+    /// Cycles that actually gate throughput: the search array's cycles
+    /// (loads on the shadow array are hidden by the ping-pong).
+    pub fn critical_cycles(&self) -> u64 {
+        self.arrays[self.active].cycles()
+    }
+
+    pub fn merged_ledger(&self) -> EnergyLedger {
+        let mut l = self.arrays[0].ledger().clone();
+        l.merge(self.arrays[1].ledger());
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    fn rand_tds(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng64::new(seed);
+        (0..n).map(|_| rng.below(1u64 << TD_BITS) as u32).collect()
+    }
+
+    #[test]
+    fn capacity_and_table2_storage() {
+        let cam = PingPongMaxCam::new(CamConfig::default());
+        assert_eq!(cam.active().capacity(), 2048);
+        let kb = cam.storage_bytes() as f64 / 1024.0;
+        assert!((18.0..=26.0).contains(&kb), "storage {kb:.1} KB vs Table II 19 KB");
+    }
+
+    #[test]
+    fn bit_cam_finds_max_and_index() {
+        let tds = rand_tds(2048, 1);
+        let mut arr = CamArray::new(CamConfig::default());
+        arr.load_initial(&tds);
+        let (v, i) = arr.bit_cam_max();
+        let want = *tds.iter().max().unwrap();
+        assert_eq!(v, want);
+        assert_eq!(tds[i], want);
+        // lowest-index priority on ties
+        let first = tds.iter().position(|&d| d == want).unwrap();
+        assert_eq!(i, first);
+    }
+
+    #[test]
+    fn bit_cam_costs_19_plus_1_cycles() {
+        let tds = rand_tds(256, 2);
+        let mut arr = CamArray::new(CamConfig::default());
+        arr.load_initial(&tds);
+        let before = arr.cycles();
+        arr.bit_cam_max();
+        assert_eq!(arr.cycles() - before, TD_BITS as u64 + 1);
+    }
+
+    #[test]
+    fn update_min_is_min() {
+        let mut arr = CamArray::new(CamConfig::default());
+        arr.load_initial(&[500, 100, 300]);
+        arr.update_min(0, 200); // live becomes min(500, 200)
+        arr.update_min(1, 400); // live stays 100
+        arr.update_min(2, 300);
+        assert_eq!(arr.live_td(0), 200);
+        assert_eq!(arr.live_td(1), 100);
+        assert_eq!(arr.live_td(2), 300);
+        // repeated updates keep folding the min
+        arr.update_min(0, 350);
+        assert_eq!(arr.live_td(0), 200);
+        arr.update_min(0, 10);
+        assert_eq!(arr.live_td(0), 10);
+    }
+
+    #[test]
+    fn fps_on_cam_matches_reference() {
+        // Full FPS inner loop through the CAM == software argmax/min FPS.
+        let tds0 = rand_tds(512, 3);
+        let mut arr = CamArray::new(CamConfig::default());
+        arr.load_initial(&tds0);
+        let mut soft: Vec<u32> = tds0.clone();
+        let mut rng = Rng64::new(4);
+        for _ in 0..64 {
+            let (v, i) = arr.bit_cam_max();
+            let soft_max = *soft.iter().max().unwrap();
+            assert_eq!(v, soft_max);
+            assert_eq!(soft[i], soft_max);
+            arr.invalidate(i);
+            soft[i] = 0;
+            // fold in a batch of new distances
+            for j in 0..512 {
+                let d = rng.below(1u64 << TD_BITS) as u32;
+                arr.update_min(j, d);
+                soft[j] = soft[j].min(d);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_detector_saves_energy() {
+        // A nearly-empty array must charge far fewer search cells than a
+        // full one for the same search.
+        let mut small = CamArray::new(CamConfig::default());
+        small.load_initial(&rand_tds(8, 5));
+        small.bit_cam_max();
+        let mut big = CamArray::new(CamConfig::default());
+        big.load_initial(&rand_tds(2048, 6));
+        big.bit_cam_max();
+        assert!(
+            small.ledger().count(Event::CamSearchCell) * 10
+                < big.ledger().count(Event::CamSearchCell)
+        );
+    }
+
+    #[test]
+    fn ping_pong_swap_roles() {
+        let mut cam = PingPongMaxCam::new(CamConfig::default());
+        cam.active_mut().load_initial(&[1, 2, 3]);
+        cam.shadow_mut().load_initial(&[9, 8, 7]);
+        let (v, _) = cam.active_mut().bit_cam_max();
+        assert_eq!(v, 3);
+        cam.swap();
+        let (v, _) = cam.active_mut().bit_cam_max();
+        assert_eq!(v, 9);
+    }
+}

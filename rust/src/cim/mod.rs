@@ -1,0 +1,26 @@
+//! Bit-exact functional models of the paper's CIM structures, each with a
+//! cycle- and event-level cost model:
+//!
+//! - [`apd_cim`] — the approximate-distance SRAM-CIM (L1 distances, Fig. 6)
+//! - [`max_cam`] — the two-level Ping-Pong-MAX CAM (Figs. 7-10)
+//! - [`sc_cim`] — the split-concatenate SRAM-CIM MAC engine (Fig. 11)
+//! - [`bs_cim`] / [`bt_cim`] — the bit-serial and Booth digital-CIM baselines
+//! - [`bitops`] — gate-level arithmetic primitives shared by the models
+//!
+//! "Bit-exact" means the arithmetic is carried out the way the silicon
+//! would (ripple adders from NAND/OR dynamic logic, MSB-first CAM
+//! exclusion, nibble select/concatenate) and is property-tested against
+//! native integer semantics.
+
+pub mod apd_cim;
+pub mod bitops;
+pub mod bs_cim;
+pub mod bt_cim;
+pub mod max_cam;
+pub mod sc_cim;
+pub mod sorter;
+
+pub use apd_cim::{ApdCim, ApdCimConfig};
+pub use max_cam::{CamArray, PingPongMaxCam};
+pub use sc_cim::ScCim;
+pub use sorter::TopKSorter;

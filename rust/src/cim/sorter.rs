@@ -1,0 +1,154 @@
+//! The digital sorter/merger unit (paper Fig. 3(a), "Sorter/Merger").
+//!
+//! Lattice-query hits stream out of the APD-CIM as (19-bit distance,
+//! 11-bit index) pairs; the sorter keeps the k nearest via an insertion
+//! network (a k-deep compare-and-shift pipeline, the standard top-k
+//! structure in PCN accelerators), and the merger concatenates per-tile
+//! top-k lists. Cycle model: one element accepted per cycle; energy: one
+//! (19+11)-bit comparator pass plus the shift register writes actually
+//! performed.
+
+use crate::energy::{EnergyLedger, Event};
+
+/// Width of one sorter entry in bits (19-bit distance + 11-bit index).
+pub const ENTRY_BITS: u64 = 30;
+
+/// A k-nearest streaming sorter with cycle/energy accounting.
+#[derive(Debug, Clone)]
+pub struct TopKSorter {
+    k: usize,
+    /// (distance, index), ascending by distance then index.
+    entries: Vec<(u32, usize)>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl TopKSorter {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, entries: Vec::with_capacity(k + 1), cycles: 0, ledger: EnergyLedger::new() }
+    }
+
+    /// Accept one streamed element (one cycle).
+    pub fn push(&mut self, distance: u32, index: usize) {
+        self.cycles += 1;
+        // Comparator pass over the occupied pipeline stages.
+        self.ledger
+            .charge(Event::DigitalCompareBit, ENTRY_BITS * self.entries.len().max(1) as u64);
+        let pos = self
+            .entries
+            .partition_point(|&(d, i)| (d, i) < (distance, index));
+        if pos >= self.k {
+            return; // falls off the end of the pipeline
+        }
+        self.entries.insert(pos, (distance, index));
+        // Shift-register writes for the displaced tail.
+        let shifted = (self.entries.len() - pos) as u64;
+        self.ledger.charge(Event::RegBit, ENTRY_BITS * shifted);
+        self.entries.truncate(self.k);
+    }
+
+    /// Sorted (ascending) k-nearest collected so far.
+    pub fn take(self) -> Vec<(u32, usize)> {
+        self.entries
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Merge two sorted top-k lists into one (the merger half; one cycle
+    /// per output element).
+    pub fn merge(
+        a: &[(u32, usize)],
+        b: &[(u32, usize)],
+        k: usize,
+        ledger: &mut EnergyLedger,
+    ) -> (Vec<(u32, usize)>, u64) {
+        let mut out = Vec::with_capacity(k);
+        let (mut i, mut j) = (0, 0);
+        let mut cycles = 0;
+        while out.len() < k && (i < a.len() || j < b.len()) {
+            cycles += 1;
+            ledger.charge(Event::DigitalCompareBit, ENTRY_BITS);
+            let take_a = match (a.get(i), b.get(j)) {
+                (Some(x), Some(y)) => x <= y,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_a {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                out.push(b[j]);
+                j += 1;
+            }
+        }
+        (out, cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng64;
+
+    #[test]
+    fn keeps_k_nearest_sorted() {
+        let mut rng = Rng64::new(5);
+        let vals: Vec<u32> = (0..500).map(|_| rng.below(1 << 19) as u32).collect();
+        let mut sorter = TopKSorter::new(8);
+        for (i, &d) in vals.iter().enumerate() {
+            sorter.push(d, i);
+        }
+        assert_eq!(sorter.cycles(), 500);
+        let got = sorter.take();
+        let mut want: Vec<(u32, usize)> =
+            vals.iter().enumerate().map(|(i, &d)| (d, i)).collect();
+        want.sort();
+        want.truncate(8);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fewer_than_k_elements() {
+        let mut s = TopKSorter::new(16);
+        s.push(10, 0);
+        s.push(5, 1);
+        assert_eq!(s.take(), vec![(5, 1), (10, 0)]);
+    }
+
+    #[test]
+    fn merge_interleaves_and_truncates() {
+        let a = vec![(1u32, 0usize), (4, 1), (9, 2)];
+        let b = vec![(2u32, 3usize), (3, 4), (10, 5)];
+        let mut ledger = EnergyLedger::new();
+        let (m, cycles) = TopKSorter::merge(&a, &b, 4, &mut ledger);
+        assert_eq!(m, vec![(1, 0), (2, 3), (3, 4), (4, 1)]);
+        assert_eq!(cycles, 4);
+    }
+
+    #[test]
+    fn energy_scales_with_occupancy() {
+        let mut near = TopKSorter::new(4);
+        for i in 0..100 {
+            near.push(1_000_000 - i, i as usize); // every push lands in front
+        }
+        let mut far = TopKSorter::new(4);
+        far.push(0, 0);
+        far.push(1, 1);
+        far.push(2, 2);
+        far.push(3, 3);
+        for i in 0..96 {
+            far.push(500_000 + i, 10 + i as usize); // all rejected
+        }
+        assert!(
+            near.ledger().count(Event::RegBit) > far.ledger().count(Event::RegBit),
+            "accepted inserts must write more register bits"
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Hardware specification — defaults reproduce the paper's Table II.
+
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
+use crate::cim::sc_cim::ScCimConfig;
+use crate::energy::{AreaModel, EnergyConstants};
+
+/// Full PC2IM hardware configuration (Table II).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareConfig {
+    /// Clock frequency in MHz (Table II: 250 MHz, 40 nm).
+    pub freq_mhz: f64,
+    /// On-chip point capacity of the APD-CIM tile (Table II: 2k points).
+    pub tile_capacity: usize,
+    /// Standard on-chip SRAM for features/buffers, bytes (Table II: 512 KB).
+    pub onchip_sram_bytes: usize,
+    /// DRAM interface width in bits per cycle (the off-chip bandwidth knob
+    /// for the latency model; 256 b/cyc at 250 MHz = 8 GB/s, LPDDR-class).
+    pub dram_bits_per_cycle: u64,
+    /// Rows sharing a compute unit in the MAC engines (SCR).
+    pub scr: u64,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        Self {
+            freq_mhz: 250.0,
+            tile_capacity: 2048,
+            onchip_sram_bytes: 512 * 1024,
+            dram_bits_per_cycle: 256,
+            scr: 8,
+        }
+    }
+}
+
+impl HardwareConfig {
+    pub fn apd_cim(&self) -> ApdCimConfig {
+        // Geometry scales PTC count with the tile capacity (paper: 2048).
+        let base = ApdCimConfig::default();
+        assert_eq!(
+            base.capacity(),
+            self.tile_capacity,
+            "non-default tile capacities need a custom APD geometry"
+        );
+        base
+    }
+
+    pub fn cam(&self) -> CamConfig {
+        CamConfig::default()
+    }
+
+    pub fn sc_cim(&self) -> ScCimConfig {
+        ScCimConfig::default()
+    }
+
+    pub fn energy(&self) -> EnergyConstants {
+        EnergyConstants::default()
+    }
+
+    pub fn area(&self) -> AreaModel {
+        AreaModel::default()
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+
+    /// Parallel 16x16 MACs the MAC macro sustains per wave: one compute
+    /// unit per `scr` rows of 16-bit words (used by the baselines too, so
+    /// all engines see the same storage budget).
+    pub fn parallel_macs(&self) -> u64 {
+        (self.sc_cim().storage_bytes() as u64 * 8) / (16 * self.scr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let h = HardwareConfig::default();
+        assert_eq!(h.freq_mhz, 250.0);
+        assert_eq!(h.tile_capacity, 2048);
+        assert_eq!(h.onchip_sram_bytes, 512 * 1024);
+        assert_eq!(h.apd_cim().storage_bytes(), 12 * 1024);
+        assert_eq!(h.sc_cim().storage_bytes(), 256 * 1024);
+    }
+
+    #[test]
+    fn throughput_near_table2_2tops() {
+        // 2048-parallel macs / 4 cycles * 250 MHz * 2 ops — order of Table
+        // II's 2 TOPS.
+        let h = HardwareConfig::default();
+        let tops =
+            h.parallel_macs() as f64 / 4.0 * h.freq_mhz * 1e6 * 2.0 / 1e12;
+        assert!((0.5..=4.0).contains(&tops), "{tops} TOPS");
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system: hardware spec (Table II defaults), workload and
+//! pipeline configuration, with JSON (de)serialization for the CLI.
+
+pub mod hardware;
+pub mod workload;
+
+pub use hardware::HardwareConfig;
+pub use workload::{PipelineConfig, WorkloadConfig};

@@ -1,0 +1,90 @@
+//! Workload and pipeline configuration.
+
+use crate::pointcloud::synthetic::DatasetScale;
+
+/// A benchmark workload: which dataset scale, how many clouds, which seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadConfig {
+    pub scale: Scale,
+    pub n_clouds: usize,
+    pub seed: u64,
+}
+
+/// Serializable mirror of [`DatasetScale`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Medium,
+    Large,
+}
+
+impl From<Scale> for DatasetScale {
+    fn from(s: Scale) -> Self {
+        match s {
+            Scale::Small => DatasetScale::Small,
+            Scale::Medium => DatasetScale::Medium,
+            Scale::Large => DatasetScale::Large,
+        }
+    }
+}
+
+impl From<DatasetScale> for Scale {
+    fn from(s: DatasetScale) -> Self {
+        match s {
+            DatasetScale::Small => Scale::Small,
+            DatasetScale::Medium => Scale::Medium,
+            DatasetScale::Large => Scale::Large,
+        }
+    }
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { scale: Scale::Large, n_clouds: 4, seed: 0 }
+    }
+}
+
+/// Pipeline options for the PC2IM coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Use the quantized (q16) model artifacts on the PJRT path.
+    pub quantized: bool,
+    /// Use exact L2 FPS + ball query instead of the approximate pipeline
+    /// (ablation switch for Fig. 12(a)).
+    pub exact_sampling: bool,
+    /// Directory holding `meta.json` and the HLO artifacts.
+    pub artifacts_dir: String,
+    /// Number of tiles processed concurrently by the async scheduler.
+    pub tile_parallelism: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            quantized: false,
+            exact_sampling: false,
+            artifacts_dir: "artifacts".to_string(),
+            tile_parallelism: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_roundtrip() {
+        for s in [Scale::Small, Scale::Medium, Scale::Large] {
+            let d: DatasetScale = s.into();
+            let back: Scale = d.into();
+            assert_eq!(back, s);
+        }
+    }
+
+    #[test]
+    fn pipeline_defaults() {
+        let p = PipelineConfig::default();
+        assert!(!p.quantized && !p.exact_sampling);
+        assert_eq!(p.artifacts_dir, "artifacts");
+    }}

@@ -1,0 +1,327 @@
+//! The end-to-end PC2IM inference pipeline for the trained PointNet2(c):
+//!
+//!   quantize → (MSP if needed) → APD-CIM FPS + Ping-Pong-MAX CAM →
+//!   lattice query → gather/group → SC-CIM-scheduled MLPs executed
+//!   numerically via PJRT → logits.
+//!
+//! Preprocessing runs through the *bit-exact engine models* (so cycles and
+//! the event ledger are event-accurate), feature computing runs through
+//! the real AOT-compiled HLO (so logits are real numbers), and the SC-CIM
+//! cost model prices the same matmuls the PJRT path executes.
+//!
+//! The `exact_sampling` ablation replaces the whole approximate
+//! preprocessing chain with float L2 FPS + ball query (Fig. 12(a)).
+
+use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
+use crate::cim::max_cam::{CamArray, CamConfig};
+use crate::cim::sc_cim::{ScCim, ScCimConfig};
+use crate::cim::sorter::TopKSorter;
+use crate::config::{HardwareConfig, PipelineConfig};
+use crate::coordinator::stats::CloudStats;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::{Point3, PointCloud};
+use crate::quant::{self, QPoint3};
+use crate::runtime::Runtime;
+use crate::sampling::{self, LATTICE_SCALE};
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Result of classifying one cloud.
+#[derive(Debug, Clone)]
+pub struct CloudResult {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub stats: CloudStats,
+}
+
+/// Sampling + grouping indices for one SA level (the preprocessing
+/// module's output contract).
+#[derive(Debug, Clone)]
+pub struct LevelIndices {
+    pub centroids: Vec<usize>,
+    pub groups: Vec<Vec<usize>>,
+}
+
+/// The coordinator pipeline.
+pub struct Pipeline {
+    rt: Runtime,
+    hw: HardwareConfig,
+    cfg: PipelineConfig,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig) -> Result<Self> {
+        let rt = Runtime::new(&cfg.artifacts_dir)
+            .with_context(|| format!("loading artifacts from {:?}", cfg.artifacts_dir))?;
+        Ok(Self { rt, hw: HardwareConfig::default(), cfg })
+    }
+
+    pub fn with_hardware(mut self, hw: HardwareConfig) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    pub fn meta(&self) -> &crate::runtime::Meta {
+        &self.rt.meta
+    }
+
+    fn artifact(&self, base: &str) -> String {
+        if self.cfg.quantized {
+            format!("{base}_q16")
+        } else {
+            base.to_string()
+        }
+    }
+
+    /// FPS through the APD-CIM + MAX-CAM engines (the paper's Fig. 10(b)
+    /// flow). Returns sampled indices; charges cycles/energy to the engines.
+    pub fn cam_fps(
+        apd: &mut ApdCim,
+        cam: &mut CamArray,
+        m: usize,
+        start: usize,
+    ) -> Vec<usize> {
+        let d0 = apd.scan_distances(start);
+        cam.load_initial(&d0);
+        cam.invalidate(start);
+        let mut idx = Vec::with_capacity(m);
+        idx.push(start);
+        for _ in 1..m {
+            let (_, best) = cam.bit_cam_max();
+            idx.push(best);
+            cam.invalidate(best);
+            let d = apd.scan_distances(best);
+            for (j, &dj) in d.iter().enumerate() {
+                cam.update_min(j, dj);
+            }
+        }
+        idx
+    }
+
+    /// Lattice query on the APD-CIM: one distance scan per centroid, hits
+    /// filtered against the grid-space range; the sorter/merger unit
+    /// (Fig. 3(a)) keeps the k *nearest* in-range points and its
+    /// cycle/energy cost is charged alongside the scan's.
+    fn cam_lattice_query(
+        apd: &mut ApdCim,
+        centroids: &[usize],
+        grid_range: u32,
+        k: usize,
+        stats: &mut CloudStats,
+    ) -> Vec<Vec<usize>> {
+        centroids
+            .iter()
+            .map(|&ci| {
+                let d = apd.scan_distances(ci);
+                let mut sorter = TopKSorter::new(k);
+                for (j, &dj) in d.iter().enumerate() {
+                    if dj <= grid_range {
+                        sorter.push(dj, j);
+                    }
+                }
+                // sorter accepts one hit/cycle, overlapped with the scan:
+                // only the overflow beyond the scan length costs extra
+                stats.preproc_cycles += sorter.cycles().saturating_sub(d.len() as u64 / 16);
+                stats.ledger.merge(sorter.ledger());
+                let mut grp: Vec<usize> = sorter.take().into_iter().map(|(_, j)| j).collect();
+                if grp.is_empty() {
+                    let nearest =
+                        (0..d.len()).min_by_key(|&j| d[j]).expect("non-empty tile");
+                    grp.push(nearest);
+                }
+                let first = grp[0];
+                while grp.len() < k {
+                    grp.push(first);
+                }
+                grp
+            })
+            .collect()
+    }
+
+    /// One sampling+grouping level through the CIM engines (approximate
+    /// path) or the float reference (exact ablation).
+    fn level(
+        &self,
+        pts_f: &[Point3],
+        pts_q: &[QPoint3],
+        m: usize,
+        k: usize,
+        radius: f32,
+        stats: &mut CloudStats,
+    ) -> LevelIndices {
+        if self.cfg.exact_sampling {
+            let (centroids, trace) = sampling::fps_l2(pts_f, m, 0);
+            let groups = sampling::ball_query(pts_f, &centroids, radius, k);
+            // exact path still costs energy — on the digital baseline
+            // datapath (this is what Fig. 12(b) charges Baseline-2 for)
+            stats.ledger.charge(
+                crate::energy::Event::SramBit,
+                trace.point_reads * 48 + (trace.td_reads + trace.td_writes) * 35,
+            );
+            stats.ledger.charge(crate::energy::Event::MacDigital, trace.point_reads * 3);
+            stats.preproc_cycles += trace.point_reads / 8;
+            LevelIndices { centroids, groups }
+        } else {
+            let mut apd = ApdCim::new(ApdCimConfig::default());
+            apd.load_tile(pts_q);
+            let mut cam = CamArray::new(CamConfig::default());
+            let centroids = Self::cam_fps(&mut apd, &mut cam, m, 0);
+            let grid_range = quant::radius_to_grid(LATTICE_SCALE * radius);
+            let groups =
+                Self::cam_lattice_query(&mut apd, &centroids, grid_range, k, stats);
+            stats.preproc_cycles += apd.cycles() + cam.cycles();
+            stats.ledger.merge(apd.ledger());
+            stats.ledger.merge(cam.ledger());
+            LevelIndices { centroids, groups }
+        }
+    }
+
+    /// Classify one cloud end-to-end. The cloud must have exactly the
+    /// model's point count (the classification artifacts have static
+    /// shapes; segmentation-scale clouds go through MSP first — see
+    /// `examples/segmentation_tiles.rs`).
+    pub fn classify(&mut self, cloud: &PointCloud) -> Result<CloudResult> {
+        let m = self.rt.meta.model.clone();
+        ensure!(
+            cloud.len() == m.n_points,
+            "classifier expects {} points, got {}",
+            m.n_points,
+            cloud.len()
+        );
+        let t0 = Instant::now();
+        let mut stats = CloudStats::default();
+        let mut sc = ScCim::new(ScCimConfig::default());
+
+        // On the approximate path the network "sees" PTQ16 coordinates:
+        // quantize then dequantize (half-LSB rounding), exactly what the
+        // 16-bit on-chip format stores.
+        let q1 = quant::quantize_cloud(cloud);
+        let pts1_f: Vec<Point3> = if self.cfg.exact_sampling {
+            cloud.points.clone()
+        } else {
+            q1.iter().map(quant::dequantize_point).collect()
+        };
+
+        // ---- level 1: sample S1 centroids, group K1, MLP1 via PJRT ----
+        let l1 = self.level(&pts1_f, &q1, m.s1, m.k1, m.r1, &mut stats);
+        let c1_f: Vec<Point3> = l1.centroids.iter().map(|&i| pts1_f[i]).collect();
+        let mut g1 = Vec::with_capacity(m.s1 * m.k1 * 3);
+        for (s, grp) in l1.groups.iter().enumerate() {
+            let c = c1_f[s];
+            for &j in grp {
+                let p = pts1_f[j];
+                g1.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
+            }
+        }
+        let f1 = self.rt.execute(&self.artifact("sa1"), &g1)?; // [S1, 128]
+        let c1_dim = f1.len() / m.s1;
+        sc.matmul_cost(m.s1 * m.k1, 3, 64);
+        sc.matmul_cost(m.s1 * m.k1, 64, 64);
+        sc.matmul_cost(m.s1 * m.k1, 64, 128);
+
+        // ---- level 2 over the sampled centroids ----
+        let q2: Vec<QPoint3> = l1.centroids.iter().map(|&i| q1[i]).collect();
+        let l2 = self.level(&c1_f, &q2, m.s2, m.k2, m.r2, &mut stats);
+        let c2_f: Vec<Point3> = l2.centroids.iter().map(|&i| c1_f[i]).collect();
+        let in2 = 3 + c1_dim;
+        let mut g2 = Vec::with_capacity(m.s2 * m.k2 * in2);
+        for (s, grp) in l2.groups.iter().enumerate() {
+            let c = c2_f[s];
+            for &j in grp {
+                let p = c1_f[j];
+                g2.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
+                g2.extend_from_slice(&f1[j * c1_dim..(j + 1) * c1_dim]);
+            }
+        }
+        let f2 = self.rt.execute(&self.artifact("sa2"), &g2)?; // [S2, 256]
+        let c2_dim = f2.len() / m.s2;
+        sc.matmul_cost(m.s2 * m.k2, in2, 128);
+        sc.matmul_cost(m.s2 * m.k2, 128, 128);
+        sc.matmul_cost(m.s2 * m.k2, 128, 256);
+
+        // ---- global layer + head ----
+        let in3 = 3 + c2_dim;
+        let mut g3 = Vec::with_capacity(m.s2 * in3);
+        for (s, c) in c2_f.iter().enumerate() {
+            g3.extend_from_slice(&[c.x, c.y, c.z]);
+            g3.extend_from_slice(&f2[s * c2_dim..(s + 1) * c2_dim]);
+        }
+        let logits = self.rt.execute(&self.artifact("head"), &g3)?;
+        ensure!(logits.len() == m.num_classes, "bad head output");
+        sc.matmul_cost(m.s2, in3, 256);
+        sc.matmul_cost(m.s2, 256, 512);
+        sc.matmul_cost(1, 512, 256);
+        sc.matmul_cost(1, 256, 128);
+        sc.matmul_cost(1, 128, m.num_classes);
+
+        stats.feature_cycles += sc.cycles();
+        stats.ledger.merge(sc.ledger());
+        // grouped tensors spill through on-chip SRAM once each way
+        stats.ledger.charge(
+            crate::energy::Event::SramBit,
+            16 * (g1.len() as u64 + g2.len() as u64 + g3.len() as u64),
+        );
+        stats.host_wall_s = t0.elapsed().as_secs_f64();
+
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(CloudResult { logits, pred, stats })
+    }
+
+    pub fn hardware(&self) -> &HardwareConfig {
+        &self.hw
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::make_class_cloud;
+    use std::path::PathBuf;
+
+    fn cfg() -> Option<PipelineConfig> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then(|| PipelineConfig {
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            ..PipelineConfig::default()
+        })
+    }
+
+    #[test]
+    fn classify_produces_logits_and_costs() {
+        let Some(cfg) = cfg() else { return };
+        let mut p = Pipeline::new(cfg).unwrap();
+        let cloud = make_class_cloud(0, 1024, 5);
+        let r = p.classify(&cloud).unwrap();
+        assert_eq!(r.logits.len(), 8);
+        assert!(r.stats.preproc_cycles > 0);
+        assert!(r.stats.feature_cycles > 0);
+        assert!(!r.stats.ledger.is_empty());
+    }
+
+    #[test]
+    fn exact_and_approx_agree_often() {
+        // The Fig. 12(a) argument in miniature: approximate sampling should
+        // classify most clouds the same way as exact sampling.
+        let Some(cfg) = cfg() else { return };
+        let mut exact = Pipeline::new(PipelineConfig { exact_sampling: true, ..cfg.clone() }).unwrap();
+        let mut approx = Pipeline::new(cfg).unwrap();
+        let mut agree = 0;
+        let n = 10usize;
+        for seed in 0..n {
+            let cloud = make_class_cloud(seed % 8, 1024, 100 + seed as u64);
+            let a = exact.classify(&cloud).unwrap();
+            let b = approx.classify(&cloud).unwrap();
+            agree += (a.pred == b.pred) as usize;
+        }
+        assert!(agree * 10 >= n * 7, "agreement {agree}/{n}");
+    }
+}

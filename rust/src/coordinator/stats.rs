@@ -1,0 +1,106 @@
+//! Per-cloud and per-batch statistics: simulated cycles/energy from the
+//! engine models plus host wall-clock for the PJRT path.
+
+use crate::config::HardwareConfig;
+use crate::energy::{EnergyConstants, EnergyLedger};
+
+/// Statistics of one cloud's trip through the pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct CloudStats {
+    /// Simulated preprocessing cycles (APD-CIM + CAM critical path).
+    pub preproc_cycles: u64,
+    /// Simulated feature-computing cycles (SC-CIM).
+    pub feature_cycles: u64,
+    /// Event ledger across all engines.
+    pub ledger: EnergyLedger,
+    /// Host wall-clock seconds (PJRT execution + sampling simulation).
+    pub host_wall_s: f64,
+}
+
+impl CloudStats {
+    /// Modeled accelerator latency, with tile-level pipelining.
+    pub fn simulated_latency_s(&self, hw: &HardwareConfig) -> f64 {
+        self.preproc_cycles.max(self.feature_cycles) as f64 * hw.cycle_time_s()
+    }
+
+    pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
+        self.ledger.total_pj(c)
+    }
+}
+
+/// Aggregate over a batch / test set.
+#[derive(Debug, Clone, Default)]
+pub struct BatchStats {
+    pub n: usize,
+    pub correct: usize,
+    pub preproc_cycles: u64,
+    pub feature_cycles: u64,
+    pub ledger: EnergyLedger,
+    pub host_wall_s: f64,
+}
+
+impl BatchStats {
+    pub fn push(&mut self, s: &CloudStats, correct: bool) {
+        self.n += 1;
+        self.correct += correct as usize;
+        self.preproc_cycles += s.preproc_cycles;
+        self.feature_cycles += s.feature_cycles;
+        self.ledger.merge(&s.ledger);
+        self.host_wall_s += s.host_wall_s;
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+
+    pub fn mean_latency_s(&self, hw: &HardwareConfig) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        (self.preproc_cycles.max(self.feature_cycles) as f64 / self.n as f64)
+            * hw.cycle_time_s()
+    }
+
+    pub fn mean_energy_pj(&self, c: &EnergyConstants) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.ledger.total_pj(c) / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::Event;
+
+    #[test]
+    fn batch_accumulates() {
+        let mut b = BatchStats::default();
+        let mut s = CloudStats::default();
+        s.preproc_cycles = 100;
+        s.feature_cycles = 50;
+        s.ledger.charge(Event::SramBit, 10);
+        b.push(&s, true);
+        b.push(&s, false);
+        assert_eq!(b.n, 2);
+        assert_eq!(b.correct, 1);
+        assert!((b.accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(b.preproc_cycles, 200);
+        assert_eq!(b.ledger.count(Event::SramBit), 20);
+    }
+
+    #[test]
+    fn latency_is_pipelined_max() {
+        let hw = HardwareConfig::default();
+        let mut s = CloudStats::default();
+        s.preproc_cycles = 250_000;
+        s.feature_cycles = 100_000;
+        assert!((s.simulated_latency_s(&hw) - 1e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! The event ledger: hardware models charge discrete events; the ledger
+//! prices them with [`EnergyConstants`] and reports per-category breakdowns.
+
+use super::constants::EnergyConstants;
+use std::collections::BTreeMap;
+
+/// Every countable hardware event in the simulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Event {
+    /// Off-chip DRAM traffic, counted in bits.
+    DramBit,
+    /// On-chip SRAM traffic (reads+writes), counted in bits.
+    SramBit,
+    /// Register/latch traffic, counted in bits.
+    RegBit,
+    /// One full in-array L1 distance (APD-CIM).
+    ApdDistanceOp,
+    /// One CAM cell active in one search cycle (bit or data CAM).
+    CamSearchCell,
+    /// One in-situ TD-pair comparison (cell-level ping-pong min-update).
+    CamComparePair,
+    /// One bit written into a CAM/TD cell.
+    CamWriteBit,
+    /// Digital comparator bit (baseline max/min scans).
+    DigitalCompareBit,
+    /// Digital adder bit (baseline distance datapath).
+    AdderBit,
+    /// One 16x16 MAC on BS-CIM.
+    MacBs,
+    /// One 16x16 MAC on BT-CIM.
+    MacBt,
+    /// One 16x16 MAC on SC-CIM.
+    MacSc,
+    /// One 16x16 MAC on a plain digital near-memory unit.
+    MacDigital,
+}
+
+impl Event {
+    pub fn unit_energy_pj(self, c: &EnergyConstants) -> f64 {
+        match self {
+            Event::DramBit => c.dram_bit,
+            Event::SramBit => c.sram_bit,
+            Event::RegBit => c.reg_bit,
+            Event::ApdDistanceOp => c.apd_distance_op,
+            Event::CamSearchCell => c.cam_search_cell,
+            Event::CamComparePair => c.cam_compare_pair,
+            Event::CamWriteBit => c.cam_write_bit,
+            Event::DigitalCompareBit => c.digital_compare_bit,
+            Event::AdderBit => c.adder_bit,
+            Event::MacBs => c.mac_bs,
+            Event::MacBt => c.mac_bt,
+            Event::MacSc => c.mac_sc,
+            Event::MacDigital => c.mac_digital,
+        }
+    }
+}
+
+/// Accumulates event counts; prices them on demand. Cheap to merge so each
+/// engine keeps its own ledger and the coordinator folds them together.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyLedger {
+    counts: BTreeMap<Event, u64>,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn charge(&mut self, ev: Event, n: u64) {
+        *self.counts.entry(ev).or_insert(0) += n;
+    }
+
+    pub fn count(&self, ev: Event) -> u64 {
+        self.counts.get(&ev).copied().unwrap_or(0)
+    }
+
+    /// Total energy in picojoules under the given constants.
+    pub fn total_pj(&self, c: &EnergyConstants) -> f64 {
+        self.counts
+            .iter()
+            .map(|(ev, n)| ev.unit_energy_pj(c) * (*n as f64))
+            .sum()
+    }
+
+    /// Energy of a single event category in picojoules.
+    pub fn energy_of_pj(&self, ev: Event, c: &EnergyConstants) -> f64 {
+        ev.unit_energy_pj(c) * self.count(ev) as f64
+    }
+
+    /// Fold another ledger into this one.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (ev, n) in &other.counts {
+            self.charge(*ev, *n);
+        }
+    }
+
+    /// Per-event breakdown sorted by energy, descending (for reports).
+    pub fn breakdown_pj(&self, c: &EnergyConstants) -> Vec<(Event, f64)> {
+        let mut v: Vec<(Event, f64)> = self
+            .counts
+            .iter()
+            .map(|(ev, n)| (*ev, ev.unit_energy_pj(c) * (*n as f64)))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Fraction of total energy attributable to `ev` (0 if empty ledger).
+    pub fn share(&self, ev: Event, c: &EnergyConstants) -> f64 {
+        let total = self.total_pj(c);
+        if total == 0.0 {
+            0.0
+        } else {
+            self.energy_of_pj(ev, c) / total
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_price() {
+        let mut l = EnergyLedger::new();
+        l.charge(Event::SramBit, 100);
+        l.charge(Event::DramBit, 10);
+        let c = EnergyConstants::default();
+        let expect = 100.0 * 0.7 + 10.0 * 4.5;
+        assert!((l.total_pj(&c) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = EnergyLedger::new();
+        a.charge(Event::MacSc, 5);
+        let mut b = EnergyLedger::new();
+        b.charge(Event::MacSc, 7);
+        b.charge(Event::RegBit, 3);
+        a.merge(&b);
+        assert_eq!(a.count(Event::MacSc), 12);
+        assert_eq!(a.count(Event::RegBit), 3);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc() {
+        let mut l = EnergyLedger::new();
+        l.charge(Event::DramBit, 1);
+        l.charge(Event::SramBit, 1000);
+        let c = EnergyConstants::default();
+        let b = l.breakdown_pj(&c);
+        assert_eq!(b[0].0, Event::SramBit);
+        assert!(b[0].1 >= b[1].1);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let mut l = EnergyLedger::new();
+        l.charge(Event::DramBit, 11);
+        l.charge(Event::SramBit, 13);
+        l.charge(Event::MacBs, 17);
+        let c = EnergyConstants::default();
+        let s = l.share(Event::DramBit, &c)
+            + l.share(Event::SramBit, &c)
+            + l.share(Event::MacBs, &c);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

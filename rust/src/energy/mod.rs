@@ -1,0 +1,17 @@
+//! Energy, area and figure-of-merit accounting.
+//!
+//! Every hardware model in `cim/` and every accelerator simulator in
+//! `accel/` charges *events* to an [`EnergyLedger`]; the per-event energies
+//! live in [`constants`] (anchored to the paper's Table II: 0.7 pJ/bit
+//! on-chip SRAM, 4.5 pJ/bit DRAM, CACTI 6.0 style). Area is a parametric
+//! 40 nm model in [`area`]; FoM composition in [`fom`].
+
+pub mod area;
+pub mod constants;
+pub mod fom;
+pub mod ledger;
+
+pub use area::AreaModel;
+pub use constants::EnergyConstants;
+pub use fom::FigureOfMerit;
+pub use ledger::{EnergyLedger, Event};

@@ -1,0 +1,150 @@
+//! Ablation study over PC2IM's design choices (the DESIGN.md-promised
+//! knobs): each row removes ONE mechanism from the proposed design and
+//! reports the 16k-workload cost, quantifying where the paper's gains
+//! actually come from.
+
+use super::print_table;
+use crate::accel::{Accelerator, Pc2imModel, RunCost, StageCost};
+use crate::config::HardwareConfig;
+use crate::energy::{AreaModel, EnergyConstants, Event};
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use crate::quant::TD_BITS;
+use anyhow::Result;
+
+/// PC2IM with the CAM replaced by a digital TD memory (SRAM read/modify/
+/// write min-update + digital arg-max scan) — ablates contribution (1b).
+fn without_cam(net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
+    let mut rc = Pc2imModel.run(net, hw);
+    let mut pre = StageCost::default();
+    // keep the DRAM + APD events, drop the CAM ones, add digital TD traffic
+    let led = &rc.preprocessing.ledger;
+    pre.ledger.charge(Event::DramBit, led.count(Event::DramBit));
+    pre.ledger.charge(Event::ApdDistanceOp, led.count(Event::ApdDistanceOp));
+    pre.ledger.charge(Event::RegBit, led.count(Event::RegBit));
+    let updates = led.count(Event::CamComparePair); // one per point per iter
+    let td = TD_BITS as u64;
+    // read + compare + conditional write, plus a full arg-max read scan
+    pre.ledger.charge(Event::SramBit, updates * td + updates * td / 2 + updates * td);
+    pre.ledger.charge(Event::DigitalCompareBit, 2 * updates * td);
+    // digital scan shares the APD stream rate; argmax adds a pass per iter
+    pre.cycles = rc.preprocessing.cycles + updates / 16;
+    rc.preprocessing = pre;
+    rc
+}
+
+/// PC2IM with L2-in-CIM instead of L1 — ablates the approximate-distance
+/// choice: TDs widen to 35 bits and every distance needs 3 in-array
+/// multiply passes (the paper's Fig. 4 argument).
+fn with_l2_cim(net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
+    let mut rc = Pc2imModel.run(net, hw);
+    let dist = rc.preprocessing.ledger.count(Event::ApdDistanceOp);
+    let mut pre = rc.preprocessing.clone();
+    // multi-cycle in-situ multiplication: ~3x the distance-op energy and
+    // 3x the scan cycles (one pass per squared coordinate)
+    pre.ledger.charge(Event::ApdDistanceOp, 2 * dist);
+    pre.cycles += 2 * (rc.preprocessing.cycles / 2); // scans triple, CAM part unchanged
+    // CAM cells widen 35/19: charge the extra write/search bits
+    let extra_bits_factor = (35 - TD_BITS) as u64;
+    pre.ledger.charge(
+        Event::CamWriteBit,
+        rc.preprocessing.ledger.count(Event::CamWriteBit) / TD_BITS as u64 * extra_bits_factor,
+    );
+    rc.preprocessing = pre;
+    rc
+}
+
+/// PC2IM with BS-CIM instead of SC-CIM — ablates contribution (2).
+fn without_sc_cim(net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
+    let mut rc = Pc2imModel.run(net, hw);
+    let macs = net.total_macs();
+    let mut feat = StageCost::default();
+    feat.ledger.charge(Event::MacBs, macs);
+    feat.ledger.charge(
+        Event::SramBit,
+        rc.feature.ledger.count(Event::SramBit),
+    );
+    feat.cycles = macs.div_ceil(hw.parallel_macs()) * 16;
+    rc.feature = feat;
+    rc
+}
+
+/// PC2IM without tile-level pipelining (preprocessing and feature stages
+/// serialized) — ablates the ping-pong/delayed-aggregation overlap.
+fn without_pipelining(net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
+    let mut rc = Pc2imModel.run(net, hw);
+    rc.pipelined = false;
+    rc
+}
+
+pub fn run() -> Result<()> {
+    let hw = HardwareConfig::default();
+    let c: EnergyConstants = hw.energy();
+    let net = NetworkDef::for_scale(DatasetScale::Large);
+    let full = Pc2imModel.run(&net, &hw);
+    let base_lat = full.latency_s(&hw);
+    let base_e = full.energy_pj(&c);
+
+    let mut rows = Vec::new();
+    let mut add = |name: &str, rc: RunCost| {
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2} ms", rc.latency_s(&hw) * 1e3),
+            format!("{:.1} uJ", rc.energy_pj(&c) * 1e-6),
+            format!("{:.2}x", rc.latency_s(&hw) / base_lat),
+            format!("{:.2}x", rc.energy_pj(&c) / base_e),
+        ]);
+    };
+    add("PC2IM (full)", full.clone());
+    add("- Ping-Pong-MAX CAM (digital TD memory)", without_cam(&net, &hw));
+    add("- L1 approx (L2 in CIM, 35-bit TDs)", with_l2_cim(&net, &hw));
+    add("- SC-CIM (bit-serial MACs)", without_sc_cim(&net, &hw));
+    add("- tile pipelining (stages serialized)", without_pipelining(&net, &hw));
+    print_table(
+        "Ablation — remove one mechanism at a time (16k workload)",
+        &["configuration", "latency", "energy", "lat x", "energy x"],
+        &rows,
+    );
+
+    println!(
+        "FuA vs naive accumulation: unit area {:.0} vs {:.0} ({}% saved, paper ~44%)",
+        AreaModel::default().sc_unit,
+        AreaModel::default().sc_naive_unit,
+        (AreaModel::default().fua_overhead_saving() * 100.0) as u32
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_ablation_hurts() {
+        let hw = HardwareConfig::default();
+        let c = hw.energy();
+        let net = NetworkDef::for_scale(DatasetScale::Large);
+        let full = Pc2imModel.run(&net, &hw);
+        for (name, rc) in [
+            ("cam", without_cam(&net, &hw)),
+            ("l2", with_l2_cim(&net, &hw)),
+            ("sc", without_sc_cim(&net, &hw)),
+            ("pipe", without_pipelining(&net, &hw)),
+        ] {
+            assert!(
+                rc.energy_pj(&c) >= full.energy_pj(&c) * 0.999
+                    && rc.latency_s(&hw) >= full.latency_s(&hw) * 0.999,
+                "{name}: ablation should not improve the design"
+            );
+            assert!(
+                rc.energy_pj(&c) > full.energy_pj(&c) || rc.latency_s(&hw) > full.latency_s(&hw),
+                "{name}: ablation must cost something"
+            );
+        }
+    }
+
+    #[test]
+    fn runs() {
+        super::run().unwrap();
+    }
+}

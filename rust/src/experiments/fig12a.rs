@@ -1,0 +1,70 @@
+//! Fig. 12(a): software validation of approximate sampling + 16-bit PTQ.
+//!
+//! Runs the trained PointNet2(c) on the held-out synthetic test set via
+//! the PJRT pipeline in three configurations:
+//!   1. exact L2 FPS + ball query, fp32 weights (the reference)
+//!   2. approximate L1 FPS + lattice + MSP-ready quantized coords
+//!   3. approximate + 16-bit PTQ weights (the deployed configuration)
+//!
+//! For the segmentation-scale sets (no trained segmentation model), the
+//! paper-relevant proxy is neighbor/centroid fidelity — reported by the
+//! fig5a harness; here we report the end-to-end classification numbers,
+//! which is the part of Fig. 12(a) a trained model backs.
+
+use super::print_table;
+use crate::config::PipelineConfig;
+use crate::coordinator::{BatchStats, Pipeline};
+use crate::pointcloud::io::read_testset;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Accuracy of one configuration over the exported test set.
+pub fn eval_config(artifacts_dir: &str, exact: bool, quantized: bool, limit: usize) -> Result<(f64, BatchStats)> {
+    let cfg = PipelineConfig {
+        exact_sampling: exact,
+        quantized,
+        artifacts_dir: artifacts_dir.to_string(),
+        ..PipelineConfig::default()
+    };
+    let mut pipe = Pipeline::new(cfg)?;
+    let ts = read_testset(Path::new(artifacts_dir).join(&pipe.meta().testset_file))
+        .context("reading testset.bin")?;
+    let n = ts.len().min(limit);
+    let mut stats = BatchStats::default();
+    for i in 0..n {
+        let r = pipe.classify(&ts.clouds[i])?;
+        stats.push(&r.stats, r.pred as i32 == ts.labels[i]);
+    }
+    Ok((stats.accuracy(), stats))
+}
+
+pub fn run(artifacts_dir: &str) -> Result<()> {
+    let limit = std::env::var("PC2IM_FIG12A_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200usize);
+    let (acc_exact, _) = eval_config(artifacts_dir, true, false, limit)?;
+    let (acc_approx, _) = eval_config(artifacts_dir, false, false, limit)?;
+    let (acc_q16, _) = eval_config(artifacts_dir, false, true, limit)?;
+    let rows = vec![
+        vec!["exact L2 FPS + ball query (fp32)".into(), format!("{:.1}%", acc_exact * 100.0), "-".into()],
+        vec![
+            "approx L1 FPS + lattice (coords PTQ16)".into(),
+            format!("{:.1}%", acc_approx * 100.0),
+            format!("{:+.1}%", (acc_approx - acc_exact) * 100.0),
+        ],
+        vec![
+            "approx + 16-bit PTQ weights".into(),
+            format!("{:.1}%", acc_q16 * 100.0),
+            format!("{:+.1}%", (acc_q16 - acc_exact) * 100.0),
+        ],
+    ];
+    print_table(
+        &format!(
+            "Fig. 12(a) — PointNet2(c) accuracy on synthetic 8-class test set (n={limit}; paper: <2% loss approx, <0.3% PTQ)"
+        ),
+        &["configuration", "accuracy", "delta"],
+        &rows,
+    );
+    Ok(())
+}

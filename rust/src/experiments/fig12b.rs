@@ -1,0 +1,62 @@
+//! Fig. 12(b): data-preprocessing energy across dataset scales, normalized
+//! to Baseline-1 (paper: PC2IM cuts 97.9% vs B-1 and 73.4% vs B-2 at 16k).
+
+use super::print_table;
+use crate::accel::{Accelerator, Baseline1, Baseline2, Pc2imModel};
+use crate::config::HardwareConfig;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use anyhow::Result;
+
+/// (scale, [B1, B2, PC2IM] preprocessing energy in uJ).
+pub fn preprocessing_energy() -> Vec<(DatasetScale, [f64; 3])> {
+    let hw = HardwareConfig::default();
+    let c = hw.energy();
+    DatasetScale::ALL
+        .iter()
+        .map(|&scale| {
+            let net = NetworkDef::for_scale(scale);
+            let e = [
+                Baseline1.run(&net, &hw).preprocessing.energy_pj(&c) * 1e-6,
+                Baseline2.run(&net, &hw).preprocessing.energy_pj(&c) * 1e-6,
+                Pc2imModel.run(&net, &hw).preprocessing.energy_pj(&c) * 1e-6,
+            ];
+            (scale, e)
+        })
+        .collect()
+}
+
+pub fn run() -> Result<()> {
+    let rows: Vec<Vec<String>> = preprocessing_energy()
+        .into_iter()
+        .map(|(scale, [b1, b2, pc])| {
+            vec![
+                scale.name().to_string(),
+                format!("{b1:.1} ({:.3})", 1.0),
+                format!("{b2:.1} ({:.3})", b2 / b1),
+                format!("{pc:.1} ({:.3})", pc / b1),
+                format!("{:.1}%", (1.0 - pc / b1) * 100.0),
+                format!("{:.1}%", (1.0 - pc / b2) * 100.0),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 12(b) — preprocessing energy in uJ (normalized to Baseline-1; paper @16k: -97.9% vs B1, -73.4% vs B2)",
+        &["dataset", "Baseline-1", "Baseline-2", "PC2IM", "cut vs B1", "cut vs B2"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_grows_with_scale() {
+        let e = preprocessing_energy();
+        let cut = |x: &[f64; 3]| 1.0 - x[2] / x[0];
+        assert!(cut(&e[2].1) >= cut(&e[0].1), "largest PCs benefit most");
+        assert!(cut(&e[2].1) > 0.93);
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 12(c): design metrics of the digital SRAM-CIM schemes across
+//! storage-compute ratios (paper: SC-CIM FoM2 5.2x -> 9.9x vs BS-CIM,
+//! 2.0x -> 2.8x vs BT-CIM as SCR grows).
+
+use super::print_table;
+use crate::config::HardwareConfig;
+use crate::energy::fom::{evaluate, CimScheme, FigureOfMerit};
+use anyhow::Result;
+
+pub const SCRS: [u64; 6] = [8, 16, 32, 64, 128, 256];
+
+/// Evaluate all schemes at one SCR on the Table II 256 KB macro.
+pub fn sweep_point(scr: u64) -> [(CimScheme, FigureOfMerit); 3] {
+    let hw = HardwareConfig::default();
+    let cap = hw.sc_cim().storage_bytes() as u64 * 8;
+    CimScheme::ALL.map(|s| (s, evaluate(s, cap, 16, scr, hw.freq_mhz, &hw.energy(), &hw.area())))
+}
+
+pub fn run() -> Result<()> {
+    let mut rows = Vec::new();
+    for scr in SCRS {
+        let pts = sweep_point(scr);
+        let bs = pts[0].1.fom2;
+        let bt = pts[1].1.fom2;
+        let sc = pts[2].1.fom2;
+        rows.push(vec![
+            scr.to_string(),
+            format!("{:.0} GOPS / {:.2} T/W / 1.00x", pts[0].1.gops, pts[0].1.tops_per_w),
+            format!("{:.0} GOPS / {:.2} T/W / {:.2}x", pts[1].1.gops, pts[1].1.tops_per_w, bt / bs),
+            format!("{:.0} GOPS / {:.2} T/W / {:.2}x", pts[2].1.gops, pts[2].1.tops_per_w, sc / bs),
+            format!("{:.2}x", sc / bt),
+        ]);
+    }
+    print_table(
+        "Fig. 12(c) — digital CIM design metrics vs SCR (FoM2 = GOPS x TOPS/W / area, normalized to BS-CIM)",
+        &["SCR", "BS-CIM (thr/eff/FoM2)", "BT-CIM", "SC-CIM", "SC/BT"],
+        &rows,
+    );
+    println!(
+        "paper anchors: SC/BS 5.2x @ SCR 8 growing to ~9.9x; SC/BT 2.0x -> 2.8x"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fom_ratio_monotone_in_scr() {
+        let mut last = 0.0;
+        for scr in SCRS {
+            let p = sweep_point(scr);
+            let ratio = p[2].1.fom2 / p[0].1.fom2;
+            assert!(ratio > last, "SC/BS must grow with SCR");
+            last = ratio;
+        }
+        assert!(last > 7.5, "top ratio {last:.2} (paper up to 9.9x)");
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 13(a): system-level performance (speedup over Baseline-1) across
+//! dataset scales. Paper headline: up to ~6x vs Baseline-1 and ~1.5x vs
+//! the SOTA accelerator (Baseline-2) — see DESIGN.md on the paper's
+//! swapped-label prose.
+
+use super::print_table;
+use crate::accel::{Accelerator, Baseline1, Baseline2, Pc2imModel};
+use crate::config::HardwareConfig;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use anyhow::Result;
+
+/// (scale, [B1, B2, PC2IM] latency in ms).
+pub fn latencies() -> Vec<(DatasetScale, [f64; 3])> {
+    let hw = HardwareConfig::default();
+    DatasetScale::ALL
+        .iter()
+        .map(|&scale| {
+            let net = NetworkDef::for_scale(scale);
+            let l = [
+                Baseline1.run(&net, &hw).latency_s(&hw) * 1e3,
+                Baseline2.run(&net, &hw).latency_s(&hw) * 1e3,
+                Pc2imModel.run(&net, &hw).latency_s(&hw) * 1e3,
+            ];
+            (scale, l)
+        })
+        .collect()
+}
+
+pub fn run() -> Result<()> {
+    let rows: Vec<Vec<String>> = latencies()
+        .into_iter()
+        .map(|(scale, [b1, b2, pc])| {
+            vec![
+                scale.name().to_string(),
+                format!("{b1:.2} ms"),
+                format!("{b2:.2} ms"),
+                format!("{pc:.2} ms"),
+                format!("{:.1}x", b1 / pc),
+                format!("{:.1}x", b2 / pc),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 13(a) — end-to-end latency and PC2IM speedup (paper: ~6x vs B1, ~1.5x vs B2)",
+        &["dataset", "Baseline-1", "Baseline-2", "PC2IM", "vs B1", "vs B2"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pc2im_wins_everywhere() {
+        for (_, [b1, b2, pc]) in super::latencies() {
+            assert!(pc < b2 && b2 < b1);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Fig. 13(b): system-level energy efficiency across dataset scales
+//! (paper: 2.7x over the SOTA accelerator on the large set, split ~48.5%
+//! preprocessing / ~51.5% feature engine).
+
+use super::print_table;
+use crate::accel::{Accelerator, Baseline1, Baseline2, Pc2imModel};
+use crate::config::HardwareConfig;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use anyhow::Result;
+
+/// (scale, [B1, B2, PC2IM] energy per cloud in uJ).
+pub fn energies() -> Vec<(DatasetScale, [f64; 3])> {
+    let hw = HardwareConfig::default();
+    let c = hw.energy();
+    DatasetScale::ALL
+        .iter()
+        .map(|&scale| {
+            let net = NetworkDef::for_scale(scale);
+            let e = [
+                Baseline1.run(&net, &hw).energy_pj(&c) * 1e-6,
+                Baseline2.run(&net, &hw).energy_pj(&c) * 1e-6,
+                Pc2imModel.run(&net, &hw).energy_pj(&c) * 1e-6,
+            ];
+            (scale, e)
+        })
+        .collect()
+}
+
+pub fn run() -> Result<()> {
+    let hw = HardwareConfig::default();
+    let c = hw.energy();
+    let rows: Vec<Vec<String>> = energies()
+        .into_iter()
+        .map(|(scale, [b1, b2, pc])| {
+            vec![
+                scale.name().to_string(),
+                format!("{b1:.1} uJ"),
+                format!("{b2:.1} uJ"),
+                format!("{pc:.1} uJ"),
+                format!("{:.1}x", b1 / pc),
+                format!("{:.1}x", b2 / pc),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 13(b) — energy per cloud and PC2IM gain (paper: 2.7x vs SOTA @16k)",
+        &["dataset", "Baseline-1", "Baseline-2", "PC2IM", "vs B1", "vs B2"],
+        &rows,
+    );
+
+    // the paper's contribution split on the large set
+    let net = NetworkDef::for_scale(DatasetScale::Large);
+    let b2 = Baseline2.run(&net, &hw);
+    let pc = Pc2imModel.run(&net, &hw);
+    let pre_saving = b2.preprocessing.energy_pj(&c) - pc.preprocessing.energy_pj(&c);
+    let feat_saving = b2.feature.energy_pj(&c) - pc.feature.energy_pj(&c);
+    let total = pre_saving + feat_saving;
+    println!(
+        "saving split @16k: preprocessing {:.1}% / feature engine {:.1}% (paper: 48.5% / 51.5%)",
+        100.0 * pre_saving / total,
+        100.0 * feat_saving / total
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn efficiency_gain_band() {
+        let e = super::energies();
+        let (_, [_, b2, pc]) = e[2];
+        let gain = b2 / pc;
+        assert!((1.5..6.0).contains(&gain), "gain {gain:.2} (paper 2.7x)");
+    }
+}

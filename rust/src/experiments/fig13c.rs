@@ -1,0 +1,55 @@
+//! Fig. 13(c): PC2IM vs GPU on the SemanticKITTI-scale workload
+//! (paper: 3.5x speedup, 1518.9x energy efficiency).
+
+use super::print_table;
+use crate::accel::{Accelerator, GpuModel, Pc2imModel};
+use crate::config::HardwareConfig;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use anyhow::Result;
+
+/// (gpu_latency_ms, pc2im_latency_ms, gpu_energy_j, pc2im_energy_j).
+pub fn comparison() -> (f64, f64, f64, f64) {
+    let hw = HardwareConfig::default();
+    let net = NetworkDef::for_scale(DatasetScale::Large);
+    let gpu = GpuModel::default();
+    let pc = Pc2imModel.run(&net, &hw);
+    (
+        gpu.latency_s(&net) * 1e3,
+        pc.latency_s(&hw) * 1e3,
+        gpu.energy_j(&net),
+        pc.energy_pj(&hw.energy()) * 1e-12,
+    )
+}
+
+pub fn run() -> Result<()> {
+    let (gl, pl, ge, pe) = comparison();
+    let rows = vec![
+        vec!["latency / cloud".into(), format!("{gl:.2} ms"), format!("{pl:.2} ms"), format!("{:.1}x", gl / pl)],
+        vec!["energy / cloud".into(), format!("{:.2} J", ge), format!("{:.2} mJ", pe * 1e3), format!("{:.0}x", ge / pe)],
+        vec![
+            "throughput".into(),
+            format!("{:.0} fps", 1e3 / gl),
+            format!("{:.0} fps", 1e3 / pl),
+            "-".into(),
+        ],
+    ];
+    print_table(
+        "Fig. 13(c) — GPU (RTX 4090-class model) vs PC2IM on 16k street clouds (paper: 3.5x / 1518.9x)",
+        &["metric", "GPU", "PC2IM", "PC2IM gain"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn headline_bands() {
+        let (gl, pl, ge, pe) = super::comparison();
+        let speedup = gl / pl;
+        let eff = ge / pe;
+        assert!((2.0..8.0).contains(&speedup), "speedup {speedup:.2} (paper 3.5x)");
+        assert!((300.0..8000.0).contains(&eff), "energy ratio {eff:.0} (paper 1518.9x)");
+    }
+}

@@ -1,0 +1,83 @@
+//! Experiment harness: one module per paper table/figure. Each regenerates
+//! the paper's rows/series from the simulators (and, where numerics are
+//! involved, from the PJRT pipeline) and prints them in a uniform layout.
+//!
+//! `pc2im experiments --id <id>` runs one; `--id all` runs everything.
+
+pub mod ablation;
+pub mod claims;
+pub mod fig12a;
+pub mod fig12b;
+pub mod fig12c;
+pub mod fig13a;
+pub mod fig13b;
+pub mod fig13c;
+pub mod fig5a;
+pub mod table1;
+pub mod table2;
+
+use anyhow::Result;
+
+/// Every experiment id in paper order.
+pub const ALL_IDS: [&str; 9] = [
+    "table1", "table2", "fig5a", "fig12a", "fig12b", "fig12c", "fig13a", "fig13b", "fig13c",
+];
+
+/// Run one experiment by id. `artifacts_dir` is only used by the
+/// numerics-backed ones (fig12a).
+pub fn run(id: &str, artifacts_dir: &str) -> Result<()> {
+    match id {
+        "table1" => table1::run(),
+        "table2" => table2::run(),
+        "fig5a" => fig5a::run(),
+        "fig12a" => fig12a::run(artifacts_dir),
+        "fig12b" => fig12b::run(),
+        "fig12c" => fig12c::run(),
+        "fig13a" => fig13a::run(),
+        "fig13b" => fig13b::run(),
+        "fig13c" => fig13c::run(),
+        "claims" => claims::run(),
+        "ablation" => ablation::run(),
+        "all" => {
+            for id in ALL_IDS {
+                run(id, artifacts_dir)?;
+                println!();
+            }
+            claims::run()?;
+            println!();
+            ablation::run()
+        }
+        other => anyhow::bail!("unknown experiment id {other:?} (try: all, claims, ablation, {})", ALL_IDS.join(", ")),
+    }
+}
+
+/// Shared table printer: header + aligned rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_id_errors() {
+        assert!(super::run("figX", "artifacts").is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! Table I: models and datasets (the workload matrix).
+
+use super::print_table;
+use crate::network::pointnet2::NetworkDef;
+use crate::pointcloud::synthetic::DatasetScale;
+use anyhow::Result;
+
+pub fn run() -> Result<()> {
+    let rows: Vec<Vec<String>> = DatasetScale::ALL
+        .iter()
+        .map(|&scale| {
+            let net = NetworkDef::for_scale(scale);
+            let task = match scale {
+                DatasetScale::Small => "Classification",
+                _ => "Semantic Segmentation",
+            };
+            let w = net.workload();
+            vec![
+                task.to_string(),
+                scale.name().to_string(),
+                format!("{}k", scale.n_points() / 1024),
+                net.name.to_string(),
+                format!("{:.1} M", w.macs as f64 / 1e6),
+                format!("{}", w.fps_iterations),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table I — models and datasets (synthetic stand-ins, matched scale)",
+        &["Task", "Dataset", "# Points", "PC model", "MACs/cloud", "FPS iters"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn runs() {
+        super::run().unwrap();
+    }
+}

@@ -1,0 +1,50 @@
+//! Table II: hardware specifications of PC2IM, derived live from the
+//! configured models (storage sizes come from the actual geometry structs,
+//! throughput/efficiency from the cost models).
+
+use super::print_table;
+use crate::cim::max_cam::{CamConfig, PingPongMaxCam};
+use crate::config::HardwareConfig;
+use crate::energy::fom::{evaluate, CimScheme};
+use anyhow::Result;
+
+pub fn run() -> Result<()> {
+    let hw = HardwareConfig::default();
+    let e = hw.energy();
+    let a = hw.area();
+    let cam = PingPongMaxCam::new(CamConfig::default());
+    let sc_bits = hw.sc_cim().storage_bytes() as u64 * 8;
+    let fom = evaluate(CimScheme::SplitConcat, sc_bits, 16, hw.scr, hw.freq_mhz, &e, &a);
+    let rows = vec![
+        vec!["Technology".into(), "40 nm (modeled)".into()],
+        vec!["Frequency".into(), format!("{} MHz", hw.freq_mhz)],
+        vec![
+            "APD-CIM".into(),
+            format!("{} KB ({} pts x 16b x 3)", hw.apd_cim().storage_bytes() / 1024, hw.apd_cim().capacity()),
+        ],
+        vec![
+            "Ping-Pong-MAX CAM".into(),
+            format!("{} KB (2 x {} TDPs, 19b pairs + idx)", cam.storage_bytes() / 1024, cam.active().capacity()),
+        ],
+        vec!["SC-CIM".into(), format!("{} KB", hw.sc_cim().storage_bytes() / 1024)],
+        vec!["Standard on-chip SRAM".into(), format!("{} KB", hw.onchip_sram_bytes / 1024)],
+        vec!["On-chip SRAM energy".into(), format!("{} pJ/bit", e.sram_bit)],
+        vec!["Off-chip DRAM energy".into(), format!("{} pJ/bit", e.dram_bit)],
+        vec!["Throughput (16b)".into(), format!("{:.2} TOPS", fom.gops / 1e3)],
+        vec!["Energy efficiency (16b)".into(), format!("{:.2} TOPS/W", fom.tops_per_w)],
+    ];
+    print_table(
+        "Table II — hardware specifications (paper: 12/19/256/512 KB, 2 TOPS, 2.53 TOPS/W)",
+        &["Item", "Value"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn runs() {
+        super::run().unwrap();
+    }
+}

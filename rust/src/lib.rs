@@ -1,0 +1,36 @@
+//! # PC2IM — SRAM computing-in-memory accelerator for 3D point clouds
+//!
+//! Reproduction of *"PC2IM: An Efficient In-Memory Computing Accelerator for
+//! 3D Point Cloud"* (Wang, Cai, Sun — CS.AR 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the request-path coordinator: median spatial
+//!   partitioning, the APD-CIM / Ping-Pong-MAX-CAM / SC-CIM bit-exact
+//!   hardware models with cycle+energy accounting, the baseline accelerator
+//!   simulators, and the PJRT runtime that executes the AOT-compiled
+//!   PointNet2 feature graphs.
+//! - **Layer 2 (python/compile/model.py)** — the PointNet2(c) JAX graphs,
+//!   trained at build time and lowered to HLO text artifacts.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the MLP and
+//!   L1-distance hot spots, verified against pure-jnp oracles.
+//!
+//! Python never runs at inference time: `make artifacts` trains + lowers
+//! once; the Rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory, the experiment index mapping
+//! every paper table/figure to a module, and the hardware-substitution
+//! rationale (the paper's 40 nm silicon is modelled bit-exactly, with
+//! CACTI-style energy constants from the paper's Table II).
+
+pub mod accel;
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod network;
+pub mod pointcloud;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;

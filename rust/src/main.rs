@@ -1,0 +1,223 @@
+//! PC2IM command-line launcher.
+//!
+//! Subcommands:
+//!   run          — classify synthetic clouds end-to-end via the full
+//!                  pipeline (CIM preprocessing + PJRT feature computing)
+//!   eval         — accuracy/latency/energy over the exported test set
+//!   experiments  — regenerate a paper table/figure (--id table1..fig13c,
+//!                  claims, all)
+//!   info         — print hardware config + artifact inventory
+//!
+//! The vendored crate set has no clap; arguments are parsed by hand
+//! (--key value / --flag).
+
+use anyhow::{bail, Result};
+use pc2im::config::PipelineConfig;
+use pc2im::coordinator::{BatchScheduler, Pipeline};
+use pc2im::pointcloud::io::read_testset;
+use pc2im::pointcloud::synthetic::{make_class_cloud, NUM_CLASSES};
+use std::collections::HashMap;
+use std::path::Path;
+
+struct Args {
+    cmd: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let mut opts = HashMap::new();
+    let mut flags = Vec::new();
+    let rest: Vec<String> = argv.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Args { cmd, opts, flags }
+}
+
+fn pipeline_config(args: &Args) -> PipelineConfig {
+    PipelineConfig {
+        quantized: args.flags.iter().any(|f| f == "quantized"),
+        exact_sampling: args.flags.iter().any(|f| f == "exact"),
+        artifacts_dir: args
+            .opts
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".to_string()),
+        tile_parallelism: args
+            .opts
+            .get("parallelism")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let n: usize = args.opts.get("clouds").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let seed: u64 = args.opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let cfg = pipeline_config(args);
+    let mut pipe = Pipeline::new(cfg)?;
+    let hw = *pipe.hardware();
+    println!("classifying {n} synthetic clouds (seed {seed})...");
+    for i in 0..n {
+        let label = i % NUM_CLASSES;
+        let cloud = make_class_cloud(label, pipe.meta().model.n_points, seed + i as u64);
+        let r = pipe.classify(&cloud)?;
+        println!(
+            "cloud {i:3} true={label} pred={} {} | sim {:.3} ms ({} preproc / {} feature cycles) | {:.1} uJ | host {:.1} ms",
+            r.pred,
+            if r.pred == label { "OK " } else { "MISS" },
+            r.stats.simulated_latency_s(&hw) * 1e3,
+            r.stats.preproc_cycles,
+            r.stats.feature_cycles,
+            r.stats.energy_pj(&hw.energy()) * 1e-6,
+            r.stats.host_wall_s * 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args);
+    let limit: usize = args.opts.get("limit").and_then(|v| v.parse().ok()).unwrap_or(usize::MAX);
+    let dir = cfg.artifacts_dir.clone();
+    let mut sched = BatchScheduler::new(cfg)?;
+    let ts = read_testset(Path::new(&dir).join(&sched.pipeline().meta().testset_file))?;
+    let n = ts.len().min(limit);
+    let hw = *sched.pipeline().hardware();
+    println!("evaluating {n} test clouds...");
+    let (_, stats) = sched.classify_batch(&ts.clouds[..n], &ts.labels[..n])?;
+    println!(
+        "accuracy {:.1}% | mean sim latency {:.3} ms | mean energy {:.1} uJ | host total {:.1} s",
+        stats.accuracy() * 100.0,
+        stats.mean_latency_s(&hw) * 1e3,
+        stats.mean_energy_pj(&hw.energy()) * 1e-6,
+        stats.host_wall_s,
+    );
+    Ok(())
+}
+
+/// A serving-style request loop: Poisson-ish arrivals of synthetic clouds,
+/// per-request latency percentiles — the router-facing view of the L3
+/// coordinator.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n: usize = args.opts.get("requests").and_then(|v| v.parse().ok()).unwrap_or(32);
+    let seed: u64 = args.opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let rate_hz: f64 = args.opts.get("rate").and_then(|v| v.parse().ok()).unwrap_or(8.0);
+    let cfg = pipeline_config(args);
+    let mut pipe = Pipeline::new(cfg)?;
+    let hw = *pipe.hardware();
+    let mut rng = pc2im::rng::Rng64::new(seed);
+    println!("serving {n} requests at ~{rate_hz} req/s (synthetic arrivals)...");
+    let mut latencies: Vec<f64> = Vec::with_capacity(n);
+    let mut sim_energy_pj = 0.0;
+    let mut sim_latency_s = 0.0;
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        // exponential inter-arrival sleep (capped; this is a demo loop)
+        let u = (rng.f32() as f64).max(1e-6);
+        let gap = (-u.ln() / rate_hz).min(0.25);
+        std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+        let label = rng.range_usize(0, NUM_CLASSES);
+        let cloud = make_class_cloud(label, pipe.meta().model.n_points, seed + i as u64);
+        let ta = std::time::Instant::now();
+        let r = pipe.classify(&cloud)?;
+        latencies.push(ta.elapsed().as_secs_f64());
+        sim_energy_pj += r.stats.energy_pj(&hw.energy());
+        sim_latency_s += r.stats.simulated_latency_s(&hw);
+        correct += (r.pred == label) as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize] * 1e3;
+    println!(
+        "done: {n} requests in {wall:.1} s ({:.1} req/s) | accuracy {:.1}%",
+        n as f64 / wall,
+        100.0 * correct as f64 / n as f64
+    );
+    println!(
+        "host latency p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+        pct(0.50), pct(0.90), pct(0.99), latencies.last().unwrap() * 1e3
+    );
+    println!(
+        "simulated accelerator: {:.3} ms/req, {:.1} uJ/req",
+        sim_latency_s / n as f64 * 1e3,
+        sim_energy_pj / n as f64 * 1e-6
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args);
+    let pipe = Pipeline::new(cfg)?;
+    let hw = pipe.hardware();
+    println!("hardware: {hw:#?}");
+    println!("model: {:#?}", pipe.meta().model);
+    let mut names: Vec<&String> = pipe.meta().artifacts.keys().collect();
+    names.sort();
+    println!("artifacts: {names:?}");
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "pc2im — SRAM-CIM accelerator for 3D point clouds (paper reproduction)\n\
+         \n\
+         usage: pc2im <command> [options]\n\
+         \n\
+         commands:\n\
+         \u{20}  run          classify synthetic clouds end-to-end\n\
+         \u{20}               [--clouds N] [--seed S] [--exact] [--quantized]\n\
+         \u{20}  eval         evaluate the exported test set\n\
+         \u{20}               [--limit N] [--exact] [--quantized] [--parallelism K]\n\
+         \u{20}  serve        request loop with latency percentiles\n\
+         \u{20}               [--requests N] [--rate HZ] [--seed S]\n\
+         \u{20}  experiments  regenerate a paper table/figure\n\
+         \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\
+         \u{20}  info         print hardware + artifact inventory\n\
+         \n\
+         common options: --artifacts DIR (default: artifacts)"
+    );
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "experiments" => {
+            let id = args.opts.get("id").cloned().unwrap_or_else(|| "all".to_string());
+            let dir = args
+                .opts
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".to_string());
+            pc2im::experiments::run(&id, &dir)
+        }
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            help();
+            bail!("unknown command {other:?}")
+        }
+    }
+}

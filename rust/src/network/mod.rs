@@ -1,0 +1,7 @@
+//! Point-cloud network topologies (PointNet2 variants) and workload
+//! derivation: per-layer sampling/grouping parameters and MAC counts that
+//! feed the accelerator simulators.
+
+pub mod pointnet2;
+
+pub use pointnet2::{LayerKind, NetworkDef, SaLayer, Workload};

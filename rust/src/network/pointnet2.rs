@@ -1,0 +1,241 @@
+//! PointNet2 network definitions (paper Table I: PointNet2 (c) for
+//! classification, PointNet2 (s) for segmentation) and the derived
+//! workload numbers (sampling iterations, grouped points, MACs) used by
+//! the architecture simulators.
+//!
+//! The (c) dimensions match the trained Layer-2 model exactly
+//! (`python/compile/model.py`); the (s) variants follow the standard
+//! PointNet++ SSG segmentation configuration scaled to the paper's point
+//! counts, including the feature-propagation (PFP) layers with kNN(3)
+//! interpolation.
+
+use crate::pointcloud::synthetic::DatasetScale;
+
+/// A set-abstraction layer: sample `n_out` centroids from `n_in` points,
+/// group `k` neighbors within `radius`, run the point-wise MLP.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SaLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k: usize,
+    pub radius: f32,
+    /// MLP channel trajectory including the input channels, e.g.
+    /// `[3, 64, 64, 128]`.
+    pub mlp: Vec<usize>,
+}
+
+impl SaLayer {
+    /// MACs of the point-wise MLP over all grouped points
+    /// (delayed-aggregation layers apply the MLP per *input* point before
+    /// grouping; conventional layers per grouped point).
+    pub fn macs(&self, delayed_aggregation: bool) -> u64 {
+        let pts = if delayed_aggregation {
+            self.n_in as u64
+        } else {
+            (self.n_out * self.k) as u64
+        };
+        let mut macs = 0u64;
+        for w in self.mlp.windows(2) {
+            macs += pts * (w[0] as u64) * (w[1] as u64);
+        }
+        macs
+    }
+
+    /// Grouped-tensor elements flowing to the feature stage.
+    pub fn grouped_values(&self) -> u64 {
+        (self.n_out * self.k * self.mlp[0]) as u64
+    }
+}
+
+/// Feature-propagation (upsampling) layer for segmentation heads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FpLayer {
+    pub n_coarse: usize,
+    pub n_fine: usize,
+    /// kNN fan-in for interpolation (standard: 3).
+    pub k: usize,
+    pub mlp: Vec<usize>,
+}
+
+impl FpLayer {
+    pub fn macs(&self) -> u64 {
+        let mut macs = 0u64;
+        for w in self.mlp.windows(2) {
+            macs += (self.n_fine as u64) * (w[0] as u64) * (w[1] as u64);
+        }
+        macs
+    }
+}
+
+/// Which stage a layer belongs to (used by stage-split reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    SetAbstraction,
+    FeaturePropagation,
+    Head,
+}
+
+/// A full network: SA trunk + optional FP decoder + head.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkDef {
+    pub name: &'static str,
+    pub sa_layers: Vec<SaLayer>,
+    pub fp_layers: Vec<FpLayer>,
+    /// Head MLP (classification) channel trajectory.
+    pub head: Vec<usize>,
+    pub delayed_aggregation: bool,
+}
+
+impl NetworkDef {
+    /// PointNet2 (c) — the classification model trained at build time.
+    pub fn pointnet2_c() -> Self {
+        Self {
+            name: "PointNet2(c)",
+            sa_layers: vec![
+                SaLayer { n_in: 1024, n_out: 256, k: 32, radius: 0.2, mlp: vec![3, 64, 64, 128] },
+                SaLayer { n_in: 256, n_out: 64, k: 16, radius: 0.4, mlp: vec![131, 128, 128, 256] },
+                // global layer: "sample" 1 group of all 64
+                SaLayer { n_in: 64, n_out: 1, k: 64, radius: f32::INFINITY, mlp: vec![259, 256, 512] },
+            ],
+            fp_layers: vec![],
+            head: vec![512, 256, 128, 8],
+            delayed_aggregation: true,
+        }
+    }
+
+    /// PointNet2 (s) at a given input scale — SSG segmentation config.
+    pub fn pointnet2_s(n_points: usize) -> Self {
+        let n = n_points;
+        Self {
+            name: "PointNet2(s)",
+            sa_layers: vec![
+                SaLayer { n_in: n, n_out: n / 4, k: 32, radius: 0.1, mlp: vec![3, 32, 32, 64] },
+                SaLayer { n_in: n / 4, n_out: n / 16, k: 32, radius: 0.2, mlp: vec![67, 64, 64, 128] },
+                SaLayer { n_in: n / 16, n_out: n / 64, k: 32, radius: 0.4, mlp: vec![131, 128, 128, 256] },
+                SaLayer { n_in: n / 64, n_out: n / 256, k: 32, radius: 0.8, mlp: vec![259, 256, 256, 512] },
+            ],
+            fp_layers: vec![
+                FpLayer { n_coarse: n / 256, n_fine: n / 64, k: 3, mlp: vec![768, 256, 256] },
+                FpLayer { n_coarse: n / 64, n_fine: n / 16, k: 3, mlp: vec![384, 256, 256] },
+                FpLayer { n_coarse: n / 16, n_fine: n / 4, k: 3, mlp: vec![320, 256, 128] },
+                FpLayer { n_coarse: n / 4, n_fine: n, k: 3, mlp: vec![131, 128, 128, 128] },
+            ],
+            head: vec![128, 128, 13],
+            delayed_aggregation: true,
+        }
+    }
+
+    /// The network the paper pairs with each dataset scale (Table I).
+    pub fn for_scale(scale: DatasetScale) -> Self {
+        match scale {
+            DatasetScale::Small => Self::pointnet2_c(),
+            DatasetScale::Medium | DatasetScale::Large => {
+                Self::pointnet2_s(scale.n_points())
+            }
+        }
+    }
+
+    /// Total feature-computing MACs of one forward pass.
+    pub fn total_macs(&self) -> u64 {
+        let sa: u64 = self.sa_layers.iter().map(|l| l.macs(self.delayed_aggregation)).sum();
+        let fp: u64 = self.fp_layers.iter().map(|l| l.macs()).sum();
+        let head: u64 = self
+            .head
+            .windows(2)
+            .map(|w| (w[0] * w[1]) as u64)
+            .sum();
+        sa + fp + head
+    }
+
+    /// Derive the per-cloud workload numbers the simulators consume.
+    pub fn workload(&self) -> Workload {
+        let mut fps_iterations = 0u64;
+        let mut query_centroids = 0u64;
+        let mut query_points_scanned = 0u64;
+        for l in &self.sa_layers {
+            if l.n_out > 1 {
+                fps_iterations += l.n_out as u64;
+                query_centroids += l.n_out as u64;
+                query_points_scanned += (l.n_out * l.n_in) as u64;
+            }
+        }
+        let knn_queries: u64 = self.fp_layers.iter().map(|l| l.n_fine as u64).sum();
+        Workload {
+            n_points: self.sa_layers.first().map(|l| l.n_in).unwrap_or(0) as u64,
+            fps_iterations,
+            query_centroids,
+            query_points_scanned,
+            knn_queries,
+            macs: self.total_macs(),
+        }
+    }
+}
+
+/// Per-cloud workload summary consumed by the accelerator simulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Workload {
+    pub n_points: u64,
+    /// Total FPS sampling iterations across SA layers.
+    pub fps_iterations: u64,
+    /// Centroids that need a neighbor query.
+    pub query_centroids: u64,
+    /// Point-distance evaluations implied by neighbor queries.
+    pub query_points_scanned: u64,
+    /// kNN queries in the FP decoder.
+    pub knn_queries: u64,
+    /// Feature-computing MACs.
+    pub macs: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_matches_trained_model_dims() {
+        let net = NetworkDef::pointnet2_c();
+        assert_eq!(net.sa_layers[0].mlp, vec![3, 64, 64, 128]);
+        assert_eq!(net.sa_layers[1].mlp, vec![131, 128, 128, 256]);
+        assert_eq!(net.head, vec![512, 256, 128, 8]);
+    }
+
+    #[test]
+    fn s_layer_chain_consistent() {
+        let net = NetworkDef::pointnet2_s(16384);
+        for pair in net.sa_layers.windows(2) {
+            assert_eq!(pair[0].n_out, pair[1].n_in);
+        }
+        for pair in net.fp_layers.windows(2) {
+            assert_eq!(pair[0].n_fine, pair[1].n_coarse);
+        }
+        // decoder ends at full resolution
+        assert_eq!(net.fp_layers.last().unwrap().n_fine, 16384);
+    }
+
+    #[test]
+    fn macs_scale_with_points() {
+        let small = NetworkDef::pointnet2_s(4096).total_macs();
+        let large = NetworkDef::pointnet2_s(16384).total_macs();
+        assert!(large > 3 * small && large < 5 * small);
+    }
+
+    #[test]
+    fn delayed_aggregation_reduces_macs() {
+        let mut net = NetworkDef::pointnet2_s(4096);
+        let delayed = net.total_macs();
+        net.delayed_aggregation = false;
+        let eager = net.total_macs();
+        assert!(
+            delayed < eager,
+            "delayed {delayed} must be < eager {eager} (Mesorasi-style saving)"
+        );
+    }
+
+    #[test]
+    fn workload_counts() {
+        let w = NetworkDef::pointnet2_c().workload();
+        assert_eq!(w.n_points, 1024);
+        assert_eq!(w.fps_iterations, 256 + 64);
+        assert!(w.macs > 10_000_000);
+    }
+}

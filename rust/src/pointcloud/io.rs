@@ -1,0 +1,137 @@
+//! Binary I/O: the `testset.bin` reader (written by `python/compile/aot.py`)
+//! and a simple cloud (de)serializer used by the examples.
+//!
+//! testset.bin layout (little-endian):
+//! `b"PC2IMTST" | u32 n_clouds | u32 n_points |`
+//! per cloud: `i32 label | f32[n_points*3]`.
+
+use super::PointCloud;
+use anyhow::{bail, ensure, Result};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PC2IMTST";
+
+/// A labelled evaluation set exported at build time.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub clouds: Vec<PointCloud>,
+    pub labels: Vec<i32>,
+    pub n_points: usize,
+}
+
+impl TestSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Read a testset.bin produced by the AOT pipeline.
+pub fn read_testset(path: impl AsRef<Path>) -> Result<TestSet> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic in {:?}: {:?}", path.as_ref(), magic);
+    }
+    let n_clouds = read_u32(&mut f)? as usize;
+    let n_points = read_u32(&mut f)? as usize;
+    ensure!(n_clouds < 1_000_000 && n_points < 10_000_000, "implausible testset header");
+    let mut clouds = Vec::with_capacity(n_clouds);
+    let mut labels = Vec::with_capacity(n_clouds);
+    let mut buf = vec![0u8; n_points * 3 * 4];
+    for _ in 0..n_clouds {
+        let mut lab = [0u8; 4];
+        f.read_exact(&mut lab)?;
+        labels.push(i32::from_le_bytes(lab));
+        f.read_exact(&mut buf)?;
+        let flat: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        clouds.push(PointCloud::from_flat(&flat));
+    }
+    Ok(TestSet { clouds, labels, n_points })
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Write a cloud as raw little-endian `f32` xyz triples (example helper).
+pub fn write_cloud_raw(path: impl AsRef<Path>, pc: &PointCloud) -> Result<()> {
+    let flat = pc.to_flat();
+    let mut bytes = Vec::with_capacity(flat.len() * 4);
+    for v in flat {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Read a cloud written by [`write_cloud_raw`].
+pub fn read_cloud_raw(path: impl AsRef<Path>) -> Result<PointCloud> {
+    let bytes = std::fs::read(path)?;
+    ensure!(bytes.len() % 12 == 0, "raw cloud must be xyz f32 triples");
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(PointCloud::from_flat(&flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::Point3;
+
+    #[test]
+    fn raw_roundtrip() {
+        let dir = std::env::temp_dir().join("pc2im_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cloud.raw");
+        let pc = PointCloud::new(vec![Point3::new(0.1, -0.2, 0.3), Point3::new(1.0, 2.0, 3.0)]);
+        write_cloud_raw(&path, &pc).unwrap();
+        let back = read_cloud_raw(&path).unwrap();
+        assert_eq!(back.points, pc.points);
+    }
+
+    #[test]
+    fn testset_synthetic_roundtrip() {
+        // Hand-build a tiny testset.bin and parse it back.
+        let dir = std::env::temp_dir().join("pc2im_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("testset.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        for (lab, base) in [(3i32, 0.0f32), (5i32, 1.0f32)] {
+            bytes.extend_from_slice(&lab.to_le_bytes());
+            for i in 0..12 {
+                bytes.extend_from_slice(&(base + i as f32).to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let ts = read_testset(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.labels, vec![3, 5]);
+        assert_eq!(ts.n_points, 4);
+        assert_eq!(ts.clouds[1].points[0], Point3::new(1.0, 2.0, 3.0));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pc2im_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC\x00\x00\x00\x00").unwrap();
+        assert!(read_testset(&path).is_err());
+    }
+}

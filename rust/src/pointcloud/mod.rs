@@ -1,0 +1,172 @@
+//! Point-cloud types, synthetic dataset generators and (de)serialization.
+
+pub mod io;
+pub mod synthetic;
+
+/// A single 3D point (f32 coordinates, unit-sphere normalized by
+/// convention throughout the crate).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Point3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Point3 {
+    pub const fn new(x: f32, y: f32, z: f32) -> Self {
+        Self { x, y, z }
+    }
+
+    /// Squared Euclidean distance (exact metric, eq. 1 of the paper).
+    #[inline]
+    pub fn l2_sq(&self, o: &Point3) -> f32 {
+        let (dx, dy, dz) = (self.x - o.x, self.y - o.y, self.z - o.z);
+        dx * dx + dy * dy + dz * dz
+    }
+
+    /// Manhattan distance (the paper's CIM-friendly approximation, eq. 2).
+    #[inline]
+    pub fn l1(&self, o: &Point3) -> f32 {
+        (self.x - o.x).abs() + (self.y - o.y).abs() + (self.z - o.z).abs()
+    }
+
+    #[inline]
+    pub fn coord(&self, axis: usize) -> f32 {
+        match axis {
+            0 => self.x,
+            1 => self.y,
+            _ => self.z,
+        }
+    }
+}
+
+/// An owned point cloud. Points are stored dense; all sampling/grouping
+/// structures index into `points`.
+#[derive(Debug, Clone, Default)]
+pub struct PointCloud {
+    pub points: Vec<Point3>,
+}
+
+impl PointCloud {
+    pub fn new(points: Vec<Point3>) -> Self {
+        Self { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Center on the centroid and scale into the unit cube (matches
+    /// `python/compile/data.py::normalize`).
+    pub fn normalize(&mut self) {
+        let n = self.points.len().max(1) as f32;
+        let (mut cx, mut cy, mut cz) = (0.0f64, 0.0f64, 0.0f64);
+        for p in &self.points {
+            cx += p.x as f64;
+            cy += p.y as f64;
+            cz += p.z as f64;
+        }
+        let (cx, cy, cz) = ((cx / n as f64) as f32, (cy / n as f64) as f32, (cz / n as f64) as f32);
+        let mut maxabs = 1e-9f32;
+        for p in &mut self.points {
+            p.x -= cx;
+            p.y -= cy;
+            p.z -= cz;
+            maxabs = maxabs.max(p.x.abs()).max(p.y.abs()).max(p.z.abs());
+        }
+        for p in &mut self.points {
+            p.x /= maxabs;
+            p.y /= maxabs;
+            p.z /= maxabs;
+        }
+    }
+
+    /// Axis-aligned bounding box as (min, max).
+    pub fn bbox(&self) -> (Point3, Point3) {
+        let mut lo = Point3::new(f32::MAX, f32::MAX, f32::MAX);
+        let mut hi = Point3::new(f32::MIN, f32::MIN, f32::MIN);
+        for p in &self.points {
+            lo.x = lo.x.min(p.x);
+            lo.y = lo.y.min(p.y);
+            lo.z = lo.z.min(p.z);
+            hi.x = hi.x.max(p.x);
+            hi.y = hi.y.max(p.y);
+            hi.z = hi.z.max(p.z);
+        }
+        (lo, hi)
+    }
+
+    /// Flatten to `[x0, y0, z0, x1, ...]` (the layout the PJRT runtime and
+    /// the testset.bin format use).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.points.len() * 3);
+        for p in &self.points {
+            v.extend_from_slice(&[p.x, p.y, p.z]);
+        }
+        v
+    }
+
+    pub fn from_flat(flat: &[f32]) -> Self {
+        assert_eq!(flat.len() % 3, 0, "flat length must be divisible by 3");
+        Self {
+            points: flat
+                .chunks_exact(3)
+                .map(|c| Point3::new(c[0], c[1], c[2]))
+                .collect(),
+        }
+    }
+
+    /// Gather a sub-cloud by indices.
+    pub fn gather(&self, idx: &[usize]) -> PointCloud {
+        PointCloud::new(idx.iter().map(|&i| self.points[i]).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_ge_l2() {
+        let a = Point3::new(0.3, -0.2, 0.9);
+        let b = Point3::new(-0.5, 0.1, 0.2);
+        assert!(a.l1(&b) >= a.l2_sq(&b).sqrt() - 1e-6);
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let mut pc = PointCloud::new(vec![
+            Point3::new(10.0, 0.0, 0.0),
+            Point3::new(0.0, 5.0, 0.0),
+            Point3::new(0.0, 0.0, -3.0),
+        ]);
+        pc.normalize();
+        let (lo, hi) = pc.bbox();
+        for v in [lo.x, lo.y, lo.z, hi.x, hi.y, hi.z] {
+            assert!((-1.0 - 1e-5..=1.0 + 1e-5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let pc = PointCloud::new(vec![Point3::new(1.0, 2.0, 3.0), Point3::new(4.0, 5.0, 6.0)]);
+        let back = PointCloud::from_flat(&pc.to_flat());
+        assert_eq!(back.points, pc.points);
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let pc = PointCloud::new(vec![
+            Point3::new(0.0, 0.0, 0.0),
+            Point3::new(1.0, 1.0, 1.0),
+            Point3::new(2.0, 2.0, 2.0),
+        ]);
+        let g = pc.gather(&[2, 0]);
+        assert_eq!(g.points[0], Point3::new(2.0, 2.0, 2.0));
+        assert_eq!(g.points[1], Point3::new(0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,296 @@
+//! Synthetic dataset generators matching the paper's three workload scales
+//! (Table I): ModelNet-like 1k, S3DIS-like 4k, SemanticKITTI-like 16k.
+//!
+//! The classification primitives mirror `python/compile/data.py`; the
+//! segmentation-scale scenes only shape the *workload* (spatial density,
+//! tiling behaviour, sampling traffic), which is what the architecture
+//! results depend on.
+
+use super::{Point3, PointCloud};
+use crate::rng::Rng64;
+
+/// The three dataset scales from the paper's Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetScale {
+    /// ModelNet-like: 1k points, classification.
+    Small,
+    /// S3DIS-like: 4k points, indoor-room semantic segmentation.
+    Medium,
+    /// SemanticKITTI-like: 16k points, street-scene semantic segmentation.
+    Large,
+}
+
+impl DatasetScale {
+    pub fn n_points(self) -> usize {
+        match self {
+            DatasetScale::Small => 1024,
+            DatasetScale::Medium => 4096,
+            DatasetScale::Large => 16384,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetScale::Small => "ModelNet-like (1k)",
+            DatasetScale::Medium => "S3DIS-like (4k)",
+            DatasetScale::Large => "SemanticKITTI-like (16k)",
+        }
+    }
+
+    pub const ALL: [DatasetScale; 3] =
+        [DatasetScale::Small, DatasetScale::Medium, DatasetScale::Large];
+}
+
+/// Number of primitive classes in the classification set (matches
+/// `python/compile/data.py::NUM_CLASSES`).
+pub const NUM_CLASSES: usize = 8;
+
+/// Class names, aligned with `python/compile/data.py::CLASS_NAMES`.
+pub const CLASS_NAMES: [&str; NUM_CLASSES] =
+    ["sphere", "cube", "cylinder", "cone", "torus", "pyramid", "disk", "helix"];
+
+fn unit_sphere(rng: &mut Rng64) -> Point3 {
+    loop {
+        let (x, y, z) = (
+            rng.f32() * 2.0 - 1.0,
+            rng.f32() * 2.0 - 1.0,
+            rng.f32() * 2.0 - 1.0,
+        );
+        let n = (x * x + y * y + z * z).sqrt();
+        if n > 1e-4 && n <= 1.0 {
+            return Point3::new(x / n, y / n, z / n);
+        }
+    }
+}
+
+/// One synthetic primitive cloud of class `label` (0..NUM_CLASSES).
+pub fn make_class_cloud(label: usize, n: usize, seed: u64) -> PointCloud {
+    let mut rng = Rng64::new(seed ^ ((label as u64) << 32));
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let p = match label {
+            0 => unit_sphere(&mut rng), // sphere
+            1 => {
+                // cube surface
+                let face = rng.range_usize(0, 6);
+                let (u, v) = (rng.f32() * 2.0 - 1.0, rng.f32() * 2.0 - 1.0);
+                let s = if face % 2 == 0 { 1.0 } else { -1.0 };
+                match face / 2 {
+                    0 => Point3::new(s, u, v),
+                    1 => Point3::new(u, s, v),
+                    _ => Point3::new(u, v, s),
+                }
+            }
+            2 => {
+                // cylinder
+                let t = rng.f32() * std::f32::consts::TAU;
+                Point3::new(t.cos(), t.sin(), rng.f32() * 2.0 - 1.0)
+            }
+            3 => {
+                // cone
+                let h = rng.f32().sqrt();
+                let t = rng.f32() * std::f32::consts::TAU;
+                let r = 1.0 - h;
+                Point3::new(r * t.cos(), r * t.sin(), 2.0 * h - 1.0)
+            }
+            4 => {
+                // torus
+                let (u, v) = (
+                    rng.f32() * std::f32::consts::TAU,
+                    rng.f32() * std::f32::consts::TAU,
+                );
+                let (rr, r) = (0.8, 0.35);
+                Point3::new(
+                    (rr + r * v.cos()) * u.cos(),
+                    (rr + r * v.cos()) * u.sin(),
+                    r * v.sin(),
+                )
+            }
+            5 => {
+                // tetrahedron surface
+                const V: [[f32; 3]; 4] = [
+                    [1.0, 1.0, 1.0],
+                    [1.0, -1.0, -1.0],
+                    [-1.0, 1.0, -1.0],
+                    [-1.0, -1.0, 1.0],
+                ];
+                const F: [[usize; 3]; 4] = [[0, 1, 2], [0, 1, 3], [0, 2, 3], [1, 2, 3]];
+                let f = F[rng.range_usize(0, 4)];
+                let (mut a, mut b): (f32, f32) = (rng.f32(), rng.f32());
+                if a + b > 1.0 {
+                    a = 1.0 - a;
+                    b = 1.0 - b;
+                }
+                let c = 1.0 - a - b;
+                Point3::new(
+                    a * V[f[0]][0] + b * V[f[1]][0] + c * V[f[2]][0],
+                    a * V[f[0]][1] + b * V[f[1]][1] + c * V[f[2]][1],
+                    a * V[f[0]][2] + b * V[f[1]][2] + c * V[f[2]][2],
+                )
+            }
+            6 => {
+                // disk
+                let r = rng.f32().sqrt();
+                let t = rng.f32() * std::f32::consts::TAU;
+                Point3::new(r * t.cos(), r * t.sin(), 0.02 * gaussian(&mut rng))
+            }
+            _ => {
+                // helix
+                let t = rng.f32() * 4.0 * std::f32::consts::PI;
+                Point3::new(
+                    t.cos() + 0.05 * gaussian(&mut rng),
+                    t.sin() + 0.05 * gaussian(&mut rng),
+                    t / std::f32::consts::TAU - 1.0 + 0.05 * gaussian(&mut rng),
+                )
+            }
+        };
+        pts.push(p);
+    }
+    let mut pc = PointCloud::new(pts);
+    pc.normalize();
+    pc
+}
+
+/// Box-Muller standard normal (delegates to the crate PRNG).
+fn gaussian(rng: &mut Rng64) -> f32 {
+    rng.gaussian()
+}
+
+/// S3DIS-like indoor room: walls/floor/ceiling planes plus furniture blobs.
+pub fn make_room_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let kind: f32 = rng.f32();
+        let p = if kind < 0.5 {
+            // structural planes (floor/ceiling/walls)
+            let which = rng.range_usize(0, 6);
+            let (u, v) = (rng.f32() * 2.0 - 1.0, rng.f32() * 2.0 - 1.0);
+            let s = if which % 2 == 0 { 1.0 } else { -1.0 };
+            match which / 2 {
+                0 => Point3::new(s, u, v),
+                1 => Point3::new(u, s, v),
+                _ => Point3::new(u, v, s),
+            }
+        } else {
+            // furniture blobs: gaussian clusters at fixed anchors
+            let k = rng.range_usize(0, 6);
+            let anchor = [
+                [0.4, 0.3, -0.7],
+                [-0.5, -0.4, -0.6],
+                [0.1, -0.6, -0.5],
+                [-0.3, 0.5, -0.4],
+                [0.6, -0.1, -0.3],
+                [-0.7, 0.0, -0.6],
+            ][k];
+            Point3::new(
+                anchor[0] + 0.12 * gaussian(&mut rng),
+                anchor[1] + 0.12 * gaussian(&mut rng),
+                anchor[2] + 0.10 * gaussian(&mut rng),
+            )
+        };
+        pts.push(p);
+    }
+    let mut pc = PointCloud::new(pts);
+    pc.normalize();
+    pc
+}
+
+/// SemanticKITTI-like street scene: dense near-field ground annulus, sparse
+/// far field, vertical structures — the strongly non-uniform density that
+/// makes equal-*shape* tiling lose utilization (motivates MSP, Fig. 5(b)).
+pub fn make_street_cloud(n: usize, seed: u64) -> PointCloud {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let kind: f32 = rng.f32();
+        let p = if kind < 0.6 {
+            // LiDAR-like ground: radial density ~ 1/r
+            let r = 0.05 + 0.95 * rng.f32().powi(2);
+            let t = rng.f32() * std::f32::consts::TAU;
+            Point3::new(r * t.cos(), r * t.sin(), -0.9 + 0.02 * gaussian(&mut rng))
+        } else if kind < 0.85 {
+            // vertical structures (poles, facades) at random azimuths
+            let t = rng.f32() * std::f32::consts::TAU;
+            let r = 0.3 + 0.6 * rng.f32();
+            Point3::new(
+                r * t.cos() + 0.03 * gaussian(&mut rng),
+                r * t.sin() + 0.03 * gaussian(&mut rng),
+                -0.9 + 1.4 * rng.f32(),
+            )
+        } else {
+            // vehicles/objects: boxes near the ground plane
+            let k = rng.range_usize(0, 8);
+            let a = (k as f32) * std::f32::consts::TAU / 8.0;
+            let (cx, cy) = (0.5 * a.cos(), 0.5 * a.sin());
+            Point3::new(
+                cx + 0.08 * (rng.f32() - 0.5),
+                cy + 0.05 * (rng.f32() - 0.5),
+                -0.85 + 0.12 * rng.f32(),
+            )
+        };
+        pts.push(p);
+    }
+    let mut pc = PointCloud::new(pts);
+    pc.normalize();
+    pc
+}
+
+/// Workload cloud at a given dataset scale (the per-figure sweeps use this).
+pub fn make_workload_cloud(scale: DatasetScale, seed: u64) -> PointCloud {
+    match scale {
+        DatasetScale::Small => make_class_cloud((seed % NUM_CLASSES as u64) as usize, scale.n_points(), seed),
+        DatasetScale::Medium => make_room_cloud(scale.n_points(), seed),
+        DatasetScale::Large => make_street_cloud(scale.n_points(), seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_cloud_deterministic() {
+        let a = make_class_cloud(2, 256, 7);
+        let b = make_class_cloud(2, 256, 7);
+        assert_eq!(a.points, b.points);
+    }
+
+    #[test]
+    fn scales_have_paper_sizes() {
+        assert_eq!(DatasetScale::Small.n_points(), 1024);
+        assert_eq!(DatasetScale::Medium.n_points(), 4096);
+        assert_eq!(DatasetScale::Large.n_points(), 16384);
+    }
+
+    #[test]
+    fn workload_clouds_normalized() {
+        for scale in DatasetScale::ALL {
+            let pc = make_workload_cloud(scale, 3);
+            assert_eq!(pc.len(), scale.n_points());
+            let (lo, hi) = pc.bbox();
+            for v in [lo.x, lo.y, lo.z, hi.x, hi.y, hi.z] {
+                assert!(v.abs() <= 1.0 + 1e-4, "coordinate {v} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn street_cloud_nonuniform_density() {
+        // Ground annulus should concentrate points near the ground plane.
+        let pc = make_street_cloud(8192, 11);
+        // After normalization the dense ground mass pulls the centroid down,
+        // so most points sit below z = 0.
+        let low = pc.points.iter().filter(|p| p.z < 0.0).count();
+        assert!(low * 10 > pc.len() * 6, "expected bottom-heavy street scene");
+    }
+
+    #[test]
+    fn all_classes_generate() {
+        for c in 0..NUM_CLASSES {
+            let pc = make_class_cloud(c, 64, 1);
+            assert_eq!(pc.len(), 64);
+            assert!(pc.points.iter().all(|p| p.x.is_finite()));
+        }
+    }
+}

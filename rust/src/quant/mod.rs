@@ -1,0 +1,155 @@
+//! 16-bit fixed-point quantization (the paper's on-chip number format).
+//!
+//! Coordinates live in [-1, 1] after normalization and are mapped onto an
+//! unsigned 16-bit grid; integer L1 distances then fit in 19 bits
+//! (3 * 65535 < 2^18, plus a guard bit — exactly the paper's 19-bit
+//! temporary distances). Activations are quantized to u16 (post-ReLU they
+//! are non-negative) and weights to i16, matching the SC-CIM datapath.
+
+/// Bits used for coordinates/activations/weights.
+pub const COORD_BITS: u32 = 16;
+/// Bit width of temporary distances (paper: 19-bit TDs).
+pub const TD_BITS: u32 = 19;
+/// Maximum representable temporary distance (3 coordinate deltas).
+pub const TD_MAX: u32 = 3 * (u16::MAX as u32);
+
+/// A coordinate quantized onto the unsigned 16-bit grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct QPoint3 {
+    pub x: u16,
+    pub y: u16,
+    pub z: u16,
+}
+
+impl QPoint3 {
+    /// Integer Manhattan distance — what APD-CIM computes (19-bit result).
+    #[inline]
+    pub fn l1(&self, o: &QPoint3) -> u32 {
+        (self.x.abs_diff(o.x) as u32)
+            + (self.y.abs_diff(o.y) as u32)
+            + (self.z.abs_diff(o.z) as u32)
+    }
+
+    /// Integer squared Euclidean distance (used by the digital baselines).
+    #[inline]
+    pub fn l2_sq(&self, o: &QPoint3) -> u64 {
+        let dx = self.x.abs_diff(o.x) as u64;
+        let dy = self.y.abs_diff(o.y) as u64;
+        let dz = self.z.abs_diff(o.z) as u64;
+        dx * dx + dy * dy + dz * dz
+    }
+}
+
+/// Quantize a coordinate in [-1, 1] to the u16 grid (saturating).
+#[inline]
+pub fn quantize_coord(v: f32) -> u16 {
+    let t = ((v + 1.0) * 0.5 * (u16::MAX as f32)).round();
+    t.clamp(0.0, u16::MAX as f32) as u16
+}
+
+/// Dequantize back to [-1, 1] (inverse of [`quantize_coord`] up to half an LSB).
+#[inline]
+pub fn dequantize_coord(q: u16) -> f32 {
+    (q as f32) / (u16::MAX as f32) * 2.0 - 1.0
+}
+
+pub fn quantize_point(p: &crate::pointcloud::Point3) -> QPoint3 {
+    QPoint3 {
+        x: quantize_coord(p.x),
+        y: quantize_coord(p.y),
+        z: quantize_coord(p.z),
+    }
+}
+
+pub fn quantize_cloud(pc: &crate::pointcloud::PointCloud) -> Vec<QPoint3> {
+    pc.points.iter().map(quantize_point).collect()
+}
+
+pub fn dequantize_point(q: &QPoint3) -> crate::pointcloud::Point3 {
+    crate::pointcloud::Point3::new(
+        dequantize_coord(q.x),
+        dequantize_coord(q.y),
+        dequantize_coord(q.z),
+    )
+}
+
+/// The f32 L1 radius expressed on the integer grid (for lattice queries).
+#[inline]
+pub fn radius_to_grid(r: f32) -> u32 {
+    (r * 0.5 * (u16::MAX as f32)).round() as u32
+}
+
+/// Symmetric per-tensor quantization of a weight value given `max_abs`.
+#[inline]
+pub fn quantize_weight(v: f32, max_abs: f32) -> i16 {
+    if max_abs <= 0.0 {
+        return 0;
+    }
+    let scale = max_abs / (i16::MAX as f32);
+    (v / scale).round().clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Unsigned activation quantization given `max_val` (post-ReLU inputs).
+#[inline]
+pub fn quantize_activation(v: f32, max_val: f32) -> u16 {
+    if max_val <= 0.0 {
+        return 0;
+    }
+    let scale = max_val / (u16::MAX as f32);
+    (v / scale).round().clamp(0.0, u16::MAX as f32) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::Point3;
+
+    #[test]
+    fn coord_roundtrip_half_lsb() {
+        for v in [-1.0f32, -0.5, 0.0, 0.3333, 0.9999, 1.0] {
+            let q = quantize_coord(v);
+            let back = dequantize_coord(q);
+            assert!((back - v).abs() <= 1.0 / 65535.0 + 1e-6, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn coord_extremes() {
+        assert_eq!(quantize_coord(-1.0), 0);
+        assert_eq!(quantize_coord(1.0), u16::MAX);
+        assert_eq!(quantize_coord(-2.0), 0); // saturates
+        assert_eq!(quantize_coord(2.0), u16::MAX);
+    }
+
+    #[test]
+    fn td_fits_19_bits() {
+        let a = QPoint3 { x: 0, y: 0, z: 0 };
+        let b = QPoint3 { x: u16::MAX, y: u16::MAX, z: u16::MAX };
+        let d = a.l1(&b);
+        assert_eq!(d, TD_MAX);
+        assert!(d < (1 << TD_BITS));
+    }
+
+    #[test]
+    fn integer_l1_tracks_float_l1() {
+        let p = Point3::new(0.25, -0.5, 0.75);
+        let q = Point3::new(-0.25, 0.5, 0.0);
+        let (qp, qq) = (quantize_point(&p), quantize_point(&q));
+        let grid_l1 = qp.l1(&qq) as f32 / (u16::MAX as f32) * 2.0;
+        assert!((grid_l1 - p.l1(&q)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn weight_quant_symmetric() {
+        let w = quantize_weight(0.5, 1.0);
+        let wneg = quantize_weight(-0.5, 1.0);
+        assert_eq!(w, -wneg);
+        assert_eq!(quantize_weight(1.0, 1.0), i16::MAX);
+    }
+
+    #[test]
+    fn radius_grid_matches_coord_scale() {
+        // A radius of 2.0 spans the whole [-1,1] range = 65535 grid units.
+        assert_eq!(radius_to_grid(2.0), u16::MAX as u32);
+    }
+}

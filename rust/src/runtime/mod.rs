@@ -1,0 +1,221 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them on the CPU PJRT client — the numeric half of the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once and cached;
+//! Python never runs here.
+
+pub mod json;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/dims contract of one lowered artifact (from meta.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+/// The model-level metadata exported by `python/compile/aot.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub n_points: usize,
+    pub s1: usize,
+    pub k1: usize,
+    pub r1: f32,
+    pub s2: usize,
+    pub k2: usize,
+    pub r2: f32,
+    pub num_classes: usize,
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub model: ModelMeta,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub testset_file: String,
+}
+
+impl Meta {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(artifacts_dir.join("meta.json"))
+            .with_context(|| format!("reading meta.json in {artifacts_dir:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text)?;
+        let m = v.get("model").ok_or_else(|| anyhow!("meta.json missing 'model'"))?;
+        let us = |k: &str| -> Result<usize> {
+            m.get(k).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("model.{k} missing"))
+        };
+        let fs = |k: &str| -> Result<f32> {
+            m.get(k).and_then(|x| x.as_f64()).map(|f| f as f32).ok_or_else(|| anyhow!("model.{k} missing"))
+        };
+        let model = ModelMeta {
+            n_points: us("n_points")?,
+            s1: us("s1")?,
+            k1: us("k1")?,
+            r1: fs("r1")?,
+            s2: us("s2")?,
+            k2: us("k2")?,
+            r2: fs("r2")?,
+            num_classes: us("num_classes")?,
+        };
+        let mut artifacts = HashMap::new();
+        if let Some(json::Value::Obj(arts)) = v.get("artifacts") {
+            for (name, a) in arts {
+                let file = match a.get("file").and_then(|f| f.as_str()) {
+                    Some(f) => f.to_string(),
+                    None => continue, // e.g. the l1_distance entry has no shapes
+                };
+                let shape = |k: &str| -> Vec<usize> {
+                    a.get(k)
+                        .and_then(|s| s.as_arr())
+                        .map(|arr| arr.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default()
+                };
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        file,
+                        input_shape: shape("input_shape"),
+                        output_shape: shape("output_shape"),
+                    },
+                );
+            }
+        }
+        let testset_file = v
+            .get("testset")
+            .and_then(|t| t.get("file"))
+            .and_then(|f| f.as_str())
+            .unwrap_or("testset.bin")
+            .to_string();
+        Ok(Self { model, artifacts, testset_file })
+    }
+}
+
+/// The PJRT execution engine with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub meta: Meta,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the artifact metadata.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let meta = Meta::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, artifacts_dir, meta, execs: HashMap::new() })
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.artifacts_dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a single-input/single-output artifact: `data` is the
+    /// flattened f32 input (row-major, must match the artifact's
+    /// input_shape); returns the flattened f32 output.
+    pub fn execute(&mut self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let meta = &self.meta.artifacts[name];
+        let expect: usize = meta.input_shape.iter().product();
+        anyhow::ensure!(
+            data.len() == expect,
+            "{name}: input has {} values, artifact wants {:?} = {expect}",
+            data.len(),
+            meta.input_shape
+        );
+        let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let exe = &self.execs[name];
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True => 1-tuple output.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("meta.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn meta_parses() {
+        let Some(dir) = artifacts() else { return };
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.model.n_points, 1024);
+        assert_eq!(meta.model.s1, 256);
+        assert!(meta.artifacts.contains_key("sa1"));
+        assert!(meta.artifacts.contains_key("head_q16"));
+        assert_eq!(meta.artifacts["sa1"].input_shape, vec![256, 32, 3]);
+        assert_eq!(meta.artifacts["sa1"].output_shape, vec![256, 128]);
+    }
+
+    #[test]
+    fn sa1_executes_and_respects_relu() {
+        let Some(dir) = artifacts() else { return };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let n: usize = rt.meta.artifacts["sa1"].input_shape.iter().product();
+        let input = vec![0.1f32; n];
+        let out = rt.execute("sa1", &input).unwrap();
+        let want: usize = rt.meta.artifacts["sa1"].output_shape.iter().product();
+        assert_eq!(out.len(), want);
+        assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0), "post-ReLU+max outputs");
+        assert!(out.iter().any(|v| *v > 0.0));
+        // cache hit on second call
+        rt.execute("sa1", &input).unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let Some(dir) = artifacts() else { return };
+        let mut rt = Runtime::new(&dir).unwrap();
+        assert!(rt.execute("sa1", &[0.0; 7]).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Farthest point sampling: exact (L2), approximate (L1) and integer-grid
+//! (the APD-CIM/CAM datapath's view of the computation).
+//!
+//! All variants keep the standard temporary-distance array `D_s` (minimal
+//! distance of each raw point to the sampled set) and repeatedly pick
+//! `argmax D_s` — precisely the access pattern whose memory traffic the
+//! paper's CIM preprocessing eliminates. [`FpsTrace`] records that traffic
+//! so the accelerator simulators can charge energy for it.
+
+use crate::pointcloud::Point3;
+use crate::quant::QPoint3;
+
+/// Memory-traffic trace of one FPS run (consumed by the energy models).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FpsTrace {
+    /// Number of sampling iterations executed (= #centroids - 1).
+    pub iterations: u64,
+    /// Point records read for distance calculation (one per point per iter).
+    pub point_reads: u64,
+    /// Temporary-distance reads (min-update compare + max scan).
+    pub td_reads: u64,
+    /// Temporary-distance writes (min-update).
+    pub td_writes: u64,
+}
+
+/// Exact Euclidean FPS (paper eq. 1). Returns `m` indices; `start` seeds
+/// the sampled set. Deterministic, matches `sampling.fps(metric='l2')`.
+pub fn fps_l2(points: &[Point3], m: usize, start: usize) -> (Vec<usize>, FpsTrace) {
+    fps_generic(points.len(), m, start, |i, j| {
+        debug_assert!(i < points.len() && j < points.len());
+        points[i].l2_sq(&points[j])
+    })
+}
+
+/// Approximate Manhattan FPS (paper eq. 2) on f32 coordinates.
+pub fn fps_l1(points: &[Point3], m: usize, start: usize) -> (Vec<usize>, FpsTrace) {
+    fps_generic(points.len(), m, start, |i, j| points[i].l1(&points[j]))
+}
+
+/// Integer-grid Manhattan FPS — bit-identical to what the APD-CIM +
+/// Ping-Pong-MAX CAM hardware computes (19-bit TDs on the u16 grid).
+pub fn fps_l1_grid(points: &[QPoint3], m: usize, start: usize) -> (Vec<usize>, FpsTrace) {
+    fps_generic(points.len(), m, start, |i, j| points[i].l1(&points[j]))
+}
+
+fn fps_generic<D: PartialOrd + Copy>(
+    n: usize,
+    m: usize,
+    start: usize,
+    dist: impl Fn(usize, usize) -> D,
+) -> (Vec<usize>, FpsTrace) {
+    assert!(m >= 1 && m <= n, "cannot sample {m} of {n}");
+    assert!(start < n);
+    let mut trace = FpsTrace::default();
+    let mut ds: Vec<D> = (0..n).map(|i| dist(i, start)).collect();
+    trace.point_reads += n as u64;
+    trace.td_writes += n as u64;
+    let mut idx = Vec::with_capacity(m);
+    idx.push(start);
+    for _ in 1..m {
+        trace.iterations += 1;
+        // argmax D_s — ties resolved to the lowest index (deterministic,
+        // matches numpy argmax and the CAM's lowest-matchline priority).
+        let mut best = 0usize;
+        for i in 1..n {
+            if ds[i] > ds[best] {
+                best = i;
+            }
+        }
+        trace.td_reads += n as u64;
+        idx.push(best);
+        // min-update of the temporary distances
+        for i in 0..n {
+            let d = dist(i, best);
+            if d < ds[i] {
+                ds[i] = d;
+                trace.td_writes += 1;
+            }
+        }
+        trace.point_reads += n as u64;
+        trace.td_reads += n as u64;
+    }
+    (idx, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::make_class_cloud;
+    use crate::quant::quantize_cloud;
+
+    fn cloud(n: usize) -> Vec<Point3> {
+        make_class_cloud(0, n, 42).points
+    }
+
+    #[test]
+    fn unique_indices() {
+        let pts = cloud(200);
+        let (idx, _) = fps_l2(&pts, 50, 0);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 50);
+    }
+
+    #[test]
+    fn starts_at_start() {
+        let pts = cloud(64);
+        assert_eq!(fps_l2(&pts, 8, 5).0[0], 5);
+        assert_eq!(fps_l1(&pts, 8, 5).0[0], 5);
+    }
+
+    #[test]
+    fn second_sample_is_farthest() {
+        let mut pts = vec![Point3::default(); 10];
+        pts[7] = Point3::new(5.0, 0.0, 0.0);
+        assert_eq!(fps_l2(&pts, 2, 0).0[1], 7);
+        assert_eq!(fps_l1(&pts, 2, 0).0[1], 7);
+    }
+
+    #[test]
+    fn grid_fps_matches_float_l1_on_coarse_cloud() {
+        // On well-separated points quantization can't flip the ordering.
+        let pts: Vec<Point3> = (0..16)
+            .map(|i| Point3::new((i as f32) / 8.0 - 1.0, 0.0, 0.0))
+            .collect();
+        let q = quantize_cloud(&crate::pointcloud::PointCloud::new(pts.clone()));
+        let (a, _) = fps_l1(&pts, 6, 0);
+        let (b, _) = fps_l1_grid(&q, 6, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trace_counts_scale_with_n_and_m() {
+        let pts = cloud(128);
+        let (_, t) = fps_l2(&pts, 16, 0);
+        assert_eq!(t.iterations, 15);
+        assert_eq!(t.point_reads, 128 + 15 * 128);
+        assert_eq!(t.td_reads, 2 * 15 * 128);
+        assert!(t.td_writes >= 128); // init writes at minimum
+    }
+
+    #[test]
+    fn l1_l2_same_on_axis_line() {
+        let pts: Vec<Point3> = (0..64)
+            .map(|i| Point3::new(i as f32 / 63.0, 0.0, 0.0))
+            .collect();
+        assert_eq!(fps_l2(&pts, 8, 0).0, fps_l1(&pts, 8, 0).0);
+    }
+}

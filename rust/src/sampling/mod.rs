@@ -1,0 +1,17 @@
+//! Sampling and grouping: exact FPS/ball-query/kNN (the algorithmic
+//! baselines) plus the paper's approximate pipeline — L1-metric FPS,
+//! lattice query (L = 1.6 R) and median spatial partitioning (MSP).
+//!
+//! Mirrors `python/compile/sampling.py`; the same invariants are tested on
+//! both sides (plus proptest properties here).
+
+pub mod fps;
+pub mod msp;
+pub mod query;
+
+pub use fps::{fps_l1, fps_l1_grid, fps_l2, FpsTrace};
+pub use msp::{msp_partition, Tile};
+pub use query::{ball_query, knn, lattice_query, lattice_query_grid};
+
+/// The paper's empirical lattice scale: L = 1.6 * R (ball-query radius).
+pub const LATTICE_SCALE: f32 = 1.6;

@@ -1,0 +1,177 @@
+//! Median spatial partitioning (paper Fig. 5(b)): recursive median splits
+//! along the widest axis until every tile holds at most `tile_size` points.
+//!
+//! Unlike fixed-shape tiling (TiPU), MSP yields *equal-population* tiles
+//! with unfixed spatial shape, so every tile fills the on-chip CIM array —
+//! the paper measures ~15% higher array utilization on S3DIS. The host CPU
+//! executes MSP (the paper offloads it identically); we use an O(n) median
+//! selection per split.
+
+use crate::pointcloud::PointCloud;
+
+/// One spatial tile: indices into the parent cloud.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tile {
+    pub indices: Vec<usize>,
+    /// Depth in the split tree (diagnostics / scheduling priority).
+    pub depth: u32,
+}
+
+impl Tile {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// Partition `pc` into tiles of at most `tile_size` points via median
+/// splits along the widest axis. Equal-population by construction: sizes
+/// differ by at most 1 across the whole partition.
+pub fn msp_partition(pc: &PointCloud, tile_size: usize) -> Vec<Tile> {
+    assert!(tile_size > 0);
+    let mut out = Vec::new();
+    let all: Vec<usize> = (0..pc.len()).collect();
+    let mut stack = vec![(all, 0u32)];
+    while let Some((mut idx, depth)) = stack.pop() {
+        if idx.len() <= tile_size {
+            if !idx.is_empty() {
+                out.push(Tile { indices: idx, depth });
+            }
+            continue;
+        }
+        // Widest axis of this subset's bounding box.
+        let mut lo = [f32::MAX; 3];
+        let mut hi = [f32::MIN; 3];
+        for &i in &idx {
+            for a in 0..3 {
+                let v = pc.points[i].coord(a);
+                lo[a] = lo[a].min(v);
+                hi[a] = hi[a].max(v);
+            }
+        }
+        let axis = (0..3)
+            .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
+            .unwrap();
+        // O(n) median split (ties broken by index for determinism).
+        let mid = idx.len() / 2;
+        idx.select_nth_unstable_by(mid, |&a, &b| {
+            pc.points[a]
+                .coord(axis)
+                .partial_cmp(&pc.points[b].coord(axis))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let right = idx.split_off(mid);
+        stack.push((idx, depth + 1));
+        stack.push((right, depth + 1));
+    }
+    out
+}
+
+/// Fixed-shape spatial tiling (the TiPU-style baseline): a uniform
+/// `grid x grid x grid` voxelization. Tiles are *spatially* equal but hold
+/// wildly varying point counts on non-uniform clouds — the utilization gap
+/// MSP closes (compare with [`msp_partition`] in experiments/claims.rs).
+pub fn fixed_grid_partition(pc: &PointCloud, grid: usize) -> Vec<Tile> {
+    assert!(grid > 0);
+    let (lo, hi) = pc.bbox();
+    let span = [
+        (hi.x - lo.x).max(1e-9),
+        (hi.y - lo.y).max(1e-9),
+        (hi.z - lo.z).max(1e-9),
+    ];
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); grid * grid * grid];
+    for (i, p) in pc.points.iter().enumerate() {
+        let cell = |v: f32, l: f32, s: f32| {
+            (((v - l) / s * grid as f32) as usize).min(grid - 1)
+        };
+        let (cx, cy, cz) = (
+            cell(p.x, lo.x, span[0]),
+            cell(p.y, lo.y, span[1]),
+            cell(p.z, lo.z, span[2]),
+        );
+        buckets[(cx * grid + cy) * grid + cz].push(i);
+    }
+    buckets
+        .into_iter()
+        .filter(|b| !b.is_empty())
+        .map(|indices| Tile { indices, depth: 0 })
+        .collect()
+}
+
+/// CIM-array utilization of a partition: mean fill ratio of the on-chip
+/// point capacity across tiles (the paper's "array utilization" metric).
+pub fn array_utilization(tiles: &[Tile], capacity: usize) -> f64 {
+    if tiles.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = tiles
+        .iter()
+        .map(|t| (t.len().min(capacity) as f64) / capacity as f64)
+        .sum();
+    sum / tiles.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::{make_street_cloud, make_workload_cloud, DatasetScale};
+
+    #[test]
+    fn exact_cover() {
+        let pc = make_workload_cloud(DatasetScale::Medium, 1);
+        let tiles = msp_partition(&pc, 512);
+        let mut all: Vec<usize> = tiles.iter().flat_map(|t| t.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..pc.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn equal_population_on_pow2() {
+        let pc = make_workload_cloud(DatasetScale::Large, 2);
+        let tiles = msp_partition(&pc, 2048);
+        assert_eq!(tiles.len(), 8);
+        assert!(tiles.iter().all(|t| t.len() == 2048));
+    }
+
+    #[test]
+    fn small_cloud_single_tile() {
+        let pc = make_workload_cloud(DatasetScale::Small, 3);
+        let tiles = msp_partition(&pc, 2048);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].len(), 1024);
+    }
+
+    #[test]
+    fn msp_beats_fixed_grid_utilization() {
+        // The paper's ~15% utilization claim: on a non-uniform street cloud
+        // MSP fills the 2048-point array strictly better than fixed tiling.
+        let pc = make_street_cloud(16384, 4);
+        let msp_u = array_utilization(&msp_partition(&pc, 2048), 2048);
+        let grid_u = array_utilization(&fixed_grid_partition(&pc, 2), 2048);
+        assert!(
+            msp_u > grid_u,
+            "MSP utilization {msp_u:.3} should exceed fixed-grid {grid_u:.3}"
+        );
+        assert!(msp_u > 0.95);
+    }
+
+    #[test]
+    fn tiles_are_spatially_coherent() {
+        // Every MSP tile's bbox must be smaller than the full cloud's bbox
+        // along the split axes (sanity: median split separates space).
+        let pc = make_workload_cloud(DatasetScale::Medium, 5);
+        let tiles = msp_partition(&pc, 1024);
+        let (lo, hi) = pc.bbox();
+        let full = (hi.x - lo.x) + (hi.y - lo.y) + (hi.z - lo.z);
+        for t in &tiles {
+            let sub = pc.gather(&t.indices);
+            let (slo, shi) = sub.bbox();
+            let span = (shi.x - slo.x) + (shi.y - slo.y) + (shi.z - slo.z);
+            assert!(span < full, "tile should not span the whole cloud");
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Neighbor queries: exact L2 ball query, the paper's L1 lattice query
+//! (range L = 1.6 R), and kNN (feature-propagation layers).
+//!
+//! Short groups are padded by repeating the first hit — PointNet++
+//! convention, mirrored by `python/compile/sampling.py`.
+
+use crate::pointcloud::Point3;
+use crate::quant::QPoint3;
+use crate::sampling::LATTICE_SCALE;
+
+/// Exact L2 ball query: up to `k` neighbors within `radius` of each
+/// centroid (given by index into `points`). Returns `[centroids.len()][k]`.
+pub fn ball_query(
+    points: &[Point3],
+    centroid_idx: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    let r2 = radius * radius;
+    centroid_idx
+        .iter()
+        .map(|&ci| {
+            let c = &points[ci];
+            let mut grp = Vec::with_capacity(k);
+            for (i, p) in points.iter().enumerate() {
+                if p.l2_sq(c) <= r2 {
+                    grp.push(i);
+                    if grp.len() == k {
+                        break;
+                    }
+                }
+            }
+            pad_group(grp, k, || nearest_by(points, c, |a, b| a.l2_sq(b)))
+        })
+        .collect()
+}
+
+/// The paper's lattice query: an L1 ball of range `LATTICE_SCALE * radius`.
+/// Same contract as [`ball_query`].
+pub fn lattice_query(
+    points: &[Point3],
+    centroid_idx: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    let lim = LATTICE_SCALE * radius;
+    centroid_idx
+        .iter()
+        .map(|&ci| {
+            let c = &points[ci];
+            let mut grp = Vec::with_capacity(k);
+            for (i, p) in points.iter().enumerate() {
+                if p.l1(c) <= lim {
+                    grp.push(i);
+                    if grp.len() == k {
+                        break;
+                    }
+                }
+            }
+            pad_group(grp, k, || nearest_by(points, c, |a, b| a.l1(b)))
+        })
+        .collect()
+}
+
+/// Integer-grid lattice query — the APD-CIM datapath view: 19-bit L1
+/// distances compared against a grid-space range.
+pub fn lattice_query_grid(
+    points: &[QPoint3],
+    centroid_idx: &[usize],
+    grid_range: u32,
+    k: usize,
+) -> Vec<Vec<usize>> {
+    centroid_idx
+        .iter()
+        .map(|&ci| {
+            let c = points[ci];
+            let mut grp = Vec::with_capacity(k);
+            for (i, p) in points.iter().enumerate() {
+                if p.l1(&c) <= grid_range {
+                    grp.push(i);
+                    if grp.len() == k {
+                        break;
+                    }
+                }
+            }
+            pad_group(grp, k, || {
+                points
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, p)| p.l1(&c))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+        })
+        .collect()
+}
+
+/// k nearest neighbors (L2) of each query point; result rows sorted by
+/// ascending distance. Used by point-feature-propagation upsampling.
+pub fn knn(points: &[Point3], queries: &[Point3], k: usize) -> Vec<Vec<usize>> {
+    assert!(k <= points.len());
+    queries
+        .iter()
+        .map(|q| {
+            let mut order: Vec<usize> = (0..points.len()).collect();
+            order.sort_by(|&a, &b| {
+                points[a]
+                    .l2_sq(q)
+                    .partial_cmp(&points[b].l2_sq(q))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            order.truncate(k);
+            order
+        })
+        .collect()
+}
+
+fn nearest_by(points: &[Point3], c: &Point3, d: impl Fn(&Point3, &Point3) -> f32) -> usize {
+    points
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| d(a, c).partial_cmp(&d(b, c)).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+fn pad_group(mut grp: Vec<usize>, k: usize, fallback: impl FnOnce() -> usize) -> Vec<usize> {
+    if grp.is_empty() {
+        grp.push(fallback());
+    }
+    let first = grp[0];
+    while grp.len() < k {
+        grp.push(first);
+    }
+    grp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::make_class_cloud;
+    use crate::pointcloud::PointCloud;
+    use crate::quant::{quantize_cloud, radius_to_grid};
+
+    fn cloud(n: usize, seed: u64) -> Vec<Point3> {
+        make_class_cloud(4, n, seed).points
+    }
+
+    #[test]
+    fn ball_query_respects_radius() {
+        let pts = cloud(500, 1);
+        let groups = ball_query(&pts, &[0, 10, 20], 0.4, 16);
+        for (gi, &ci) in groups.iter().zip(&[0usize, 10, 20]) {
+            assert_eq!(gi.len(), 16);
+            // Unless the fallback fired (all-padding), hits are in-radius.
+            let unique: std::collections::HashSet<_> = gi.iter().collect();
+            if unique.len() > 1 {
+                for &i in gi {
+                    assert!(pts[i].l2_sq(&pts[ci]).sqrt() <= 0.4 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_query_respects_l1_range() {
+        let pts = cloud(500, 2);
+        let groups = lattice_query(&pts, &[3, 7], 0.3, 8);
+        let lim = LATTICE_SCALE * 0.3;
+        for (gi, &ci) in groups.iter().zip(&[3usize, 7]) {
+            let unique: std::collections::HashSet<_> = gi.iter().collect();
+            if unique.len() > 1 {
+                for &i in gi {
+                    assert!(pts[i].l1(&pts[ci]) <= lim + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_covers_most_ball_hits() {
+        // The 1.6x lattice should recover nearly all exact ball neighbors —
+        // the accuracy-preservation argument behind Fig. 5(a).
+        let pts = cloud(2000, 3);
+        let centroids: Vec<usize> = (0..16).collect();
+        let ball = ball_query(&pts, &centroids, 0.3, 32);
+        let lat = lattice_query(&pts, &centroids, 0.3, 32);
+        let b: std::collections::HashSet<usize> = ball.iter().flatten().copied().collect();
+        let l: std::collections::HashSet<usize> = lat.iter().flatten().copied().collect();
+        let recall = b.intersection(&l).count() as f64 / b.len() as f64;
+        assert!(recall > 0.85, "lattice recall {recall:.3} too low");
+    }
+
+    #[test]
+    fn grid_lattice_matches_float_lattice() {
+        let pts = cloud(300, 4);
+        let q = quantize_cloud(&PointCloud::new(pts.clone()));
+        let r = 0.25f32;
+        let float_groups = lattice_query(&pts, &[5], r, 64);
+        let grid_groups = lattice_query_grid(&q, &[5], radius_to_grid(LATTICE_SCALE * r), 64);
+        // Quantization can flip borderline membership; demand >=90% overlap.
+        let a: std::collections::HashSet<_> = float_groups[0].iter().collect();
+        let b: std::collections::HashSet<_> = grid_groups[0].iter().collect();
+        let inter = a.intersection(&b).count() as f64;
+        assert!(inter / a.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn knn_rows_sorted_and_correct() {
+        let pts = cloud(100, 5);
+        let queries = vec![Point3::new(0.0, 0.0, 0.0), Point3::new(0.5, 0.5, 0.5)];
+        let nn = knn(&pts, &queries, 5);
+        for (row, q) in nn.iter().zip(&queries) {
+            let dists: Vec<f32> = row.iter().map(|&i| pts[i].l2_sq(q)).collect();
+            assert!(dists.windows(2).all(|w| w[0] <= w[1] + 1e-9));
+            let mut all: Vec<f32> = pts.iter().map(|p| p.l2_sq(q)).collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert!((dists[4] - all[4]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_radius_falls_back_to_nearest() {
+        let pts = vec![
+            Point3::new(0.0, 0.0, 0.0),
+            Point3::new(1.0, 1.0, 1.0),
+            Point3::new(-1.0, -1.0, -1.0),
+        ];
+        // Radius so small nothing but the centroid itself matches; centroid 1
+        // still gets a full (padded) group.
+        let g = ball_query(&pts, &[1], 1e-6, 4);
+        assert_eq!(g[0].len(), 4);
+        assert!(g[0].iter().all(|&i| i == g[0][0]));
+    }
+}

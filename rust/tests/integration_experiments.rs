@@ -1,0 +1,97 @@
+//! Integration tests over the experiment harness: every table/figure
+//! regenerates without error and its headline numbers stay in the
+//! paper-shape bands asserted in DESIGN.md.
+
+use pc2im::accel::{Accelerator, Baseline1, Baseline2, GpuModel, Pc2imModel};
+use pc2im::config::HardwareConfig;
+use pc2im::experiments;
+use pc2im::network::pointnet2::NetworkDef;
+use pc2im::pointcloud::synthetic::DatasetScale;
+
+#[test]
+fn all_analytic_experiments_run() {
+    for id in ["table1", "table2", "fig5a", "fig12b", "fig12c", "fig13a", "fig13b", "fig13c", "claims"] {
+        experiments::run(id, "artifacts").unwrap_or_else(|e| panic!("{id}: {e:?}"));
+    }
+}
+
+#[test]
+fn fig12b_bands() {
+    let e = experiments::fig12b::preprocessing_energy();
+    let (_, [b1, b2, pc]) = e[2]; // 16k
+    let cut_b1 = 1.0 - pc / b1;
+    let cut_b2 = 1.0 - pc / b2;
+    assert!((0.93..1.0).contains(&cut_b1), "vs B1 {cut_b1:.3} (paper 0.979)");
+    assert!((0.55..0.9).contains(&cut_b2), "vs B2 {cut_b2:.3} (paper 0.734)");
+}
+
+#[test]
+fn fig13a_bands() {
+    let l = experiments::fig13a::latencies();
+    let (_, [b1, b2, pc]) = l[2];
+    assert!((3.0..12.0).contains(&(b1 / pc)), "vs B1 {:.1} (paper ~6x)", b1 / pc);
+    assert!((1.2..3.0).contains(&(b2 / pc)), "vs B2 {:.1} (paper ~1.5x)", b2 / pc);
+}
+
+#[test]
+fn fig13c_bands() {
+    let (gl, pl, ge, pe) = experiments::fig13c::comparison();
+    assert!((2.0..6.0).contains(&(gl / pl)), "speedup {:.1} (paper 3.5x)", gl / pl);
+    assert!((500.0..4000.0).contains(&(ge / pe)), "energy {:.0} (paper 1518.9x)", ge / pe);
+}
+
+#[test]
+fn fig12c_anchor_points() {
+    let p8 = experiments::fig12c::sweep_point(8);
+    let sc_bs_8 = p8[2].1.fom2 / p8[0].1.fom2;
+    assert!((4.2..6.2).contains(&sc_bs_8), "SC/BS @8 {sc_bs_8:.2} (paper 5.2)");
+    let p256 = experiments::fig12c::sweep_point(256);
+    let sc_bs_hi = p256[2].1.fom2 / p256[0].1.fom2;
+    assert!(sc_bs_hi > 8.0, "SC/BS @256 {sc_bs_hi:.2} (paper up to 9.9)");
+    let sc_bt_8 = p8[2].1.fom2 / p8[1].1.fom2;
+    assert!((1.6..2.4).contains(&sc_bt_8), "SC/BT @8 {sc_bt_8:.2} (paper 2.0)");
+}
+
+#[test]
+fn ordering_holds_on_every_scale() {
+    let hw = HardwareConfig::default();
+    let c = hw.energy();
+    for scale in DatasetScale::ALL {
+        let net = NetworkDef::for_scale(scale);
+        let b1 = Baseline1.run(&net, &hw);
+        let b2 = Baseline2.run(&net, &hw);
+        let pc = Pc2imModel.run(&net, &hw);
+        assert!(pc.latency_s(&hw) <= b2.latency_s(&hw), "{scale:?} latency order");
+        assert!(b2.latency_s(&hw) <= b1.latency_s(&hw), "{scale:?} latency order");
+        assert!(pc.energy_pj(&c) < b2.energy_pj(&c), "{scale:?} energy order");
+        // B1 == B2 on the small set: a 1k cloud fits in one tile, so the
+        // tiled design degenerates to the global one (Fig. 12(b) row 1).
+        assert!(b2.energy_pj(&c) <= b1.energy_pj(&c), "{scale:?} energy order");
+    }
+}
+
+#[test]
+fn gpu_model_self_consistent() {
+    let gpu = GpuModel::default();
+    let hw = HardwareConfig::default();
+    for scale in DatasetScale::ALL {
+        let net = NetworkDef::for_scale(scale);
+        let direct = gpu.latency_s(&net);
+        let via_runcost = gpu.run(&net, &hw).latency_s(&hw);
+        assert!(
+            (direct - via_runcost).abs() / direct < 0.01,
+            "{scale:?}: {direct} vs {via_runcost}"
+        );
+    }
+}
+
+#[test]
+fn lattice_recall_curve_monotone() {
+    let mut last = 0.0;
+    for scale in [1.0f32, 1.3, 1.6, 2.0] {
+        let r = experiments::fig5a::lattice_recall(scale, 7);
+        assert!(r >= last - 0.02, "recall dipped at {scale}");
+        last = r;
+    }
+    assert!(last > 0.98);
+}

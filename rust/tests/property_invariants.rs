@@ -1,0 +1,255 @@
+//! Randomized property tests over the coordinator-level invariants
+//! (hand-rolled generators — proptest is not in the offline crate set;
+//! every property runs against many seeded random cases and shrinking is
+//! replaced by printing the failing seed).
+
+use pc2im::cim::apd_cim::{ApdCim, ApdCimConfig};
+use pc2im::cim::bitops;
+use pc2im::cim::bs_cim::BsCim;
+use pc2im::cim::bt_cim::BtCim;
+use pc2im::cim::max_cam::{CamArray, CamConfig};
+use pc2im::cim::sc_cim::{ScCim, ScCimConfig};
+use pc2im::pointcloud::synthetic::{make_class_cloud, make_street_cloud};
+use pc2im::pointcloud::{Point3, PointCloud};
+use pc2im::quant::{self, QPoint3, TD_BITS};
+use pc2im::rng::Rng64;
+use pc2im::sampling::{
+    ball_query, fps_l1, fps_l1_grid, fps_l2, knn, lattice_query, msp_partition,
+};
+
+const CASES: u64 = 40;
+
+fn rand_cloud(rng: &mut Rng64, n: usize) -> Vec<Point3> {
+    (0..n)
+        .map(|_| Point3::new(rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0)))
+        .collect()
+}
+
+// ---------- gate-level arithmetic ----------
+
+#[test]
+fn prop_ripple_add_equals_native() {
+    let mut rng = Rng64::new(100);
+    for _ in 0..10_000 {
+        let a = rng.next_u64() as u32 & 0xFFFF;
+        let b = rng.next_u64() as u32 & 0xFFFF;
+        assert_eq!(bitops::ripple_add(a, b, false, 16), a + b);
+    }
+}
+
+#[test]
+fn prop_abs_diff_equals_native() {
+    let mut rng = Rng64::new(101);
+    for _ in 0..10_000 {
+        let a = rng.next_u64() as u16;
+        let b = rng.next_u64() as u16;
+        assert_eq!(bitops::abs_diff_16(a, b), a.abs_diff(b), "a={a} b={b}");
+    }
+}
+
+#[test]
+fn prop_l1_19b_equals_native() {
+    let mut rng = Rng64::new(102);
+    for _ in 0..5_000 {
+        let a = (rng.next_u64() as u16, rng.next_u64() as u16, rng.next_u64() as u16);
+        let b = (rng.next_u64() as u16, rng.next_u64() as u16, rng.next_u64() as u16);
+        let want =
+            a.0.abs_diff(b.0) as u32 + a.1.abs_diff(b.1) as u32 + a.2.abs_diff(b.2) as u32;
+        assert_eq!(bitops::l1_distance_19b(a, b), want);
+    }
+}
+
+// ---------- MAC engines vs native dot product ----------
+
+#[test]
+fn prop_mac_engines_bit_exact() {
+    let mut rng = Rng64::new(103);
+    for case in 0..CASES {
+        let len = rng.range_usize(1, 300);
+        let x: Vec<u16> = (0..len).map(|_| rng.next_u64() as u16).collect();
+        let w: Vec<i16> = (0..len).map(|_| rng.next_u64() as i16).collect();
+        let want: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert_eq!(ScCim::new(ScCimConfig::default()).dot(&x, &w), want, "SC case {case}");
+        assert_eq!(BsCim::new().dot(&x, &w), want, "BS case {case}");
+        assert_eq!(BtCim::new().dot(&x, &w), want, "BT case {case}");
+    }
+}
+
+// ---------- CAM invariants ----------
+
+#[test]
+fn prop_cam_tracks_running_min_and_max() {
+    let mut rng = Rng64::new(104);
+    for case in 0..CASES {
+        let n = rng.range_usize(2, 512);
+        let init: Vec<u32> = (0..n).map(|_| rng.below(1 << TD_BITS) as u32).collect();
+        let mut cam = CamArray::new(CamConfig::default());
+        cam.load_initial(&init);
+        let mut soft = init.clone();
+        for _ in 0..rng.range_usize(1, 8) {
+            for j in 0..n {
+                let d = rng.below(1 << TD_BITS) as u32;
+                cam.update_min(j, d);
+                soft[j] = soft[j].min(d);
+            }
+        }
+        for j in 0..n {
+            assert_eq!(cam.live_td(j), soft[j], "case {case} td {j}");
+        }
+        let (v, i) = cam.bit_cam_max();
+        let want = *soft.iter().max().unwrap();
+        assert_eq!(v, want, "case {case}");
+        assert_eq!(soft[i], want, "case {case}");
+    }
+}
+
+// ---------- FPS invariants ----------
+
+#[test]
+fn prop_fps_unique_and_spacing_monotone() {
+    let mut rng = Rng64::new(105);
+    for case in 0..CASES {
+        let n = rng.range_usize(8, 300);
+        let m = rng.range_usize(2, n.min(64));
+        let pts = rand_cloud(&mut rng, n);
+        let (idx, _) = fps_l2(&pts, m, 0);
+        let mut uniq = idx.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), m, "case {case}: duplicate samples");
+        // selected min-distances are non-increasing
+        let mut gaps = Vec::new();
+        for i in 1..m {
+            let g = (0..i)
+                .map(|j| pts[idx[i]].l2_sq(&pts[idx[j]]))
+                .fold(f32::MAX, f32::min);
+            gaps.push(g);
+        }
+        for w in gaps.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "case {case}: FPS gap increased");
+        }
+    }
+}
+
+#[test]
+fn prop_grid_fps_matches_software_l1_fps() {
+    // The CIM datapath (integer grid) must agree with float L1 FPS modulo
+    // quantization ties; verify the sampled sets overlap strongly.
+    let mut rng = Rng64::new(106);
+    for case in 0..10 {
+        let cloud = make_class_cloud((case % 8) as usize, 256, 200 + case);
+        let q = quant::quantize_cloud(&cloud);
+        let (a, _) = fps_l1(&cloud.points, 64, 0);
+        let (b, _) = fps_l1_grid(&q, 64, 0);
+        let sa: std::collections::HashSet<_> = a.into_iter().collect();
+        let sb: std::collections::HashSet<_> = b.into_iter().collect();
+        let overlap = sa.intersection(&sb).count();
+        assert!(overlap >= 58, "case {case}: overlap {overlap}/64");
+    }
+}
+
+// ---------- query invariants ----------
+
+#[test]
+fn prop_queries_respect_ranges_and_shapes() {
+    let mut rng = Rng64::new(107);
+    for case in 0..CASES {
+        let n = rng.range_usize(32, 400);
+        let pts = rand_cloud(&mut rng, n);
+        let m = rng.range_usize(1, 16);
+        let k = rng.range_usize(1, 24);
+        let r = rng.range_f32(0.05, 0.8);
+        let centroids: Vec<usize> = (0..m).map(|_| rng.range_usize(0, n)).collect();
+        for (grp, &ci) in ball_query(&pts, &centroids, r, k).iter().zip(&centroids) {
+            assert_eq!(grp.len(), k, "case {case}");
+            let uniq: std::collections::HashSet<_> = grp.iter().collect();
+            if uniq.len() > 1 {
+                for &j in grp {
+                    assert!(pts[j].l2_sq(&pts[ci]).sqrt() <= r + 1e-5, "case {case}");
+                }
+            }
+        }
+        for (grp, &ci) in lattice_query(&pts, &centroids, r, k).iter().zip(&centroids) {
+            let uniq: std::collections::HashSet<_> = grp.iter().collect();
+            if uniq.len() > 1 {
+                for &j in grp {
+                    assert!(pts[j].l1(&pts[ci]) <= 1.6 * r + 1e-5, "case {case}");
+                }
+            }
+        }
+        let queries = rand_cloud(&mut rng, 4);
+        let kk = k.min(n);
+        for (row, q) in knn(&pts, &queries, kk).iter().zip(&queries) {
+            let d: Vec<f32> = row.iter().map(|&j| pts[j].l2_sq(q)).collect();
+            assert!(d.windows(2).all(|w| w[0] <= w[1] + 1e-9), "case {case}: unsorted knn");
+        }
+    }
+}
+
+// ---------- MSP invariants ----------
+
+#[test]
+fn prop_msp_exact_cover_balanced() {
+    let mut rng = Rng64::new(108);
+    for case in 0..CASES {
+        let n = rng.range_usize(10, 3000);
+        let tile = [64usize, 128, 256, 512][rng.range_usize(0, 4)];
+        let pc = PointCloud::new(rand_cloud(&mut rng, n));
+        let tiles = msp_partition(&pc, tile);
+        let mut all: Vec<usize> = tiles.iter().flat_map(|t| t.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "case {case}: not a cover");
+        assert!(tiles.iter().all(|t| t.len() <= tile), "case {case}: oversize tile");
+        if n > tile {
+            // leaves may sit at adjacent split depths => factor-2 band
+            let sizes: Vec<usize> = tiles.iter().map(|t| t.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(*hi <= 2 * lo + 1, "case {case}: unbalanced {lo}..{hi}");
+        }
+    }
+}
+
+// ---------- quantization invariants ----------
+
+#[test]
+fn prop_quantization_error_half_lsb() {
+    let mut rng = Rng64::new(109);
+    let lsb = 2.0 / 65535.0;
+    for _ in 0..10_000 {
+        let v = rng.range_f32(-1.0, 1.0);
+        let back = quant::dequantize_coord(quant::quantize_coord(v));
+        assert!((back - v).abs() <= lsb / 2.0 + 1e-7, "{v} -> {back}");
+    }
+}
+
+#[test]
+fn prop_grid_l1_triangle_inequality() {
+    let mut rng = Rng64::new(110);
+    for _ in 0..2_000 {
+        let p = |rng: &mut Rng64| QPoint3 {
+            x: rng.next_u64() as u16,
+            y: rng.next_u64() as u16,
+            z: rng.next_u64() as u16,
+        };
+        let (a, b, c) = (p(&mut rng), p(&mut rng), p(&mut rng));
+        assert!(a.l1(&c) <= a.l1(&b) + b.l1(&c));
+        assert_eq!(a.l1(&b), b.l1(&a));
+    }
+}
+
+// ---------- APD-CIM scan vs quantized truth ----------
+
+#[test]
+fn prop_apd_scan_equals_grid_l1() {
+    for seed in 0..8u64 {
+        let cloud = make_street_cloud(1024, seed);
+        let q = quant::quantize_cloud(&cloud);
+        let mut apd = ApdCim::new(ApdCimConfig::default());
+        apd.load_tile(&q);
+        let r = seed as usize * 100 % q.len();
+        let d = apd.scan_distances(r);
+        for (j, dj) in d.iter().enumerate() {
+            assert_eq!(*dj, q[j].l1(&q[r]), "seed {seed} point {j}");
+        }
+    }
+}
