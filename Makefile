@@ -1,0 +1,27 @@
+# Convenience targets; everything also works as plain cargo/pytest calls.
+
+.PHONY: build test artifacts bench-smoke bench python-test baseline
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Train (cached) -> lower HLO text -> export weights/testset/meta.json.
+# Requires JAX; the Rust side works without this (reference executor).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+bench:
+	cargo bench --benches
+
+bench-smoke:
+	PC2IM_BENCH_SMOKE=1 cargo bench --benches
+
+python-test:
+	python3 -m pytest python/tests -q
+
+# Regenerate the committed deterministic bench baseline.
+baseline:
+	python3 scripts/gen_bench_baseline.py

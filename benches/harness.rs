@@ -1,12 +1,34 @@
 //! Criterion-lite timing harness shared by all bench targets (criterion is
 //! not in the offline vendored crate set). Each bench is a `harness =
 //! false` binary that includes this file via `#[path]`.
+//!
+//! Smoke mode — used by CI so bench bit-rot fails the build instead of
+//! being discovered at measurement time — clamps every bench to a single
+//! iteration. Enable it with the `PC2IM_BENCH_SMOKE` env var or a
+//! `--smoke` argument. Set `PC2IM_BENCH_JSON=<path>` to append one JSON
+//! line per bench (name/iters/min/mean/max seconds) for trend tracking;
+//! see BENCH_seed.json for the committed deterministic baseline.
 
+use std::io::Write as _;
 use std::time::Instant;
 
-/// Time `f` with warmup; prints min/mean/max over `iters` runs and returns
-/// the mean seconds.
+/// True when the smoke lane asked for minimal iteration counts.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("PC2IM_BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke")
+}
+
+fn effective_iters(requested: usize) -> usize {
+    if smoke_mode() {
+        1
+    } else {
+        requested.max(1)
+    }
+}
+
+/// Time `f` with warmup; prints min/mean/max over the effective iteration
+/// count and returns the mean seconds.
 pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
+    let iters = effective_iters(iters);
     // warmup
     std::hint::black_box(f());
     let mut samples = Vec::with_capacity(iters);
@@ -24,6 +46,7 @@ pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
         fmt(mean),
         fmt(max)
     );
+    record_json(name, iters, min, mean, max);
     mean
 }
 
@@ -41,5 +64,25 @@ fn fmt(s: f64) -> String {
         format!("{:.2} ms", s * 1e3)
     } else {
         format!("{:.2} s", s)
+    }
+}
+
+/// Append a JSON line for this result when PC2IM_BENCH_JSON is set.
+fn record_json(name: &str, iters: usize, min: f64, mean: f64, max: f64) {
+    let Some(path) = std::env::var_os("PC2IM_BENCH_JSON") else {
+        return;
+    };
+    let escaped: String = name
+        .chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            _ => vec![c],
+        })
+        .collect();
+    let line = format!(
+        "{{\"name\": \"{escaped}\", \"iters\": {iters}, \"min_s\": {min:e}, \"mean_s\": {mean:e}, \"max_s\": {max:e}}}\n"
+    );
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = f.write_all(line.as_bytes());
     }
 }

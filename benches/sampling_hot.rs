@@ -1,8 +1,9 @@
 //! Hot-path benches for the L3 coordinator's software substrate: FPS,
 //! MSP, queries and the bit-exact engine inner loops — the profile targets
-//! of EXPERIMENTS.md §Perf.
+//! of DESIGN.md §Performance notes.
 //!
-//! Run with: `cargo bench --bench sampling_hot`
+//! Run with: `cargo bench --bench sampling_hot` (add `--smoke` or set
+//! `PC2IM_BENCH_SMOKE=1` for the single-iteration CI lane).
 
 #[path = "harness.rs"]
 mod harness;

@@ -1,4 +1,4 @@
-//! **End-to-end validation driver** (the EXPERIMENTS.md §E2E run).
+//! **End-to-end validation driver** (the DESIGN.md §End-to-end run).
 //!
 //! Loads the build-time-trained PointNet2(c) artifacts, runs the *full*
 //! PC2IM system — median-ready quantization, APD-CIM approximate FPS,

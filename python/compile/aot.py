@@ -8,14 +8,16 @@ parser reassigns ids and round-trips cleanly. See /opt/xla-example/.
 Artifacts produced (all consumed by the Rust runtime):
 
   params.npz        cached trained parameters (build cache only)
-  train_log.json    training loss curve (recorded in EXPERIMENTS.md)
+  train_log.json    training loss curve (recorded in DESIGN.md)
   sa1.hlo.txt       g1[S1*K1 flattened groups]  -> f1[S1, 128]
   sa2.hlo.txt       g2                          -> f2[S2, 256]
   head.hlo.txt      g3[S2, 259]                 -> logits[8]
   sa1_q16 / sa2_q16 / head_q16 .hlo.txt   16-bit PTQ weight variants
   l1_distance.hlo.txt   APD-CIM numeric twin (runtime self-test)
   testset.bin       held-out synthetic clouds + labels (Rust reads)
-  meta.json         shapes/dims contract for the Rust side
+  meta.json         shapes/dims contract for the Rust side, plus the fp32
+                    weights consumed by the Rust reference executor
+                    (rust/src/runtime/reference.rs)
 
 Python runs ONCE at build time; the Rust binary is then self-contained.
 """
@@ -127,6 +129,25 @@ def export_testset(out_dir: str) -> dict:
             "n_points": model.N_POINTS, "num_classes": data.NUM_CLASSES}
 
 
+def export_weights(params: dict) -> dict:
+    """fp32 weights for the Rust reference executor (DESIGN.md §Executors).
+
+    Layout: {"mlp1": [{"w": [[...]], "b": [...]}, ...], ...} with row-major
+    w[cin][cout]. The Rust side derives the PTQ16 variants itself with the
+    same symmetric per-tensor rule as ``quantize_params``.
+    """
+    return {
+        name: [
+            {
+                "w": np.asarray(w, dtype=np.float32).tolist(),
+                "b": np.asarray(b, dtype=np.float32).tolist(),
+            }
+            for (w, b) in layers
+        ]
+        for name, layers in params.items()
+    }
+
+
 def ensure_params(out_dir: str):
     path = os.path.join(out_dir, "params.npz")
     if os.path.exists(path):
@@ -162,6 +183,7 @@ def main() -> None:
         lower_model_artifacts(qparams, args.out_dir, suffix="_q16")
     )
     meta["artifacts"]["l1_distance"] = lower_l1_distance(args.out_dir)
+    meta["weights"] = export_weights(params)
     meta["testset"] = export_testset(args.out_dir)
     with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)

@@ -3,7 +3,7 @@
 Runs once inside ``make artifacts`` (cached via artifacts/params.npz). Uses
 hand-rolled Adam to avoid extra dependencies; training-time sampling is
 uniform-random (standard PointNet++ practice), evaluation uses exact FPS.
-The loss curve is printed and saved so EXPERIMENTS.md can record it.
+The loss curve is printed and saved so DESIGN.md can record it.
 """
 
 from __future__ import annotations

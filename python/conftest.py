@@ -1,0 +1,11 @@
+"""Pytest path setup: make the `compile` package and the shared test
+helpers importable no matter where pytest is invoked from (repo root in
+CI: `python -m pytest python/tests -q`)."""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for p in (_HERE, os.path.join(_HERE, "tests")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,13 +1,17 @@
 """Pallas kernels vs pure-jnp oracles — the CORE build-time correctness
-signal, including hypothesis sweeps over shapes/dtypes/values."""
+signal, including hypothesis sweeps over shapes/dtypes/values.
 
-import jax
-import jax.numpy as jnp
+Skips as a whole when JAX is absent (offline CI lane); the hypothesis
+sweeps additionally skip when hypothesis is not installed."""
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from compile.kernels import l1_distance, maxpool, mlp, ref
+jax = pytest.importorskip("jax", reason="kernel tests need JAX")
+import jax.numpy as jnp  # noqa: E402
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+from compile.kernels import l1_distance, maxpool, mlp, ref  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

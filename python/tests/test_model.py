@@ -1,11 +1,14 @@
-"""PointNet2(c) model graph tests: shapes, pallas-vs-ref parity, grads."""
+"""PointNet2(c) model graph tests: shapes, pallas-vs-ref parity, grads.
 
-import jax
-import jax.numpy as jnp
+Skips as a whole when JAX is absent (offline CI lane)."""
+
 import numpy as np
 import pytest
 
-from compile import data, model, sampling
+jax = pytest.importorskip("jax", reason="model tests need JAX")
+import jax.numpy as jnp  # noqa: E402
+
+from compile import data, model, sampling  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

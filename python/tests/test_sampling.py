@@ -5,8 +5,8 @@ These pin down the algorithmic contracts that the Rust implementations in
 """
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401  (kept for parametrize-style extensions)
+from hypothesis_compat import given, settings, st
 
 from compile import sampling
 

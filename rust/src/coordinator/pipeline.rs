@@ -2,12 +2,15 @@
 //!
 //!   quantize → (MSP if needed) → APD-CIM FPS + Ping-Pong-MAX CAM →
 //!   lattice query → gather/group → SC-CIM-scheduled MLPs executed
-//!   numerically via PJRT → logits.
+//!   numerically via the configured [`crate::runtime::Executor`] backend
+//!   (reference interpreter by default, PJRT with `--features pjrt`) →
+//!   logits.
 //!
 //! Preprocessing runs through the *bit-exact engine models* (so cycles and
 //! the event ledger are event-accurate), feature computing runs through
-//! the real AOT-compiled HLO (so logits are real numbers), and the SC-CIM
-//! cost model prices the same matmuls the PJRT path executes.
+//! real numerics (trained weights when artifacts exist, deterministic
+//! synthetic ones otherwise), and the SC-CIM cost model prices the same
+//! matmuls the executor runs.
 //!
 //! The `exact_sampling` ablation replaces the whole approximate
 //! preprocessing chain with float L2 FPS + ball query (Fig. 12(a)).
@@ -18,7 +21,6 @@ use crate::cim::sc_cim::{ScCim, ScCimConfig};
 use crate::cim::sorter::TopKSorter;
 use crate::config::{HardwareConfig, PipelineConfig};
 use crate::coordinator::stats::CloudStats;
-use crate::network::pointnet2::NetworkDef;
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
@@ -63,6 +65,11 @@ impl Pipeline {
 
     pub fn meta(&self) -> &crate::runtime::Meta {
         &self.rt.meta
+    }
+
+    /// Which numeric backend is executing (e.g. "reference" or "pjrt").
+    pub fn backend(&self) -> &'static str {
+        self.rt.backend()
     }
 
     fn artifact(&self, base: &str) -> String {

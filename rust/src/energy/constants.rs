@@ -15,7 +15,7 @@
 //!     (match-line precharge + 1-2 cell discharges);
 //!   - register traffic is ~0.1x SRAM.
 //!
-//! These are *constants of the model*, not measurements; EXPERIMENTS.md
+//! These are *constants of the model*, not measurements; DESIGN.md
 //! reports every figure as shape-vs-paper, not absolute joules.
 
 /// Energy constants in picojoules. One instance = one technology point.

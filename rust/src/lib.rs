@@ -7,8 +7,9 @@
 //! - **Layer 3 (this crate)** — the request-path coordinator: median spatial
 //!   partitioning, the APD-CIM / Ping-Pong-MAX-CAM / SC-CIM bit-exact
 //!   hardware models with cycle+energy accounting, the baseline accelerator
-//!   simulators, and the PJRT runtime that executes the AOT-compiled
-//!   PointNet2 feature graphs.
+//!   simulators, and the pluggable execution runtime for the AOT-compiled
+//!   PointNet2 feature graphs (pure-Rust reference executor by default;
+//!   PJRT behind the `pjrt` cargo feature).
 //! - **Layer 2 (python/compile/model.py)** — the PointNet2(c) JAX graphs,
 //!   trained at build time and lowered to HLO text artifacts.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the MLP and

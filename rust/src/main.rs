@@ -166,6 +166,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     let cfg = pipeline_config(args);
     let pipe = Pipeline::new(cfg)?;
     let hw = pipe.hardware();
+    println!("executor backend: {}", pipe.backend());
     println!("hardware: {hw:#?}");
     println!("model: {:#?}", pipe.meta().model);
     let mut names: Vec<&String> = pipe.meta().artifacts.keys().collect();

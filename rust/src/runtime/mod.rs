@@ -1,14 +1,34 @@
-//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
-//! them on the CPU PJRT client — the numeric half of the request path.
+//! Execution runtime for the AOT-compiled PointNet2(c) feature graphs —
+//! the numeric half of the request path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Executables are compiled once and cached;
-//! Python never runs here.
+//! Numerics sit behind the [`Executor`] trait with two interchangeable
+//! backends:
+//!
+//! - [`reference::ReferenceExecutor`] (**default**) — a pure-Rust f32
+//!   interpreter (matmul + bias + ReLU + max-pool) over the weights
+//!   exported in `meta.json`, mirroring `python/compile/kernels/ref.py`.
+//!   Fully hermetic: with no artifacts directory at all, the model
+//!   metadata falls back to the canonical PointNet2(c) geometry and
+//!   deterministic synthetic weights, so `cargo test -q` passes on a bare
+//!   toolchain with no HLO artifacts and no XLA runtime present.
+//! - [`pjrt::PjrtExecutor`] (`--features pjrt`) — loads the HLO text
+//!   artifacts produced by `python/compile/aot.py` and executes them on
+//!   the CPU PJRT client (`PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`, compiled
+//!   executables cached). `vendor/xla` is an offline stub; link the
+//!   published `xla` crate to run this path for real (DESIGN.md
+//!   §Executors).
+//!
+//! Python never runs at inference time: `make artifacts` trains + lowers
+//! once; the Rust binary is self-contained afterwards.
 
 pub mod json;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
 use anyhow::{anyhow, Context, Result};
+use reference::ModelWeights;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -31,14 +51,45 @@ pub struct ModelMeta {
     pub k2: usize,
     pub r2: f32,
     pub num_classes: usize,
+    /// MLP channel trajectories (including input channels), mirroring
+    /// `python/compile/model.py::MLP1..HEAD`.
+    pub mlp1: Vec<usize>,
+    pub mlp2: Vec<usize>,
+    pub mlp3: Vec<usize>,
+    pub head: Vec<usize>,
 }
 
-/// Parsed meta.json.
+impl ModelMeta {
+    /// The canonical trained PointNet2(c) geometry — used when no
+    /// meta.json is present and as the fallback for older meta.json files
+    /// that predate the mlp-dims export.
+    pub fn canonical() -> Self {
+        Self {
+            n_points: 1024,
+            s1: 256,
+            k1: 32,
+            r1: 0.2,
+            s2: 64,
+            k2: 16,
+            r2: 0.4,
+            num_classes: 8,
+            mlp1: vec![3, 64, 64, 128],
+            mlp2: vec![131, 128, 128, 256],
+            mlp3: vec![259, 256, 512],
+            head: vec![512, 256, 128, 8],
+        }
+    }
+}
+
+/// Parsed meta.json (or its synthetic stand-in when absent).
 #[derive(Debug, Clone)]
 pub struct Meta {
     pub model: ModelMeta,
     pub artifacts: HashMap<String, ArtifactMeta>,
     pub testset_file: String,
+    /// fp32 weights for the reference executor, when meta.json carries a
+    /// "weights" section (exported by `python/compile/aot.py`).
+    pub weights: Option<ModelWeights>,
 }
 
 impl Meta {
@@ -53,6 +104,13 @@ impl Meta {
         let fs = |k: &str| -> Result<f32> {
             m.get(k).and_then(|x| x.as_f64()).map(|f| f as f32).ok_or_else(|| anyhow!("model.{k} missing"))
         };
+        let canonical = ModelMeta::canonical();
+        let dims = |k: &str, fallback: &[usize]| -> Vec<usize> {
+            m.get(k)
+                .and_then(|x| x.as_arr())
+                .map(|arr| arr.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_else(|| fallback.to_vec())
+        };
         let model = ModelMeta {
             n_points: us("n_points")?,
             s1: us("s1")?,
@@ -62,13 +120,17 @@ impl Meta {
             k2: us("k2")?,
             r2: fs("r2")?,
             num_classes: us("num_classes")?,
+            mlp1: dims("mlp1", &canonical.mlp1),
+            mlp2: dims("mlp2", &canonical.mlp2),
+            mlp3: dims("mlp3", &canonical.mlp3),
+            head: dims("head", &canonical.head),
         };
         let mut artifacts = HashMap::new();
         if let Some(json::Value::Obj(arts)) = v.get("artifacts") {
             for (name, a) in arts {
                 let file = match a.get("file").and_then(|f| f.as_str()) {
                     Some(f) => f.to_string(),
-                    None => continue, // e.g. the l1_distance entry has no shapes
+                    None => continue,
                 };
                 let shape = |k: &str| -> Vec<usize> {
                     a.get(k)
@@ -92,49 +154,116 @@ impl Meta {
             .and_then(|f| f.as_str())
             .unwrap_or("testset.bin")
             .to_string();
-        Ok(Self { model, artifacts, testset_file })
+        let weights = match v.get("weights") {
+            Some(w) => Some(reference::parse_weights(w).context("meta.json 'weights' section")?),
+            None => None,
+        };
+        Ok(Self { model, artifacts, testset_file, weights })
+    }
+
+    /// Hermetic stand-in used when no artifacts directory exists: the
+    /// canonical model geometry with the standard artifact inventory. The
+    /// reference executor then supplies deterministic synthetic weights.
+    pub fn synthetic() -> Self {
+        let model = ModelMeta::canonical();
+        let mut artifacts = HashMap::new();
+        let specs: [(&str, Vec<usize>, Vec<usize>); 3] = [
+            ("sa1", vec![model.s1, model.k1, model.mlp1[0]], vec![model.s1, *model.mlp1.last().unwrap()]),
+            ("sa2", vec![model.s2, model.k2, model.mlp2[0]], vec![model.s2, *model.mlp2.last().unwrap()]),
+            ("head", vec![model.s2, model.mlp3[0]], vec![model.num_classes]),
+        ];
+        for (base, input_shape, output_shape) in specs {
+            for suffix in ["", "_q16"] {
+                artifacts.insert(
+                    format!("{base}{suffix}"),
+                    ArtifactMeta {
+                        file: format!("{base}{suffix}.hlo.txt"),
+                        input_shape: input_shape.clone(),
+                        output_shape: output_shape.clone(),
+                    },
+                );
+            }
+        }
+        Self { model, artifacts, testset_file: "testset.bin".to_string(), weights: None }
     }
 }
 
-/// The PJRT execution engine with a compiled-executable cache.
+/// A numeric backend that can execute the lowered feature graphs.
+///
+/// `load` prepares one artifact (compiles it, on PJRT); `execute` runs a
+/// single-input/single-output artifact on flattened row-major f32 data.
+/// Implementations cache prepared artifacts; `cached()` reports how many.
+pub trait Executor {
+    /// Human-readable backend name (for `pc2im info` and diagnostics).
+    fn backend(&self) -> &'static str;
+    fn load(&mut self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()>;
+    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>>;
+    fn cached(&self) -> usize;
+}
+
+/// The execution engine: artifact metadata plus a pluggable [`Executor`].
 pub struct Runtime {
-    client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     pub meta: Meta,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    exec: Box<dyn Executor>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and parse the artifact metadata.
+    /// Open an artifacts directory (or fall back to the hermetic synthetic
+    /// model when it has no meta.json) and pick the best executor.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
-        let meta = Meta::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, artifacts_dir, meta, execs: HashMap::new() })
+        let meta = if artifacts_dir.join("meta.json").exists() {
+            Meta::load(&artifacts_dir)?
+        } else {
+            Meta::synthetic()
+        };
+        let exec = Self::pick_executor(&meta, &artifacts_dir)?;
+        // Make the hermetic fallback loud: accuracy numbers are meaningless
+        // on synthetic weights, and a mistyped --artifacts path should not
+        // masquerade as a trained run.
+        if exec.backend() == "reference" && meta.weights.is_none() {
+            eprintln!(
+                "note: no trained weights under {artifacts_dir:?}; reference executor is using \
+                 deterministic synthetic weights (run `make artifacts` for trained ones)"
+            );
+        }
+        Ok(Self { artifacts_dir, meta, exec })
     }
 
-    /// Compile (and cache) the named artifact.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.execs.contains_key(name) {
-            return Ok(());
+    #[cfg(feature = "pjrt")]
+    fn pick_executor(meta: &Meta, dir: &Path) -> Result<Box<dyn Executor>> {
+        // Prefer PJRT when the HLO artifacts are actually on disk; fall
+        // back to the reference interpreter otherwise (e.g. the vendored
+        // xla stub, or a checkout without `make artifacts`).
+        let have_hlo = meta.artifacts.values().any(|a| dir.join(&a.file).exists());
+        if have_hlo {
+            match pjrt::PjrtExecutor::new() {
+                Ok(exec) => return Ok(Box::new(exec)),
+                Err(e) => eprintln!("pjrt backend unavailable ({e}); using the reference executor"),
+            }
         }
+        Ok(Box::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pick_executor(meta: &Meta, _dir: &Path) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
+    }
+
+    /// Which backend ended up executing (e.g. "reference" or "pjrt").
+    pub fn backend(&self) -> &'static str {
+        self.exec.backend()
+    }
+
+    /// Prepare (and cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
         let meta = self
             .meta
             .artifacts
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
-        let path = self.artifacts_dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.execs.insert(name.to_string(), exe);
-        Ok(())
+        self.exec.load(name, meta, &self.artifacts_dir)
     }
 
     /// Execute a single-input/single-output artifact: `data` is the
@@ -150,24 +279,12 @@ impl Runtime {
             data.len(),
             meta.input_shape
         );
-        let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let exe = &self.execs[name];
-        let result = exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True => 1-tuple output.
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        self.exec.execute(name, meta, data)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of prepared executables currently cached.
     pub fn cached(&self) -> usize {
-        self.execs.len()
+        self.exec.cached()
     }
 
     pub fn artifacts_dir(&self) -> &Path {
@@ -179,27 +296,31 @@ impl Runtime {
 mod tests {
     use super::*;
 
+    /// A directory that must not exist: exercises the hermetic fallback.
+    fn no_artifacts() -> PathBuf {
+        std::env::temp_dir().join("pc2im-no-such-artifacts-dir")
+    }
+
     fn artifacts() -> Option<PathBuf> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         p.join("meta.json").exists().then_some(p)
     }
 
     #[test]
-    fn meta_parses() {
-        let Some(dir) = artifacts() else { return };
-        let meta = Meta::load(&dir).unwrap();
-        assert_eq!(meta.model.n_points, 1024);
-        assert_eq!(meta.model.s1, 256);
-        assert!(meta.artifacts.contains_key("sa1"));
-        assert!(meta.artifacts.contains_key("head_q16"));
-        assert_eq!(meta.artifacts["sa1"].input_shape, vec![256, 32, 3]);
-        assert_eq!(meta.artifacts["sa1"].output_shape, vec![256, 128]);
+    fn synthetic_meta_matches_canonical_model() {
+        let rt = Runtime::new(no_artifacts()).unwrap();
+        assert_eq!(rt.meta.model.n_points, 1024);
+        assert_eq!(rt.meta.model.s1, 256);
+        assert!(rt.meta.artifacts.contains_key("sa1"));
+        assert!(rt.meta.artifacts.contains_key("head_q16"));
+        assert_eq!(rt.meta.artifacts["sa1"].input_shape, vec![256, 32, 3]);
+        assert_eq!(rt.meta.artifacts["sa1"].output_shape, vec![256, 128]);
+        assert_eq!(rt.backend(), "reference");
     }
 
     #[test]
-    fn sa1_executes_and_respects_relu() {
-        let Some(dir) = artifacts() else { return };
-        let mut rt = Runtime::new(&dir).unwrap();
+    fn sa1_executes_and_respects_relu_hermetically() {
+        let mut rt = Runtime::new(no_artifacts()).unwrap();
         let n: usize = rt.meta.artifacts["sa1"].input_shape.iter().product();
         let input = vec![0.1f32; n];
         let out = rt.execute("sa1", &input).unwrap();
@@ -214,8 +335,30 @@ mod tests {
 
     #[test]
     fn wrong_input_size_rejected() {
-        let Some(dir) = artifacts() else { return };
-        let mut rt = Runtime::new(&dir).unwrap();
+        let mut rt = Runtime::new(no_artifacts()).unwrap();
         assert!(rt.execute("sa1", &[0.0; 7]).is_err());
+        assert!(rt.execute("nonexistent", &[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn head_produces_logits_that_can_go_negative() {
+        let mut rt = Runtime::new(no_artifacts()).unwrap();
+        let n: usize = rt.meta.artifacts["head"].input_shape.iter().product();
+        let input: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.05).collect();
+        let logits = rt.execute("head", &input).unwrap();
+        assert_eq!(logits.len(), rt.meta.model.num_classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn meta_parses_real_artifacts_when_present() {
+        let Some(dir) = artifacts() else { return };
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.model.n_points, 1024);
+        assert_eq!(meta.model.s1, 256);
+        assert!(meta.artifacts.contains_key("sa1"));
+        assert!(meta.artifacts.contains_key("head_q16"));
+        assert_eq!(meta.artifacts["sa1"].input_shape, vec![256, 32, 3]);
+        assert_eq!(meta.artifacts["sa1"].output_shape, vec![256, 128]);
     }
 }

@@ -1,0 +1,77 @@
+//! PJRT executor (`--features pjrt`): loads the AOT-compiled HLO text
+//! artifacts and executes them on the CPU PJRT client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once and cached.
+//!
+//! Note: the in-repo `vendor/xla` crate is an offline API stub that fails
+//! at client creation, in which case [`crate::runtime::Runtime`] falls
+//! back to the reference executor. Swap the Cargo.toml path dependency for
+//! the published `xla` crate to run this backend for real.
+
+use super::{ArtifactMeta, Executor};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The PJRT execution engine with a compiled-executable cache.
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtExecutor {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, execs: HashMap::new() })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&mut self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let path = artifacts_dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+        let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True => 1-tuple output.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    fn cached(&self) -> usize {
+        self.execs.len()
+    }
+}

@@ -1,0 +1,439 @@
+//! The pure-Rust reference executor: an f32 interpreter for the PointNet2
+//! feature graphs (matmul + bias + ReLU + max-pool), mirroring the
+//! pure-jnp oracles in `python/compile/kernels/ref.py`.
+//!
+//! This is the default numeric backend. It needs no HLO artifacts and no
+//! XLA runtime: weights come from the `weights` section of `meta.json`
+//! when `make artifacts` has run, and otherwise from a deterministic
+//! He-style synthetic initialization — so the whole request path works on
+//! a bare offline toolchain (the accuracy-sensitive experiments still
+//! want trained weights, of course).
+//!
+//! Semantics pinned by `rust/tests/reference_executor.rs` golden tests:
+//!
+//! - `mlp_layer_ref`:   y = x[N, Cin] @ w[Cin, Cout] + b, optional ReLU
+//! - `grouped_max_ref`: x[S, K, C] -> max over K -> [S, C]
+//! - `l1_distance_ref`: |p - r| summed over xyz (the APD-CIM numeric twin)
+//! - sa1/sa2 artifacts: per-point MLP stack (all-ReLU) then grouped max
+//! - head artifact:     MLP3 stack, global max over the S2 sets, then the
+//!   head stack with no ReLU on the last layer (raw logits)
+//! - `*_q16` artifacts: the same graphs over 16-bit PTQ weights, mirroring
+//!   `python/compile/aot.py::quantize_params`
+
+use super::{ArtifactMeta, Executor, ModelMeta};
+use crate::rng::Rng64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashSet;
+use std::path::Path;
+
+/// One dense layer: row-major `w[cin][cout]` plus bias.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseLayer {
+    pub cin: usize,
+    pub cout: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl DenseLayer {
+    pub fn new(cin: usize, cout: usize, w: Vec<f32>, b: Vec<f32>) -> Result<Self> {
+        ensure!(w.len() == cin * cout, "weight is {} values, want {cin}x{cout}", w.len());
+        ensure!(b.len() == cout, "bias is {} values, want {cout}", b.len());
+        Ok(Self { cin, cout, w, b })
+    }
+}
+
+/// An MLP stack (applied in order).
+pub type Stack = Vec<DenseLayer>;
+
+/// All four weight stacks of the PointNet2(c) classifier.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelWeights {
+    pub mlp1: Stack,
+    pub mlp2: Stack,
+    pub mlp3: Stack,
+    pub head: Stack,
+}
+
+/// Point-wise dense layer: `x[rows, cin] @ w + b`, optional ReLU
+/// (mirrors `ref.py::mlp_layer_ref`).
+pub fn mlp_layer_ref(x: &[f32], rows: usize, layer: &DenseLayer, relu: bool) -> Vec<f32> {
+    assert_eq!(x.len(), rows * layer.cin, "input is not [rows, cin]");
+    let (cin, cout) = (layer.cin, layer.cout);
+    let mut out = vec![0.0f32; rows * cout];
+    for r in 0..rows {
+        let xr = &x[r * cin..(r + 1) * cin];
+        let or = &mut out[r * cout..(r + 1) * cout];
+        or.copy_from_slice(&layer.b);
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wr = &layer.w[i * cout..(i + 1) * cout];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xi * wv;
+            }
+        }
+        if relu {
+            for o in or.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max-pool over the neighbor axis: `x[s, k, c] -> [s, c]`
+/// (mirrors `ref.py::grouped_max_ref`).
+pub fn grouped_max_ref(x: &[f32], s: usize, k: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), s * k * c, "input is not [s, k, c]");
+    assert!(k > 0);
+    let mut out = vec![f32::NEG_INFINITY; s * c];
+    for si in 0..s {
+        let os = &mut out[si * c..(si + 1) * c];
+        for ki in 0..k {
+            let row = &x[(si * k + ki) * c..(si * k + ki + 1) * c];
+            for (o, &v) in os.iter_mut().zip(row) {
+                if v > *o {
+                    *o = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Manhattan distance of `points[n, 3]` to `r` (mirrors
+/// `ref.py::l1_distance_ref`; the APD-CIM numeric twin).
+pub fn l1_distance_ref(points: &[f32], r: [f32; 3]) -> Vec<f32> {
+    assert_eq!(points.len() % 3, 0);
+    points
+        .chunks_exact(3)
+        .map(|p| (p[0] - r[0]).abs() + (p[1] - r[1]).abs() + (p[2] - r[2]).abs())
+        .collect()
+}
+
+/// Apply an MLP stack; every layer ReLUs except (optionally) the last.
+pub fn apply_stack_ref(stack: &[DenseLayer], x: &[f32], rows: usize, last_relu: bool) -> Vec<f32> {
+    let mut cur = x.to_vec();
+    for (i, layer) in stack.iter().enumerate() {
+        let relu = last_relu || i + 1 < stack.len();
+        cur = mlp_layer_ref(&cur, rows, layer, relu);
+    }
+    cur
+}
+
+/// Symmetric per-tensor 16-bit post-training quantization of one tensor,
+/// on the f32 grid — mirrors `python/compile/aot.py::quantize_params`
+/// (incl. numpy's round-half-to-even tie breaking).
+fn ptq16_tensor(t: &[f32]) -> Vec<f32> {
+    let qmax = (1u32 << 15) as f32 - 1.0; // 32767
+    let max_abs = t.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return t.to_vec();
+    }
+    let scale = max_abs / qmax;
+    t.iter().map(|v| (v / scale).round_ties_even() * scale).collect()
+}
+
+/// PTQ16 an entire stack (weights and biases per-tensor, like aot.py).
+pub fn ptq16_stack(stack: &[DenseLayer]) -> Stack {
+    stack
+        .iter()
+        .map(|l| DenseLayer {
+            cin: l.cin,
+            cout: l.cout,
+            w: ptq16_tensor(&l.w),
+            b: ptq16_tensor(&l.b),
+        })
+        .collect()
+}
+
+/// Parse the `weights` section of meta.json into [`ModelWeights`].
+pub fn parse_weights(v: &super::json::Value) -> Result<ModelWeights> {
+    let stack = |name: &str| -> Result<Stack> {
+        let layers = v
+            .get(name)
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("weights.{name} missing or not an array"))?;
+        layers
+            .iter()
+            .enumerate()
+            .map(|(i, layer)| {
+                let rows = layer
+                    .get("w")
+                    .and_then(|w| w.as_arr())
+                    .ok_or_else(|| anyhow!("weights.{name}[{i}].w missing"))?;
+                let cin = rows.len();
+                ensure!(cin > 0, "weights.{name}[{i}].w is empty");
+                let mut w = Vec::new();
+                let mut cout = 0usize;
+                for row in rows {
+                    let cols = row.as_arr().ok_or_else(|| anyhow!("weights.{name}[{i}].w row"))?;
+                    if cout == 0 {
+                        cout = cols.len();
+                    }
+                    ensure!(cols.len() == cout, "ragged weight row in weights.{name}[{i}]");
+                    w.extend(cols.iter().filter_map(|x| x.as_f64()).map(|x| x as f32));
+                }
+                let b: Vec<f32> = layer
+                    .get("b")
+                    .and_then(|b| b.as_arr())
+                    .ok_or_else(|| anyhow!("weights.{name}[{i}].b missing"))?
+                    .iter()
+                    .filter_map(|x| x.as_f64())
+                    .map(|x| x as f32)
+                    .collect();
+                DenseLayer::new(cin, cout, w, b)
+            })
+            .collect()
+    };
+    Ok(ModelWeights {
+        mlp1: stack("mlp1")?,
+        mlp2: stack("mlp2")?,
+        mlp3: stack("mlp3")?,
+        head: stack("head")?,
+    })
+}
+
+/// Deterministic He-style synthetic stack (used when no weights were
+/// exported — the hermetic fallback).
+fn synthetic_stack(salt: u64, dims: &[usize]) -> Stack {
+    dims.windows(2)
+        .enumerate()
+        .map(|(i, w)| {
+            let (cin, cout) = (w[0], w[1]);
+            let mut rng = Rng64::new(0x9C2A_11ED ^ salt.wrapping_mul(0x1000_0001) ^ (i as u64));
+            let scale = (2.0 / cin as f32).sqrt();
+            let weights: Vec<f32> = (0..cin * cout).map(|_| rng.gaussian() * scale).collect();
+            DenseLayer { cin, cout, w: weights, b: vec![0.0; cout] }
+        })
+        .collect()
+}
+
+fn synthetic_weights(model: &ModelMeta) -> ModelWeights {
+    ModelWeights {
+        mlp1: synthetic_stack(1, &model.mlp1),
+        mlp2: synthetic_stack(2, &model.mlp2),
+        mlp3: synthetic_stack(3, &model.mlp3),
+        head: synthetic_stack(4, &model.head),
+    }
+}
+
+/// The default executor: interprets the feature graphs in f32.
+pub struct ReferenceExecutor {
+    model: ModelMeta,
+    fp: ModelWeights,
+    q16: ModelWeights,
+    loaded: HashSet<String>,
+}
+
+impl ReferenceExecutor {
+    /// Build from exported weights, or fall back to deterministic
+    /// synthetic ones when `weights` is `None`.
+    pub fn new(model: &ModelMeta, weights: Option<&ModelWeights>) -> Result<Self> {
+        let fp = match weights {
+            Some(w) => w.clone(),
+            None => synthetic_weights(model),
+        };
+        for (name, stack, dims) in [
+            ("mlp1", &fp.mlp1, &model.mlp1),
+            ("mlp2", &fp.mlp2, &model.mlp2),
+            ("mlp3", &fp.mlp3, &model.mlp3),
+            ("head", &fp.head, &model.head),
+        ] {
+            ensure!(
+                stack.len() + 1 == dims.len(),
+                "{name}: {} layers, model dims want {}",
+                stack.len(),
+                dims.len().saturating_sub(1)
+            );
+            for (i, layer) in stack.iter().enumerate() {
+                ensure!(
+                    layer.cin == dims[i] && layer.cout == dims[i + 1],
+                    "{name}[{i}]: {}x{} vs model dims {}x{}",
+                    layer.cin,
+                    layer.cout,
+                    dims[i],
+                    dims[i + 1]
+                );
+            }
+        }
+        let q16 = ModelWeights {
+            mlp1: ptq16_stack(&fp.mlp1),
+            mlp2: ptq16_stack(&fp.mlp2),
+            mlp3: ptq16_stack(&fp.mlp3),
+            head: ptq16_stack(&fp.head),
+        };
+        Ok(Self { model: model.clone(), fp, q16, loaded: HashSet::new() })
+    }
+
+    fn weights_for(&self, quantized: bool) -> &ModelWeights {
+        if quantized {
+            &self.q16
+        } else {
+            &self.fp
+        }
+    }
+
+    /// Run one set-abstraction artifact: per-point MLP stack then grouped
+    /// max over the K neighbor axis.
+    fn run_sa(
+        &self,
+        stack: &[DenseLayer],
+        meta: &ArtifactMeta,
+        k_default: usize,
+        data: &[f32],
+    ) -> Result<Vec<f32>> {
+        let cin = stack[0].cin;
+        let (s, k) = match meta.input_shape.as_slice() {
+            [s, k, c] => {
+                ensure!(*c == cin, "artifact channel {c} vs stack cin {cin}");
+                (*s, *k)
+            }
+            _ => {
+                ensure!(
+                    k_default > 0 && data.len() % (k_default * cin) == 0,
+                    "bad sa input length"
+                );
+                (data.len() / (k_default * cin), k_default)
+            }
+        };
+        let rows = s * k;
+        let h = apply_stack_ref(stack, data, rows, true);
+        let c_out = stack.last().unwrap().cout;
+        Ok(grouped_max_ref(&h, s, k, c_out))
+    }
+
+    /// Run the head artifact: MLP3 stack, global max over the point sets,
+    /// then the head stack with raw logits out.
+    fn run_head(&self, w: &ModelWeights, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+        let cin = w.mlp3[0].cin;
+        let rows = match meta.input_shape.as_slice() {
+            [s, c] => {
+                ensure!(*c == cin, "head channel {c} vs mlp3 cin {cin}");
+                *s
+            }
+            _ => {
+                ensure!(data.len() % cin == 0, "bad head input length");
+                data.len() / cin
+            }
+        };
+        let h = apply_stack_ref(&w.mlp3, data, rows, true);
+        let c = w.mlp3.last().unwrap().cout;
+        let pooled = grouped_max_ref(&h, 1, rows, c); // global max over the S2 sets
+        Ok(apply_stack_ref(&w.head, &pooled, 1, false))
+    }
+}
+
+impl Executor for ReferenceExecutor {
+    fn backend(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&mut self, name: &str, _meta: &ArtifactMeta, _artifacts_dir: &Path) -> Result<()> {
+        // Nothing to compile; loading just validates that the artifact is
+        // one the interpreter knows how to run (l1_distance is accepted as
+        // loadable — its numeric twin is `l1_distance_ref` — but is not a
+        // single-input graph, so `execute` rejects it).
+        let base = name.strip_suffix("_q16").unwrap_or(name);
+        ensure!(
+            matches!(base, "sa1" | "sa2" | "head" | "l1_distance"),
+            "reference executor cannot interpret artifact {name:?}"
+        );
+        self.loaded.insert(name.to_string());
+        Ok(())
+    }
+
+    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+        let quantized = name.ends_with("_q16");
+        let base = name.strip_suffix("_q16").unwrap_or(name);
+        let w = self.weights_for(quantized);
+        match base {
+            "sa1" => self.run_sa(&w.mlp1, meta, self.model.k1, data),
+            "sa2" => self.run_sa(&w.mlp2, meta, self.model.k2, data),
+            "head" => self.run_head(w, meta, data),
+            other => {
+                bail!("reference executor cannot execute artifact {other:?} as a one-input graph")
+            }
+        }
+    }
+
+    fn cached(&self) -> usize {
+        self.loaded.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(cin: usize, cout: usize, w: &[f32], b: &[f32]) -> DenseLayer {
+        DenseLayer::new(cin, cout, w.to_vec(), b.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn mlp_layer_identity_passthrough() {
+        let l = layer(2, 2, &[1.0, 0.0, 0.0, 1.0], &[0.0, 0.0]);
+        let x = [3.0, -4.0, 0.5, 0.25];
+        assert_eq!(mlp_layer_ref(&x, 2, &l, false), vec![3.0, -4.0, 0.5, 0.25]);
+        assert_eq!(mlp_layer_ref(&x, 2, &l, true), vec![3.0, 0.0, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn bias_applied_on_zero_input() {
+        let l = layer(3, 2, &[0.0; 6], &[1.5, -2.5]);
+        let out = mlp_layer_ref(&[0.0; 6], 2, &l, false);
+        assert_eq!(out, vec![1.5, -2.5, 1.5, -2.5]);
+    }
+
+    #[test]
+    fn grouped_max_picks_injected_max() {
+        // x[2, 3, 1]: max over the middle axis
+        let x = [1.0, 7.0, 3.0, -5.0, -1.0, -9.0];
+        assert_eq!(grouped_max_ref(&x, 2, 3, 1), vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn l1_distance_zero_at_self() {
+        let d = l1_distance_ref(&[1.0, -2.0, 3.0, 0.0, 0.0, 0.0], [1.0, -2.0, 3.0]);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[1], 6.0);
+    }
+
+    #[test]
+    fn ptq16_values_land_on_grid() {
+        let t = [0.3f32, -0.7, 0.123456, 0.9999];
+        let q = ptq16_tensor(&t);
+        let scale = 0.9999f32 / 32767.0;
+        for (orig, quant) in t.iter().zip(&q) {
+            assert!((orig - quant).abs() <= scale, "{orig} -> {quant}");
+            let ticks = quant / scale;
+            assert!((ticks - ticks.round()).abs() < 1e-3, "{quant} off-grid");
+        }
+    }
+
+    #[test]
+    fn synthetic_weights_deterministic() {
+        let model = ModelMeta::canonical();
+        let a = synthetic_weights(&model);
+        let b = synthetic_weights(&model);
+        assert_eq!(a, b);
+        assert_eq!(a.mlp1[0].cin, 3);
+        assert_eq!(a.head.last().unwrap().cout, model.num_classes);
+    }
+
+    #[test]
+    fn executor_rejects_unknown_artifacts() {
+        let model = ModelMeta::canonical();
+        let mut exec = ReferenceExecutor::new(&model, None).unwrap();
+        let meta = ArtifactMeta {
+            file: "bogus.hlo.txt".to_string(),
+            input_shape: vec![1],
+            output_shape: vec![1],
+        };
+        assert!(exec.load("bogus", &meta, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Golden-value tests for the pure-Rust reference executor, plus hermetic
+//! end-to-end round trips that must pass with NO artifacts directory, no
+//! HLO files and no XLA runtime (the tier-1 offline contract).
+//!
+//! The golden numbers were produced with `python/compile/kernels/ref.py`
+//! semantics in float32 (numpy mirror of `mlp_layer_ref` /
+//! `grouped_max_ref` / `l1_distance_ref`) on fixed inputs; dyadic values
+//! make the small cases exact in any summation order.
+
+use pc2im::config::PipelineConfig;
+use pc2im::coordinator::Pipeline;
+use pc2im::pointcloud::synthetic::make_class_cloud;
+use pc2im::runtime::reference::{
+    grouped_max_ref, l1_distance_ref, mlp_layer_ref, DenseLayer,
+};
+use pc2im::runtime::Runtime;
+
+/// A directory that must not exist — forces the hermetic fallback.
+fn no_artifacts_dir() -> String {
+    std::env::temp_dir()
+        .join("pc2im-hermetic-test-no-artifacts")
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn hermetic_cfg() -> PipelineConfig {
+    PipelineConfig { artifacts_dir: no_artifacts_dir(), ..PipelineConfig::default() }
+}
+
+// ---------- ref.py golden values (exact, dyadic inputs) ----------
+
+#[test]
+fn mlp_layer_matches_ref_py_golden() {
+    // x = [[1, -2], [0.5, 4]], w = [[0.25, -0.5], [1.5, 2]], b = [0.125, -0.25]
+    let layer = DenseLayer::new(
+        2,
+        2,
+        vec![0.25, -0.5, 1.5, 2.0],
+        vec![0.125, -0.25],
+    )
+    .unwrap();
+    let x = [1.0f32, -2.0, 0.5, 4.0];
+    // ref.py: jnp.maximum(x @ w + b, 0)
+    assert_eq!(mlp_layer_ref(&x, 2, &layer, true), vec![0.0, 0.0, 6.25, 7.5]);
+    // relu=False keeps the negative pre-activations
+    assert_eq!(mlp_layer_ref(&x, 2, &layer, false), vec![-2.625, -4.75, 6.25, 7.5]);
+}
+
+#[test]
+fn mlp_layer_matches_ref_py_golden_random_case() {
+    // numpy float32, seed 42 (default_rng): x[3,4] @ w[4,2] + b, no ReLU.
+    let x = [
+        0.3047171f32, -1.0399841, 0.7504512, 0.9405647, -1.9510351, -1.3021795, 0.1278404,
+        -0.3162426, -0.01680116, -0.8530439, 0.879398, 0.7777919,
+    ];
+    let w = [
+        0.0660307f32, 1.1272413, 0.46750933, -0.85929245, 0.36875078, -0.95888263, 0.8784503,
+        -0.04992591,
+    ];
+    let b = [-0.18486236f32, -0.68092954];
+    let want = [
+        0.45202482f32, -0.2103425, -1.1531337, -1.8680593, 0.4227525, -0.84892577,
+    ];
+    let layer = DenseLayer::new(4, 2, w.to_vec(), b.to_vec()).unwrap();
+    let got = mlp_layer_ref(&x, 3, &layer, false);
+    for (g, expect) in got.iter().zip(&want) {
+        assert!((g - expect).abs() < 1e-5, "{g} vs {expect}");
+    }
+}
+
+#[test]
+fn grouped_max_matches_ref_py_golden() {
+    // x[2, 2, 2] = [[[1,2],[3,0.5]], [[-1,-2],[-3,-0.5]]] -> [[3,2],[-1,-0.5]]
+    let x = [1.0f32, 2.0, 3.0, 0.5, -1.0, -2.0, -3.0, -0.5];
+    assert_eq!(grouped_max_ref(&x, 2, 2, 2), vec![3.0, 2.0, -1.0, -0.5]);
+}
+
+#[test]
+fn l1_distance_matches_ref_py_golden() {
+    let pts = [0.5f32, -0.5, 1.0, 2.0, 0.25, -0.75];
+    let d = l1_distance_ref(&pts, [0.25, 0.25, 0.25]);
+    assert_eq!(d, vec![1.75, 2.75]);
+}
+
+// ---------- hermetic runtime behavior ----------
+
+#[test]
+fn runtime_opens_without_artifacts_and_uses_reference_backend() {
+    let rt = Runtime::new(no_artifacts_dir()).unwrap();
+    assert_eq!(rt.backend(), "reference");
+    // full artifact inventory incl. the PTQ16 variants
+    for name in ["sa1", "sa2", "head", "sa1_q16", "sa2_q16", "head_q16"] {
+        assert!(rt.meta.artifacts.contains_key(name), "missing {name}");
+    }
+}
+
+#[test]
+fn q16_artifacts_track_fp32_closely() {
+    let mut rt = Runtime::new(no_artifacts_dir()).unwrap();
+    let n: usize = rt.meta.artifacts["sa1"].input_shape.iter().product();
+    let input: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.03).collect();
+    let fp = rt.execute("sa1", &input).unwrap();
+    let q = rt.execute("sa1_q16", &input).unwrap();
+    assert_eq!(fp.len(), q.len());
+    let max_delta = fp
+        .iter()
+        .zip(&q)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_delta < 0.05, "PTQ16 drift {max_delta}");
+}
+
+#[test]
+fn executor_is_deterministic_across_runtimes() {
+    let mut a = Runtime::new(no_artifacts_dir()).unwrap();
+    let mut b = Runtime::new(no_artifacts_dir()).unwrap();
+    let n: usize = a.meta.artifacts["sa2"].input_shape.iter().product();
+    let input: Vec<f32> = (0..n).map(|i| ((i * 7 % 29) as f32 - 14.0) * 0.01).collect();
+    assert_eq!(a.execute("sa2", &input).unwrap(), b.execute("sa2", &input).unwrap());
+}
+
+// ---------- end-to-end classify with no artifacts directory ----------
+
+#[test]
+fn classify_round_trip_without_artifacts() {
+    let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+    let n_points = pipe.meta().model.n_points;
+    let cloud = make_class_cloud(2, n_points, 77);
+    let r = pipe.classify(&cloud).unwrap();
+    assert_eq!(r.logits.len(), pipe.meta().model.num_classes);
+    assert!(r.logits.iter().all(|v| v.is_finite()));
+    assert!(r.pred < pipe.meta().model.num_classes);
+    assert!(r.stats.preproc_cycles > 0, "engine models must charge cycles");
+    assert!(r.stats.feature_cycles > 0, "SC-CIM cost model must charge cycles");
+    assert!(!r.stats.ledger.is_empty());
+}
+
+#[test]
+fn classify_deterministic_without_artifacts() {
+    let cloud = make_class_cloud(4, 1024, 500);
+    let mut p1 = Pipeline::new(hermetic_cfg()).unwrap();
+    let mut p2 = Pipeline::new(hermetic_cfg()).unwrap();
+    let a = p1.classify(&cloud).unwrap();
+    let b = p2.classify(&cloud).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles);
+    assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles);
+}
+
+#[test]
+fn exact_and_quantized_configs_run_without_artifacts() {
+    let cloud = make_class_cloud(1, 1024, 9);
+    let mut exact = Pipeline::new(PipelineConfig {
+        exact_sampling: true,
+        ..hermetic_cfg()
+    })
+    .unwrap();
+    let mut q16 = Pipeline::new(PipelineConfig { quantized: true, ..hermetic_cfg() }).unwrap();
+    let a = exact.classify(&cloud).unwrap();
+    let b = q16.classify(&cloud).unwrap();
+    assert_eq!(a.logits.len(), b.logits.len());
+    assert!(a.stats.preproc_cycles > 0 && b.stats.preproc_cycles > 0);
+}
+
+#[test]
+fn hermetic_logits_do_not_depend_on_cwd_artifacts_naming() {
+    // Two different nonexistent dirs must produce identical models
+    // (synthetic weights are seeded by the model geometry, not the path).
+    let d1 = std::env::temp_dir().join("pc2im-hermetic-a");
+    let d2 = std::env::temp_dir().join("pc2im-hermetic-b");
+    let mut r1 = Runtime::new(&d1).unwrap();
+    let mut r2 = Runtime::new(&d2).unwrap();
+    let n: usize = r1.meta.artifacts["sa1"].input_shape.iter().product();
+    let input = vec![0.25f32; n];
+    assert_eq!(r1.execute("sa1", &input).unwrap(), r2.execute("sa1", &input).unwrap());
+}
