@@ -1,12 +1,16 @@
 # Convenience targets; everything also works as plain cargo/pytest calls.
 
-.PHONY: build test artifacts bench-smoke bench python-test baseline
+.PHONY: build test doc artifacts bench-smoke bench python-test baseline
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# API docs; mirrors the CI docs lane (missing docs / broken links fail).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Train (cached) -> lower HLO text -> export weights/testset/meta.json.
 # Requires JAX; the Rust side works without this (reference executor).

@@ -17,8 +17,11 @@ use crate::quant::QPoint3;
 /// Array geometry; defaults follow the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ApdCimConfig {
+    /// Point groups (PTG) — rows activated one per cycle.
     pub n_ptg: usize,
+    /// Point clusters (PTC) per group — distances produced per cycle.
     pub ptc_per_ptg: usize,
+    /// Points stored per cluster.
     pub pts_per_ptc: usize,
 }
 
@@ -55,18 +58,22 @@ pub struct ApdCim {
 }
 
 impl ApdCim {
+    /// An empty array with the given geometry.
     pub fn new(cfg: ApdCimConfig) -> Self {
         Self { cfg, points: Vec::new(), cycles: 0, ledger: EnergyLedger::new() }
     }
 
+    /// The array geometry.
     pub fn config(&self) -> &ApdCimConfig {
         &self.cfg
     }
 
+    /// Number of points currently resident.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// True when no tile is loaded.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
@@ -137,6 +144,7 @@ impl ApdCim {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

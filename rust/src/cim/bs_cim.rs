@@ -17,6 +17,7 @@ pub struct BsCim {
 }
 
 impl BsCim {
+    /// A fresh engine with zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -51,10 +52,12 @@ impl BsCim {
         cycles
     }
 
+    /// Cycle count accumulated so far.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

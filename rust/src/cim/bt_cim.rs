@@ -41,6 +41,7 @@ pub struct BtCim {
 }
 
 impl BtCim {
+    /// A fresh engine with zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -82,10 +83,12 @@ impl BtCim {
         cycles
     }
 
+    /// Cycle count accumulated so far.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

@@ -43,7 +43,9 @@ impl TdPair {
 /// Geometry of one CAM array (paper: 16 TDGs x 128 TDPs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CamConfig {
+    /// Temporary-distance groups (TDGs) per array.
     pub n_groups: usize,
+    /// TD pairs per group.
     pub pairs_per_group: usize,
 }
 
@@ -54,6 +56,7 @@ impl Default for CamConfig {
 }
 
 impl CamConfig {
+    /// TD pairs the array holds (one per resident point).
     pub fn capacity(&self) -> usize {
         self.n_groups * self.pairs_per_group
     }
@@ -69,10 +72,12 @@ pub struct CamArray {
 }
 
 impl CamArray {
+    /// An empty array with the given geometry.
     pub fn new(cfg: CamConfig) -> Self {
         Self { cfg, pairs: vec![TdPair::default(); cfg.capacity()], cycles: 0, ledger: EnergyLedger::new() }
     }
 
+    /// TD-pair capacity of this array.
     pub fn capacity(&self) -> usize {
         self.cfg.capacity()
     }
@@ -129,6 +134,7 @@ impl CamArray {
         self.pairs[i].live()
     }
 
+    /// Number of occupied TD pairs (points loaded for this tile).
     pub fn occupied(&self) -> usize {
         self.pairs.iter().filter(|p| p.occupied).count()
     }
@@ -213,10 +219,12 @@ impl CamArray {
         (value, idx)
     }
 
+    /// Cycle count accumulated so far.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }
@@ -232,6 +240,7 @@ pub struct PingPongMaxCam {
 }
 
 impl PingPongMaxCam {
+    /// Two fresh arrays, array 0 starting in search mode.
     pub fn new(cfg: CamConfig) -> Self {
         Self { arrays: [CamArray::new(cfg), CamArray::new(cfg)], active: 0 }
     }
@@ -246,14 +255,17 @@ impl PingPongMaxCam {
         bits.div_ceil(8)
     }
 
+    /// The search-mode array (mutable).
     pub fn active_mut(&mut self) -> &mut CamArray {
         &mut self.arrays[self.active]
     }
 
+    /// The search-mode array.
     pub fn active(&self) -> &CamArray {
         &self.arrays[self.active]
     }
 
+    /// The load-mode (shadow) array being preloaded for the next tile.
     pub fn shadow_mut(&mut self) -> &mut CamArray {
         &mut self.arrays[1 - self.active]
     }
@@ -269,6 +281,7 @@ impl PingPongMaxCam {
         self.arrays[self.active].cycles()
     }
 
+    /// Combined event ledger of both arrays.
     pub fn merged_ledger(&self) -> EnergyLedger {
         let mut l = self.arrays[0].ledger().clone();
         l.merge(self.arrays[1].ledger());

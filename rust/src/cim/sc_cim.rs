@@ -80,8 +80,11 @@ pub fn weight_block(w: i16, b: u32) -> u8 {
 /// per slice, 16 rows per block; 256 KB total).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScCimConfig {
+    /// Weight slices in the macro.
     pub n_slices: usize,
+    /// Paired local weight blocks (LWBs) per slice.
     pub block_pairs_per_slice: usize,
+    /// Weight rows per block.
     pub rows_per_block: usize,
     /// 16-bit weight columns per slice.
     pub cols_per_slice: usize,
@@ -124,10 +127,12 @@ pub struct ScCim {
 }
 
 impl ScCim {
+    /// A fresh engine with zeroed counters.
     pub fn new(cfg: ScCimConfig) -> Self {
         Self { cfg, cycles: 0, ledger: EnergyLedger::new() }
     }
 
+    /// The macro geometry.
     pub fn config(&self) -> &ScCimConfig {
         &self.cfg
     }
@@ -188,10 +193,12 @@ impl ScCim {
         cycles
     }
 
+    /// Cycle count accumulated so far.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

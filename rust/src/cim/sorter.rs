@@ -24,6 +24,7 @@ pub struct TopKSorter {
 }
 
 impl TopKSorter {
+    /// An empty k-deep sorter pipeline.
     pub fn new(k: usize) -> Self {
         assert!(k > 0);
         Self { k, entries: Vec::with_capacity(k + 1), cycles: 0, ledger: EnergyLedger::new() }
@@ -53,10 +54,12 @@ impl TopKSorter {
         self.entries
     }
 
+    /// Cycle count accumulated so far.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

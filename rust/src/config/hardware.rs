@@ -34,6 +34,7 @@ impl Default for HardwareConfig {
 }
 
 impl HardwareConfig {
+    /// Geometry of the APD-CIM distance array.
     pub fn apd_cim(&self) -> ApdCimConfig {
         // Geometry scales PTC count with the tile capacity (paper: 2048).
         let base = ApdCimConfig::default();
@@ -45,18 +46,22 @@ impl HardwareConfig {
         base
     }
 
+    /// Geometry of one MAX-CAM array.
     pub fn cam(&self) -> CamConfig {
         CamConfig::default()
     }
 
+    /// Geometry of the SC-CIM MAC macro.
     pub fn sc_cim(&self) -> ScCimConfig {
         ScCimConfig::default()
     }
 
+    /// Per-event energy constants (Table II anchored).
     pub fn energy(&self) -> EnergyConstants {
         EnergyConstants::default()
     }
 
+    /// 40 nm area model for the FoM calculations.
     pub fn area(&self) -> AreaModel {
         AreaModel::default()
     }

@@ -1,8 +1,10 @@
-//! Configuration system: hardware spec (Table II defaults), workload and
-//! pipeline configuration, with JSON (de)serialization for the CLI.
+//! Configuration system: hardware spec (Table II defaults), workload,
+//! pipeline and serving-engine configuration for the CLI.
 
 pub mod hardware;
+pub mod serve;
 pub mod workload;
 
 pub use hardware::HardwareConfig;
+pub use serve::ServeConfig;
 pub use workload::{PipelineConfig, WorkloadConfig};

@@ -1,0 +1,61 @@
+//! Configuration of the shard-parallel serving engine
+//! (`pc2im serve`, [`crate::coordinator::serve::ServeEngine`]).
+
+/// Knobs of the serving engine: how many worker lanes, how deep the
+/// bounded request queue is, and which synthetic workload the CLI feeds
+/// it.
+///
+/// The determinism contract does not depend on any of these: for a fixed
+/// request sequence the engine produces bit-identical logits and
+/// aggregated stats for every `workers`/`queue_depth` combination (see
+/// `rust/tests/serve_determinism.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Worker lanes, each owning one `Pipeline`. `1` degenerates to the
+    /// single-threaded [`crate::coordinator::BatchScheduler`] behaviour.
+    pub workers: usize,
+    /// Capacity of the bounded request queue; submission blocks when the
+    /// queue is full, so at most `queue_depth + workers` clouds are ever
+    /// in flight (queued or being processed).
+    pub queue_depth: usize,
+    /// Synthetic clouds the CLI generates for one serve run.
+    pub n_clouds: usize,
+    /// Base RNG seed for the synthetic request stream.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_depth: 8, n_clouds: 32, seed: 0 }
+    }
+}
+
+impl ServeConfig {
+    /// Worker-lane count clamped to at least one.
+    pub fn lanes(&self) -> usize {
+        self.workers.max(1)
+    }
+
+    /// Queue capacity clamped to at least one slot.
+    pub fn depth(&self) -> usize {
+        self.queue_depth.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ServeConfig::default();
+        assert!(c.workers >= 1 && c.queue_depth >= 1 && c.n_clouds >= 1);
+    }
+
+    #[test]
+    fn lanes_and_depth_clamp_to_one() {
+        let c = ServeConfig { workers: 0, queue_depth: 0, ..ServeConfig::default() };
+        assert_eq!(c.lanes(), 1);
+        assert_eq!(c.depth(), 1);
+    }
+}

@@ -5,16 +5,22 @@ use crate::pointcloud::synthetic::DatasetScale;
 /// A benchmark workload: which dataset scale, how many clouds, which seed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkloadConfig {
+    /// Dataset scale class (point count / scene statistics).
     pub scale: Scale,
+    /// Clouds in the workload.
     pub n_clouds: usize,
+    /// RNG seed for the synthetic generator.
     pub seed: u64,
 }
 
 /// Serializable mirror of [`DatasetScale`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// ModelNet-like, ~1k points per cloud.
     Small,
+    /// S3DIS-like, ~4k points per scene.
     Medium,
+    /// SemanticKITTI-like, ~16k points per scene.
     Large,
 }
 

@@ -1,16 +1,21 @@
 //! The Layer-3 coordinator: the request path that glues MSP tiling, the
-//! CIM preprocessing engines, and the PJRT feature executor into the
+//! CIM preprocessing engines, and the numeric feature executor into the
 //! paper's Fig. 3(b) computing flow.
 //!
 //! [`pipeline`] runs one cloud end-to-end (event-accurate engine models +
-//! real PJRT numerics); [`scheduler`] overlaps preprocessing of the next
-//! clouds with feature execution of the current one (the ping-pong idea at
-//! request granularity); [`stats`] aggregates accuracy/latency/energy.
+//! real executor numerics); [`scheduler`] overlaps preprocessing of the
+//! next clouds with feature execution of the current one on a single
+//! authoritative thread (the ping-pong idea at request granularity);
+//! [`serve`] scales that overlap across N worker lanes behind a bounded
+//! queue (the `pc2im serve` engine); [`stats`] aggregates
+//! accuracy/latency/energy.
 
 pub mod pipeline;
 pub mod scheduler;
+pub mod serve;
 pub mod stats;
 
 pub use pipeline::{CloudResult, Pipeline};
 pub use scheduler::BatchScheduler;
+pub use serve::{ServeEngine, ServeReport};
 pub use stats::{BatchStats, CloudStats};

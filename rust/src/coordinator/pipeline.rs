@@ -26,13 +26,17 @@ use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
 use crate::sampling::{self, LATTICE_SCALE};
 use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Result of classifying one cloud.
 #[derive(Debug, Clone)]
 pub struct CloudResult {
+    /// Raw classifier logits, one per class.
     pub logits: Vec<f32>,
+    /// Arg-max class index.
     pub pred: usize,
+    /// Simulated cycles/energy plus host wall-clock for this cloud.
     pub stats: CloudStats,
 }
 
@@ -40,7 +44,9 @@ pub struct CloudResult {
 /// module's output contract).
 #[derive(Debug, Clone)]
 pub struct LevelIndices {
+    /// Indices of the sampled centroids into the level's input points.
     pub centroids: Vec<usize>,
+    /// Per-centroid neighbor indices (each list is exactly k long).
     pub groups: Vec<Vec<usize>>,
 }
 
@@ -52,17 +58,41 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Open the configured artifacts directory and build the request path
+    /// (picks the best available executor backend).
     pub fn new(cfg: PipelineConfig) -> Result<Self> {
         let rt = Runtime::new(&cfg.artifacts_dir)
             .with_context(|| format!("loading artifacts from {:?}", cfg.artifacts_dir))?;
         Ok(Self { rt, hw: HardwareConfig::default(), cfg })
     }
 
+    /// Build a pipeline whose runtime reuses an *existing* executor and
+    /// metadata instead of re-opening the artifacts directory. This is
+    /// the serving engine's per-lane constructor: every lane gets its own
+    /// `Pipeline` (engine models are single-owner) while all lanes share
+    /// one thread-safe executor — same weights, same artifact cache.
+    pub fn with_shared_executor(
+        cfg: PipelineConfig,
+        meta: crate::runtime::Meta,
+        exec: Arc<dyn crate::runtime::Executor>,
+    ) -> Self {
+        let rt = Runtime::with_shared(&cfg.artifacts_dir, meta, exec);
+        Self { rt, hw: HardwareConfig::default(), cfg }
+    }
+
+    /// Replace the hardware model (builder-style).
     pub fn with_hardware(mut self, hw: HardwareConfig) -> Self {
         self.hw = hw;
         self
     }
 
+    /// A shareable handle to the runtime's executor (for
+    /// [`Pipeline::with_shared_executor`]).
+    pub fn executor(&self) -> Arc<dyn crate::runtime::Executor> {
+        self.rt.executor()
+    }
+
+    /// The model/artifact metadata the runtime was opened with.
     pub fn meta(&self) -> &crate::runtime::Meta {
         &self.rt.meta
     }
@@ -279,10 +309,12 @@ impl Pipeline {
         Ok(CloudResult { logits, pred, stats })
     }
 
+    /// The hardware model used for latency/energy pricing.
     pub fn hardware(&self) -> &HardwareConfig {
         &self.hw
     }
 
+    /// The pipeline configuration this instance was built with.
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
     }

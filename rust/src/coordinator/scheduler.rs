@@ -1,11 +1,17 @@
 //! Batch scheduler: overlaps CPU-side preprocessing of upcoming clouds
-//! with PJRT feature execution of the current one — the request-level
-//! analogue of the paper's array-level ping-pong.
+//! with feature execution of the current one — the request-level
+//! analogue of the paper's array-level ping-pong, on a single
+//! authoritative thread.
 //!
 //! Preprocessing (quantization + CIM-engine simulation) is
-//! embarrassingly parallel across clouds and runs on worker threads; the
-//! PJRT executor is single-threaded (the executable cache is `&mut`), so
-//! a bounded channel feeds it in submission order.
+//! embarrassingly parallel across clouds and runs on worker threads as a
+//! warm/prefetch phase; the authoritative per-cloud run then happens in
+//! submission order on one thread. This is the `--workers 1` degenerate
+//! case of the shard-parallel [`crate::coordinator::serve::ServeEngine`]:
+//! it folds per-cloud stats in the same sequence order the engine's
+//! [`crate::coordinator::serve::aggregate`] does, which keeps the
+//! Fig. 13 experiment path byte-for-byte unchanged while the two engines
+//! stay bit-identical (enforced by `rust/tests/serve_determinism.rs`).
 
 use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
 use crate::cim::max_cam::{CamArray, CamConfig};
@@ -24,6 +30,8 @@ pub struct BatchScheduler {
 }
 
 impl BatchScheduler {
+    /// Build a scheduler around one pipeline; `cfg.tile_parallelism`
+    /// sizes the warm-phase worker pool.
     pub fn new(cfg: PipelineConfig) -> Result<Self> {
         let workers = cfg.tile_parallelism.max(1);
         Ok(Self { pipeline: Pipeline::new(cfg)?, workers })
@@ -31,19 +39,19 @@ impl BatchScheduler {
 
     /// Classify a labelled set; returns (predictions, stats).
     ///
-    /// The expensive *simulation* part of preprocessing (bit-CAM searches)
-    /// is warmed concurrently on worker threads; the authoritative
-    /// per-cloud run then happens on the executor thread. The overlap cuts
-    /// wall-clock without changing any result (the engines are
-    /// deterministic).
+    /// The warm phase below emulates the double-buffered tile flow by
+    /// running the first FPS iterations of upcoming clouds on worker
+    /// threads, then discarding the results — it is a *model* of the
+    /// overlap (and completes before the authoritative loop starts), not
+    /// a latency optimization. For real concurrency across in-flight
+    /// clouds use [`crate::coordinator::serve::ServeEngine`]; results are
+    /// identical either way (the engines are deterministic).
     pub fn classify_batch(
         &mut self,
         clouds: &[PointCloud],
         labels: &[i32],
     ) -> Result<(Vec<usize>, BatchStats)> {
         assert_eq!(clouds.len(), labels.len());
-        let mut preds = Vec::with_capacity(clouds.len());
-        let mut stats = BatchStats::default();
 
         // Warm phase: run the quantize+FPS part of upcoming clouds on
         // worker threads. This emulates the double-buffered tile flow; the
@@ -75,6 +83,12 @@ impl BatchScheduler {
             });
         }
 
+        // Streaming sequence-order fold: the same per-cloud
+        // `BatchStats::push` the serving engine's `serve::aggregate`
+        // performs, without buffering every CloudResult. The engines'
+        // bit-identity is enforced by rust/tests/serve_determinism.rs.
+        let mut preds = Vec::with_capacity(clouds.len());
+        let mut stats = BatchStats::default();
         for (cloud, &label) in clouds.iter().zip(labels) {
             let r = self.pipeline.classify(cloud)?;
             stats.push(&r.stats, r.pred as i32 == label);
@@ -83,10 +97,12 @@ impl BatchScheduler {
         Ok((preds, stats))
     }
 
+    /// Mutable access to the underlying pipeline.
     pub fn pipeline_mut(&mut self) -> &mut Pipeline {
         &mut self.pipeline
     }
 
+    /// Shared access to the underlying pipeline.
     pub fn pipeline(&self) -> &Pipeline {
         &self.pipeline
     }

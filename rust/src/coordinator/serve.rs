@@ -1,0 +1,306 @@
+//! The shard-parallel serving engine behind `pc2im serve`: the paper's
+//! Ping-Pong overlap (preprocess the next cloud while the current one is
+//! in feature computing) realized with real OS threads across many
+//! in-flight clouds.
+//!
+//! Topology: a **bounded request queue** feeds **N worker lanes**; each
+//! lane owns a full [`Pipeline`] (the CIM engine models are single-owner
+//! and cheap), while all lanes share **one** thread-safe
+//! [`crate::runtime::Executor`] behind an `Arc` — same weight storage,
+//! same prepared-artifact cache, no per-lane duplication.
+//!
+//! ```text
+//!   requests ──> [bounded queue, depth D] ──┬─> lane 0: Pipeline ─┐
+//!                 (submit blocks when full)  ├─> lane 1: Pipeline ─┼─> (seq, result)
+//!                                            └─> lane N-1: ...    ─┘        │
+//!                                                shared Arc executor        v
+//!                                            aggregate in sequence order -> BatchStats
+//! ```
+//!
+//! Determinism contract: each cloud's result is a pure function of the
+//! cloud (lanes share no mutable numeric state), and aggregation happens
+//! strictly in submission order by per-cloud sequence id — so logits,
+//! predictions and every deterministic [`BatchStats`] field are
+//! bit-identical for any worker count and any completion order.
+//! Backpressure contract: at most `queue_depth + workers` clouds are in
+//! flight at once. Both are enforced by `rust/tests/serve_determinism.rs`.
+
+use crate::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use crate::coordinator::pipeline::{CloudResult, Pipeline};
+use crate::coordinator::stats::BatchStats;
+use crate::pointcloud::PointCloud;
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+/// Everything one serve run produces: per-cloud results in submission
+/// order, the deterministic aggregate, and host-side throughput metrics.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Per-cloud results, indexed by sequence id (= submission order).
+    pub results: Vec<CloudResult>,
+    /// Aggregated batch statistics, folded in sequence order.
+    pub stats: BatchStats,
+    /// Worker lanes that served the run.
+    pub workers: usize,
+    /// Host wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Largest observed number of in-flight clouds (queued + processing);
+    /// bounded by `queue_depth + workers` by construction.
+    pub max_in_flight: usize,
+}
+
+impl ServeReport {
+    /// Host-side throughput of the run.
+    pub fn clouds_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.results.len() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Predicted class per cloud, in sequence order.
+    pub fn preds(&self) -> Vec<usize> {
+        self.results.iter().map(|r| r.pred).collect()
+    }
+}
+
+/// Fold per-cloud results into [`BatchStats`] strictly in sequence
+/// order — the same per-cloud [`BatchStats::push`] fold the
+/// single-threaded [`crate::coordinator::BatchScheduler`] streams, so
+/// the two engines' aggregated stats are bit-identical (enforced by
+/// `rust/tests/serve_determinism.rs`).
+pub fn aggregate(results: &[CloudResult], labels: &[i32]) -> BatchStats {
+    assert_eq!(results.len(), labels.len(), "results/labels length mismatch");
+    let mut stats = BatchStats::default();
+    for (r, &label) in results.iter().zip(labels) {
+        stats.push(&r.stats, r.pred as i32 == label);
+    }
+    stats
+}
+
+/// Render the deterministic fields of a [`BatchStats`] aggregate as one
+/// comparable line (host wall-clock is intentionally excluded — it is
+/// timing, not simulation). `serve --workers N` prints this digest, and
+/// the determinism test asserts byte equality across worker counts.
+pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
+    format!(
+        "n={} correct={} preproc_cycles={} feature_cycles={} energy_uj={:.6}",
+        stats.n,
+        stats.correct,
+        stats.preproc_cycles,
+        stats.feature_cycles,
+        stats.ledger.total_pj(&hw.energy()) * 1e-6,
+    )
+}
+
+/// The shard-parallel serving engine: N worker lanes over a bounded
+/// request queue, sharing one executor.
+pub struct ServeEngine {
+    lanes: Vec<Pipeline>,
+    depth: usize,
+}
+
+impl ServeEngine {
+    /// Build the engine: a bootstrap pipeline opens the artifacts
+    /// directory once (so the "no trained weights" diagnostic prints
+    /// once, not N times), then every lane is built around its executor
+    /// via [`Pipeline::with_shared_executor`] — one weight store for the
+    /// whole engine.
+    pub fn new(pipe_cfg: PipelineConfig, serve_cfg: ServeConfig) -> Result<Self> {
+        // Bootstrap pipeline: opens the artifacts directory, picks the
+        // backend, builds the one executor everything shares. Dropped
+        // after lane construction.
+        let boot = Pipeline::new(pipe_cfg.clone())?;
+        let exec = boot.executor();
+        // Lanes only need the geometry/artifact inventory; the fp32
+        // weight stacks live once, inside the shared executor — strip
+        // them before fanning the metadata out so no lane (lane 0
+        // included) holds a redundant copy of the model.
+        let mut meta = boot.meta().clone();
+        meta.weights = None;
+        let lanes = (0..serve_cfg.lanes())
+            .map(|_| Pipeline::with_shared_executor(pipe_cfg.clone(), meta.clone(), exec.clone()))
+            .collect();
+        Ok(Self { lanes, depth: serve_cfg.depth() })
+    }
+
+    /// Worker-lane count.
+    pub fn workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Bounded request-queue capacity.
+    pub fn queue_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The lane-0 pipeline (metadata/backend introspection).
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.lanes[0]
+    }
+
+    /// Serve one labelled request sequence to completion.
+    ///
+    /// Clouds are submitted in order through the bounded queue (blocking
+    /// when `queue_depth` submissions are waiting), classified by
+    /// whichever lane is free, and re-ordered by sequence id before
+    /// aggregation — see the module docs for the determinism and
+    /// backpressure contracts.
+    pub fn run(&mut self, clouds: &[PointCloud], labels: &[i32]) -> Result<ServeReport> {
+        assert_eq!(clouds.len(), labels.len(), "clouds/labels length mismatch");
+        let n = clouds.len();
+        let workers = self.lanes.len();
+        let t0 = Instant::now();
+
+        let mut slots: Vec<Option<Result<CloudResult>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let completed = AtomicUsize::new(0);
+        let mut max_in_flight = 0usize;
+
+        // Request queue: bounded sync channel carrying sequence ids; one
+        // shared receiver end (workers take the lock only to dequeue).
+        let (req_tx, req_rx) = mpsc::sync_channel::<usize>(self.depth);
+        let req_rx = Mutex::new(req_rx);
+        // Result path: unbounded, tagged with the sequence id.
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<CloudResult>)>();
+
+        std::thread::scope(|scope| {
+            for lane in self.lanes.iter_mut() {
+                let req_rx = &req_rx;
+                let completed = &completed;
+                let res_tx = res_tx.clone();
+                scope.spawn(move || loop {
+                    // Holding the lock across recv() just serializes the
+                    // dequeue, not the classification work. A poisoned
+                    // lock is recovered (the receiver has no invariant to
+                    // protect) so one dead lane cannot strand the queue.
+                    let msg = {
+                        let guard = match req_rx.lock() {
+                            Ok(g) => g,
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        guard.recv()
+                    };
+                    let Ok(seq) = msg else { break };
+                    // A panic inside classify becomes this cloud's error
+                    // instead of deadlocking the submit loop.
+                    let out = catch_unwind(AssertUnwindSafe(|| lane.classify(&clouds[seq])))
+                        .unwrap_or_else(|_| {
+                            Err(anyhow!("worker lane panicked while classifying cloud {seq}"))
+                        });
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    if res_tx.send((seq, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(res_tx);
+
+            for seq in 0..n {
+                req_tx.send(seq).expect("all worker lanes exited early");
+                // send() returning proves the queue had room, so right now
+                // at most `depth` clouds are buffered and at most
+                // `workers` are being classified.
+                let done = completed.load(Ordering::SeqCst).min(seq + 1);
+                let in_flight = seq + 1 - done;
+                max_in_flight = max_in_flight.max(in_flight);
+            }
+            drop(req_tx);
+
+            for (seq, out) in res_rx {
+                slots[seq] = Some(out);
+            }
+        });
+
+        let mut results = Vec::with_capacity(n);
+        for (seq, slot) in slots.into_iter().enumerate() {
+            let out = slot.ok_or_else(|| anyhow!("cloud {seq} produced no result"))?;
+            results.push(out.map_err(|e| anyhow!("cloud {seq}: {e:?}"))?);
+        }
+        let stats = aggregate(&results, labels);
+        Ok(ServeReport {
+            results,
+            stats,
+            workers,
+            wall_s: t0.elapsed().as_secs_f64(),
+            max_in_flight,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::make_labelled_batch;
+
+    fn hermetic_cfg() -> PipelineConfig {
+        PipelineConfig {
+            artifacts_dir: std::env::temp_dir()
+                .join("pc2im-serve-unit-no-artifacts")
+                .to_string_lossy()
+                .into_owned(),
+            ..PipelineConfig::default()
+        }
+    }
+
+    fn workload(n: usize) -> (Vec<crate::pointcloud::PointCloud>, Vec<i32>) {
+        make_labelled_batch(n, 1024, 900)
+    }
+
+    #[test]
+    fn engine_serves_and_aggregates_in_order() {
+        let (clouds, labels) = workload(4);
+        let mut engine = ServeEngine::new(
+            hermetic_cfg(),
+            ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() },
+        )
+        .unwrap();
+        let report = engine.run(&clouds, &labels).unwrap();
+        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.stats.n, 4);
+        assert_eq!(report.workers, 2);
+        assert!(report.stats.preproc_cycles > 0);
+        assert!(report.max_in_flight <= 2 + 2, "in-flight {}", report.max_in_flight);
+        // per-cloud results line up with their submission slots
+        for (r, c) in report.results.iter().zip(&clouds) {
+            assert_eq!(r.logits.len(), 8);
+            assert!(!c.is_empty());
+        }
+    }
+
+    #[test]
+    fn aggregate_matches_manual_fold() {
+        let (clouds, labels) = workload(2);
+        let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+        let results: Vec<CloudResult> =
+            clouds.iter().map(|c| pipe.classify(c).unwrap()).collect();
+        let agg = aggregate(&results, &labels);
+        let mut manual = BatchStats::default();
+        for (r, &l) in results.iter().zip(&labels) {
+            manual.push(&r.stats, r.pred as i32 == l);
+        }
+        assert_eq!(agg.n, manual.n);
+        assert_eq!(agg.correct, manual.correct);
+        assert_eq!(agg.preproc_cycles, manual.preproc_cycles);
+        assert_eq!(agg.feature_cycles, manual.feature_cycles);
+        assert_eq!(agg.ledger, manual.ledger);
+    }
+
+    #[test]
+    fn digest_is_stable_and_excludes_wall_clock() {
+        let (clouds, labels) = workload(1);
+        let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+        let results: Vec<CloudResult> =
+            clouds.iter().map(|c| pipe.classify(c).unwrap()).collect();
+        let hw = HardwareConfig::default();
+        let a = stats_digest(&aggregate(&results, &labels), &hw);
+        let b = stats_digest(&aggregate(&results, &labels), &hw);
+        assert_eq!(a, b);
+        assert!(a.starts_with("n=1 "), "{a}");
+        assert!(!a.contains("wall"), "{a}");
+    }
+}

@@ -23,23 +23,36 @@ impl CloudStats {
         self.preproc_cycles.max(self.feature_cycles) as f64 * hw.cycle_time_s()
     }
 
+    /// Total simulated energy in picojoules under the given constants.
     pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
         self.ledger.total_pj(c)
     }
 }
 
 /// Aggregate over a batch / test set.
+///
+/// Every field except `host_wall_s` is deterministic (simulated cycles
+/// and event counts); `host_wall_s` is host timing and is excluded from
+/// the serving determinism contract
+/// ([`crate::coordinator::serve::stats_digest`]).
 #[derive(Debug, Clone, Default)]
 pub struct BatchStats {
+    /// Clouds aggregated so far.
     pub n: usize,
+    /// Clouds whose prediction matched the label.
     pub correct: usize,
+    /// Summed simulated preprocessing cycles.
     pub preproc_cycles: u64,
+    /// Summed simulated feature-computing cycles.
     pub feature_cycles: u64,
+    /// Merged event ledger across all clouds.
     pub ledger: EnergyLedger,
+    /// Summed host wall-clock seconds (timing, not simulation).
     pub host_wall_s: f64,
 }
 
 impl BatchStats {
+    /// Fold one cloud's stats into the aggregate.
     pub fn push(&mut self, s: &CloudStats, correct: bool) {
         self.n += 1;
         self.correct += correct as usize;
@@ -49,6 +62,7 @@ impl BatchStats {
         self.host_wall_s += s.host_wall_s;
     }
 
+    /// Fraction of clouds classified correctly (0 when empty).
     pub fn accuracy(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -57,6 +71,7 @@ impl BatchStats {
         }
     }
 
+    /// Mean modeled accelerator latency per cloud.
     pub fn mean_latency_s(&self, hw: &HardwareConfig) -> f64 {
         if self.n == 0 {
             return 0.0;
@@ -65,6 +80,7 @@ impl BatchStats {
             * hw.cycle_time_s()
     }
 
+    /// Mean simulated energy per cloud in picojoules.
     pub fn mean_energy_pj(&self, c: &EnergyConstants) -> f64 {
         if self.n == 0 {
             0.0

@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   run          — classify synthetic clouds end-to-end via the full
-//!                  pipeline (CIM preprocessing + PJRT feature computing)
+//!                  pipeline (CIM preprocessing + executor feature computing)
 //!   eval         — accuracy/latency/energy over the exported test set
+//!   serve        — shard-parallel serving engine: N worker lanes over a
+//!                  bounded queue (--workers 1 = single-threaded scheduler)
 //!   experiments  — regenerate a paper table/figure (--id table1..fig13c,
 //!                  claims, all)
 //!   info         — print hardware config + artifact inventory
@@ -11,11 +13,11 @@
 //! The vendored crate set has no clap; arguments are parsed by hand
 //! (--key value / --flag).
 
-use anyhow::{bail, Result};
-use pc2im::config::PipelineConfig;
-use pc2im::coordinator::{BatchScheduler, Pipeline};
+use anyhow::{anyhow, bail, Result};
+use pc2im::config::{PipelineConfig, ServeConfig};
+use pc2im::coordinator::{serve, BatchScheduler, Pipeline, ServeEngine};
 use pc2im::pointcloud::io::read_testset;
-use pc2im::pointcloud::synthetic::{make_class_cloud, NUM_CLASSES};
+use pc2im::pointcloud::synthetic::{make_class_cloud, make_labelled_batch, NUM_CLASSES};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -35,7 +37,11 @@ fn parse_args() -> Args {
     while i < rest.len() {
         let a = &rest[i];
         if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                // --key=value spelling
+                opts.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                 opts.insert(key.to_string(), rest[i + 1].clone());
                 i += 2;
             } else {
@@ -111,54 +117,107 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// A serving-style request loop: Poisson-ish arrivals of synthetic clouds,
-/// per-request latency percentiles — the router-facing view of the L3
-/// coordinator.
+/// The shard-parallel serving engine: a bounded queue feeding N worker
+/// lanes (each owning a pipeline, all sharing one executor), with
+/// deterministic sequence-ordered aggregation. `--workers 1` runs the
+/// single-threaded `BatchScheduler` instead, so the Fig. 13 experiment
+/// path is byte-for-byte unchanged — and both paths print the same
+/// deterministic stats digest for the same seed.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let n: usize = args.opts.get("requests").and_then(|v| v.parse().ok()).unwrap_or(32);
-    let seed: u64 = args.opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
-    let rate_hz: f64 = args.opts.get("rate").and_then(|v| v.parse().ok()).unwrap_or(8.0);
-    let cfg = pipeline_config(args);
-    let mut pipe = Pipeline::new(cfg)?;
-    let hw = *pipe.hardware();
-    let mut rng = pc2im::rng::Rng64::new(seed);
-    println!("serving {n} requests at ~{rate_hz} req/s (synthetic arrivals)...");
-    let mut latencies: Vec<f64> = Vec::with_capacity(n);
-    let mut sim_energy_pj = 0.0;
-    let mut sim_latency_s = 0.0;
-    let mut correct = 0usize;
-    let t0 = std::time::Instant::now();
-    for i in 0..n {
-        // exponential inter-arrival sleep (capped; this is a demo loop)
-        let u = (rng.f32() as f64).max(1e-6);
-        let gap = (-u.ln() / rate_hz).min(0.25);
-        std::thread::sleep(std::time::Duration::from_secs_f64(gap));
-        let label = rng.range_usize(0, NUM_CLASSES);
-        let cloud = make_class_cloud(label, pipe.meta().model.n_points, seed + i as u64);
-        let ta = std::time::Instant::now();
-        let r = pipe.classify(&cloud)?;
-        latencies.push(ta.elapsed().as_secs_f64());
-        sim_energy_pj += r.stats.energy_pj(&hw.energy());
-        sim_latency_s += r.stats.simulated_latency_s(&hw);
-        correct += (r.pred == label) as usize;
+    // The pre-engine serve loop took --requests/--rate; fail loudly on
+    // the removed flags instead of silently serving a default workload.
+    for old in ["requests", "rate"] {
+        if args.opts.contains_key(old) || args.flags.iter().any(|f| f == old) {
+            bail!(
+                "--{old} was removed: the serving engine takes --clouds M (workload size) \
+                 and --workers N / --queue-depth D (parallelism); see `pc2im help`"
+            );
+        }
     }
-    let wall = t0.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize] * 1e3;
-    println!(
-        "done: {n} requests in {wall:.1} s ({:.1} req/s) | accuracy {:.1}%",
-        n as f64 / wall,
-        100.0 * correct as f64 / n as f64
-    );
-    println!(
-        "host latency p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
-        pct(0.50), pct(0.90), pct(0.99), latencies.last().unwrap() * 1e3
-    );
-    println!(
-        "simulated accelerator: {:.3} ms/req, {:.1} uJ/req",
-        sim_latency_s / n as f64 * 1e3,
-        sim_energy_pj / n as f64 * 1e-6
-    );
+    // ...and on anything unrecognized: a misspelled key or a key whose
+    // value was forgotten must not silently serve the default workload.
+    let known_opts = ["workers", "queue-depth", "clouds", "seed", "artifacts", "parallelism"];
+    let known_flags = ["quantized", "exact"];
+    for key in args.opts.keys() {
+        if !known_opts.contains(&key.as_str()) {
+            bail!("unknown serve option --{key}; see `pc2im help`");
+        }
+    }
+    for flag in &args.flags {
+        if !known_flags.contains(&flag.as_str()) {
+            bail!("unknown serve flag --{flag} (or missing value); see `pc2im help`");
+        }
+    }
+    // Fail loudly on unparseable values too — a typo must not silently
+    // serve the default workload. Defaults come from ServeConfig so the
+    // CLI and the library agree.
+    fn parse_opt<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+        match args.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("invalid value for --{key}: {v:?}")),
+        }
+    }
+    let d = ServeConfig::default();
+    let serve_cfg = ServeConfig {
+        workers: parse_opt(args, "workers", d.workers)?,
+        queue_depth: parse_opt(args, "queue-depth", d.queue_depth)?,
+        n_clouds: parse_opt(args, "clouds", d.n_clouds)?,
+        seed: parse_opt(args, "seed", d.seed)?,
+    };
+    let mut cfg = pipeline_config(args);
+    // Strict re-parse of --parallelism: pipeline_config is lenient for
+    // the other subcommands, but serve's contract is fail-loudly.
+    cfg.tile_parallelism = parse_opt(args, "parallelism", cfg.tile_parallelism)?;
+    let n = serve_cfg.n_clouds.max(1);
+    let seed = serve_cfg.seed;
+
+    if serve_cfg.lanes() == 1 {
+        // Degenerate case: the single-threaded scheduler (the engine the
+        // Fig. 13 experiments run on).
+        let mut sched = BatchScheduler::new(cfg)?;
+        let hw = *sched.pipeline().hardware();
+        let (clouds, labels) =
+            make_labelled_batch(n, sched.pipeline().meta().model.n_points, seed);
+        println!("serving {n} clouds on 1 worker (single-threaded scheduler, seed {seed})...");
+        let t0 = std::time::Instant::now();
+        let (_, stats) = sched.classify_batch(&clouds, &labels)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "done: {n} clouds in {wall:.2} s ({:.2} clouds/s) | accuracy {:.1}%",
+            n as f64 / wall,
+            stats.accuracy() * 100.0
+        );
+        println!("stats {}", serve::stats_digest(&stats, &hw));
+    } else {
+        let mut engine = ServeEngine::new(cfg, serve_cfg)?;
+        let hw = *engine.pipeline().hardware();
+        let (clouds, labels) =
+            make_labelled_batch(n, engine.pipeline().meta().model.n_points, seed);
+        println!(
+            "serving {n} clouds on {} workers (queue depth {}, seed {seed})...",
+            engine.workers(),
+            engine.queue_depth()
+        );
+        let report = engine.run(&clouds, &labels)?;
+        println!(
+            "done: {n} clouds in {:.2} s ({:.2} clouds/s) | accuracy {:.1}% | max in-flight {}",
+            report.wall_s,
+            report.clouds_per_s(),
+            report.stats.accuracy() * 100.0,
+            report.max_in_flight
+        );
+        let mut lat: Vec<f64> = report.results.iter().map(|r| r.stats.host_wall_s).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| lat[(p * (lat.len() - 1) as f64) as usize] * 1e3;
+        println!(
+            "per-cloud host latency p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms | max {:.1} ms",
+            pct(0.50),
+            pct(0.90),
+            pct(0.99),
+            lat.last().unwrap() * 1e3
+        );
+        println!("stats {}", serve::stats_digest(&report.stats, &hw));
+    }
     Ok(())
 }
 
@@ -186,8 +245,8 @@ fn help() {
          \u{20}               [--clouds N] [--seed S] [--exact] [--quantized]\n\
          \u{20}  eval         evaluate the exported test set\n\
          \u{20}               [--limit N] [--exact] [--quantized] [--parallelism K]\n\
-         \u{20}  serve        request loop with latency percentiles\n\
-         \u{20}               [--requests N] [--rate HZ] [--seed S]\n\
+         \u{20}  serve        shard-parallel serving engine (clouds/sec + digest)\n\
+         \u{20}               [--workers N] [--clouds M] [--queue-depth D] [--seed S]\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
          \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\
          \u{20}  info         print hardware + artifact inventory\n\

@@ -63,6 +63,23 @@ fn unit_sphere(rng: &mut Rng64) -> Point3 {
     }
 }
 
+/// A labelled synthetic request stream: `n` clouds cycling through the
+/// primitive classes — cloud `i` has label `i % NUM_CLASSES` and seed
+/// `seed + i`. This is *the* stream generator behind `pc2im serve`, the
+/// serving bench/tests and `examples/serve_demo.rs`; one definition
+/// keeps their digest comparisons meaningful.
+pub fn make_labelled_batch(
+    n: usize,
+    n_points: usize,
+    seed: u64,
+) -> (Vec<PointCloud>, Vec<i32>) {
+    let clouds = (0..n)
+        .map(|i| make_class_cloud(i % NUM_CLASSES, n_points, seed + i as u64))
+        .collect();
+    let labels = (0..n).map(|i| (i % NUM_CLASSES) as i32).collect();
+    (clouds, labels)
+}
+
 /// One synthetic primitive cloud of class `label` (0..NUM_CLASSES).
 pub fn make_class_cloud(label: usize, n: usize, seed: u64) -> PointCloud {
     let mut rng = Rng64::new(seed ^ ((label as u64) << 32));

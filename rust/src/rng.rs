@@ -12,6 +12,7 @@ pub struct Rng64 {
 }
 
 impl Rng64 {
+    /// Seed the generator (SplitMix64 expands the seed into full state).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the full state.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -26,6 +27,7 @@ impl Rng64 {
         Self { s }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]

@@ -11,7 +11,7 @@
 //!   metadata falls back to the canonical PointNet2(c) geometry and
 //!   deterministic synthetic weights, so `cargo test -q` passes on a bare
 //!   toolchain with no HLO artifacts and no XLA runtime present.
-//! - [`pjrt::PjrtExecutor`] (`--features pjrt`) — loads the HLO text
+//! - `pjrt::PjrtExecutor` (`--features pjrt`) — loads the HLO text
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the CPU PJRT client (`PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → `compile` → `execute`, compiled
@@ -21,6 +21,15 @@
 //!
 //! Python never runs at inference time: `make artifacts` trains + lowers
 //! once; the Rust binary is self-contained afterwards.
+//!
+//! # Thread safety
+//!
+//! [`Executor`] is object-safe *and* thread-safe: every method takes
+//! `&self` (caches use interior mutability) and implementations must be
+//! `Send + Sync`, so one executor instance — and its prepared-artifact
+//! cache and weight storage — can be shared across the serving engine's
+//! worker lanes behind an [`std::sync::Arc`]
+//! (see [`crate::coordinator::serve`]).
 
 pub mod json;
 #[cfg(feature = "pjrt")]
@@ -31,31 +40,46 @@ use anyhow::{anyhow, Context, Result};
 use reference::ModelWeights;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Shape/dims contract of one lowered artifact (from meta.json).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
+    /// File name of the lowered HLO text, relative to the artifacts dir.
     pub file: String,
+    /// Row-major input shape the artifact was lowered with.
     pub input_shape: Vec<usize>,
+    /// Row-major output shape the artifact produces.
     pub output_shape: Vec<usize>,
 }
 
 /// The model-level metadata exported by `python/compile/aot.py`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelMeta {
+    /// Points per input cloud (classification artifacts are static-shape).
     pub n_points: usize,
+    /// Centroids sampled by set-abstraction level 1.
     pub s1: usize,
+    /// Neighbors grouped per level-1 centroid.
     pub k1: usize,
+    /// Level-1 grouping radius (normalized coordinates).
     pub r1: f32,
+    /// Centroids sampled by set-abstraction level 2.
     pub s2: usize,
+    /// Neighbors grouped per level-2 centroid.
     pub k2: usize,
+    /// Level-2 grouping radius (normalized coordinates).
     pub r2: f32,
+    /// Classifier output classes.
     pub num_classes: usize,
-    /// MLP channel trajectories (including input channels), mirroring
+    /// MLP1 channel trajectory (including input channels), mirroring
     /// `python/compile/model.py::MLP1..HEAD`.
     pub mlp1: Vec<usize>,
+    /// MLP2 channel trajectory (including input channels).
     pub mlp2: Vec<usize>,
+    /// MLP3 (global feature) channel trajectory.
     pub mlp3: Vec<usize>,
+    /// Classifier-head channel trajectory.
     pub head: Vec<usize>,
 }
 
@@ -84,8 +108,11 @@ impl ModelMeta {
 /// Parsed meta.json (or its synthetic stand-in when absent).
 #[derive(Debug, Clone)]
 pub struct Meta {
+    /// Model geometry (point counts, sampling sizes, channel dims).
     pub model: ModelMeta,
+    /// Artifact inventory keyed by name (`sa1`, `sa2_q16`, `head`, ...).
     pub artifacts: HashMap<String, ArtifactMeta>,
+    /// File name of the exported test set, relative to the artifacts dir.
     pub testset_file: String,
     /// fp32 weights for the reference executor, when meta.json carries a
     /// "weights" section (exported by `python/compile/aot.py`).
@@ -93,6 +120,7 @@ pub struct Meta {
 }
 
 impl Meta {
+    /// Parse `meta.json` out of an artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(artifacts_dir.join("meta.json"))
             .with_context(|| format!("reading meta.json in {artifacts_dir:?} (run `make artifacts`)"))?;
@@ -193,19 +221,39 @@ impl Meta {
 /// `load` prepares one artifact (compiles it, on PJRT); `execute` runs a
 /// single-input/single-output artifact on flattened row-major f32 data.
 /// Implementations cache prepared artifacts; `cached()` reports how many.
-pub trait Executor {
+///
+/// Thread-safety contract (relied on by the shard-parallel serving
+/// engine, [`crate::coordinator::serve`]):
+///
+/// - every method takes `&self` — mutable state (artifact caches,
+///   compiled executables) lives behind interior mutability
+///   (`RwLock`/`Mutex`), never behind `&mut self`;
+/// - implementations are `Send + Sync`, so one instance can be shared by
+///   N worker lanes via an `Arc` without cloning weight storage;
+/// - `execute` must be deterministic for a given (artifact, input) pair
+///   regardless of which thread calls it or in which order — the serving
+///   determinism tests (`rust/tests/serve_determinism.rs`) enforce this.
+pub trait Executor: Send + Sync {
     /// Human-readable backend name (for `pc2im info` and diagnostics).
     fn backend(&self) -> &'static str;
-    fn load(&mut self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()>;
-    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>>;
+    /// Prepare one artifact (compile + cache it where applicable).
+    fn load(&self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()>;
+    /// Run a prepared artifact on flattened row-major f32 input data.
+    fn execute(&self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>>;
+    /// Number of prepared artifacts currently cached.
     fn cached(&self) -> usize;
 }
 
 /// The execution engine: artifact metadata plus a pluggable [`Executor`].
+///
+/// The executor is held behind an `Arc` so several `Runtime` instances
+/// (one per serving lane) can share a single backend — same weight
+/// storage, same prepared-artifact cache ([`Runtime::with_shared`]).
 pub struct Runtime {
     artifacts_dir: PathBuf,
+    /// Artifact + model metadata this runtime was opened with.
     pub meta: Meta,
-    exec: Box<dyn Executor>,
+    exec: Arc<dyn Executor>,
 }
 
 impl Runtime {
@@ -231,24 +279,43 @@ impl Runtime {
         Ok(Self { artifacts_dir, meta, exec })
     }
 
+    /// Build a runtime around an *existing* executor + metadata, skipping
+    /// artifact discovery entirely. This is how the serving engine gives
+    /// every worker lane its own `Runtime` while all lanes share one
+    /// executor (weights and compiled-artifact cache are per-process, not
+    /// per-lane).
+    pub fn with_shared(
+        artifacts_dir: impl AsRef<Path>,
+        meta: Meta,
+        exec: Arc<dyn Executor>,
+    ) -> Self {
+        Self { artifacts_dir: artifacts_dir.as_ref().to_path_buf(), meta, exec }
+    }
+
+    /// A shareable handle to this runtime's executor (for
+    /// [`Runtime::with_shared`]).
+    pub fn executor(&self) -> Arc<dyn Executor> {
+        Arc::clone(&self.exec)
+    }
+
     #[cfg(feature = "pjrt")]
-    fn pick_executor(meta: &Meta, dir: &Path) -> Result<Box<dyn Executor>> {
+    fn pick_executor(meta: &Meta, dir: &Path) -> Result<Arc<dyn Executor>> {
         // Prefer PJRT when the HLO artifacts are actually on disk; fall
         // back to the reference interpreter otherwise (e.g. the vendored
         // xla stub, or a checkout without `make artifacts`).
         let have_hlo = meta.artifacts.values().any(|a| dir.join(&a.file).exists());
         if have_hlo {
             match pjrt::PjrtExecutor::new() {
-                Ok(exec) => return Ok(Box::new(exec)),
+                Ok(exec) => return Ok(Arc::new(exec)),
                 Err(e) => eprintln!("pjrt backend unavailable ({e}); using the reference executor"),
             }
         }
-        Ok(Box::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
+        Ok(Arc::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
     }
 
     #[cfg(not(feature = "pjrt"))]
-    fn pick_executor(meta: &Meta, _dir: &Path) -> Result<Box<dyn Executor>> {
-        Ok(Box::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
+    fn pick_executor(meta: &Meta, _dir: &Path) -> Result<Arc<dyn Executor>> {
+        Ok(Arc::new(reference::ReferenceExecutor::new(&meta.model, meta.weights.as_ref())?))
     }
 
     /// Which backend ended up executing (e.g. "reference" or "pjrt").
@@ -257,7 +324,7 @@ impl Runtime {
     }
 
     /// Prepare (and cache) the named artifact.
-    pub fn load(&mut self, name: &str) -> Result<()> {
+    pub fn load(&self, name: &str) -> Result<()> {
         let meta = self
             .meta
             .artifacts
@@ -269,7 +336,7 @@ impl Runtime {
     /// Execute a single-input/single-output artifact: `data` is the
     /// flattened f32 input (row-major, must match the artifact's
     /// input_shape); returns the flattened f32 output.
-    pub fn execute(&mut self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+    pub fn execute(&self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
         self.load(name)?;
         let meta = &self.meta.artifacts[name];
         let expect: usize = meta.input_shape.iter().product();
@@ -287,6 +354,7 @@ impl Runtime {
         self.exec.cached()
     }
 
+    /// The artifacts directory this runtime was opened on.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }
@@ -320,7 +388,7 @@ mod tests {
 
     #[test]
     fn sa1_executes_and_respects_relu_hermetically() {
-        let mut rt = Runtime::new(no_artifacts()).unwrap();
+        let rt = Runtime::new(no_artifacts()).unwrap();
         let n: usize = rt.meta.artifacts["sa1"].input_shape.iter().product();
         let input = vec![0.1f32; n];
         let out = rt.execute("sa1", &input).unwrap();
@@ -335,14 +403,14 @@ mod tests {
 
     #[test]
     fn wrong_input_size_rejected() {
-        let mut rt = Runtime::new(no_artifacts()).unwrap();
+        let rt = Runtime::new(no_artifacts()).unwrap();
         assert!(rt.execute("sa1", &[0.0; 7]).is_err());
         assert!(rt.execute("nonexistent", &[0.0; 7]).is_err());
     }
 
     #[test]
     fn head_produces_logits_that_can_go_negative() {
-        let mut rt = Runtime::new(no_artifacts()).unwrap();
+        let rt = Runtime::new(no_artifacts()).unwrap();
         let n: usize = rt.meta.artifacts["head"].input_shape.iter().product();
         let input: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.05).collect();
         let logits = rt.execute("head", &input).unwrap();

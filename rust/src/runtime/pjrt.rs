@@ -14,9 +14,22 @@ use super::{ArtifactMeta, Executor};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 /// The PJRT execution engine with a compiled-executable cache.
+///
+/// Thread safety per the [`Executor`] contract: the client *and* the
+/// executable cache sit inside one `Mutex`, so compilation and
+/// execution are serialized and no code path can touch the client
+/// outside the lock — the PJRT CPU client is structurally
+/// single-threaded here, and concurrent serving lanes simply queue on
+/// the lock (the CIM-preprocessing half of each request still overlaps).
 pub struct PjrtExecutor {
+    state: Mutex<PjrtState>,
+}
+
+/// Client + compiled-executable cache, guarded as one unit.
+struct PjrtState {
     client: xla::PjRtClient,
     execs: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -25,7 +38,7 @@ impl PjrtExecutor {
     /// Create a CPU PJRT client.
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, execs: HashMap::new() })
+        Ok(Self { state: Mutex::new(PjrtState { client, execs: HashMap::new() }) })
     }
 }
 
@@ -34,8 +47,9 @@ impl Executor for PjrtExecutor {
         "pjrt"
     }
 
-    fn load(&mut self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()> {
-        if self.execs.contains_key(name) {
+    fn load(&self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()> {
+        let mut state = self.state.lock().expect("PJRT state poisoned");
+        if state.execs.contains_key(name) {
             return Ok(());
         }
         let path = artifacts_dir.join(&meta.file);
@@ -44,20 +58,21 @@ impl Executor for PjrtExecutor {
         )
         .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
+        let exe = state
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.execs.insert(name.to_string(), exe);
+        state.execs.insert(name.to_string(), exe);
         Ok(())
     }
 
-    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+    fn execute(&self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
         let dims: Vec<i64> = meta.input_shape.iter().map(|&d| d as i64).collect();
         let lit = xla::Literal::vec1(data)
             .reshape(&dims)
             .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let exe = self
+        let state = self.state.lock().expect("PJRT state poisoned");
+        let exe = state
             .execs
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))?;
@@ -72,6 +87,6 @@ impl Executor for PjrtExecutor {
     }
 
     fn cached(&self) -> usize {
-        self.execs.len()
+        self.state.lock().expect("PJRT state poisoned").execs.len()
     }
 }

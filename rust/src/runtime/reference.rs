@@ -25,17 +25,23 @@ use crate::rng::Rng64;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashSet;
 use std::path::Path;
+use std::sync::RwLock;
 
 /// One dense layer: row-major `w[cin][cout]` plus bias.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DenseLayer {
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Row-major weight matrix, `cin * cout` values.
     pub w: Vec<f32>,
+    /// Bias vector, `cout` values.
     pub b: Vec<f32>,
 }
 
 impl DenseLayer {
+    /// Build a layer, validating the weight/bias dimensions.
     pub fn new(cin: usize, cout: usize, w: Vec<f32>, b: Vec<f32>) -> Result<Self> {
         ensure!(w.len() == cin * cout, "weight is {} values, want {cin}x{cout}", w.len());
         ensure!(b.len() == cout, "bias is {} values, want {cout}", b.len());
@@ -49,9 +55,13 @@ pub type Stack = Vec<DenseLayer>;
 /// All four weight stacks of the PointNet2(c) classifier.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct ModelWeights {
+    /// Set-abstraction level 1 MLP.
     pub mlp1: Stack,
+    /// Set-abstraction level 2 MLP.
     pub mlp2: Stack,
+    /// Global-feature MLP.
     pub mlp3: Stack,
+    /// Classifier head (no ReLU on the last layer).
     pub head: Stack,
 }
 
@@ -223,11 +233,16 @@ fn synthetic_weights(model: &ModelMeta) -> ModelWeights {
 }
 
 /// The default executor: interprets the feature graphs in f32.
+///
+/// Thread-safe per the [`Executor`] contract: the weight stacks are
+/// read-only after construction and the loaded-artifact bookkeeping sits
+/// behind an `RwLock`, so one instance serves any number of worker lanes
+/// concurrently (execution itself is lock-free).
 pub struct ReferenceExecutor {
     model: ModelMeta,
     fp: ModelWeights,
     q16: ModelWeights,
-    loaded: HashSet<String>,
+    loaded: RwLock<HashSet<String>>,
 }
 
 impl ReferenceExecutor {
@@ -267,7 +282,7 @@ impl ReferenceExecutor {
             mlp3: ptq16_stack(&fp.mlp3),
             head: ptq16_stack(&fp.head),
         };
-        Ok(Self { model: model.clone(), fp, q16, loaded: HashSet::new() })
+        Ok(Self { model: model.clone(), fp, q16, loaded: RwLock::new(HashSet::new()) })
     }
 
     fn weights_for(&self, quantized: bool) -> &ModelWeights {
@@ -333,7 +348,7 @@ impl Executor for ReferenceExecutor {
         "reference"
     }
 
-    fn load(&mut self, name: &str, _meta: &ArtifactMeta, _artifacts_dir: &Path) -> Result<()> {
+    fn load(&self, name: &str, _meta: &ArtifactMeta, _artifacts_dir: &Path) -> Result<()> {
         // Nothing to compile; loading just validates that the artifact is
         // one the interpreter knows how to run (l1_distance is accepted as
         // loadable — its numeric twin is `l1_distance_ref` — but is not a
@@ -343,11 +358,17 @@ impl Executor for ReferenceExecutor {
             matches!(base, "sa1" | "sa2" | "head" | "l1_distance"),
             "reference executor cannot interpret artifact {name:?}"
         );
-        self.loaded.insert(name.to_string());
+        // Read-lock fast path: execute() calls load() every time, so the
+        // steady state must not funnel concurrent lanes through an
+        // exclusive lock.
+        if self.loaded.read().expect("loaded-set lock poisoned").contains(name) {
+            return Ok(());
+        }
+        self.loaded.write().expect("loaded-set lock poisoned").insert(name.to_string());
         Ok(())
     }
 
-    fn execute(&mut self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+    fn execute(&self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
         let quantized = name.ends_with("_q16");
         let base = name.strip_suffix("_q16").unwrap_or(name);
         let w = self.weights_for(quantized);
@@ -362,7 +383,7 @@ impl Executor for ReferenceExecutor {
     }
 
     fn cached(&self) -> usize {
-        self.loaded.len()
+        self.loaded.read().expect("loaded-set lock poisoned").len()
     }
 }
 
@@ -428,7 +449,7 @@ mod tests {
     #[test]
     fn executor_rejects_unknown_artifacts() {
         let model = ModelMeta::canonical();
-        let mut exec = ReferenceExecutor::new(&model, None).unwrap();
+        let exec = ReferenceExecutor::new(&model, None).unwrap();
         let meta = ArtifactMeta {
             file: "bogus.hlo.txt".to_string(),
             input_shape: vec![1],

@@ -24,7 +24,7 @@ fn cfg() -> Option<PipelineConfig> {
 #[test]
 fn runtime_loads_all_artifacts() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(&dir).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
     let names: Vec<String> = rt.meta.artifacts.keys().cloned().collect();
     assert!(names.len() >= 6, "expected sa1/sa2/head (+q16): {names:?}");
     for name in names {
@@ -37,7 +37,7 @@ fn l1_distance_artifact_matches_engine() {
     // The lowered Pallas kernel and the bit-exact APD-CIM model must agree
     // (up to f32 rounding of the dequantized grid).
     let Some(dir) = artifacts_dir() else { return };
-    let mut rt = Runtime::new(&dir).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
     if !rt.meta.artifacts.contains_key("l1_distance") {
         return;
     }

@@ -96,7 +96,7 @@ fn runtime_opens_without_artifacts_and_uses_reference_backend() {
 
 #[test]
 fn q16_artifacts_track_fp32_closely() {
-    let mut rt = Runtime::new(no_artifacts_dir()).unwrap();
+    let rt = Runtime::new(no_artifacts_dir()).unwrap();
     let n: usize = rt.meta.artifacts["sa1"].input_shape.iter().product();
     let input: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.03).collect();
     let fp = rt.execute("sa1", &input).unwrap();
@@ -112,8 +112,8 @@ fn q16_artifacts_track_fp32_closely() {
 
 #[test]
 fn executor_is_deterministic_across_runtimes() {
-    let mut a = Runtime::new(no_artifacts_dir()).unwrap();
-    let mut b = Runtime::new(no_artifacts_dir()).unwrap();
+    let a = Runtime::new(no_artifacts_dir()).unwrap();
+    let b = Runtime::new(no_artifacts_dir()).unwrap();
     let n: usize = a.meta.artifacts["sa2"].input_shape.iter().product();
     let input: Vec<f32> = (0..n).map(|i| ((i * 7 % 29) as f32 - 14.0) * 0.01).collect();
     assert_eq!(a.execute("sa2", &input).unwrap(), b.execute("sa2", &input).unwrap());
@@ -168,8 +168,8 @@ fn hermetic_logits_do_not_depend_on_cwd_artifacts_naming() {
     // (synthetic weights are seeded by the model geometry, not the path).
     let d1 = std::env::temp_dir().join("pc2im-hermetic-a");
     let d2 = std::env::temp_dir().join("pc2im-hermetic-b");
-    let mut r1 = Runtime::new(&d1).unwrap();
-    let mut r2 = Runtime::new(&d2).unwrap();
+    let r1 = Runtime::new(&d1).unwrap();
+    let r2 = Runtime::new(&d2).unwrap();
     let n: usize = r1.meta.artifacts["sa1"].input_shape.iter().product();
     let input = vec![0.25f32; n];
     assert_eq!(r1.execute("sa1", &input).unwrap(), r2.execute("sa1", &input).unwrap());

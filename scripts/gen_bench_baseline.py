@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Generate BENCH_seed.json: the deterministic simulated-metric baseline.
+"""Generate BENCH_seed.json + BENCH_serve.json: deterministic baselines.
 
 This is a line-for-line mirror of the *analytic* accelerator models in
 `rust/src/accel/` (Pc2imModel, Baseline1, Baseline2, GpuModel) over the
@@ -9,6 +9,13 @@ make a stable perf-trajectory anchor: future PRs that change the cost
 models or workloads regenerate this file and the diff shows exactly what
 moved. Host wall-clock timings are machine-dependent and are therefore
 recorded by the CI smoke lane (PC2IM_BENCH_JSON), not committed.
+
+BENCH_serve.json is the serving-layer counterpart: the perf trajectory
+for `pc2im serve` tracked in clouds/sec. The committed numbers are the
+*modeled* accelerator-side throughput (each worker lane = one simulated
+PC2IM instance, so lanes scale linearly in the model); host-side
+clouds/sec is machine-dependent and recorded by the CI smoke lane
+running benches/serve_throughput.rs with PC2IM_BENCH_JSON.
 
 Run from the repo root:  python3 scripts/gen_bench_baseline.py
 """
@@ -295,6 +302,44 @@ def main():
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
+
+    # ---- BENCH_serve.json: the serving-layer clouds/sec trajectory ----
+    worker_sweep = [1, 2, 4, 8]
+    serve_scales = {}
+    for name, net in scales:
+        lat = latency_s(pc2im_run(net))
+        serve_scales[name] = {
+            "pc2im_latency_ms": round(lat * 1e3, 4),
+            "modeled_clouds_per_s": {
+                str(w): round(w / lat, 2) for w in worker_sweep
+            },
+        }
+    serve_out = {
+        "schema": 1,
+        "source": "scripts/gen_bench_baseline.py — serving-layer mirror of "
+                  "rust/src/coordinator/serve.rs over the accel models",
+        "note": (
+            "Modeled accelerator-side serving throughput: each worker lane is one "
+            "simulated PC2IM instance, so clouds/sec = workers / per-cloud simulated "
+            "latency (ideal linear scaling; the shared-executor host path saturates "
+            "earlier). Host clouds/sec is machine-dependent and recorded by the CI "
+            "bench smoke lane (benches/serve_throughput.rs, PC2IM_BENCH_JSON)."
+        ),
+        "engine": {
+            "queue_contract": "in-flight clouds <= queue_depth + workers",
+            "determinism_digest_fields": [
+                "n", "correct", "preproc_cycles", "feature_cycles", "energy_uj",
+            ],
+            "worker_sweep": worker_sweep,
+        },
+        "serve_throughput": serve_scales,
+    }
+    serve_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_serve.json"
+    )
+    with open(serve_path, "w") as f:
+        json.dump(serve_out, f, indent=1)
+        f.write("\n")
     # sanity: the bands asserted by rust/tests/integration_experiments.rs
     b1_16, b2_16, pc_16 = (fig12b["SemanticKITTI-like (16k)"][k]
                            for k in ("baseline1_uJ", "baseline2_uJ", "pc2im_uJ"))
@@ -305,8 +350,17 @@ def main():
     assert 1.2 < l["baseline2_ms"] / l["pc2im_ms"] < 3.0
     assert 2.0 < fig13c["gpu_latency_ms"] / fig13c["pc2im_latency_ms"] < 6.0
     assert 500.0 < fig13c["gpu_energy_J"] / fig13c["pc2im_energy_J"] < 4000.0
+    # serving sanity: 1-worker modeled throughput is the inverse latency,
+    # and the sweep scales linearly in the model
+    for name, _net in scales:
+        s = serve_scales[name]
+        one = s["modeled_clouds_per_s"]["1"]
+        assert abs(one * s["pc2im_latency_ms"] / 1e3 - 1.0) < 0.01, (name, s)
+        assert abs(s["modeled_clouds_per_s"]["8"] / one - 8.0) < 0.05, (name, s)
     print(f"wrote {os.path.normpath(path)}")
+    print(f"wrote {os.path.normpath(serve_path)}")
     print(json.dumps(out["fig13a_latency"], indent=1))
+    print(json.dumps(serve_out["serve_throughput"], indent=1))
 
 
 if __name__ == "__main__":
