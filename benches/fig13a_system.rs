@@ -7,8 +7,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use pc2im::config::PipelineConfig;
-use pc2im::coordinator::Pipeline;
+use pc2im::coordinator::PipelineBuilder;
 use pc2im::experiments;
 use pc2im::pointcloud::synthetic::make_class_cloud;
 
@@ -26,16 +25,12 @@ fn main() {
     // to the reference executor over deterministic synthetic weights, so
     // the end-to-end request path always benches (trained weights and the
     // PJRT backend are used automatically when `make artifacts` has run).
-    let mut approx = Pipeline::new(PipelineConfig::default()).unwrap();
+    let mut approx = PipelineBuilder::new().build().unwrap();
     let cloud = make_class_cloud(2, approx.meta().model.n_points, 77);
     harness::bench("full pipeline classify (approx L1 + executor)", 10, || {
         approx.classify(&cloud).unwrap()
     });
-    let mut exact = Pipeline::new(PipelineConfig {
-        exact_sampling: true,
-        ..PipelineConfig::default()
-    })
-    .unwrap();
+    let mut exact = PipelineBuilder::new().exact_sampling(true).build().unwrap();
     harness::bench("full pipeline classify (exact L2 + executor)", 10, || {
         exact.classify(&cloud).unwrap()
     });

@@ -1,19 +1,26 @@
-//! Serving-engine throughput: sweeps worker lanes x batch size through
-//! `ServeEngine::run` and reports clouds/sec alongside the harness's
-//! min/mean/max timings.
+//! Serving-engine throughput: sweeps fidelity tier x worker lanes x batch
+//! size through `ServeEngine::run` and reports clouds/sec alongside the
+//! harness's min/mean/max timings.
+//!
+//! The fidelity axis is the point: the `fast` tier must beat `bit-exact`
+//! on host clouds/sec while printing the *same* stats digest — the bench
+//! asserts digest equality across every cell of the sweep (worker counts
+//! and tiers alike).
 //!
 //! Run with: `cargo bench --bench serve_throughput`
 //! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
 //! `PC2IM_BENCH_SMOKE=1`; `PC2IM_BENCH_JSON=<path>` appends one JSON line
 //! per configuration for trend tracking. The committed deterministic
-//! anchor is BENCH_serve.json; host clouds/sec printed here is
-//! machine-dependent.)
+//! anchors are BENCH_serve.json and BENCH_fidelity.json; host clouds/sec
+//! printed here is machine-dependent.)
 
 #[path = "harness.rs"]
 mod harness;
 
-use pc2im::config::{PipelineConfig, ServeConfig};
-use pc2im::coordinator::serve::{stats_digest, ServeEngine};
+use pc2im::config::ServeConfig;
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::PipelineBuilder;
+use pc2im::engine::Fidelity;
 use pc2im::pointcloud::synthetic::make_labelled_batch;
 
 fn main() {
@@ -22,36 +29,38 @@ fn main() {
     let batch_sweep: &[usize] = if smoke { &[4] } else { &[8, 32] };
     let iters = if smoke { 1 } else { 3 };
 
-    harness::header("shard-parallel serving engine (workers x batch)");
+    harness::header("shard-parallel serving engine (fidelity x workers x batch)");
     let mut digest: Option<String> = None;
-    for &workers in worker_sweep {
-        for &batch in batch_sweep {
-            let mut engine = ServeEngine::new(
-                PipelineConfig::default(),
-                ServeConfig { workers, queue_depth: 8, ..ServeConfig::default() },
-            )
-            .expect("serving engine must build hermetically");
-            let n_points = engine.pipeline().meta().model.n_points;
-            let (clouds, labels) = make_labelled_batch(batch, n_points, 7000);
-            let hw = *engine.pipeline().hardware();
-            let name = format!("serve workers={workers} batch={batch}");
-            let mut last_digest = String::new();
-            let mean = harness::bench(&name, iters, || {
-                let report = engine.run(&clouds, &labels).expect("serve run");
-                last_digest = stats_digest(&report.stats, &hw);
-                report.results.len()
-            });
-            println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean.max(1e-12));
-            // determinism across the whole sweep: every (workers, batch)
-            // cell with the same per-cloud stream prefix agrees; compare
-            // the fixed smallest batch across worker counts.
-            if batch == batch_sweep[0] {
-                match &digest {
-                    None => digest = Some(last_digest.clone()),
-                    Some(d) => assert_eq!(
-                        d, &last_digest,
-                        "serve digest must not depend on worker count"
-                    ),
+    for fidelity in Fidelity::ALL {
+        for &workers in worker_sweep {
+            for &batch in batch_sweep {
+                let mut engine = PipelineBuilder::new()
+                    .fidelity(fidelity)
+                    .build_serve(ServeConfig { workers, queue_depth: 8, ..ServeConfig::default() })
+                    .expect("serving engine must build hermetically");
+                let n_points = engine.pipeline().meta().model.n_points;
+                let (clouds, labels) = make_labelled_batch(batch, n_points, 7000);
+                let hw = *engine.pipeline().hardware();
+                let name = format!("serve fid={fidelity} workers={workers} batch={batch}");
+                let mut last_digest = String::new();
+                let mean = harness::bench(&name, iters, || {
+                    let report = engine.run(&clouds, &labels).expect("serve run");
+                    last_digest = stats_digest(&report.stats, &hw);
+                    report.results.len()
+                });
+                println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean.max(1e-12));
+                // Determinism across the whole sweep: every cell with the
+                // same per-cloud stream prefix agrees — across worker
+                // counts AND fidelity tiers. Compare the fixed smallest
+                // batch everywhere.
+                if batch == batch_sweep[0] {
+                    match &digest {
+                        None => digest = Some(last_digest.clone()),
+                        Some(d) => assert_eq!(
+                            d, &last_digest,
+                            "serve digest must not depend on workers or fidelity"
+                        ),
+                    }
                 }
             }
         }

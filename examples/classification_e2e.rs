@@ -14,7 +14,7 @@
 //! Run with: `cargo run --release --example classification_e2e [limit]`
 
 use pc2im::config::PipelineConfig;
-use pc2im::coordinator::{BatchScheduler, BatchStats};
+use pc2im::coordinator::{BatchStats, PipelineBuilder};
 use pc2im::energy::Event;
 use pc2im::pointcloud::io::read_testset;
 use std::path::Path;
@@ -22,7 +22,7 @@ use std::time::Instant;
 
 fn eval(name: &str, cfg: PipelineConfig, limit: usize) -> anyhow::Result<BatchStats> {
     let dir = cfg.artifacts_dir.clone();
-    let mut sched = BatchScheduler::new(cfg)?;
+    let mut sched = PipelineBuilder::from_config(cfg).build_scheduler()?;
     let ts = read_testset(Path::new(&dir).join(&sched.pipeline().meta().testset_file))?;
     let n = ts.len().min(limit);
     let hw = *sched.pipeline().hardware();

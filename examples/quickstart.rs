@@ -8,13 +8,11 @@
 //! Run with: `cargo run --release --example quickstart`
 //! (requires `make artifacts` first).
 
-use pc2im::config::PipelineConfig;
-use pc2im::coordinator::Pipeline;
+use pc2im::coordinator::PipelineBuilder;
 use pc2im::pointcloud::synthetic::{make_class_cloud, CLASS_NAMES, NUM_CLASSES};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = PipelineConfig::default();
-    let mut pipeline = Pipeline::new(cfg)?;
+    let mut pipeline = PipelineBuilder::new().build()?;
     let hw = *pipeline.hardware();
     println!(
         "PC2IM quickstart — {} classes, {} points/cloud",

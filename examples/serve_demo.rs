@@ -11,19 +11,19 @@
 //! Run with: `cargo run --release --example serve_demo`
 //! (hermetic — works with or without `make artifacts`).
 
-use pc2im::config::{PipelineConfig, ServeConfig};
+use pc2im::config::ServeConfig;
 use pc2im::coordinator::serve::stats_digest;
-use pc2im::coordinator::{BatchScheduler, ServeEngine};
+use pc2im::coordinator::PipelineBuilder;
+use pc2im::engine::Fidelity;
 use pc2im::pointcloud::synthetic::make_labelled_batch;
 
 fn main() -> anyhow::Result<()> {
     let n = 24usize;
     let seed = 11u64;
 
-    let mut engine = ServeEngine::new(
-        PipelineConfig::default(),
-        ServeConfig { workers: 4, queue_depth: 8, ..ServeConfig::default() },
-    )?;
+    let mut engine = PipelineBuilder::new()
+        .fidelity(Fidelity::Fast)
+        .build_serve(ServeConfig { workers: 4, queue_depth: 8, ..ServeConfig::default() })?;
     let n_points = engine.pipeline().meta().model.n_points;
     let hw = *engine.pipeline().hardware();
     println!(
@@ -46,8 +46,9 @@ fn main() -> anyhow::Result<()> {
     let parallel_digest = stats_digest(&report.stats, &hw);
     println!("  digest: {parallel_digest}");
 
-    // Same stream through the single-threaded scheduler (--workers 1).
-    let mut sched = BatchScheduler::new(PipelineConfig::default())?;
+    // Same stream through the single-threaded bit-exact scheduler
+    // (--workers 1): different tier, different engine — same digest.
+    let mut sched = PipelineBuilder::new().build_scheduler()?;
     let t0 = std::time::Instant::now();
     let (_, stats) = sched.classify_batch(&clouds, &labels)?;
     let wall = t0.elapsed().as_secs_f64();

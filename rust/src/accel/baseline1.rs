@@ -19,6 +19,7 @@ use crate::network::pointnet2::NetworkDef;
 /// its pain is energy and the unpipelined global flow, not port width).
 const DIGITAL_POINTS_PER_CYCLE: u64 = 16;
 
+/// The global-digital baseline accelerator.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Baseline1;
 

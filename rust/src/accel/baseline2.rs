@@ -23,6 +23,7 @@ const DIGITAL_POINTS_PER_CYCLE: u64 = 8;
 /// Mean fill ratio of fixed-shape tiles (MSP reaches ~1.0; paper: +15%).
 pub const FIXED_TILE_UTILIZATION: f64 = 0.85;
 
+/// The TiPU-like tiled-digital SOTA baseline accelerator.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Baseline2;
 

@@ -48,6 +48,7 @@ impl Default for GpuParams {
 /// The GPU baseline.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GpuModel {
+    /// Calibration parameters of the modeled card.
     pub params: GpuParams,
 }
 

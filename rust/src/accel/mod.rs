@@ -21,15 +21,19 @@ use crate::network::pointnet2::NetworkDef;
 /// Cost of one pipeline stage.
 #[derive(Debug, Clone, Default)]
 pub struct StageCost {
+    /// Simulated cycles the stage occupies.
     pub cycles: u64,
+    /// Events the stage charged.
     pub ledger: EnergyLedger,
 }
 
 impl StageCost {
+    /// Stage time in seconds at the configured clock.
     pub fn time_s(&self, hw: &HardwareConfig) -> f64 {
         self.cycles as f64 * hw.cycle_time_s()
     }
 
+    /// Stage energy in picojoules under the given constants.
     pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
         self.ledger.total_pj(c)
     }
@@ -38,7 +42,9 @@ impl StageCost {
 /// Cost of a full forward pass, split the way the paper reports it.
 #[derive(Debug, Clone, Default)]
 pub struct RunCost {
+    /// Sampling/grouping (data preprocessing) stage cost.
     pub preprocessing: StageCost,
+    /// Feature-computing (MLP) stage cost.
     pub feature: StageCost,
     /// True if the design overlaps preprocessing with feature computing
     /// (tile-level pipelining): latency = max of stages instead of sum.
@@ -46,6 +52,7 @@ pub struct RunCost {
 }
 
 impl RunCost {
+    /// End-to-end cycles under the design's pipelining semantics.
     pub fn total_cycles(&self) -> u64 {
         if self.pipelined {
             self.preprocessing.cycles.max(self.feature.cycles)
@@ -54,14 +61,17 @@ impl RunCost {
         }
     }
 
+    /// End-to-end latency in seconds.
     pub fn latency_s(&self, hw: &HardwareConfig) -> f64 {
         self.total_cycles() as f64 * hw.cycle_time_s()
     }
 
+    /// Total energy (both stages) in picojoules.
     pub fn energy_pj(&self, c: &EnergyConstants) -> f64 {
         self.preprocessing.energy_pj(c) + self.feature.energy_pj(c)
     }
 
+    /// Both stages' ledgers folded into one.
     pub fn merged_ledger(&self) -> EnergyLedger {
         let mut l = self.preprocessing.ledger.clone();
         l.merge(&self.feature.ledger);
@@ -71,6 +81,7 @@ impl RunCost {
 
 /// An accelerator that can execute a PCN workload (cost-model view).
 pub trait Accelerator {
+    /// Human-readable design name (for tables and reports).
     fn name(&self) -> &'static str;
     /// Simulate one forward pass of the given network's workload.
     fn run(&self, net: &NetworkDef, hw: &HardwareConfig) -> RunCost;

@@ -74,7 +74,12 @@ pub struct CamArray {
 impl CamArray {
     /// An empty array with the given geometry.
     pub fn new(cfg: CamConfig) -> Self {
-        Self { cfg, pairs: vec![TdPair::default(); cfg.capacity()], cycles: 0, ledger: EnergyLedger::new() }
+        Self {
+            cfg,
+            pairs: vec![TdPair::default(); cfg.capacity()],
+            cycles: 0,
+            ledger: EnergyLedger::new(),
+        }
     }
 
     /// TD-pair capacity of this array.

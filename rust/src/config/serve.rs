@@ -1,5 +1,7 @@
 //! Configuration of the shard-parallel serving engine
-//! (`pc2im serve`, [`crate::coordinator::serve::ServeEngine`]).
+//! (`pc2im serve`, [`crate::coordinator::ServeEngine`]).
+
+use anyhow::{ensure, Result};
 
 /// Knobs of the serving engine: how many worker lanes, how deep the
 /// bounded request queue is, and which synthetic workload the CLI feeds
@@ -9,16 +11,23 @@
 /// request sequence the engine produces bit-identical logits and
 /// aggregated stats for every `workers`/`queue_depth` combination (see
 /// `rust/tests/serve_determinism.rs`).
+///
+/// Zero values are invalid — [`ServeConfig::validate`] rejects them with
+/// a clear error instead of silently clamping, and both the CLI and
+/// [`crate::coordinator::PipelineBuilder::build_serve`] call it before
+/// building the engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeConfig {
     /// Worker lanes, each owning one `Pipeline`. `1` degenerates to the
     /// single-threaded [`crate::coordinator::BatchScheduler`] behaviour.
+    /// Must be at least 1.
     pub workers: usize,
     /// Capacity of the bounded request queue; submission blocks when the
     /// queue is full, so at most `queue_depth + workers` clouds are ever
-    /// in flight (queued or being processed).
+    /// in flight (queued or being processed). Must be at least 1.
     pub queue_depth: usize,
-    /// Synthetic clouds the CLI generates for one serve run.
+    /// Synthetic clouds the CLI generates for one serve run. Must be at
+    /// least 1.
     pub n_clouds: usize,
     /// Base RNG seed for the synthetic request stream.
     pub seed: u64,
@@ -31,14 +40,26 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    /// Worker-lane count clamped to at least one.
-    pub fn lanes(&self) -> usize {
-        self.workers.max(1)
-    }
-
-    /// Queue capacity clamped to at least one slot.
-    pub fn depth(&self) -> usize {
-        self.queue_depth.max(1)
+    /// Reject nonsensical configurations loudly. A zero worker count,
+    /// queue depth or workload size is always a caller mistake (a typo'd
+    /// flag, usually) and must not be silently patched up.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.workers >= 1,
+            "serve needs at least one worker lane (got --workers {})",
+            self.workers
+        );
+        ensure!(
+            self.queue_depth >= 1,
+            "serve needs a request-queue depth of at least 1 (got --queue-depth {})",
+            self.queue_depth
+        );
+        ensure!(
+            self.n_clouds >= 1,
+            "serve needs at least one cloud in the workload (got --clouds {})",
+            self.n_clouds
+        );
+        Ok(())
     }
 }
 
@@ -47,15 +68,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn defaults_are_sane() {
-        let c = ServeConfig::default();
-        assert!(c.workers >= 1 && c.queue_depth >= 1 && c.n_clouds >= 1);
+    fn defaults_are_valid() {
+        ServeConfig::default().validate().unwrap();
     }
 
     #[test]
-    fn lanes_and_depth_clamp_to_one() {
-        let c = ServeConfig { workers: 0, queue_depth: 0, ..ServeConfig::default() };
-        assert_eq!(c.lanes(), 1);
-        assert_eq!(c.depth(), 1);
+    fn zero_values_rejected_loudly() {
+        for (cfg, needle) in [
+            (ServeConfig { workers: 0, ..ServeConfig::default() }, "--workers 0"),
+            (ServeConfig { queue_depth: 0, ..ServeConfig::default() }, "--queue-depth 0"),
+            (ServeConfig { n_clouds: 0, ..ServeConfig::default() }, "--clouds 0"),
+        ] {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
     }
 }

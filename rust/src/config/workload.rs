@@ -1,5 +1,6 @@
 //! Workload and pipeline configuration.
 
+use crate::engine::Fidelity;
 use crate::pointcloud::synthetic::DatasetScale;
 
 /// A benchmark workload: which dataset scale, how many clouds, which seed.
@@ -62,6 +63,9 @@ pub struct PipelineConfig {
     pub artifacts_dir: String,
     /// Number of tiles processed concurrently by the async scheduler.
     pub tile_parallelism: usize,
+    /// Engine implementation tier (bit-exact gate-level models vs the
+    /// fast native tier with identical outputs/cycles/ledgers).
+    pub fidelity: Fidelity,
 }
 
 impl Default for PipelineConfig {
@@ -71,6 +75,7 @@ impl Default for PipelineConfig {
             exact_sampling: false,
             artifacts_dir: "artifacts".to_string(),
             tile_parallelism: 2,
+            fidelity: Fidelity::BitExact,
         }
     }
 }
@@ -93,4 +98,6 @@ mod tests {
         let p = PipelineConfig::default();
         assert!(!p.quantized && !p.exact_sampling);
         assert_eq!(p.artifacts_dir, "artifacts");
-    }}
+        assert_eq!(p.fidelity, Fidelity::BitExact);
+    }
+}

@@ -1,0 +1,203 @@
+//! The one way to construct request-path machinery: [`PipelineBuilder`].
+//!
+//! Every consumer — `pc2im run/eval/serve`, the experiments, the benches,
+//! the examples — assembles its [`Pipeline`], [`BatchScheduler`] or
+//! [`ServeEngine`] here, so workload options, the hardware model,
+//! executor sharing and the engine fidelity tier are wired in exactly one
+//! place. Direct `Pipeline` construction is crate-private.
+//!
+//! ```no_run
+//! use pc2im::coordinator::PipelineBuilder;
+//! use pc2im::engine::Fidelity;
+//!
+//! let mut pipeline = PipelineBuilder::new()
+//!     .artifacts_dir("artifacts")
+//!     .fidelity(Fidelity::Fast)
+//!     .build()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use crate::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use crate::coordinator::pipeline::Pipeline;
+use crate::coordinator::scheduler::BatchScheduler;
+use crate::coordinator::serve::ServeEngine;
+use crate::engine::Fidelity;
+use crate::runtime::{Executor, Meta, Runtime};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Builder for [`Pipeline`] and the engines layered on top of it.
+///
+/// Defaults mirror [`PipelineConfig::default`] and
+/// [`HardwareConfig::default`]: the `artifacts` directory, approximate
+/// sampling, fp32 artifacts, the bit-exact engine tier.
+#[derive(Default)]
+pub struct PipelineBuilder {
+    cfg: PipelineConfig,
+    hw: HardwareConfig,
+    shared: Option<(Meta, Arc<dyn Executor>)>,
+}
+
+impl PipelineBuilder {
+    /// A builder with all defaults.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start from an existing [`PipelineConfig`] (the CLI path).
+    pub fn from_config(cfg: PipelineConfig) -> Self {
+        Self { cfg, ..Self::default() }
+    }
+
+    /// Directory holding `meta.json` and the HLO artifacts.
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Use the quantized (q16) model artifacts.
+    pub fn quantized(mut self, on: bool) -> Self {
+        self.cfg.quantized = on;
+        self
+    }
+
+    /// Use exact L2 FPS + ball query instead of the approximate pipeline
+    /// (the Fig. 12(a) ablation switch).
+    pub fn exact_sampling(mut self, on: bool) -> Self {
+        self.cfg.exact_sampling = on;
+        self
+    }
+
+    /// Worker threads for the scheduler's warm/prefetch phase.
+    pub fn tile_parallelism(mut self, n: usize) -> Self {
+        self.cfg.tile_parallelism = n;
+        self
+    }
+
+    /// Engine implementation tier ([`Fidelity::BitExact`] by default).
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.cfg.fidelity = fidelity;
+        self
+    }
+
+    /// Replace the hardware model used for latency/energy pricing.
+    pub fn hardware(mut self, hw: HardwareConfig) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Reuse an existing executor + metadata instead of re-opening the
+    /// artifacts directory — the serving engine's per-lane path: every
+    /// lane gets its own `Pipeline` (engine models are single-owner)
+    /// while all lanes share one thread-safe executor, i.e. one weight
+    /// store and one prepared-artifact cache.
+    pub fn share_executor(mut self, meta: Meta, exec: Arc<dyn Executor>) -> Self {
+        self.shared = Some((meta, exec));
+        self
+    }
+
+    /// The pipeline configuration accumulated so far.
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Build a single [`Pipeline`] (opens the artifacts directory unless
+    /// an executor is shared in).
+    pub fn build(self) -> Result<Pipeline> {
+        let rt = match self.shared {
+            Some((meta, exec)) => Runtime::with_shared(&self.cfg.artifacts_dir, meta, exec),
+            None => Runtime::new(&self.cfg.artifacts_dir)
+                .with_context(|| format!("loading artifacts from {:?}", self.cfg.artifacts_dir))?,
+        };
+        Ok(Pipeline::from_parts(rt, self.hw, self.cfg))
+    }
+
+    /// Build the single-threaded [`BatchScheduler`] around one pipeline
+    /// (`tile_parallelism` sizes its warm-phase worker pool).
+    pub fn build_scheduler(self) -> Result<BatchScheduler> {
+        Ok(BatchScheduler::around(self.build()?))
+    }
+
+    /// Build the shard-parallel [`ServeEngine`]: validates `serve_cfg`,
+    /// opens the artifacts directory once, then gives each of the
+    /// `serve_cfg.workers` lanes its own pipeline around the one shared
+    /// executor (lanes never hold a redundant copy of the weights).
+    pub fn build_serve(self, serve_cfg: ServeConfig) -> Result<ServeEngine> {
+        serve_cfg.validate()?;
+        let hw = self.hw;
+        let cfg = self.cfg.clone();
+        // Bootstrap pipeline: opens the artifacts directory (or adopts an
+        // already-shared executor), picks the backend, builds the one
+        // executor everything shares. Dropped after lane construction.
+        let boot = self.build()?;
+        let exec = boot.executor();
+        // Lanes only need the geometry/artifact inventory; the fp32
+        // weight stacks live once, inside the shared executor — strip
+        // them before fanning the metadata out so no lane (lane 0
+        // included) holds a redundant copy of the model.
+        let mut meta = boot.meta().clone();
+        meta.weights = None;
+        let lanes = (0..serve_cfg.workers)
+            .map(|_| {
+                PipelineBuilder::from_config(cfg.clone())
+                    .hardware(hw)
+                    .share_executor(meta.clone(), exec.clone())
+                    .build()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ServeEngine::from_lanes(lanes, serve_cfg.queue_depth))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hermetic() -> PipelineBuilder {
+        PipelineBuilder::new().artifacts_dir(
+            std::env::temp_dir()
+                .join("pc2im-builder-no-artifacts")
+                .to_string_lossy()
+                .into_owned(),
+        )
+    }
+
+    #[test]
+    fn builder_options_land_in_config() {
+        let b = hermetic()
+            .quantized(true)
+            .exact_sampling(true)
+            .tile_parallelism(5)
+            .fidelity(Fidelity::Fast);
+        assert!(b.config().quantized);
+        assert!(b.config().exact_sampling);
+        assert_eq!(b.config().tile_parallelism, 5);
+        assert_eq!(b.config().fidelity, Fidelity::Fast);
+    }
+
+    #[test]
+    fn builds_pipeline_hermetically() {
+        let p = hermetic().build().unwrap();
+        assert_eq!(p.backend(), "reference");
+        assert_eq!(p.meta().model.n_points, 1024);
+    }
+
+    #[test]
+    fn shared_executor_is_one_instance() {
+        let boot = hermetic().build().unwrap();
+        let exec = boot.executor();
+        let mut meta = boot.meta().clone();
+        meta.weights = None;
+        let lane = hermetic().share_executor(meta, exec.clone()).build().unwrap();
+        assert!(Arc::ptr_eq(&exec, &lane.executor()));
+    }
+
+    #[test]
+    fn build_serve_rejects_zero_workers() {
+        let err = hermetic()
+            .build_serve(ServeConfig { workers: 0, ..ServeConfig::default() })
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("--workers 0"), "{err}");
+    }
+}

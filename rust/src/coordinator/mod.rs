@@ -1,7 +1,9 @@
 //! The Layer-3 coordinator: the request path that glues MSP tiling, the
-//! CIM preprocessing engines, and the numeric feature executor into the
+//! fidelity-tiered CIM engines, and the numeric feature executor into the
 //! paper's Fig. 3(b) computing flow.
 //!
+//! [`builder`] is the single construction point ([`PipelineBuilder`]:
+//! workload config, hardware config, executor sharing, fidelity tier);
 //! [`pipeline`] runs one cloud end-to-end (event-accurate engine models +
 //! real executor numerics); [`scheduler`] overlaps preprocessing of the
 //! next clouds with feature execution of the current one on a single
@@ -10,11 +12,13 @@
 //! queue (the `pc2im serve` engine); [`stats`] aggregates
 //! accuracy/latency/energy.
 
+pub mod builder;
 pub mod pipeline;
 pub mod scheduler;
 pub mod serve;
 pub mod stats;
 
+pub use builder::PipelineBuilder;
 pub use pipeline::{CloudResult, Pipeline};
 pub use scheduler::BatchScheduler;
 pub use serve::{ServeEngine, ServeReport};

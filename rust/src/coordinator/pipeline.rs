@@ -6,26 +6,33 @@
 //!   (reference interpreter by default, PJRT with `--features pjrt`) →
 //!   logits.
 //!
-//! Preprocessing runs through the *bit-exact engine models* (so cycles and
-//! the event ledger are event-accurate), feature computing runs through
-//! real numerics (trained weights when artifacts exist, deterministic
-//! synthetic ones otherwise), and the SC-CIM cost model prices the same
-//! matmuls the executor runs.
+//! Preprocessing and feature pricing run through the fidelity-tiered
+//! engine traits ([`crate::engine`]): the `BitExact` tier simulates the
+//! gate-level models, the `Fast` tier computes natively — both charge
+//! identical cycles and ledger events, so every simulated statistic is
+//! tier-invariant. Feature computing runs through real numerics (trained
+//! weights when artifacts exist, deterministic synthetic ones otherwise),
+//! and the SC-CIM cost model prices the same matmuls the executor runs.
+//!
+//! Construction goes through [`crate::coordinator::PipelineBuilder`] —
+//! the one place that wires workload config, hardware config, executor
+//! sharing and the fidelity tier together.
 //!
 //! The `exact_sampling` ablation replaces the whole approximate
 //! preprocessing chain with float L2 FPS + ball query (Fig. 12(a)).
 
-use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
-use crate::cim::max_cam::{CamArray, CamConfig};
-use crate::cim::sc_cim::{ScCim, ScCimConfig};
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
+use crate::cim::sc_cim::ScCimConfig;
 use crate::cim::sorter::TopKSorter;
 use crate::config::{HardwareConfig, PipelineConfig};
 use crate::coordinator::stats::CloudStats;
+use crate::engine::{self, DistanceEngine, MaxSearchEngine};
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
 use crate::sampling::{self, LATTICE_SCALE};
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -50,7 +57,8 @@ pub struct LevelIndices {
     pub groups: Vec<Vec<usize>>,
 }
 
-/// The coordinator pipeline.
+/// The coordinator pipeline. Built by
+/// [`crate::coordinator::PipelineBuilder`].
 pub struct Pipeline {
     rt: Runtime,
     hw: HardwareConfig,
@@ -58,36 +66,15 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Open the configured artifacts directory and build the request path
-    /// (picks the best available executor backend).
-    pub fn new(cfg: PipelineConfig) -> Result<Self> {
-        let rt = Runtime::new(&cfg.artifacts_dir)
-            .with_context(|| format!("loading artifacts from {:?}", cfg.artifacts_dir))?;
-        Ok(Self { rt, hw: HardwareConfig::default(), cfg })
-    }
-
-    /// Build a pipeline whose runtime reuses an *existing* executor and
-    /// metadata instead of re-opening the artifacts directory. This is
-    /// the serving engine's per-lane constructor: every lane gets its own
-    /// `Pipeline` (engine models are single-owner) while all lanes share
-    /// one thread-safe executor — same weights, same artifact cache.
-    pub fn with_shared_executor(
-        cfg: PipelineConfig,
-        meta: crate::runtime::Meta,
-        exec: Arc<dyn crate::runtime::Executor>,
-    ) -> Self {
-        let rt = Runtime::with_shared(&cfg.artifacts_dir, meta, exec);
-        Self { rt, hw: HardwareConfig::default(), cfg }
-    }
-
-    /// Replace the hardware model (builder-style).
-    pub fn with_hardware(mut self, hw: HardwareConfig) -> Self {
-        self.hw = hw;
-        self
+    /// Assemble a pipeline from an already-opened runtime plus configs.
+    /// Only [`crate::coordinator::PipelineBuilder`] calls this; every
+    /// external constructor goes through the builder.
+    pub(crate) fn from_parts(rt: Runtime, hw: HardwareConfig, cfg: PipelineConfig) -> Self {
+        Self { rt, hw, cfg }
     }
 
     /// A shareable handle to the runtime's executor (for
-    /// [`Pipeline::with_shared_executor`]).
+    /// [`crate::coordinator::PipelineBuilder::share_executor`]).
     pub fn executor(&self) -> Arc<dyn crate::runtime::Executor> {
         self.rt.executor()
     }
@@ -110,11 +97,12 @@ impl Pipeline {
         }
     }
 
-    /// FPS through the APD-CIM + MAX-CAM engines (the paper's Fig. 10(b)
-    /// flow). Returns sampled indices; charges cycles/energy to the engines.
+    /// FPS through the distance + MAX-search engines (the paper's
+    /// Fig. 10(b) flow). Returns sampled indices; charges cycles/energy
+    /// to the engines. Works on either fidelity tier.
     pub fn cam_fps(
-        apd: &mut ApdCim,
-        cam: &mut CamArray,
+        apd: &mut dyn DistanceEngine,
+        cam: &mut dyn MaxSearchEngine,
         m: usize,
         start: usize,
     ) -> Vec<usize> {
@@ -124,7 +112,7 @@ impl Pipeline {
         let mut idx = Vec::with_capacity(m);
         idx.push(start);
         for _ in 1..m {
-            let (_, best) = cam.bit_cam_max();
+            let (_, best) = cam.max_search();
             idx.push(best);
             cam.invalidate(best);
             let d = apd.scan_distances(best);
@@ -135,12 +123,12 @@ impl Pipeline {
         idx
     }
 
-    /// Lattice query on the APD-CIM: one distance scan per centroid, hits
-    /// filtered against the grid-space range; the sorter/merger unit
-    /// (Fig. 3(a)) keeps the k *nearest* in-range points and its
-    /// cycle/energy cost is charged alongside the scan's.
+    /// Lattice query on the distance engine: one distance scan per
+    /// centroid, hits filtered against the grid-space range; the
+    /// sorter/merger unit (Fig. 3(a)) keeps the k *nearest* in-range
+    /// points and its cycle/energy cost is charged alongside the scan's.
     fn cam_lattice_query(
-        apd: &mut ApdCim,
+        apd: &mut dyn DistanceEngine,
         centroids: &[usize],
         grid_range: u32,
         k: usize,
@@ -199,13 +187,13 @@ impl Pipeline {
             stats.preproc_cycles += trace.point_reads / 8;
             LevelIndices { centroids, groups }
         } else {
-            let mut apd = ApdCim::new(ApdCimConfig::default());
+            let mut apd = engine::distance_engine(self.cfg.fidelity, ApdCimConfig::default());
             apd.load_tile(pts_q);
-            let mut cam = CamArray::new(CamConfig::default());
-            let centroids = Self::cam_fps(&mut apd, &mut cam, m, 0);
+            let mut cam = engine::max_search_engine(self.cfg.fidelity, CamConfig::default());
+            let centroids = Self::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
             let grid_range = quant::radius_to_grid(LATTICE_SCALE * radius);
             let groups =
-                Self::cam_lattice_query(&mut apd, &centroids, grid_range, k, stats);
+                Self::cam_lattice_query(apd.as_mut(), &centroids, grid_range, k, stats);
             stats.preproc_cycles += apd.cycles() + cam.cycles();
             stats.ledger.merge(apd.ledger());
             stats.ledger.merge(cam.ledger());
@@ -227,7 +215,7 @@ impl Pipeline {
         );
         let t0 = Instant::now();
         let mut stats = CloudStats::default();
-        let mut sc = ScCim::new(ScCimConfig::default());
+        let mut sc = engine::mac_engine(self.cfg.fidelity, ScCimConfig::default());
 
         // On the approximate path the network "sees" PTQ16 coordinates:
         // quantize then dequantize (half-LSB rounding), exactly what the
@@ -323,6 +311,8 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::PipelineBuilder;
+    use crate::engine::Fidelity;
     use crate::pointcloud::synthetic::make_class_cloud;
     use std::path::PathBuf;
 
@@ -337,7 +327,7 @@ mod tests {
     #[test]
     fn classify_produces_logits_and_costs() {
         let Some(cfg) = cfg() else { return };
-        let mut p = Pipeline::new(cfg).unwrap();
+        let mut p = PipelineBuilder::from_config(cfg).build().unwrap();
         let cloud = make_class_cloud(0, 1024, 5);
         let r = p.classify(&cloud).unwrap();
         assert_eq!(r.logits.len(), 8);
@@ -351,8 +341,11 @@ mod tests {
         // The Fig. 12(a) argument in miniature: approximate sampling should
         // classify most clouds the same way as exact sampling.
         let Some(cfg) = cfg() else { return };
-        let mut exact = Pipeline::new(PipelineConfig { exact_sampling: true, ..cfg.clone() }).unwrap();
-        let mut approx = Pipeline::new(cfg).unwrap();
+        let mut exact = PipelineBuilder::from_config(cfg.clone())
+            .exact_sampling(true)
+            .build()
+            .unwrap();
+        let mut approx = PipelineBuilder::from_config(cfg).build().unwrap();
         let mut agree = 0;
         let n = 10usize;
         for seed in 0..n {
@@ -362,5 +355,22 @@ mod tests {
             agree += (a.pred == b.pred) as usize;
         }
         assert!(agree * 10 >= n * 7, "agreement {agree}/{n}");
+    }
+
+    #[test]
+    fn fast_tier_classifies_identically() {
+        let Some(cfg) = cfg() else { return };
+        let mut exact = PipelineBuilder::from_config(cfg.clone()).build().unwrap();
+        let mut fast = PipelineBuilder::from_config(cfg)
+            .fidelity(Fidelity::Fast)
+            .build()
+            .unwrap();
+        let cloud = make_class_cloud(3, 1024, 21);
+        let a = exact.classify(&cloud).unwrap();
+        let b = fast.classify(&cloud).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles);
+        assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles);
+        assert_eq!(a.stats.ledger, b.stats.ledger);
     }
 }

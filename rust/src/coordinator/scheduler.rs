@@ -12,12 +12,14 @@
 //! [`crate::coordinator::serve::aggregate`] does, which keeps the
 //! Fig. 13 experiment path byte-for-byte unchanged while the two engines
 //! stay bit-identical (enforced by `rust/tests/serve_determinism.rs`).
+//!
+//! Built by [`crate::coordinator::PipelineBuilder::build_scheduler`].
 
-use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
-use crate::cim::max_cam::{CamArray, CamConfig};
-use crate::config::PipelineConfig;
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
 use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::stats::BatchStats;
+use crate::engine;
 use crate::pointcloud::PointCloud;
 use anyhow::Result;
 use std::sync::mpsc;
@@ -30,11 +32,13 @@ pub struct BatchScheduler {
 }
 
 impl BatchScheduler {
-    /// Build a scheduler around one pipeline; `cfg.tile_parallelism`
-    /// sizes the warm-phase worker pool.
-    pub fn new(cfg: PipelineConfig) -> Result<Self> {
-        let workers = cfg.tile_parallelism.max(1);
-        Ok(Self { pipeline: Pipeline::new(cfg)?, workers })
+    /// Wrap a built pipeline; the pipeline config's `tile_parallelism`
+    /// sizes the warm-phase worker pool. Only
+    /// [`crate::coordinator::PipelineBuilder::build_scheduler`] calls
+    /// this.
+    pub(crate) fn around(pipeline: Pipeline) -> Self {
+        let workers = pipeline.config().tile_parallelism.max(1);
+        Self { pipeline, workers }
     }
 
     /// Classify a labelled set; returns (predictions, stats).
@@ -56,7 +60,9 @@ impl BatchScheduler {
         // Warm phase: run the quantize+FPS part of upcoming clouds on
         // worker threads. This emulates the double-buffered tile flow; the
         // warm results only serve as prefetch (deterministic recompute
-        // below keeps bookkeeping exact and single-owner).
+        // below keeps bookkeeping exact and single-owner). Engines come
+        // from the configured fidelity tier, same as the real run.
+        let fidelity = self.pipeline.config().fidelity;
         if self.workers > 1 && clouds.len() > 1 {
             let (tx, rx) = mpsc::channel::<usize>();
             std::thread::scope(|scope| {
@@ -65,13 +71,15 @@ impl BatchScheduler {
                     scope.spawn(move || {
                         for (i, cloud) in chunk.iter().enumerate() {
                             let q = crate::quant::quantize_cloud(cloud);
-                            if q.len() <= ApdCimConfig::default().capacity() {
-                                let mut apd = ApdCim::new(ApdCimConfig::default());
+                            let mut apd =
+                                engine::distance_engine(fidelity, ApdCimConfig::default());
+                            if q.len() <= apd.capacity() {
                                 apd.load_tile(&q);
-                                let mut cam = CamArray::new(CamConfig::default());
+                                let mut cam =
+                                    engine::max_search_engine(fidelity, CamConfig::default());
                                 // prefetch: first 32 FPS iterations
                                 let m = 32.min(q.len());
-                                let _ = Pipeline::cam_fps(&mut apd, &mut cam, m, 0);
+                                let _ = Pipeline::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
                             }
                             let _ = tx.send(w * 1_000_000 + i);
                         }
@@ -111,6 +119,8 @@ impl BatchScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PipelineConfig;
+    use crate::coordinator::PipelineBuilder;
     use crate::pointcloud::synthetic::make_class_cloud;
     use std::path::PathBuf;
 
@@ -125,7 +135,7 @@ mod tests {
             tile_parallelism: 2,
             ..PipelineConfig::default()
         };
-        let mut sched = BatchScheduler::new(cfg).unwrap();
+        let mut sched = PipelineBuilder::from_config(cfg).build_scheduler().unwrap();
         let clouds: Vec<_> = (0..4).map(|i| make_class_cloud(i % 8, 1024, 50 + i as u64)).collect();
         let labels: Vec<i32> = (0..4).map(|i| (i % 8) as i32).collect();
         let (preds, stats) = sched.classify_batch(&clouds, &labels).unwrap();

@@ -25,7 +25,7 @@
 //! Backpressure contract: at most `queue_depth + workers` clouds are in
 //! flight at once. Both are enforced by `rust/tests/serve_determinism.rs`.
 
-use crate::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use crate::config::HardwareConfig;
 use crate::coordinator::pipeline::{CloudResult, Pipeline};
 use crate::coordinator::stats::BatchStats;
 use crate::pointcloud::PointCloud;
@@ -98,34 +98,22 @@ pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
 }
 
 /// The shard-parallel serving engine: N worker lanes over a bounded
-/// request queue, sharing one executor.
+/// request queue, sharing one executor. Built by
+/// [`crate::coordinator::PipelineBuilder::build_serve`], which validates
+/// the [`crate::config::ServeConfig`] and wires one shared executor
+/// through every lane.
 pub struct ServeEngine {
     lanes: Vec<Pipeline>,
     depth: usize,
 }
 
 impl ServeEngine {
-    /// Build the engine: a bootstrap pipeline opens the artifacts
-    /// directory once (so the "no trained weights" diagnostic prints
-    /// once, not N times), then every lane is built around its executor
-    /// via [`Pipeline::with_shared_executor`] — one weight store for the
-    /// whole engine.
-    pub fn new(pipe_cfg: PipelineConfig, serve_cfg: ServeConfig) -> Result<Self> {
-        // Bootstrap pipeline: opens the artifacts directory, picks the
-        // backend, builds the one executor everything shares. Dropped
-        // after lane construction.
-        let boot = Pipeline::new(pipe_cfg.clone())?;
-        let exec = boot.executor();
-        // Lanes only need the geometry/artifact inventory; the fp32
-        // weight stacks live once, inside the shared executor — strip
-        // them before fanning the metadata out so no lane (lane 0
-        // included) holds a redundant copy of the model.
-        let mut meta = boot.meta().clone();
-        meta.weights = None;
-        let lanes = (0..serve_cfg.lanes())
-            .map(|_| Pipeline::with_shared_executor(pipe_cfg.clone(), meta.clone(), exec.clone()))
-            .collect();
-        Ok(Self { lanes, depth: serve_cfg.depth() })
+    /// Assemble the engine from already-built worker-lane pipelines and a
+    /// validated queue depth. Only
+    /// [`crate::coordinator::PipelineBuilder::build_serve`] calls this.
+    pub(crate) fn from_lanes(lanes: Vec<Pipeline>, depth: usize) -> Self {
+        assert!(!lanes.is_empty() && depth >= 1, "builder validates ServeConfig first");
+        Self { lanes, depth }
     }
 
     /// Worker-lane count.
@@ -235,6 +223,8 @@ impl ServeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{PipelineConfig, ServeConfig};
+    use crate::coordinator::PipelineBuilder;
     use crate::pointcloud::synthetic::make_labelled_batch;
 
     fn hermetic_cfg() -> PipelineConfig {
@@ -254,11 +244,9 @@ mod tests {
     #[test]
     fn engine_serves_and_aggregates_in_order() {
         let (clouds, labels) = workload(4);
-        let mut engine = ServeEngine::new(
-            hermetic_cfg(),
-            ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() },
-        )
-        .unwrap();
+        let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+            .build_serve(ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() })
+            .unwrap();
         let report = engine.run(&clouds, &labels).unwrap();
         assert_eq!(report.results.len(), 4);
         assert_eq!(report.stats.n, 4);
@@ -275,7 +263,7 @@ mod tests {
     #[test]
     fn aggregate_matches_manual_fold() {
         let (clouds, labels) = workload(2);
-        let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+        let mut pipe = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
         let results: Vec<CloudResult> =
             clouds.iter().map(|c| pipe.classify(c).unwrap()).collect();
         let agg = aggregate(&results, &labels);
@@ -293,7 +281,7 @@ mod tests {
     #[test]
     fn digest_is_stable_and_excludes_wall_clock() {
         let (clouds, labels) = workload(1);
-        let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+        let mut pipe = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
         let results: Vec<CloudResult> =
             clouds.iter().map(|c| pipe.classify(c).unwrap()).collect();
         let hw = HardwareConfig::default();

@@ -53,18 +53,22 @@ impl AreaModel {
         storage + n_units * unit
     }
 
+    /// BS-CIM macro area at the given storage/SCR point.
     pub fn bs_area(&self, capacity_bits: u64, row_bits: u64, scr: u64) -> f64 {
         self.macro_area(capacity_bits, row_bits, scr, self.bs_unit)
     }
 
+    /// BT-CIM macro area at the given storage/SCR point.
     pub fn bt_area(&self, capacity_bits: u64, row_bits: u64, scr: u64) -> f64 {
         self.macro_area(capacity_bits, row_bits, scr, self.bt_unit)
     }
 
+    /// SC-CIM macro area at the given storage/SCR point.
     pub fn sc_area(&self, capacity_bits: u64, row_bits: u64, scr: u64) -> f64 {
         self.macro_area(capacity_bits, row_bits, scr, self.sc_unit)
     }
 
+    /// Naive (unfused) SC-CIM macro area at the given storage/SCR point.
     pub fn sc_naive_area(&self, capacity_bits: u64, row_bits: u64, scr: u64) -> f64 {
         self.macro_area(capacity_bits, row_bits, scr, self.sc_naive_unit)
     }

@@ -39,6 +39,7 @@ pub enum CimScheme {
 }
 
 impl CimScheme {
+    /// Display name of the scheme.
     pub fn name(self) -> &'static str {
         match self {
             CimScheme::BitSerial => "BS-CIM",
@@ -73,6 +74,7 @@ impl CimScheme {
         }
     }
 
+    /// Every scheme, in the paper's presentation order.
     pub const ALL: [CimScheme; 3] =
         [CimScheme::BitSerial, CimScheme::Booth, CimScheme::SplitConcat];
 }

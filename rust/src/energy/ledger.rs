@@ -36,6 +36,7 @@ pub enum Event {
 }
 
 impl Event {
+    /// Energy of one occurrence of this event in picojoules.
     pub fn unit_energy_pj(self, c: &EnergyConstants) -> f64 {
         match self {
             Event::DramBit => c.dram_bit,
@@ -63,15 +64,18 @@ pub struct EnergyLedger {
 }
 
 impl EnergyLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record `n` occurrences of `ev`.
     #[inline]
     pub fn charge(&mut self, ev: Event, n: u64) {
         *self.counts.entry(ev).or_insert(0) += n;
     }
 
+    /// Occurrences of `ev` recorded so far.
     pub fn count(&self, ev: Event) -> u64 {
         self.counts.get(&ev).copied().unwrap_or(0)
     }
@@ -117,6 +121,7 @@ impl EnergyLedger {
         }
     }
 
+    /// True when nothing has been charged yet.
     pub fn is_empty(&self) -> bool {
         self.counts.is_empty()
     }

@@ -1,0 +1,100 @@
+//! The `BitExact` tier: the gate-level models in [`crate::cim`] exposed
+//! through the engine traits.
+//!
+//! These impls are pure delegation — [`ApdCim`], [`CamArray`] and
+//! [`ScCim`] already carry the exact cycle and event accounting the
+//! traits demand; the trait layer only makes them interchangeable with
+//! the [`super::fast`] tier.
+
+use super::{DistanceEngine, MacEngine, MaxSearchEngine};
+use crate::cim::apd_cim::ApdCim;
+use crate::cim::max_cam::CamArray;
+use crate::cim::sc_cim::ScCim;
+use crate::energy::EnergyLedger;
+use crate::quant::QPoint3;
+
+impl DistanceEngine for ApdCim {
+    fn capacity(&self) -> usize {
+        self.config().capacity()
+    }
+
+    fn len(&self) -> usize {
+        ApdCim::len(self)
+    }
+
+    fn load_tile(&mut self, tile: &[QPoint3]) {
+        ApdCim::load_tile(self, tile);
+    }
+
+    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
+        ApdCim::scan_distances(self, ref_idx)
+    }
+
+    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
+        ApdCim::scan_distances_to(self, r)
+    }
+
+    fn cycles(&self) -> u64 {
+        ApdCim::cycles(self)
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        ApdCim::ledger(self)
+    }
+}
+
+impl MaxSearchEngine for CamArray {
+    fn capacity(&self) -> usize {
+        CamArray::capacity(self)
+    }
+
+    fn load_initial(&mut self, tds: &[u32]) {
+        CamArray::load_initial(self, tds);
+    }
+
+    fn update_min(&mut self, i: usize, new_distance: u32) {
+        CamArray::update_min(self, i, new_distance);
+    }
+
+    fn invalidate(&mut self, i: usize) {
+        CamArray::invalidate(self, i);
+    }
+
+    fn max_search(&mut self) -> (u32, usize) {
+        self.bit_cam_max()
+    }
+
+    fn live_td(&self, i: usize) -> u32 {
+        CamArray::live_td(self, i)
+    }
+
+    fn occupied(&self) -> usize {
+        CamArray::occupied(self)
+    }
+
+    fn cycles(&self) -> u64 {
+        CamArray::cycles(self)
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        CamArray::ledger(self)
+    }
+}
+
+impl MacEngine for ScCim {
+    fn dot(&mut self, x: &[u16], w: &[i16]) -> i64 {
+        ScCim::dot(self, x, w)
+    }
+
+    fn matmul_cost(&mut self, n: usize, k: usize, m: usize) -> u64 {
+        ScCim::matmul_cost(self, n, k, m)
+    }
+
+    fn cycles(&self) -> u64 {
+        ScCim::cycles(self)
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        ScCim::ledger(self)
+    }
+}

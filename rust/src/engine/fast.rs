@@ -1,0 +1,355 @@
+//! The `Fast` tier: native-integer, slice-vectorized engine
+//! implementations with event/cycle accounting identical to the
+//! gate-level models.
+//!
+//! Every charge the [`crate::cim`] models make per operation is derived
+//! here in closed form instead of being accumulated gate-by-gate:
+//!
+//! - [`FastDistance`] stores the tile as three coordinate slices (SoA)
+//!   and computes a whole scan in one autovectorizable pass; the charges
+//!   (one [`Event::ApdDistanceOp`] per point, 48 register bits per
+//!   reference readout, row-rate cycles) are the same constants the
+//!   APD-CIM model charges per scan.
+//! - [`FastMaxSearch`] keeps live TDs as a flat `u32` slice. The MSB-first
+//!   bit-CAM search's energy is reproduced analytically: an entry with
+//!   live value `v` stays in the search until the first bit position
+//!   where its prefix diverges from the maximum's, so its searched-cell
+//!   count is `TD_BITS - msb(v XOR max)` (`TD_BITS` when `v == max`) —
+//!   one `leading_zeros` per entry instead of 19 array sweeps.
+//! - [`FastMac`] computes dot products natively (the split-concatenate
+//!   datapath is exact, so `sum(x[i] * w[i])` is the same number) and
+//!   reuses the 4-cycles-per-wave cost formula.
+//!
+//! Bit-identity with the `BitExact` tier — outputs, cycles, ledgers — is
+//! enforced by `rust/tests/fidelity_equivalence.rs`.
+
+use super::{DistanceEngine, MacEngine, MaxSearchEngine};
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
+use crate::cim::sc_cim::ScCimConfig;
+use crate::energy::{EnergyLedger, Event};
+use crate::quant::{QPoint3, TD_BITS};
+
+/// Fast-tier distance array: SoA coordinate storage, native `abs_diff`
+/// scans, APD-CIM-identical accounting.
+#[derive(Debug, Clone)]
+pub struct FastDistance {
+    cfg: ApdCimConfig,
+    xs: Vec<u16>,
+    ys: Vec<u16>,
+    zs: Vec<u16>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl FastDistance {
+    /// An empty array with the given geometry.
+    pub fn new(cfg: ApdCimConfig) -> Self {
+        Self {
+            cfg,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            zs: Vec::new(),
+            cycles: 0,
+            ledger: EnergyLedger::new(),
+        }
+    }
+
+    fn scan_cycles(&self, n: usize) -> u64 {
+        n.div_ceil(self.cfg.distances_per_cycle()) as u64
+    }
+
+    fn scan_to(&mut self, r: QPoint3) -> Vec<u32> {
+        // Reference readout into bit-parallel input registers: 48 bits.
+        self.ledger.charge(Event::RegBit, 48);
+        self.cycles += 1;
+        let out: Vec<u32> = self
+            .xs
+            .iter()
+            .zip(&self.ys)
+            .zip(&self.zs)
+            .map(|((&x, &y), &z)| {
+                x.abs_diff(r.x) as u32 + y.abs_diff(r.y) as u32 + z.abs_diff(r.z) as u32
+            })
+            .collect();
+        self.ledger.charge(Event::ApdDistanceOp, out.len() as u64);
+        self.cycles += self.scan_cycles(out.len());
+        out
+    }
+}
+
+impl DistanceEngine for FastDistance {
+    fn capacity(&self) -> usize {
+        self.cfg.capacity()
+    }
+
+    fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn load_tile(&mut self, tile: &[QPoint3]) {
+        assert!(
+            tile.len() <= self.cfg.capacity(),
+            "tile of {} exceeds APD-CIM capacity {}",
+            tile.len(),
+            self.cfg.capacity()
+        );
+        self.xs.clear();
+        self.ys.clear();
+        self.zs.clear();
+        for p in tile {
+            self.xs.push(p.x);
+            self.ys.push(p.y);
+            self.zs.push(p.z);
+        }
+        self.ledger.charge(Event::SramBit, tile.len() as u64 * 48);
+        self.cycles += self.scan_cycles(tile.len());
+    }
+
+    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
+        assert!(ref_idx < self.xs.len(), "reference {ref_idx} not resident");
+        let r = QPoint3 { x: self.xs[ref_idx], y: self.ys[ref_idx], z: self.zs[ref_idx] };
+        self.scan_to(r)
+    }
+
+    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
+        self.scan_to(*r)
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+/// Fast-tier MAX search: flat live-TD storage, analytic bit-CAM energy.
+#[derive(Debug, Clone)]
+pub struct FastMaxSearch {
+    cfg: CamConfig,
+    live: Vec<u32>,
+    occupied: Vec<bool>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl FastMaxSearch {
+    /// An empty array with the given geometry.
+    pub fn new(cfg: CamConfig) -> Self {
+        Self {
+            cfg,
+            live: vec![0; cfg.capacity()],
+            occupied: vec![false; cfg.capacity()],
+            cycles: 0,
+            ledger: EnergyLedger::new(),
+        }
+    }
+}
+
+impl MaxSearchEngine for FastMaxSearch {
+    fn capacity(&self) -> usize {
+        self.cfg.capacity()
+    }
+
+    fn load_initial(&mut self, tds: &[u32]) {
+        assert!(tds.len() <= self.cfg.capacity(), "tile TDs exceed CAM capacity");
+        self.occupied.iter_mut().for_each(|o| *o = false);
+        for (i, &d) in tds.iter().enumerate() {
+            debug_assert!(d < (1 << TD_BITS));
+            self.live[i] = d;
+            self.occupied[i] = true;
+        }
+        self.ledger.charge(Event::CamWriteBit, tds.len() as u64 * TD_BITS as u64 * 2);
+        self.cycles += tds.len().div_ceil(self.cfg.n_groups) as u64;
+    }
+
+    fn update_min(&mut self, i: usize, new_distance: u32) {
+        debug_assert!(new_distance < (1 << TD_BITS));
+        assert!(self.occupied[i], "update of unoccupied TD {i}");
+        self.live[i] = self.live[i].min(new_distance);
+        self.ledger.charge(Event::CamComparePair, 1);
+        self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
+    }
+
+    fn invalidate(&mut self, i: usize) {
+        self.live[i] = 0;
+        self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
+        self.cycles += 1;
+    }
+
+    fn max_search(&mut self) -> (u32, usize) {
+        // Max value + lowest winning index in one pass.
+        let mut best = 0u32;
+        let mut idx = usize::MAX;
+        for (i, (&v, &occ)) in self.live.iter().zip(&self.occupied).enumerate() {
+            if occ && (idx == usize::MAX || v > best) {
+                best = v;
+                idx = i;
+            }
+        }
+        assert!(idx != usize::MAX, "bit-CAM value must exist in the array");
+        // Analytic bit-search energy: entry `v` is searched once per bit
+        // cycle until its prefix first diverges from the max's, i.e.
+        // TD_BITS - msb(v ^ max) times (TD_BITS when v == max).
+        let mut searched: u64 = 0;
+        for (&v, &occ) in self.live.iter().zip(&self.occupied) {
+            if occ {
+                let xor = v ^ best;
+                let h = if xor == 0 { 0 } else { 31 - xor.leading_zeros() };
+                searched += (TD_BITS - h) as u64;
+            }
+        }
+        self.ledger.charge(Event::CamSearchCell, searched);
+        self.cycles += TD_BITS as u64;
+        // Data-CAM resolve cycle: every occupied cell participates once.
+        self.ledger.charge(Event::CamSearchCell, self.occupied() as u64);
+        self.cycles += 1;
+        (best, idx)
+    }
+
+    fn live_td(&self, i: usize) -> u32 {
+        self.live[i]
+    }
+
+    fn occupied(&self) -> usize {
+        self.occupied.iter().filter(|&&o| o).count()
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+/// Fast-tier MAC engine: native 64-bit dot products, SC-CIM cost model.
+#[derive(Debug, Clone)]
+pub struct FastMac {
+    cfg: ScCimConfig,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl FastMac {
+    /// A fresh engine with zeroed counters.
+    pub fn new(cfg: ScCimConfig) -> Self {
+        Self { cfg, cycles: 0, ledger: EnergyLedger::new() }
+    }
+}
+
+impl MacEngine for FastMac {
+    fn dot(&mut self, x: &[u16], w: &[i16]) -> i64 {
+        assert_eq!(x.len(), w.len());
+        let acc: i64 = x.iter().zip(w).map(|(&a, &b)| a as i64 * b as i64).sum();
+        self.cycles += 4;
+        self.ledger.charge(Event::MacSc, x.len() as u64);
+        acc
+    }
+
+    fn matmul_cost(&mut self, n: usize, k: usize, m: usize) -> u64 {
+        let macs = (n as u64) * (k as u64) * (m as u64);
+        self.ledger.charge(Event::MacSc, macs);
+        let waves = macs.div_ceil(self.cfg.parallel_macs());
+        let cycles = waves * 4;
+        self.cycles += cycles;
+        cycles
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::apd_cim::ApdCim;
+    use crate::cim::max_cam::CamArray;
+    use crate::cim::sc_cim::ScCim;
+    use crate::pointcloud::synthetic::make_class_cloud;
+    use crate::quant::quantize_cloud;
+    use crate::rng::Rng64;
+
+    fn tile(n: usize, seed: u64) -> Vec<QPoint3> {
+        quantize_cloud(&make_class_cloud(2, n, seed))
+    }
+
+    #[test]
+    fn distance_scan_matches_bit_exact() {
+        let t = tile(777, 5);
+        let mut gate = ApdCim::new(ApdCimConfig::default());
+        let mut fast = FastDistance::new(ApdCimConfig::default());
+        DistanceEngine::load_tile(&mut gate, &t);
+        fast.load_tile(&t);
+        for start in [0usize, 3, 776] {
+            let a = DistanceEngine::scan_distances(&mut gate, start);
+            let b = fast.scan_distances(start);
+            assert_eq!(a, b);
+        }
+        assert_eq!(DistanceEngine::cycles(&gate), fast.cycles());
+        assert_eq!(DistanceEngine::ledger(&gate), fast.ledger());
+    }
+
+    #[test]
+    fn max_search_energy_formula_matches_gate_walk() {
+        let mut rng = Rng64::new(77);
+        for n in [1usize, 7, 130, 2048] {
+            let tds: Vec<u32> =
+                (0..n).map(|_| rng.below(1u64 << TD_BITS) as u32).collect();
+            let mut gate = CamArray::new(CamConfig::default());
+            let mut fast = FastMaxSearch::new(CamConfig::default());
+            MaxSearchEngine::load_initial(&mut gate, &tds);
+            fast.load_initial(&tds);
+            let a = gate.bit_cam_max();
+            let b = fast.max_search();
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(MaxSearchEngine::cycles(&gate), fast.cycles(), "n={n}");
+            assert_eq!(MaxSearchEngine::ledger(&gate), fast.ledger(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn min_update_and_invalidate_match() {
+        let mut gate = CamArray::new(CamConfig::default());
+        let mut fast = FastMaxSearch::new(CamConfig::default());
+        MaxSearchEngine::load_initial(&mut gate, &[500, 100, 300]);
+        fast.load_initial(&[500, 100, 300]);
+        for (i, d) in [(0usize, 200u32), (1, 400), (2, 300), (0, 10)] {
+            MaxSearchEngine::update_min(&mut gate, i, d);
+            fast.update_min(i, d);
+        }
+        MaxSearchEngine::invalidate(&mut gate, 1);
+        fast.invalidate(1);
+        for i in 0..3 {
+            assert_eq!(MaxSearchEngine::live_td(&gate, i), fast.live_td(i));
+        }
+        assert_eq!(MaxSearchEngine::ledger(&gate), fast.ledger());
+        assert_eq!(gate.bit_cam_max(), fast.max_search());
+    }
+
+    #[test]
+    fn mac_dot_and_matmul_match() {
+        let mut rng = Rng64::new(9);
+        let mut gate = ScCim::new(ScCimConfig::default());
+        let mut fast = FastMac::new(ScCimConfig::default());
+        for len in [1usize, 4, 33] {
+            let x: Vec<u16> = (0..len).map(|_| rng.next_u64() as u16).collect();
+            let w: Vec<i16> = (0..len).map(|_| rng.next_u64() as i16).collect();
+            assert_eq!(MacEngine::dot(&mut gate, &x, &w), fast.dot(&x, &w));
+        }
+        assert_eq!(
+            MacEngine::matmul_cost(&mut gate, 64, 131, 128),
+            fast.matmul_cost(64, 131, 128)
+        );
+        assert_eq!(MacEngine::cycles(&gate), fast.cycles());
+        assert_eq!(MacEngine::ledger(&gate), fast.ledger());
+    }
+}

@@ -1,0 +1,211 @@
+//! Fidelity-tiered engine contracts for the three CIM structures.
+//!
+//! The paper's hardware is modeled twice, behind one trait family:
+//!
+//! - [`DistanceEngine`] — the APD-CIM distance array contract (Fig. 6):
+//!   load a tile, scan 19-bit L1 distances against a reference point;
+//! - [`MaxSearchEngine`] — the Ping-Pong-MAX CAM contract (Figs. 7-10):
+//!   load temporary distances, in-situ min-update, arg-max search;
+//! - [`MacEngine`] — the SC-CIM MAC contract (Fig. 11): bit-exact dot
+//!   products plus macro-level matmul cost accounting.
+//!
+//! Every implementation must produce **identical observable behaviour**
+//! per [`Fidelity`] tier: same outputs, same cycle counts, same
+//! [`EnergyLedger`] event counts. Only host execution time may differ:
+//!
+//! - [`Fidelity::BitExact`] ([`bit_exact`]) routes to the gate-level
+//!   models in [`crate::cim`] — the tier the paper experiments
+//!   (Figs. 6-11 reproduction) are authoritative on;
+//! - [`Fidelity::Fast`] ([`fast`]) uses native-integer, slice-vectorized
+//!   implementations that charge the exact same events analytically —
+//!   the tier `pc2im serve` defaults to.
+//!
+//! The equivalence is pinned by `rust/tests/fidelity_equivalence.rs`,
+//! which drives both tiers over random Table-I-scale workloads and
+//! asserts bit-identical outputs, cycles and ledgers.
+
+pub mod bit_exact;
+pub mod fast;
+
+use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
+use crate::cim::max_cam::{CamArray, CamConfig};
+use crate::cim::sc_cim::{ScCim, ScCimConfig};
+use crate::energy::EnergyLedger;
+use crate::quant::QPoint3;
+use anyhow::bail;
+
+/// Which engine implementation tier a pipeline runs on.
+///
+/// Both tiers are bit-identical in outputs, cycle counts and energy
+/// ledgers (enforced by `rust/tests/fidelity_equivalence.rs`); they
+/// differ only in host speed. Experiments default to `BitExact` (the
+/// gate-level models are what reproduces the paper's figures); the
+/// serving engine defaults to `Fast`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Fidelity {
+    /// Gate-level models from [`crate::cim`]: ripple adders, MSB-first
+    /// CAM exclusion, nibble select/concatenate. Authoritative for the
+    /// paper-reproduction experiments.
+    #[default]
+    BitExact,
+    /// Native-integer, slice-vectorized implementations with identical
+    /// event/cycle accounting. Authoritative for serving throughput.
+    Fast,
+}
+
+impl Fidelity {
+    /// Both tiers, bit-exact first.
+    pub const ALL: [Fidelity; 2] = [Fidelity::BitExact, Fidelity::Fast];
+
+    /// The CLI spelling of this tier (`--fidelity` value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::BitExact => "bit-exact",
+            Fidelity::Fast => "fast",
+        }
+    }
+}
+
+impl std::str::FromStr for Fidelity {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "bit-exact" | "bitexact" | "bit_exact" => Ok(Fidelity::BitExact),
+            "fast" => Ok(Fidelity::Fast),
+            other => bail!("unknown fidelity {other:?} (valid: bit-exact, fast)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The APD-CIM distance-array contract: a resident tile of quantized
+/// points and full-array 19-bit L1 distance scans, with cycle and energy
+/// accounting charged exactly as the silicon would.
+pub trait DistanceEngine {
+    /// Point capacity of the array.
+    fn capacity(&self) -> usize;
+    /// Number of points currently resident.
+    fn len(&self) -> usize;
+    /// True when no tile is loaded.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Load a tile (replacing any resident one); charged as SRAM writes.
+    /// Panics if the tile exceeds the array capacity.
+    fn load_tile(&mut self, tile: &[QPoint3]);
+    /// Scan every resident point's L1 distance to the point stored at
+    /// `ref_idx`. Charges one distance op per point plus the reference
+    /// readout.
+    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32>;
+    /// Scan against an arbitrary reference point (cross-tile queries).
+    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32>;
+    /// Cycle count accumulated so far.
+    fn cycles(&self) -> u64;
+    /// Event ledger accumulated so far.
+    fn ledger(&self) -> &EnergyLedger;
+}
+
+/// The Ping-Pong-MAX CAM contract: temporary distances with in-situ
+/// min-update and MSB-first arg-max search, never reading a TD out.
+pub trait MaxSearchEngine {
+    /// TD capacity of the array.
+    fn capacity(&self) -> usize;
+    /// Load initial distances for a fresh tile; entries beyond
+    /// `tds.len()` become unoccupied and are ignored by searches.
+    fn load_initial(&mut self, tds: &[u32]);
+    /// The FPS min-update: the live TD of entry `i` becomes
+    /// `min(old, new_distance)` without any read-modify-write traffic.
+    fn update_min(&mut self, i: usize, new_distance: u32);
+    /// Zero entry `i`'s TD (a sampled centroid drops out of the search).
+    fn invalidate(&mut self, i: usize);
+    /// Arg-max over the live TDs; returns `(max_value, index)`, lowest
+    /// index winning ties. Charges the bit-search plus one data-CAM pass.
+    fn max_search(&mut self) -> (u32, usize);
+    /// Current live TD of entry `i` (diagnostic view).
+    fn live_td(&self, i: usize) -> u32;
+    /// Number of occupied TD entries.
+    fn occupied(&self) -> usize;
+    /// Cycle count accumulated so far.
+    fn cycles(&self) -> u64;
+    /// Event ledger accumulated so far.
+    fn ledger(&self) -> &EnergyLedger;
+}
+
+/// The SC-CIM MAC contract: bit-exact 16-bit dot products and macro-level
+/// matmul pricing (4 input-cluster cycles per wave).
+pub trait MacEngine {
+    /// Bit-exact dot product of unsigned activations and signed weights.
+    fn dot(&mut self, x: &[u16], w: &[i16]) -> i64;
+    /// Cost of an `n x k . k x m` matmul: charges every MAC, returns the
+    /// cycles added.
+    fn matmul_cost(&mut self, n: usize, k: usize, m: usize) -> u64;
+    /// Cycle count accumulated so far.
+    fn cycles(&self) -> u64;
+    /// Event ledger accumulated so far.
+    fn ledger(&self) -> &EnergyLedger;
+}
+
+/// Build a [`DistanceEngine`] of the requested tier.
+pub fn distance_engine(fidelity: Fidelity, cfg: ApdCimConfig) -> Box<dyn DistanceEngine> {
+    match fidelity {
+        Fidelity::BitExact => Box::new(ApdCim::new(cfg)),
+        Fidelity::Fast => Box::new(fast::FastDistance::new(cfg)),
+    }
+}
+
+/// Build a [`MaxSearchEngine`] of the requested tier.
+pub fn max_search_engine(fidelity: Fidelity, cfg: CamConfig) -> Box<dyn MaxSearchEngine> {
+    match fidelity {
+        Fidelity::BitExact => Box::new(CamArray::new(cfg)),
+        Fidelity::Fast => Box::new(fast::FastMaxSearch::new(cfg)),
+    }
+}
+
+/// Build a [`MacEngine`] of the requested tier.
+pub fn mac_engine(fidelity: Fidelity, cfg: ScCimConfig) -> Box<dyn MacEngine> {
+    match fidelity {
+        Fidelity::BitExact => Box::new(ScCim::new(cfg)),
+        Fidelity::Fast => Box::new(fast::FastMac::new(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fidelity_parses_and_prints() {
+        assert_eq!("bit-exact".parse::<Fidelity>().unwrap(), Fidelity::BitExact);
+        assert_eq!("fast".parse::<Fidelity>().unwrap(), Fidelity::Fast);
+        assert!("exact".parse::<Fidelity>().is_err());
+        for f in Fidelity::ALL {
+            assert_eq!(f.name().parse::<Fidelity>().unwrap(), f);
+            assert_eq!(format!("{f}"), f.name());
+        }
+    }
+
+    #[test]
+    fn default_is_bit_exact() {
+        assert_eq!(Fidelity::default(), Fidelity::BitExact);
+    }
+
+    #[test]
+    fn factories_build_both_tiers() {
+        for f in Fidelity::ALL {
+            let d = distance_engine(f, ApdCimConfig::default());
+            assert_eq!(d.capacity(), 2048);
+            assert!(d.is_empty());
+            let m = max_search_engine(f, CamConfig::default());
+            assert_eq!(m.capacity(), 2048);
+            assert_eq!(m.occupied(), 0);
+            let mut mac = mac_engine(f, ScCimConfig::default());
+            assert_eq!(mac.dot(&[2, 3], &[5, -7]), -11);
+        }
+    }
+}

@@ -77,6 +77,7 @@ fn without_pipelining(net: &NetworkDef, hw: &HardwareConfig) -> RunCost {
     rc
 }
 
+/// Regenerate the remove-one-mechanism ablation table.
 pub fn run() -> Result<()> {
     let hw = HardwareConfig::default();
     let c: EnergyConstants = hw.energy();

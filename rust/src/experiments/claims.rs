@@ -4,11 +4,12 @@
 
 use super::print_table;
 use crate::accel::{Accelerator, Baseline1, Baseline2, Pc2imModel};
-use crate::cim::apd_cim::{ApdCim, ApdCimConfig};
-use crate::cim::max_cam::{CamArray, CamConfig};
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
 use crate::config::HardwareConfig;
 use crate::coordinator::Pipeline;
 use crate::energy::{AreaModel, Event};
+use crate::engine::{self, Fidelity};
 use crate::network::pointnet2::NetworkDef;
 use crate::pointcloud::synthetic::{make_street_cloud, DatasetScale};
 use crate::quant::quantize_cloud;
@@ -43,6 +44,8 @@ pub fn b2_onchip_breakdown() -> (f64, f64, f64) {
     (share, point_bits / sram, td_bits / sram)
 }
 
+/// Regenerate the §III prose-claims table plus the analytic-vs-bit-exact
+/// cross-check.
 pub fn run() -> Result<()> {
     let hw = HardwareConfig::default();
     let c = hw.energy();
@@ -116,15 +119,20 @@ pub fn run() -> Result<()> {
         "4x".into(),
         "4.0x (16 -> 4 cycles/input)".into(),
     ]);
-    print_table("§III prose claims — paper vs this reproduction", &["claim", "paper", "measured"], &rows);
+    print_table(
+        "§III prose claims — paper vs this reproduction",
+        &["claim", "paper", "measured"],
+        &rows,
+    );
 
-    // 6. analytic-vs-bit-exact cross-check on one 2048-pt tile
+    // 6. analytic-vs-bit-exact cross-check on one 2048-pt tile (the
+    // bit-exact engine tier is the authority being cross-checked here)
     let tile = quantize_cloud(&make_street_cloud(2048, 9));
-    let mut apd = ApdCim::new(ApdCimConfig::default());
+    let mut apd = engine::distance_engine(Fidelity::BitExact, ApdCimConfig::default());
     apd.load_tile(&tile);
-    let mut cam = CamArray::new(CamConfig::default());
+    let mut cam = engine::max_search_engine(Fidelity::BitExact, CamConfig::default());
     let m = 512;
-    let _ = Pipeline::cam_fps(&mut apd, &mut cam, m, 0);
+    let _ = Pipeline::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
     let analytic_dist = (m as u64) * 2048;
     let simulated_dist = apd.ledger().count(Event::ApdDistanceOp);
     println!(

@@ -13,20 +13,28 @@
 
 use super::print_table;
 use crate::config::PipelineConfig;
-use crate::coordinator::{BatchStats, Pipeline};
+use crate::coordinator::{BatchStats, PipelineBuilder};
+use crate::engine::Fidelity;
 use crate::pointcloud::io::read_testset;
 use anyhow::{Context, Result};
 use std::path::Path;
 
 /// Accuracy of one configuration over the exported test set.
-pub fn eval_config(artifacts_dir: &str, exact: bool, quantized: bool, limit: usize) -> Result<(f64, BatchStats)> {
+pub fn eval_config(
+    artifacts_dir: &str,
+    exact: bool,
+    quantized: bool,
+    limit: usize,
+    fidelity: Fidelity,
+) -> Result<(f64, BatchStats)> {
     let cfg = PipelineConfig {
         exact_sampling: exact,
         quantized,
         artifacts_dir: artifacts_dir.to_string(),
+        fidelity,
         ..PipelineConfig::default()
     };
-    let mut pipe = Pipeline::new(cfg)?;
+    let mut pipe = PipelineBuilder::from_config(cfg).build()?;
     let ts = read_testset(Path::new(artifacts_dir).join(&pipe.meta().testset_file))
         .context("reading testset.bin")?;
     let n = ts.len().min(limit);
@@ -38,16 +46,21 @@ pub fn eval_config(artifacts_dir: &str, exact: bool, quantized: bool, limit: usi
     Ok((stats.accuracy(), stats))
 }
 
-pub fn run(artifacts_dir: &str) -> Result<()> {
+/// Regenerate the Fig. 12(a) accuracy table on the given engine tier.
+pub fn run(artifacts_dir: &str, fidelity: Fidelity) -> Result<()> {
     let limit = std::env::var("PC2IM_FIG12A_LIMIT")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(200usize);
-    let (acc_exact, _) = eval_config(artifacts_dir, true, false, limit)?;
-    let (acc_approx, _) = eval_config(artifacts_dir, false, false, limit)?;
-    let (acc_q16, _) = eval_config(artifacts_dir, false, true, limit)?;
+    let (acc_exact, _) = eval_config(artifacts_dir, true, false, limit, fidelity)?;
+    let (acc_approx, _) = eval_config(artifacts_dir, false, false, limit, fidelity)?;
+    let (acc_q16, _) = eval_config(artifacts_dir, false, true, limit, fidelity)?;
     let rows = vec![
-        vec!["exact L2 FPS + ball query (fp32)".into(), format!("{:.1}%", acc_exact * 100.0), "-".into()],
+        vec![
+            "exact L2 FPS + ball query (fp32)".into(),
+            format!("{:.1}%", acc_exact * 100.0),
+            "-".into(),
+        ],
         vec![
             "approx L1 FPS + lattice (coords PTQ16)".into(),
             format!("{:.1}%", acc_approx * 100.0),

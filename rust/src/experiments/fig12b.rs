@@ -26,6 +26,7 @@ pub fn preprocessing_energy() -> Vec<(DatasetScale, [f64; 3])> {
         .collect()
 }
 
+/// Regenerate the Fig. 12(b) preprocessing-energy comparison.
 pub fn run() -> Result<()> {
     let rows: Vec<Vec<String>> = preprocessing_energy()
         .into_iter()

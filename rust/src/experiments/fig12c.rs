@@ -7,6 +7,7 @@ use crate::config::HardwareConfig;
 use crate::energy::fom::{evaluate, CimScheme, FigureOfMerit};
 use anyhow::Result;
 
+/// Storage-compute ratios the Fig. 12(c) sweep evaluates.
 pub const SCRS: [u64; 6] = [8, 16, 32, 64, 128, 256];
 
 /// Evaluate all schemes at one SCR on the Table II 256 KB macro.
@@ -16,6 +17,7 @@ pub fn sweep_point(scr: u64) -> [(CimScheme, FigureOfMerit); 3] {
     CimScheme::ALL.map(|s| (s, evaluate(s, cap, 16, scr, hw.freq_mhz, &hw.energy(), &hw.area())))
 }
 
+/// Regenerate the Fig. 12(c) FoM sweep across SCRs.
 pub fn run() -> Result<()> {
     let mut rows = Vec::new();
     for scr in SCRS {

@@ -27,6 +27,7 @@ pub fn latencies() -> Vec<(DatasetScale, [f64; 3])> {
         .collect()
 }
 
+/// Regenerate the Fig. 13(a) system-level latency comparison.
 pub fn run() -> Result<()> {
     let rows: Vec<Vec<String>> = latencies()
         .into_iter()

@@ -27,6 +27,7 @@ pub fn energies() -> Vec<(DatasetScale, [f64; 3])> {
         .collect()
 }
 
+/// Regenerate the Fig. 13(b) system-level energy comparison.
 pub fn run() -> Result<()> {
     let hw = HardwareConfig::default();
     let c = hw.energy();

@@ -22,11 +22,22 @@ pub fn comparison() -> (f64, f64, f64, f64) {
     )
 }
 
+/// Regenerate the Fig. 13(c) GPU-vs-PC2IM comparison.
 pub fn run() -> Result<()> {
     let (gl, pl, ge, pe) = comparison();
     let rows = vec![
-        vec!["latency / cloud".into(), format!("{gl:.2} ms"), format!("{pl:.2} ms"), format!("{:.1}x", gl / pl)],
-        vec!["energy / cloud".into(), format!("{:.2} J", ge), format!("{:.2} mJ", pe * 1e3), format!("{:.0}x", ge / pe)],
+        vec![
+            "latency / cloud".into(),
+            format!("{gl:.2} ms"),
+            format!("{pl:.2} ms"),
+            format!("{:.1}x", gl / pl),
+        ],
+        vec![
+            "energy / cloud".into(),
+            format!("{:.2} J", ge),
+            format!("{:.2} mJ", pe * 1e3),
+            format!("{:.0}x", ge / pe),
+        ],
         vec![
             "throughput".into(),
             format!("{:.0} fps", 1e3 / gl),

@@ -32,6 +32,7 @@ pub fn lattice_recall(scale: f32, seed: u64) -> f64 {
     hit as f64 / total.max(1) as f64
 }
 
+/// Regenerate the Fig. 5(a) recall sweep and Fig. 5(b) utilization table.
 pub fn run() -> Result<()> {
     let rows: Vec<Vec<String>> = [1.0f32, 1.2, 1.4, 1.6, 1.8, 2.0]
         .iter()

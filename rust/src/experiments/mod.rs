@@ -16,6 +16,7 @@ pub mod fig5a;
 pub mod table1;
 pub mod table2;
 
+use crate::engine::Fidelity;
 use anyhow::Result;
 
 /// Every experiment id in paper order.
@@ -23,14 +24,23 @@ pub const ALL_IDS: [&str; 9] = [
     "table1", "table2", "fig5a", "fig12a", "fig12b", "fig12c", "fig13a", "fig13b", "fig13c",
 ];
 
-/// Run one experiment by id. `artifacts_dir` is only used by the
-/// numerics-backed ones (fig12a).
+/// Run one experiment by id on the bit-exact engine tier (the
+/// authoritative tier for paper-figure reproduction). `artifacts_dir` is
+/// only used by the numerics-backed ones (fig12a).
 pub fn run(id: &str, artifacts_dir: &str) -> Result<()> {
+    run_with(id, artifacts_dir, Fidelity::BitExact)
+}
+
+/// Run one experiment by id on an explicit engine tier. Both tiers
+/// produce identical numbers (rust/tests/fidelity_equivalence.rs); the
+/// tier only changes how fast the pipeline-backed experiments run on the
+/// host.
+pub fn run_with(id: &str, artifacts_dir: &str, fidelity: Fidelity) -> Result<()> {
     match id {
         "table1" => table1::run(),
         "table2" => table2::run(),
         "fig5a" => fig5a::run(),
-        "fig12a" => fig12a::run(artifacts_dir),
+        "fig12a" => fig12a::run(artifacts_dir, fidelity),
         "fig12b" => fig12b::run(),
         "fig12c" => fig12c::run(),
         "fig13a" => fig13a::run(),
@@ -40,14 +50,17 @@ pub fn run(id: &str, artifacts_dir: &str) -> Result<()> {
         "ablation" => ablation::run(),
         "all" => {
             for id in ALL_IDS {
-                run(id, artifacts_dir)?;
+                run_with(id, artifacts_dir, fidelity)?;
                 println!();
             }
             claims::run()?;
             println!();
             ablation::run()
         }
-        other => anyhow::bail!("unknown experiment id {other:?} (try: all, claims, ablation, {})", ALL_IDS.join(", ")),
+        other => anyhow::bail!(
+            "unknown experiment id {other:?} (try: all, claims, ablation, {})",
+            ALL_IDS.join(", ")
+        ),
     }
 }
 

@@ -5,6 +5,7 @@ use crate::network::pointnet2::NetworkDef;
 use crate::pointcloud::synthetic::DatasetScale;
 use anyhow::Result;
 
+/// Regenerate the Table I workload matrix from the network definitions.
 pub fn run() -> Result<()> {
     let rows: Vec<Vec<String>> = DatasetScale::ALL
         .iter()

@@ -8,6 +8,7 @@ use crate::config::HardwareConfig;
 use crate::energy::fom::{evaluate, CimScheme};
 use anyhow::Result;
 
+/// Regenerate the Table II hardware-specification table from the models.
 pub fn run() -> Result<()> {
     let hw = HardwareConfig::default();
     let e = hw.energy();
@@ -20,11 +21,19 @@ pub fn run() -> Result<()> {
         vec!["Frequency".into(), format!("{} MHz", hw.freq_mhz)],
         vec![
             "APD-CIM".into(),
-            format!("{} KB ({} pts x 16b x 3)", hw.apd_cim().storage_bytes() / 1024, hw.apd_cim().capacity()),
+            format!(
+                "{} KB ({} pts x 16b x 3)",
+                hw.apd_cim().storage_bytes() / 1024,
+                hw.apd_cim().capacity()
+            ),
         ],
         vec![
             "Ping-Pong-MAX CAM".into(),
-            format!("{} KB (2 x {} TDPs, 19b pairs + idx)", cam.storage_bytes() / 1024, cam.active().capacity()),
+            format!(
+                "{} KB (2 x {} TDPs, 19b pairs + idx)",
+                cam.storage_bytes() / 1024,
+                cam.active().capacity()
+            ),
         ],
         vec!["SC-CIM".into(), format!("{} KB", hw.sc_cim().storage_bytes() / 1024)],
         vec!["Standard on-chip SRAM".into(), format!("{} KB", hw.onchip_sram_bytes / 1024)],

@@ -25,27 +25,16 @@
 
 #![warn(missing_docs)]
 
-// Staged rustdoc adoption: the request path (config/coordinator/runtime),
-// the hardware engine models (cim) and the PRNG are fully documented and
-// gated by `missing_docs` above; the modules below predate the docs lane
-// and keep a per-module allow until their own documentation pass lands.
-// CI enforces the current state with RUSTDOCFLAGS="-D warnings".
-#[allow(missing_docs)]
 pub mod accel;
 pub mod cim;
 pub mod config;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod energy;
-#[allow(missing_docs)]
+pub mod engine;
 pub mod experiments;
-#[allow(missing_docs)]
 pub mod network;
-#[allow(missing_docs)]
 pub mod pointcloud;
-#[allow(missing_docs)]
 pub mod quant;
 pub mod rng;
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod sampling;

@@ -10,12 +10,20 @@
 //!                  claims, all)
 //!   info         — print hardware config + artifact inventory
 //!
+//! `--fidelity {bit-exact,fast}` picks the engine tier everywhere a
+//! pipeline runs: both tiers produce bit-identical outputs, cycles and
+//! energy ledgers (rust/tests/fidelity_equivalence.rs), so the switch
+//! only changes host speed. Experiments default to `bit-exact` (the
+//! gate-level models are authoritative for the paper figures); `serve`
+//! defaults to `fast` (throughput is the product there).
+//!
 //! The vendored crate set has no clap; arguments are parsed by hand
 //! (--key value / --flag).
 
 use anyhow::{anyhow, bail, Result};
 use pc2im::config::{PipelineConfig, ServeConfig};
-use pc2im::coordinator::{serve, BatchScheduler, Pipeline, ServeEngine};
+use pc2im::coordinator::{serve, PipelineBuilder};
+use pc2im::engine::Fidelity;
 use pc2im::pointcloud::io::read_testset;
 use pc2im::pointcloud::synthetic::{make_class_cloud, make_labelled_batch, NUM_CLASSES};
 use std::collections::HashMap;
@@ -55,8 +63,17 @@ fn parse_args() -> Args {
     Args { cmd, opts, flags }
 }
 
-fn pipeline_config(args: &Args) -> PipelineConfig {
-    PipelineConfig {
+/// Parse `--fidelity`; a bad value fails loudly, a missing one takes the
+/// subcommand's default.
+fn fidelity_arg(args: &Args, default: Fidelity) -> Result<Fidelity> {
+    match args.opts.get("fidelity") {
+        None => Ok(default),
+        Some(v) => v.parse::<Fidelity>(),
+    }
+}
+
+fn pipeline_config(args: &Args, default_fidelity: Fidelity) -> Result<PipelineConfig> {
+    Ok(PipelineConfig {
         quantized: args.flags.iter().any(|f| f == "quantized"),
         exact_sampling: args.flags.iter().any(|f| f == "exact"),
         artifacts_dir: args
@@ -69,16 +86,18 @@ fn pipeline_config(args: &Args) -> PipelineConfig {
             .get("parallelism")
             .and_then(|v| v.parse().ok())
             .unwrap_or(2),
-    }
+        fidelity: fidelity_arg(args, default_fidelity)?,
+    })
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
     let n: usize = args.opts.get("clouds").and_then(|v| v.parse().ok()).unwrap_or(8);
     let seed: u64 = args.opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(0);
-    let cfg = pipeline_config(args);
-    let mut pipe = Pipeline::new(cfg)?;
+    let cfg = pipeline_config(args, Fidelity::BitExact)?;
+    let fidelity = cfg.fidelity;
+    let mut pipe = PipelineBuilder::from_config(cfg).build()?;
     let hw = *pipe.hardware();
-    println!("classifying {n} synthetic clouds (seed {seed})...");
+    println!("classifying {n} synthetic clouds (seed {seed}, {fidelity} engines)...");
     for i in 0..n {
         let label = i % NUM_CLASSES;
         let cloud = make_class_cloud(label, pipe.meta().model.n_points, seed + i as u64);
@@ -98,10 +117,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let cfg = pipeline_config(args);
+    let cfg = pipeline_config(args, Fidelity::BitExact)?;
     let limit: usize = args.opts.get("limit").and_then(|v| v.parse().ok()).unwrap_or(usize::MAX);
     let dir = cfg.artifacts_dir.clone();
-    let mut sched = BatchScheduler::new(cfg)?;
+    let mut sched = PipelineBuilder::from_config(cfg).build_scheduler()?;
     let ts = read_testset(Path::new(&dir).join(&sched.pipeline().meta().testset_file))?;
     let n = ts.len().min(limit);
     let hw = *sched.pipeline().hardware();
@@ -122,7 +141,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// deterministic sequence-ordered aggregation. `--workers 1` runs the
 /// single-threaded `BatchScheduler` instead, so the Fig. 13 experiment
 /// path is byte-for-byte unchanged — and both paths print the same
-/// deterministic stats digest for the same seed.
+/// deterministic stats digest for the same seed and any `--fidelity`.
 fn cmd_serve(args: &Args) -> Result<()> {
     // The pre-engine serve loop took --requests/--rate; fail loudly on
     // the removed flags instead of silently serving a default workload.
@@ -136,7 +155,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // ...and on anything unrecognized: a misspelled key or a key whose
     // value was forgotten must not silently serve the default workload.
-    let known_opts = ["workers", "queue-depth", "clouds", "seed", "artifacts", "parallelism"];
+    let known_opts =
+        ["workers", "queue-depth", "clouds", "seed", "artifacts", "parallelism", "fidelity"];
     let known_flags = ["quantized", "exact"];
     for key in args.opts.keys() {
         if !known_opts.contains(&key.as_str()) {
@@ -164,21 +184,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         n_clouds: parse_opt(args, "clouds", d.n_clouds)?,
         seed: parse_opt(args, "seed", d.seed)?,
     };
-    let mut cfg = pipeline_config(args);
+    // Zero values are rejected here, at parse time — never clamped.
+    serve_cfg.validate()?;
+    // Serving defaults to the fast tier (identical outputs and digests,
+    // only host throughput differs).
+    let mut cfg = pipeline_config(args, Fidelity::Fast)?;
     // Strict re-parse of --parallelism: pipeline_config is lenient for
     // the other subcommands, but serve's contract is fail-loudly.
     cfg.tile_parallelism = parse_opt(args, "parallelism", cfg.tile_parallelism)?;
-    let n = serve_cfg.n_clouds.max(1);
+    let fidelity = cfg.fidelity;
+    let n = serve_cfg.n_clouds;
     let seed = serve_cfg.seed;
 
-    if serve_cfg.lanes() == 1 {
+    if serve_cfg.workers == 1 {
         // Degenerate case: the single-threaded scheduler (the engine the
         // Fig. 13 experiments run on).
-        let mut sched = BatchScheduler::new(cfg)?;
+        let mut sched = PipelineBuilder::from_config(cfg).build_scheduler()?;
         let hw = *sched.pipeline().hardware();
         let (clouds, labels) =
             make_labelled_batch(n, sched.pipeline().meta().model.n_points, seed);
-        println!("serving {n} clouds on 1 worker (single-threaded scheduler, seed {seed})...");
+        println!(
+            "serving {n} clouds on 1 worker (single-threaded scheduler, seed {seed}, \
+             {fidelity} engines)..."
+        );
         let t0 = std::time::Instant::now();
         let (_, stats) = sched.classify_batch(&clouds, &labels)?;
         let wall = t0.elapsed().as_secs_f64();
@@ -189,12 +217,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         println!("stats {}", serve::stats_digest(&stats, &hw));
     } else {
-        let mut engine = ServeEngine::new(cfg, serve_cfg)?;
+        let mut engine = PipelineBuilder::from_config(cfg).build_serve(serve_cfg)?;
         let hw = *engine.pipeline().hardware();
         let (clouds, labels) =
             make_labelled_batch(n, engine.pipeline().meta().model.n_points, seed);
         println!(
-            "serving {n} clouds on {} workers (queue depth {}, seed {seed})...",
+            "serving {n} clouds on {} workers (queue depth {}, seed {seed}, {fidelity} engines)...",
             engine.workers(),
             engine.queue_depth()
         );
@@ -222,10 +250,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let cfg = pipeline_config(args);
-    let pipe = Pipeline::new(cfg)?;
+    let cfg = pipeline_config(args, Fidelity::BitExact)?;
+    let pipe = PipelineBuilder::from_config(cfg).build()?;
     let hw = pipe.hardware();
     println!("executor backend: {}", pipe.backend());
+    println!("engine fidelity: {}", pipe.config().fidelity);
     println!("hardware: {hw:#?}");
     println!("model: {:#?}", pipe.meta().model);
     let mut names: Vec<&String> = pipe.meta().artifacts.keys().collect();
@@ -242,16 +271,20 @@ fn help() {
          \n\
          commands:\n\
          \u{20}  run          classify synthetic clouds end-to-end\n\
-         \u{20}               [--clouds N] [--seed S] [--exact] [--quantized]\n\
+         \u{20}               [--clouds N] [--seed S] [--exact] [--quantized] [--fidelity T]\n\
          \u{20}  eval         evaluate the exported test set\n\
          \u{20}               [--limit N] [--exact] [--quantized] [--parallelism K]\n\
          \u{20}  serve        shard-parallel serving engine (clouds/sec + digest)\n\
          \u{20}               [--workers N] [--clouds M] [--queue-depth D] [--seed S]\n\
+         \u{20}               [--fidelity T]  (default: fast)\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
          \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\
+         \u{20}               [--fidelity T]  (default: bit-exact)\n\
          \u{20}  info         print hardware + artifact inventory\n\
          \n\
-         common options: --artifacts DIR (default: artifacts)"
+         common options: --artifacts DIR (default: artifacts)\n\
+         \u{20}               --fidelity bit-exact|fast  engine tier (identical outputs,\n\
+         \u{20}               cycles and energy ledgers on both; only host speed differs)"
     );
 }
 
@@ -268,7 +301,8 @@ fn main() -> Result<()> {
                 .get("artifacts")
                 .cloned()
                 .unwrap_or_else(|| "artifacts".to_string());
-            pc2im::experiments::run(&id, &dir)
+            let fidelity = fidelity_arg(&args, Fidelity::BitExact)?;
+            pc2im::experiments::run_with(&id, &dir, fidelity)
         }
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {

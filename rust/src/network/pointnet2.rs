@@ -15,9 +15,13 @@ use crate::pointcloud::synthetic::DatasetScale;
 /// group `k` neighbors within `radius`, run the point-wise MLP.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SaLayer {
+    /// Input points to this layer.
     pub n_in: usize,
+    /// Centroids sampled (FPS iterations).
     pub n_out: usize,
+    /// Neighbors grouped per centroid.
     pub k: usize,
+    /// Grouping radius in normalized coordinates.
     pub radius: f32,
     /// MLP channel trajectory including the input channels, e.g.
     /// `[3, 64, 64, 128]`.
@@ -50,14 +54,18 @@ impl SaLayer {
 /// Feature-propagation (upsampling) layer for segmentation heads.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FpLayer {
+    /// Coarse-level points interpolated from.
     pub n_coarse: usize,
+    /// Fine-level points interpolated to.
     pub n_fine: usize,
     /// kNN fan-in for interpolation (standard: 3).
     pub k: usize,
+    /// MLP channel trajectory including the input channels.
     pub mlp: Vec<usize>,
 }
 
 impl FpLayer {
+    /// MACs of the per-fine-point MLP.
     pub fn macs(&self) -> u64 {
         let mut macs = 0u64;
         for w in self.mlp.windows(2) {
@@ -70,19 +78,27 @@ impl FpLayer {
 /// Which stage a layer belongs to (used by stage-split reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// A sampling/grouping set-abstraction layer.
     SetAbstraction,
+    /// An upsampling feature-propagation layer.
     FeaturePropagation,
+    /// The classifier/segmentation head.
     Head,
 }
 
 /// A full network: SA trunk + optional FP decoder + head.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkDef {
+    /// Model name as reported in tables.
     pub name: &'static str,
+    /// Set-abstraction trunk, input to output order.
     pub sa_layers: Vec<SaLayer>,
+    /// Feature-propagation decoder (empty for classification).
     pub fp_layers: Vec<FpLayer>,
     /// Head MLP (classification) channel trajectory.
     pub head: Vec<usize>,
+    /// True when the MLP runs per input point before grouping
+    /// (Mesorasi-style delayed aggregation).
     pub delayed_aggregation: bool,
 }
 
@@ -95,7 +111,13 @@ impl NetworkDef {
                 SaLayer { n_in: 1024, n_out: 256, k: 32, radius: 0.2, mlp: vec![3, 64, 64, 128] },
                 SaLayer { n_in: 256, n_out: 64, k: 16, radius: 0.4, mlp: vec![131, 128, 128, 256] },
                 // global layer: "sample" 1 group of all 64
-                SaLayer { n_in: 64, n_out: 1, k: 64, radius: f32::INFINITY, mlp: vec![259, 256, 512] },
+                SaLayer {
+                    n_in: 64,
+                    n_out: 1,
+                    k: 64,
+                    radius: f32::INFINITY,
+                    mlp: vec![259, 256, 512],
+                },
             ],
             fp_layers: vec![],
             head: vec![512, 256, 128, 8],
@@ -110,9 +132,27 @@ impl NetworkDef {
             name: "PointNet2(s)",
             sa_layers: vec![
                 SaLayer { n_in: n, n_out: n / 4, k: 32, radius: 0.1, mlp: vec![3, 32, 32, 64] },
-                SaLayer { n_in: n / 4, n_out: n / 16, k: 32, radius: 0.2, mlp: vec![67, 64, 64, 128] },
-                SaLayer { n_in: n / 16, n_out: n / 64, k: 32, radius: 0.4, mlp: vec![131, 128, 128, 256] },
-                SaLayer { n_in: n / 64, n_out: n / 256, k: 32, radius: 0.8, mlp: vec![259, 256, 256, 512] },
+                SaLayer {
+                    n_in: n / 4,
+                    n_out: n / 16,
+                    k: 32,
+                    radius: 0.2,
+                    mlp: vec![67, 64, 64, 128],
+                },
+                SaLayer {
+                    n_in: n / 16,
+                    n_out: n / 64,
+                    k: 32,
+                    radius: 0.4,
+                    mlp: vec![131, 128, 128, 256],
+                },
+                SaLayer {
+                    n_in: n / 64,
+                    n_out: n / 256,
+                    k: 32,
+                    radius: 0.8,
+                    mlp: vec![259, 256, 256, 512],
+                },
             ],
             fp_layers: vec![
                 FpLayer { n_coarse: n / 256, n_fine: n / 64, k: 3, mlp: vec![768, 256, 256] },
@@ -174,6 +214,7 @@ impl NetworkDef {
 /// Per-cloud workload summary consumed by the accelerator simulators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Workload {
+    /// Raw input points per cloud.
     pub n_points: u64,
     /// Total FPS sampling iterations across SA layers.
     pub fps_iterations: u64,

@@ -15,16 +15,21 @@ const MAGIC: &[u8; 8] = b"PC2IMTST";
 /// A labelled evaluation set exported at build time.
 #[derive(Debug, Clone)]
 pub struct TestSet {
+    /// The clouds, submission order.
     pub clouds: Vec<PointCloud>,
+    /// One label per cloud.
     pub labels: Vec<i32>,
+    /// Points per cloud (static across the set).
     pub n_points: usize,
 }
 
 impl TestSet {
+    /// Number of labelled clouds.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the set has no clouds.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }

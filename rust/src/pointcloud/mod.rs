@@ -7,12 +7,16 @@ pub mod synthetic;
 /// convention throughout the crate).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Point3 {
+    /// X coordinate.
     pub x: f32,
+    /// Y coordinate.
     pub y: f32,
+    /// Z coordinate.
     pub z: f32,
 }
 
 impl Point3 {
+    /// A point from its three coordinates.
     pub const fn new(x: f32, y: f32, z: f32) -> Self {
         Self { x, y, z }
     }
@@ -30,6 +34,7 @@ impl Point3 {
         (self.x - o.x).abs() + (self.y - o.y).abs() + (self.z - o.z).abs()
     }
 
+    /// Coordinate along `axis` (0 = x, 1 = y, anything else = z).
     #[inline]
     pub fn coord(&self, axis: usize) -> f32 {
         match axis {
@@ -44,18 +49,22 @@ impl Point3 {
 /// structures index into `points`.
 #[derive(Debug, Clone, Default)]
 pub struct PointCloud {
+    /// The points, densely stored.
     pub points: Vec<Point3>,
 }
 
 impl PointCloud {
+    /// A cloud owning the given points.
     pub fn new(points: Vec<Point3>) -> Self {
         Self { points }
     }
 
+    /// Number of points.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// True when the cloud has no points.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
@@ -110,6 +119,7 @@ impl PointCloud {
         v
     }
 
+    /// Rebuild a cloud from the flat layout written by [`Self::to_flat`].
     pub fn from_flat(flat: &[f32]) -> Self {
         assert_eq!(flat.len() % 3, 0, "flat length must be divisible by 3");
         Self {

@@ -21,6 +21,7 @@ pub enum DatasetScale {
 }
 
 impl DatasetScale {
+    /// Points per cloud at this scale (Table I).
     pub fn n_points(self) -> usize {
         match self {
             DatasetScale::Small => 1024,
@@ -29,6 +30,7 @@ impl DatasetScale {
         }
     }
 
+    /// Display name of the scale (dataset stand-in + point count).
     pub fn name(self) -> &'static str {
         match self {
             DatasetScale::Small => "ModelNet-like (1k)",
@@ -37,6 +39,7 @@ impl DatasetScale {
         }
     }
 
+    /// Every scale, small to large.
     pub const ALL: [DatasetScale; 3] =
         [DatasetScale::Small, DatasetScale::Medium, DatasetScale::Large];
 }
@@ -256,7 +259,9 @@ pub fn make_street_cloud(n: usize, seed: u64) -> PointCloud {
 /// Workload cloud at a given dataset scale (the per-figure sweeps use this).
 pub fn make_workload_cloud(scale: DatasetScale, seed: u64) -> PointCloud {
     match scale {
-        DatasetScale::Small => make_class_cloud((seed % NUM_CLASSES as u64) as usize, scale.n_points(), seed),
+        DatasetScale::Small => {
+            make_class_cloud((seed % NUM_CLASSES as u64) as usize, scale.n_points(), seed)
+        }
         DatasetScale::Medium => make_room_cloud(scale.n_points(), seed),
         DatasetScale::Large => make_street_cloud(scale.n_points(), seed),
     }

@@ -16,8 +16,11 @@ pub const TD_MAX: u32 = 3 * (u16::MAX as u32);
 /// A coordinate quantized onto the unsigned 16-bit grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub struct QPoint3 {
+    /// Quantized x coordinate.
     pub x: u16,
+    /// Quantized y coordinate.
     pub y: u16,
+    /// Quantized z coordinate.
     pub z: u16,
 }
 
@@ -53,6 +56,7 @@ pub fn dequantize_coord(q: u16) -> f32 {
     (q as f32) / (u16::MAX as f32) * 2.0 - 1.0
 }
 
+/// Quantize one point onto the u16 grid.
 pub fn quantize_point(p: &crate::pointcloud::Point3) -> QPoint3 {
     QPoint3 {
         x: quantize_coord(p.x),
@@ -61,10 +65,12 @@ pub fn quantize_point(p: &crate::pointcloud::Point3) -> QPoint3 {
     }
 }
 
+/// Quantize every point of a cloud onto the u16 grid.
 pub fn quantize_cloud(pc: &crate::pointcloud::PointCloud) -> Vec<QPoint3> {
     pc.points.iter().map(quantize_point).collect()
 }
 
+/// Dequantize one grid point back to float coordinates.
 pub fn dequantize_point(q: &QPoint3) -> crate::pointcloud::Point3 {
     crate::pointcloud::Point3::new(
         dequantize_coord(q.x),

@@ -122,15 +122,19 @@ pub struct Meta {
 impl Meta {
     /// Parse `meta.json` out of an artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(artifacts_dir.join("meta.json"))
-            .with_context(|| format!("reading meta.json in {artifacts_dir:?} (run `make artifacts`)"))?;
+        let text = std::fs::read_to_string(artifacts_dir.join("meta.json")).with_context(
+            || format!("reading meta.json in {artifacts_dir:?} (run `make artifacts`)"),
+        )?;
         let v = json::parse(&text)?;
         let m = v.get("model").ok_or_else(|| anyhow!("meta.json missing 'model'"))?;
         let us = |k: &str| -> Result<usize> {
             m.get(k).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("model.{k} missing"))
         };
         let fs = |k: &str| -> Result<f32> {
-            m.get(k).and_then(|x| x.as_f64()).map(|f| f as f32).ok_or_else(|| anyhow!("model.{k} missing"))
+            m.get(k)
+                .and_then(|x| x.as_f64())
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("model.{k} missing"))
         };
         let canonical = ModelMeta::canonical();
         let dims = |k: &str, fallback: &[usize]| -> Vec<usize> {
@@ -196,8 +200,16 @@ impl Meta {
         let model = ModelMeta::canonical();
         let mut artifacts = HashMap::new();
         let specs: [(&str, Vec<usize>, Vec<usize>); 3] = [
-            ("sa1", vec![model.s1, model.k1, model.mlp1[0]], vec![model.s1, *model.mlp1.last().unwrap()]),
-            ("sa2", vec![model.s2, model.k2, model.mlp2[0]], vec![model.s2, *model.mlp2.last().unwrap()]),
+            (
+                "sa1",
+                vec![model.s1, model.k1, model.mlp1[0]],
+                vec![model.s1, *model.mlp1.last().unwrap()],
+            ),
+            (
+                "sa2",
+                vec![model.s2, model.k2, model.mlp2[0]],
+                vec![model.s2, *model.mlp2.last().unwrap()],
+            ),
             ("head", vec![model.s2, model.mlp3[0]], vec![model.num_classes]),
         ];
         for (base, input_shape, output_shape) in specs {

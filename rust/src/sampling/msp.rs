@@ -12,16 +12,19 @@ use crate::pointcloud::PointCloud;
 /// One spatial tile: indices into the parent cloud.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Tile {
+    /// Member-point indices into the parent cloud.
     pub indices: Vec<usize>,
     /// Depth in the split tree (diagnostics / scheduling priority).
     pub depth: u32,
 }
 
 impl Tile {
+    /// Number of points in the tile.
     pub fn len(&self) -> usize {
         self.indices.len()
     }
 
+    /// True when the tile holds no points.
     pub fn is_empty(&self) -> bool {
         self.indices.is_empty()
     }

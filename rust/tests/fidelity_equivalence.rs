@@ -1,0 +1,213 @@
+//! The tier boundary contract: the `Fast` engines must be bit-identical
+//! to the `BitExact` gate-level models — same outputs, same cycle
+//! counts, same energy-ledger event counts — on Table-I-scale workloads,
+//! and the pipeline/serving layers built on them must produce identical
+//! logits and stats digests for every fidelity tier and worker count.
+//! Only host wall-clock time may differ between tiers.
+
+use pc2im::cim::apd_cim::ApdCimConfig;
+use pc2im::cim::max_cam::CamConfig;
+use pc2im::cim::sc_cim::ScCimConfig;
+use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::{Pipeline, PipelineBuilder};
+use pc2im::engine::{
+    distance_engine, mac_engine, max_search_engine, DistanceEngine, Fidelity, MaxSearchEngine,
+};
+use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
+use pc2im::quant::{quantize_cloud, QPoint3, TD_BITS};
+use pc2im::rng::Rng64;
+use pc2im::sampling::msp_partition;
+
+fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
+    PipelineConfig {
+        artifacts_dir: std::env::temp_dir()
+            .join("pc2im-fidelity-no-artifacts")
+            .to_string_lossy()
+            .into_owned(),
+        fidelity,
+        ..PipelineConfig::default()
+    }
+}
+
+fn assert_engines_agree(
+    a: &dyn DistanceEngine,
+    b: &dyn DistanceEngine,
+    cam_a: &dyn MaxSearchEngine,
+    cam_b: &dyn MaxSearchEngine,
+    ctx: &str,
+) {
+    assert_eq!(a.cycles(), b.cycles(), "{ctx}: distance-engine cycles");
+    assert_eq!(a.ledger(), b.ledger(), "{ctx}: distance-engine ledger");
+    assert_eq!(cam_a.cycles(), cam_b.cycles(), "{ctx}: max-search cycles");
+    assert_eq!(cam_a.ledger(), cam_b.ledger(), "{ctx}: max-search ledger");
+}
+
+/// Drive the full FPS loop (the paper's Fig. 10(b) flow) on both tiers
+/// over one tile and demand identical samples, cycles and ledgers.
+fn check_tile(tile: &[QPoint3], m: usize, ctx: &str) {
+    let mut apd_bx = distance_engine(Fidelity::BitExact, ApdCimConfig::default());
+    let mut apd_fa = distance_engine(Fidelity::Fast, ApdCimConfig::default());
+    apd_bx.load_tile(tile);
+    apd_fa.load_tile(tile);
+    let mut cam_bx = max_search_engine(Fidelity::BitExact, CamConfig::default());
+    let mut cam_fa = max_search_engine(Fidelity::Fast, CamConfig::default());
+
+    let idx_bx = Pipeline::cam_fps(apd_bx.as_mut(), cam_bx.as_mut(), m, 0);
+    let idx_fa = Pipeline::cam_fps(apd_fa.as_mut(), cam_fa.as_mut(), m, 0);
+    assert_eq!(idx_bx, idx_fa, "{ctx}: FPS samples");
+    assert_engines_agree(apd_bx.as_ref(), apd_fa.as_ref(), cam_bx.as_ref(), cam_fa.as_ref(), ctx);
+
+    // A lattice-style scan against an arbitrary (cross-tile) reference.
+    let r = tile[tile.len() / 2];
+    assert_eq!(
+        apd_bx.scan_distances_to(&r),
+        apd_fa.scan_distances_to(&r),
+        "{ctx}: cross-tile scan"
+    );
+    assert_eq!(apd_bx.cycles(), apd_fa.cycles(), "{ctx}: post-scan cycles");
+    assert_eq!(apd_bx.ledger(), apd_fa.ledger(), "{ctx}: post-scan ledger");
+}
+
+#[test]
+fn engines_bit_identical_across_table1_scales() {
+    for scale in DatasetScale::ALL {
+        let cloud = make_workload_cloud(scale, 17);
+        let q = quantize_cloud(&cloud);
+        let tiles = msp_partition(&cloud, ApdCimConfig::default().capacity());
+        // Two tiles per scale keep the gate-level walk affordable while
+        // still covering every Table-I point distribution.
+        for (t, tile) in tiles.iter().take(2).enumerate() {
+            let pts: Vec<QPoint3> = tile.indices.iter().map(|&i| q[i]).collect();
+            let m = 64.min(pts.len());
+            check_tile(&pts, m, &format!("{scale:?} tile {t}"));
+        }
+    }
+}
+
+#[test]
+fn max_search_bit_identical_on_adversarial_patterns() {
+    // Random updates/invalidates interleaved with searches, plus the
+    // degenerate all-zero and single-entry patterns.
+    let mut rng = Rng64::new(2024);
+    for n in [1usize, 3, 129, 2048] {
+        let tds: Vec<u32> = (0..n).map(|_| rng.below(1u64 << TD_BITS) as u32).collect();
+        let mut bx = max_search_engine(Fidelity::BitExact, CamConfig::default());
+        let mut fa = max_search_engine(Fidelity::Fast, CamConfig::default());
+        bx.load_initial(&tds);
+        fa.load_initial(&tds);
+        for round in 0..8 {
+            let (va, ia) = bx.max_search();
+            let (vb, ib) = fa.max_search();
+            assert_eq!((va, ia), (vb, ib), "n={n} round={round}");
+            bx.invalidate(ia);
+            fa.invalidate(ib);
+            for j in 0..n {
+                let d = rng.below(1u64 << TD_BITS) as u32;
+                bx.update_min(j, d);
+                fa.update_min(j, d);
+            }
+        }
+        // all-zero endgame: every TD invalidated
+        for j in 0..n {
+            bx.invalidate(j);
+            fa.invalidate(j);
+        }
+        assert_eq!(bx.max_search(), fa.max_search(), "n={n} all-zero");
+        assert_eq!(bx.cycles(), fa.cycles(), "n={n} cycles");
+        assert_eq!(bx.ledger(), fa.ledger(), "n={n} ledger");
+        assert_eq!(bx.occupied(), fa.occupied(), "n={n} occupancy");
+    }
+}
+
+#[test]
+fn mac_engine_bit_identical_on_model_matmuls() {
+    let mut rng = Rng64::new(7);
+    let mut bx = mac_engine(Fidelity::BitExact, ScCimConfig::default());
+    let mut fa = mac_engine(Fidelity::Fast, ScCimConfig::default());
+    for len in [1usize, 2, 16, 131, 515] {
+        let x: Vec<u16> = (0..len).map(|_| rng.next_u64() as u16).collect();
+        let w: Vec<i16> = (0..len).map(|_| rng.next_u64() as i16).collect();
+        assert_eq!(bx.dot(&x, &w), fa.dot(&x, &w), "dot len={len}");
+    }
+    // The PointNet2(c) matmul schedule the pipeline prices per cloud.
+    for (n, k, m) in [
+        (256 * 32, 3, 64),
+        (256 * 32, 64, 64),
+        (256 * 32, 64, 128),
+        (64 * 16, 131, 128),
+        (64, 259, 256),
+        (1, 512, 256),
+        (1, 128, 8),
+    ] {
+        assert_eq!(bx.matmul_cost(n, k, m), fa.matmul_cost(n, k, m), "matmul {n}x{k}x{m}");
+    }
+    assert_eq!(bx.cycles(), fa.cycles());
+    assert_eq!(bx.ledger(), fa.ledger());
+}
+
+#[test]
+fn classify_bit_identical_between_tiers() {
+    let mut bx = PipelineBuilder::from_config(hermetic_cfg(Fidelity::BitExact)).build().unwrap();
+    let mut fa = PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast)).build().unwrap();
+    let (clouds, _) = make_labelled_batch(4, 1024, 31);
+    for (i, cloud) in clouds.iter().enumerate() {
+        let a = bx.classify(cloud).unwrap();
+        let b = fa.classify(cloud).unwrap();
+        assert_eq!(a.logits, b.logits, "cloud {i} logits");
+        assert_eq!(a.pred, b.pred, "cloud {i} pred");
+        assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles, "cloud {i} preproc");
+        assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles, "cloud {i} feature");
+        assert_eq!(a.stats.ledger, b.stats.ledger, "cloud {i} ledger");
+    }
+}
+
+#[test]
+fn serve_digest_invariant_across_tiers_and_worker_counts() {
+    let hw = HardwareConfig::default();
+    let (clouds, labels) = make_labelled_batch(6, 1024, 4100);
+
+    // Reference digest: the bit-exact single-threaded scheduler.
+    let mut sched = PipelineBuilder::from_config(hermetic_cfg(Fidelity::BitExact))
+        .build_scheduler()
+        .unwrap();
+    let (_, ref_stats) = sched.classify_batch(&clouds, &labels).unwrap();
+    let reference = stats_digest(&ref_stats, &hw);
+
+    for fidelity in Fidelity::ALL {
+        for workers in [1usize, 2, 4] {
+            let mut engine = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                .build_serve(ServeConfig { workers, queue_depth: 2, ..ServeConfig::default() })
+                .unwrap();
+            let report = engine.run(&clouds, &labels).unwrap();
+            assert_eq!(
+                stats_digest(&report.stats, &hw),
+                reference,
+                "fidelity={fidelity} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_sampling_ablation_is_tier_invariant_too() {
+    // The exact-sampling path bypasses the CIM engines for sampling but
+    // still prices MACs through the MacEngine — tiers must agree there
+    // as well.
+    let mut bx = PipelineBuilder::from_config(hermetic_cfg(Fidelity::BitExact))
+        .exact_sampling(true)
+        .build()
+        .unwrap();
+    let mut fa = PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
+        .exact_sampling(true)
+        .build()
+        .unwrap();
+    let (clouds, _) = make_labelled_batch(2, 1024, 55);
+    for cloud in &clouds {
+        let a = bx.classify(cloud).unwrap();
+        let b = fa.classify(cloud).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles);
+        assert_eq!(a.stats.ledger, b.stats.ledger);
+    }
+}

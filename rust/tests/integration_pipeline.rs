@@ -3,7 +3,7 @@
 //! Skipped gracefully when artifacts/ has not been built.
 
 use pc2im::config::PipelineConfig;
-use pc2im::coordinator::{BatchScheduler, Pipeline};
+use pc2im::coordinator::PipelineBuilder;
 use pc2im::pointcloud::io::read_testset;
 use pc2im::pointcloud::synthetic::make_class_cloud;
 use pc2im::runtime::Runtime;
@@ -71,7 +71,7 @@ fn l1_distance_artifact_matches_engine() {
 fn pipeline_beats_chance_on_testset_sample() {
     let Some(cfg) = cfg() else { return };
     let dir = cfg.artifacts_dir.clone();
-    let mut pipe = Pipeline::new(cfg).unwrap();
+    let mut pipe = PipelineBuilder::from_config(cfg).build().unwrap();
     let ts = read_testset(Path::new(&dir).join(&pipe.meta().testset_file)).unwrap();
     let n = 16.min(ts.len());
     let mut correct = 0;
@@ -86,8 +86,8 @@ fn pipeline_beats_chance_on_testset_sample() {
 #[test]
 fn quantized_artifacts_agree_with_fp32() {
     let Some(cfg) = cfg() else { return };
-    let mut fp = Pipeline::new(cfg.clone()).unwrap();
-    let mut q16 = Pipeline::new(PipelineConfig { quantized: true, ..cfg }).unwrap();
+    let mut fp = PipelineBuilder::from_config(cfg.clone()).build().unwrap();
+    let mut q16 = PipelineBuilder::from_config(cfg).quantized(true).build().unwrap();
     let mut agree = 0;
     for seed in 0..6u64 {
         let cloud = make_class_cloud((seed % 8) as usize, 1024, 300 + seed);
@@ -111,10 +111,13 @@ fn scheduler_matches_sequential_pipeline() {
     let Some(cfg) = cfg() else { return };
     let clouds: Vec<_> = (0..3).map(|i| make_class_cloud(i, 1024, 400 + i as u64)).collect();
     let labels = vec![0, 1, 2];
-    let mut seq = Pipeline::new(cfg.clone()).unwrap();
+    let mut seq = PipelineBuilder::from_config(cfg.clone()).build().unwrap();
     let seq_preds: Vec<usize> =
         clouds.iter().map(|c| seq.classify(c).unwrap().pred).collect();
-    let mut sched = BatchScheduler::new(PipelineConfig { tile_parallelism: 3, ..cfg }).unwrap();
+    let mut sched = PipelineBuilder::from_config(cfg)
+        .tile_parallelism(3)
+        .build_scheduler()
+        .unwrap();
     let (preds, stats) = sched.classify_batch(&clouds, &labels).unwrap();
     assert_eq!(preds, seq_preds, "scheduler must be a pure overlap optimization");
     assert_eq!(stats.n, 3);
@@ -124,8 +127,8 @@ fn scheduler_matches_sequential_pipeline() {
 fn deterministic_across_runs() {
     let Some(cfg) = cfg() else { return };
     let cloud = make_class_cloud(4, 1024, 500);
-    let mut p1 = Pipeline::new(cfg.clone()).unwrap();
-    let mut p2 = Pipeline::new(cfg).unwrap();
+    let mut p1 = PipelineBuilder::from_config(cfg.clone()).build().unwrap();
+    let mut p2 = PipelineBuilder::from_config(cfg).build().unwrap();
     let a = p1.classify(&cloud).unwrap();
     let b = p2.classify(&cloud).unwrap();
     assert_eq!(a.logits, b.logits);

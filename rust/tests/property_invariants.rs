@@ -21,7 +21,13 @@ const CASES: u64 = 40;
 
 fn rand_cloud(rng: &mut Rng64, n: usize) -> Vec<Point3> {
     (0..n)
-        .map(|_| Point3::new(rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0)))
+        .map(|_| {
+            Point3::new(
+                rng.range_f32(-1.0, 1.0),
+                rng.range_f32(-1.0, 1.0),
+                rng.range_f32(-1.0, 1.0),
+            )
+        })
         .collect()
 }
 

@@ -8,7 +8,7 @@
 //! make the small cases exact in any summation order.
 
 use pc2im::config::PipelineConfig;
-use pc2im::coordinator::Pipeline;
+use pc2im::coordinator::PipelineBuilder;
 use pc2im::pointcloud::synthetic::make_class_cloud;
 use pc2im::runtime::reference::{
     grouped_max_ref, l1_distance_ref, mlp_layer_ref, DenseLayer,
@@ -123,7 +123,7 @@ fn executor_is_deterministic_across_runtimes() {
 
 #[test]
 fn classify_round_trip_without_artifacts() {
-    let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+    let mut pipe = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
     let n_points = pipe.meta().model.n_points;
     let cloud = make_class_cloud(2, n_points, 77);
     let r = pipe.classify(&cloud).unwrap();
@@ -138,8 +138,8 @@ fn classify_round_trip_without_artifacts() {
 #[test]
 fn classify_deterministic_without_artifacts() {
     let cloud = make_class_cloud(4, 1024, 500);
-    let mut p1 = Pipeline::new(hermetic_cfg()).unwrap();
-    let mut p2 = Pipeline::new(hermetic_cfg()).unwrap();
+    let mut p1 = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
+    let mut p2 = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
     let a = p1.classify(&cloud).unwrap();
     let b = p2.classify(&cloud).unwrap();
     assert_eq!(a.logits, b.logits);
@@ -150,12 +150,11 @@ fn classify_deterministic_without_artifacts() {
 #[test]
 fn exact_and_quantized_configs_run_without_artifacts() {
     let cloud = make_class_cloud(1, 1024, 9);
-    let mut exact = Pipeline::new(PipelineConfig {
-        exact_sampling: true,
-        ..hermetic_cfg()
-    })
-    .unwrap();
-    let mut q16 = Pipeline::new(PipelineConfig { quantized: true, ..hermetic_cfg() }).unwrap();
+    let mut exact = PipelineBuilder::from_config(hermetic_cfg())
+        .exact_sampling(true)
+        .build()
+        .unwrap();
+    let mut q16 = PipelineBuilder::from_config(hermetic_cfg()).quantized(true).build().unwrap();
     let a = exact.classify(&cloud).unwrap();
     let b = q16.classify(&cloud).unwrap();
     assert_eq!(a.logits.len(), b.logits.len());

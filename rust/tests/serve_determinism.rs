@@ -9,8 +9,8 @@
 //!    at `queue_depth + workers`.
 
 use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
-use pc2im::coordinator::serve::{aggregate, stats_digest, ServeEngine};
-use pc2im::coordinator::{BatchScheduler, BatchStats, Pipeline};
+use pc2im::coordinator::serve::{aggregate, stats_digest};
+use pc2im::coordinator::{BatchStats, PipelineBuilder};
 use pc2im::pointcloud::synthetic::make_labelled_batch;
 use pc2im::pointcloud::PointCloud;
 
@@ -42,20 +42,18 @@ fn four_workers_bit_identical_to_one_worker_scheduler() {
     let (clouds, labels) = workload(6);
 
     // 1-worker reference: the single-threaded scheduler (Fig. 13 path).
-    let mut sched = BatchScheduler::new(hermetic_cfg()).unwrap();
+    let mut sched = PipelineBuilder::from_config(hermetic_cfg()).build_scheduler().unwrap();
     let (sched_preds, sched_stats) = sched.classify_batch(&clouds, &labels).unwrap();
 
     // Per-cloud reference logits from a plain pipeline.
-    let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+    let mut pipe = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
     let ref_logits: Vec<Vec<f32>> =
         clouds.iter().map(|c| pipe.classify(c).unwrap().logits).collect();
 
     // 4-worker serving engine over the same sequence.
-    let mut engine = ServeEngine::new(
-        hermetic_cfg(),
-        ServeConfig { workers: 4, queue_depth: 4, ..ServeConfig::default() },
-    )
-    .unwrap();
+    let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+        .build_serve(ServeConfig { workers: 4, queue_depth: 4, ..ServeConfig::default() })
+        .unwrap();
     let report = engine.run(&clouds, &labels).unwrap();
 
     assert_eq!(report.preds(), sched_preds, "predictions must match the 1-worker path");
@@ -76,11 +74,9 @@ fn worker_counts_agree_with_each_other() {
     let mut digests = Vec::new();
     let hw = HardwareConfig::default();
     for workers in [1usize, 3] {
-        let mut engine = ServeEngine::new(
-            hermetic_cfg(),
-            ServeConfig { workers, queue_depth: 2, ..ServeConfig::default() },
-        )
-        .unwrap();
+        let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+            .build_serve(ServeConfig { workers, queue_depth: 2, ..ServeConfig::default() })
+            .unwrap();
         let report = engine.run(&clouds, &labels).unwrap();
         assert_eq!(report.workers, workers);
         digests.push(stats_digest(&report.stats, &hw));
@@ -94,7 +90,7 @@ fn aggregation_is_sequence_ordered_not_completion_ordered() {
     // result order changes nothing because the engine re-slots by seq id
     // first. Sanity-check the helper itself on a hand-built permutation.
     let (clouds, labels) = workload(4);
-    let mut pipe = Pipeline::new(hermetic_cfg()).unwrap();
+    let mut pipe = PipelineBuilder::from_config(hermetic_cfg()).build().unwrap();
     let results: Vec<_> = clouds.iter().map(|c| pipe.classify(c).unwrap()).collect();
     let direct = aggregate(&results, &labels);
     // permute then restore seq order, as the engine's slot table does
@@ -112,11 +108,9 @@ fn aggregation_is_sequence_ordered_not_completion_ordered() {
 fn queue_backpressure_bounds_in_flight_clouds() {
     let (clouds, labels) = workload(10);
     let (workers, depth) = (2usize, 2usize);
-    let mut engine = ServeEngine::new(
-        hermetic_cfg(),
-        ServeConfig { workers, queue_depth: depth, ..ServeConfig::default() },
-    )
-    .unwrap();
+    let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+        .build_serve(ServeConfig { workers, queue_depth: depth, ..ServeConfig::default() })
+        .unwrap();
     let report = engine.run(&clouds, &labels).unwrap();
     assert_eq!(report.results.len(), 10);
     // The bounded queue guarantees submission can never run more than

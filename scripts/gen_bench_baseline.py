@@ -357,10 +357,88 @@ def main():
         one = s["modeled_clouds_per_s"]["1"]
         assert abs(one * s["pc2im_latency_ms"] / 1e3 - 1.0) < 0.01, (name, s)
         assert abs(s["modeled_clouds_per_s"]["8"] / one - 8.0) < 0.05, (name, s)
+    # ---- BENCH_fidelity.json: the engine-tier axis of the serve bench ----
+    #
+    # Simulated metrics (cycles, ledgers, digests, modeled clouds/sec) are
+    # tier-INVARIANT by contract — rust/tests/fidelity_equivalence.rs pins
+    # the Fast tier bit-identical to BitExact — so both tiers share one
+    # simulated column. What differs is host work per cloud; that is
+    # recorded two ways: (a) a deterministic modeled host-op ratio derived
+    # from the engine algorithms below, and (b) the CI smoke lane's real
+    # timings of benches/serve_throughput.rs (fidelity x workers x batch,
+    # via PC2IM_BENCH_JSON), which are machine-dependent and not committed.
+    #
+    # Host-op model per FPS MAX search over a tile of T live TDs:
+    #   bit-exact — the gate walk probes every pair in every active group
+    #     across TD_BITS bit cycles plus a deactivation pass: ~2*TD_BITS*T
+    #     array visits;
+    #   fast — one max/argmax pass plus one xor/leading_zeros energy pass:
+    #     ~2*T visits.
+    # The distance scans and MAC pricing are already native on both tiers,
+    # so the MAX search dominates the tier gap on the serve hot path.
+    fidelity_scales = {}
+    for name, net in scales:
+        lat = latency_s(pc2im_run(net))
+        iters = sum(n_out for _n_in, n_out, _k, _m in net["sa"] if n_out > 1)
+        tile = min(net["sa"][0][0], TILE_CAPACITY)
+        bitexact_ops = iters * 2 * TD_BITS * tile
+        fast_ops = iters * 2 * tile
+        fidelity_scales[name] = {
+            "pc2im_latency_ms": round(lat * 1e3, 4),
+            "modeled_clouds_per_s_per_worker": round(1.0 / lat, 2),
+            "max_search_host_ops_per_cloud": {
+                "bit-exact": bitexact_ops,
+                "fast": fast_ops,
+            },
+            "modeled_host_op_ratio": round(bitexact_ops / fast_ops, 2),
+        }
+    fidelity_out = {
+        "schema": 1,
+        "source": "scripts/gen_bench_baseline.py — fidelity-tier axis of "
+                  "benches/serve_throughput.rs",
+        "note": (
+            "Simulated serving metrics are identical on both engine tiers by "
+            "construction (rust/tests/fidelity_equivalence.rs enforces bit-identical "
+            "logits, cycles and ledgers), so this file records one simulated column "
+            "plus the deterministic modeled host-op ratio of the MAX-search hot "
+            "path. Measured host clouds/sec per tier is machine-dependent and "
+            "recorded by the CI bench smoke lane running "
+            "benches/serve_throughput.rs (PC2IM_BENCH_JSON)."
+        ),
+        "tiers": ["bit-exact", "fast"],
+        "defaults": {"serve": "fast", "experiments": "bit-exact"},
+        "equivalence": {
+            "bit_identical_fields": [
+                "logits", "preds", "preproc_cycles", "feature_cycles",
+                "energy_ledger", "stats_digest",
+            ],
+            "enforced_by": "rust/tests/fidelity_equivalence.rs",
+        },
+        "worker_sweep": worker_sweep,
+        "serve_fidelity": fidelity_scales,
+    }
+    fidelity_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_fidelity.json"
+    )
+    with open(fidelity_path, "w") as f:
+        json.dump(fidelity_out, f, indent=1)
+        f.write("\n")
+    # fidelity sanity: absolute op counts for the classification scale,
+    # hand-computed (PointNet2(c): 256+64 = 320 FPS iterations over a
+    # 1024-point tile), so a wrong `iters`/`tile` derivation cannot slip
+    # through on the algebraic ratio alone.
+    small = fidelity_scales["ModelNet-like (1k)"]["max_search_host_ops_per_cloud"]
+    assert small["bit-exact"] == 320 * 2 * TD_BITS * 1024 == 12_451_840, small
+    assert small["fast"] == 320 * 2 * 1024 == 655_360, small
+    for name, _net in scales:
+        assert fidelity_scales[name]["modeled_host_op_ratio"] == float(TD_BITS), name
+
     print(f"wrote {os.path.normpath(path)}")
     print(f"wrote {os.path.normpath(serve_path)}")
+    print(f"wrote {os.path.normpath(fidelity_path)}")
     print(json.dumps(out["fig13a_latency"], indent=1))
     print(json.dumps(serve_out["serve_throughput"], indent=1))
+    print(json.dumps(fidelity_out["serve_fidelity"], indent=1))
 
 
 if __name__ == "__main__":
