@@ -1,0 +1,78 @@
+//! Preprocessing-stage throughput: clouds/sec for the host-side
+//! quantize → FPS → lattice-query → CSR-gather stages alone
+//! (`Pipeline::preprocess`, no MLP execution), cold vs. warm scratch.
+//!
+//! The point is the arena: a cold pipeline pays the scratch warm-up on
+//! its first cloud, a warm pipeline refills every buffer in place — the
+//! bench prints both and asserts the warm path reports zero
+//! `scratch_allocs` per cloud, so bit-rot in the no-per-cloud-allocation
+//! contract fails the CI smoke lane loudly.
+//!
+//! Run with: `cargo bench --bench preprocess_throughput`
+//! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
+//! `PC2IM_BENCH_SMOKE=1`; `PC2IM_BENCH_JSON=<path>` appends one JSON line
+//! per configuration. The committed deterministic anchor is
+//! BENCH_prep.json; host clouds/sec printed here is machine-dependent.)
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::coordinator::PipelineBuilder;
+use pc2im::engine::Fidelity;
+use pc2im::pointcloud::synthetic::make_labelled_batch;
+
+fn main() {
+    let smoke = harness::smoke_mode();
+    let batch = if smoke { 4 } else { 16 };
+    let iters = if smoke { 1 } else { 5 };
+    let tiers: &[Fidelity] = if smoke { &[Fidelity::Fast] } else { &Fidelity::ALL };
+
+    harness::header("preprocessing stages alone (quantize + sample + group + gather)");
+    for &fidelity in tiers {
+        let (clouds, _) = make_labelled_batch(batch, 1024, 31000);
+
+        // Cold: a fresh pipeline (empty arena) per measurement, so every
+        // iteration pays the warm-up growth of the first cloud. The
+        // pipelines are built *outside* the timed closure (one per
+        // invocation, +1 for the harness warm-up) so construction cost
+        // never masquerades as scratch warm-up.
+        let mut pool: Vec<_> = (0..iters + 1)
+            .map(|_| {
+                PipelineBuilder::new().fidelity(fidelity).build().expect("hermetic pipeline")
+            })
+            .collect();
+        let name_cold = format!("preprocess fid={fidelity} batch={batch} scratch=cold");
+        let mean_cold = harness::bench(&name_cold, iters, || {
+            // Loud, not silent: an exhausted pool means the harness call
+            // count changed and construction would pollute the timing.
+            let mut pipe = pool.pop().expect("pool must cover harness warm-up + iters");
+            let mut allocs = 0u64;
+            for c in &clouds {
+                allocs += pipe.preprocess(c).expect("preprocess").scratch_allocs;
+            }
+            assert!(allocs > 0, "cold arena must warm up");
+            allocs
+        });
+        println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean_cold.max(1e-12));
+
+        // Warm: one pipeline reused across the whole sweep; steady state
+        // must not allocate in the preprocessing + gather stages.
+        let mut pipe = PipelineBuilder::new()
+            .fidelity(fidelity)
+            .build()
+            .expect("hermetic pipeline");
+        for c in &clouds {
+            pipe.preprocess(c).expect("warm-up");
+        }
+        let name_warm = format!("preprocess fid={fidelity} batch={batch} scratch=warm");
+        let mean_warm = harness::bench(&name_warm, iters, || {
+            let mut allocs = 0u64;
+            for c in &clouds {
+                allocs += pipe.preprocess(c).expect("preprocess").scratch_allocs;
+            }
+            assert_eq!(allocs, 0, "warm preprocessing must be allocation-free");
+            allocs
+        });
+        println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean_warm.max(1e-12));
+    }
+}

@@ -112,23 +112,40 @@ impl ApdCim {
     /// Returns all distances; charges one [`Event::ApdDistanceOp`] per
     /// point plus register traffic for the reference readout.
     pub fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.scan_distances_into(ref_idx, &mut out);
+        out
+    }
+
+    /// Buffer-filling variant of [`Self::scan_distances`]: `out` is
+    /// cleared and refilled, so a warm buffer absorbs every scan of a
+    /// tile without heap traffic (the scratch-arena request path).
+    pub fn scan_distances_into(&mut self, ref_idx: usize, out: &mut Vec<u32>) {
         assert!(ref_idx < self.points.len(), "reference {ref_idx} not resident");
         let r = self.points[ref_idx];
-        self.scan_distances_to(&r)
+        self.scan_distances_to_into(&r, out);
     }
 
     /// Scan against an arbitrary reference point (used by lattice query
     /// when the centroid comes from another tile's coordinate frame).
     pub fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.scan_distances_to_into(r, &mut out);
+        out
+    }
+
+    /// Buffer-filling variant of [`Self::scan_distances_to`].
+    pub fn scan_distances_to_into(&mut self, r: &QPoint3, out: &mut Vec<u32>) {
         // Reference readout into bit-parallel input registers: 48 bits.
         self.ledger.charge(Event::RegBit, 48);
         self.cycles += 1;
         // Hot path uses native integer ops; the gate-level datapath
         // (bitops::l1_distance_19b) is proven equivalent by the bitops unit
         // tests and re-checked here in debug builds.
-        let out: Vec<u32> = self.points.iter().map(|p| p.l1(r)).collect();
+        out.clear();
+        out.extend(self.points.iter().map(|p| p.l1(r)));
         #[cfg(debug_assertions)]
-        for (p, d) in self.points.iter().zip(&out) {
+        for (p, d) in self.points.iter().zip(out.iter()) {
             debug_assert_eq!(
                 bitops::l1_distance_19b((p.x, p.y, p.z), (r.x, r.y, r.z)),
                 *d
@@ -136,7 +153,6 @@ impl ApdCim {
         }
         self.ledger.charge(Event::ApdDistanceOp, out.len() as u64);
         self.cycles += self.scan_cycles(out.len());
-        out
     }
 
     /// Cycle count accumulated so far.
@@ -153,6 +169,15 @@ impl ApdCim {
     pub fn reset_counters(&mut self) {
         self.cycles = 0;
         self.ledger = EnergyLedger::new();
+    }
+
+    /// Back to the fresh-array state — resident tile dropped, counters and
+    /// ledger zeroed — while keeping every buffer's capacity, so a
+    /// lane-local array is indistinguishable from a newly built one at
+    /// the accounting level but reloads without allocating.
+    pub fn reset(&mut self) {
+        self.points.clear();
+        self.reset_counters();
     }
 }
 

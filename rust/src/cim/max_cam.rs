@@ -69,6 +69,12 @@ pub struct CamArray {
     pairs: Vec<TdPair>,
     cycles: u64,
     ledger: EnergyLedger,
+    // Search-time scratch (latched live values, active rows, per-group
+    // active counts). Allocated once at construction and rewritten by
+    // every bit_cam_max so steady-state searches never touch the heap.
+    search_live: Vec<u32>,
+    search_active: Vec<bool>,
+    grp_active: Vec<u64>,
 }
 
 impl CamArray {
@@ -79,7 +85,19 @@ impl CamArray {
             pairs: vec![TdPair::default(); cfg.capacity()],
             cycles: 0,
             ledger: EnergyLedger::new(),
+            search_live: Vec::with_capacity(cfg.capacity()),
+            search_active: Vec::with_capacity(cfg.capacity()),
+            grp_active: Vec::with_capacity(cfg.n_groups),
         }
+    }
+
+    /// Back to the fresh-array state — every pair unoccupied, counters and
+    /// ledger zeroed — while keeping all buffer capacity, so a lane-local
+    /// array reloads the next tile without allocating.
+    pub fn reset(&mut self) {
+        self.pairs.fill(TdPair::default());
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
     }
 
     /// TD-pair capacity of this array.
@@ -163,19 +181,26 @@ impl CamArray {
     pub fn bit_cam_max(&mut self) -> (u32, usize) {
         let n = self.pairs.len();
         // TDs are static during a search; snapshot the live values once
-        // (the hardware equivalent: the pair mux output is latched).
-        let live: Vec<u32> = self.pairs.iter().map(|p| p.live()).collect();
+        // (the hardware equivalent: the pair mux output is latched). The
+        // snapshot lands in struct-owned scratch (taken out for the
+        // duration of the search, put back below) so steady-state searches
+        // allocate nothing.
+        let mut live = std::mem::take(&mut self.search_live);
+        live.clear();
+        live.extend(self.pairs.iter().map(|p| p.live()));
         // Active set per group, maintained incrementally so the
         // zero-detector is O(groups) per cycle like the OR tree it models.
-        let mut active: Vec<bool> = self.pairs.iter().map(|p| p.occupied).collect();
-        let mut grp_active: Vec<u64> = (0..self.cfg.n_groups)
-            .map(|g| {
-                let base = g * self.cfg.pairs_per_group;
-                (base..(base + self.cfg.pairs_per_group).min(n))
-                    .filter(|&i| active[i])
-                    .count() as u64
-            })
-            .collect();
+        let mut active = std::mem::take(&mut self.search_active);
+        active.clear();
+        active.extend(self.pairs.iter().map(|p| p.occupied));
+        let mut grp_active = std::mem::take(&mut self.grp_active);
+        grp_active.clear();
+        grp_active.extend((0..self.cfg.n_groups).map(|g| {
+            let base = g * self.cfg.pairs_per_group;
+            (base..(base + self.cfg.pairs_per_group).min(n))
+                .filter(|&i| active[i])
+                .count() as u64
+        }));
         let mut value: u32 = 0;
         for bit in (0..TD_BITS).rev() {
             let mut searched: u64 = 0;
@@ -219,6 +244,9 @@ impl CamArray {
             .find(|&i| active[i])
             .expect("bit-CAM value must exist in the array");
         debug_assert_eq!(live[idx], value);
+        self.search_live = live;
+        self.search_active = active;
+        self.grp_active = grp_active;
         self.ledger.charge(Event::CamSearchCell, self.occupied() as u64);
         self.cycles += 1;
         (value, idx)
@@ -375,6 +403,22 @@ mod tests {
                 soft[j] = soft[j].min(d);
             }
         }
+    }
+
+    #[test]
+    fn reset_is_indistinguishable_from_fresh() {
+        let tds = rand_tds(100, 7);
+        let mut reused = CamArray::new(CamConfig::default());
+        reused.load_initial(&rand_tds(64, 8));
+        reused.bit_cam_max();
+        reused.reset();
+        reused.load_initial(&tds);
+        let mut fresh = CamArray::new(CamConfig::default());
+        fresh.load_initial(&tds);
+        assert_eq!(reused.bit_cam_max(), fresh.bit_cam_max());
+        assert_eq!(reused.cycles(), fresh.cycles());
+        assert_eq!(reused.ledger(), fresh.ledger());
+        assert_eq!(reused.occupied(), fresh.occupied());
     }
 
     #[test]

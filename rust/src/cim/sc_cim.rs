@@ -132,6 +132,13 @@ impl ScCim {
         Self { cfg, cycles: 0, ledger: EnergyLedger::new() }
     }
 
+    /// Zero the cycle counter and ledger (a lane-local engine starts the
+    /// next cloud indistinguishable from a newly built one).
+    pub fn reset(&mut self) {
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
+    }
+
     /// The macro geometry.
     pub fn config(&self) -> &ScCimConfig {
         &self.cfg

@@ -30,6 +30,25 @@ impl TopKSorter {
         Self { k, entries: Vec::with_capacity(k + 1), cycles: 0, ledger: EnergyLedger::new() }
     }
 
+    /// Re-arm the pipeline for a new stream at depth `k`: entries,
+    /// cycles and ledger are dropped but the entry buffer's capacity is
+    /// kept, so a lane-local sorter serves every centroid of every cloud
+    /// without reallocating (beyond a one-time growth to the largest k).
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0);
+        self.k = k;
+        self.entries.clear();
+        self.entries.reserve(k + 1);
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
+    }
+
+    /// Sorted (ascending) k-nearest collected so far, as a borrowed view
+    /// (the reusable-sorter counterpart of [`Self::take`]).
+    pub fn entries(&self) -> &[(u32, usize)] {
+        &self.entries
+    }
+
     /// Accept one streamed element (one cycle).
     pub fn push(&mut self, distance: u32, index: usize) {
         self.cycles += 1;
@@ -123,6 +142,24 @@ mod tests {
         s.push(10, 0);
         s.push(5, 1);
         assert_eq!(s.take(), vec![(5, 1), (10, 0)]);
+    }
+
+    #[test]
+    fn reset_reuses_one_sorter_across_streams() {
+        let mut reused = TopKSorter::new(4);
+        for i in 0..50 {
+            reused.push(1000 - i, i as usize);
+        }
+        reused.reset(8);
+        let mut fresh = TopKSorter::new(8);
+        for (i, d) in [9u32, 3, 7, 1, 5].iter().enumerate() {
+            reused.push(*d, i);
+            fresh.push(*d, i);
+        }
+        assert_eq!(reused.entries(), fresh.entries());
+        assert_eq!(reused.cycles(), fresh.cycles());
+        assert_eq!(reused.ledger(), fresh.ledger());
+        assert_eq!(reused.take(), fresh.take());
     }
 
     #[test]

@@ -9,17 +9,22 @@
 //! next clouds with feature execution of the current one on a single
 //! authoritative thread (the ping-pong idea at request granularity);
 //! [`serve`] scales that overlap across N worker lanes behind a bounded
-//! queue (the `pc2im serve` engine); [`stats`] aggregates
-//! accuracy/latency/energy.
+//! queue (the `pc2im serve` engine); [`scratch`] is the per-lane arena
+//! that keeps every per-cloud temporary (quantized views, CSR groups,
+//! gather buffers, engine models) alive across the whole request stream;
+//! [`stats`] aggregates accuracy/latency/energy plus the arena's
+//! allocation accounting.
 
 pub mod builder;
 pub mod pipeline;
 pub mod scheduler;
+pub mod scratch;
 pub mod serve;
 pub mod stats;
 
 pub use builder::PipelineBuilder;
-pub use pipeline::{CloudResult, Pipeline};
+pub use pipeline::{argmax_logits, CloudResult, Pipeline};
 pub use scheduler::BatchScheduler;
+pub use scratch::CloudScratch;
 pub use serve::{ServeEngine, ServeReport};
 pub use stats::{BatchStats, CloudStats};

@@ -14,6 +14,15 @@
 //! weights when artifacts exist, deterministic synthetic ones otherwise),
 //! and the SC-CIM cost model prices the same matmuls the executor runs.
 //!
+//! **Memory-efficient dataflow:** every per-cloud temporary — quantized
+//! and dequantized views, sampled indices, the flat CSR groups, the
+//! gather buffers `g1`/`g2`/`g3`, the MLP activations — lives in the
+//! pipeline's [`CloudScratch`] arena and is refilled in place, and the
+//! engine models themselves are lane-resident and reset per cloud. Once
+//! the lane is warm, classifying a same-shaped cloud performs zero heap
+//! allocation in the preprocessing + gather stages (asserted through the
+//! [`CloudStats`] scratch accounting by `rust/tests/scratch_reuse.rs`).
+//!
 //! Construction goes through [`crate::coordinator::PipelineBuilder`] —
 //! the one place that wires workload config, hardware config, executor
 //! sharing and the fidelity tier together.
@@ -21,17 +30,15 @@
 //! The `exact_sampling` ablation replaces the whole approximate
 //! preprocessing chain with float L2 FPS + ball query (Fig. 12(a)).
 
-use crate::cim::apd_cim::ApdCimConfig;
-use crate::cim::max_cam::CamConfig;
-use crate::cim::sc_cim::ScCimConfig;
 use crate::cim::sorter::TopKSorter;
 use crate::config::{HardwareConfig, PipelineConfig};
+use crate::coordinator::scratch::CloudScratch;
 use crate::coordinator::stats::CloudStats;
-use crate::engine::{self, DistanceEngine, MaxSearchEngine};
+use crate::engine::{DistanceEngine, MaxSearchEngine};
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
-use crate::sampling::{self, LATTICE_SCALE};
+use crate::sampling::{self, GroupsCsr, LATTICE_SCALE};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -49,20 +56,65 @@ pub struct CloudResult {
 
 /// Sampling + grouping indices for one SA level (the preprocessing
 /// module's output contract).
-#[derive(Debug, Clone)]
+///
+/// Groups are stored flat in CSR form ([`GroupsCsr`]): group `s` of
+/// centroid `centroids[s]` is `groups.group(s)` — one contiguous index
+/// stream instead of a `Vec<Vec<usize>>` nest, refilled in place by the
+/// scratch-arena request path.
+#[derive(Debug, Clone, Default)]
 pub struct LevelIndices {
     /// Indices of the sampled centroids into the level's input points.
     pub centroids: Vec<usize>,
-    /// Per-centroid neighbor indices (each list is exactly k long).
-    pub groups: Vec<Vec<usize>>,
+    /// Per-centroid neighbor indices in flat CSR form (each group is
+    /// exactly k long).
+    pub groups: GroupsCsr,
+}
+
+/// How `Pipeline::preprocess_stages` produces the `f1`/`f2` activation
+/// buffers: through the numeric executor (the classify path) or as
+/// zero-filled stand-ins (the preprocessing-only bench probe).
+#[derive(Clone, Copy)]
+enum Activations<'a> {
+    /// Run the real MLP artifacts through the runtime.
+    Execute {
+        /// The lane's runtime (shared executor behind it).
+        rt: &'a Runtime,
+        /// Level-1 artifact name (`sa1` or `sa1_q16`).
+        art_sa1: &'a str,
+        /// Level-2 artifact name (`sa2` or `sa2_q16`).
+        art_sa2: &'a str,
+    },
+    /// Zero-fill the activation buffers at the model's channel widths.
+    Zero,
+}
+
+/// Deterministic arg-max over raw logits: the first strictly-greatest
+/// value wins (ties keep the lowest index) and NaN logits never win —
+/// an all-NaN vector yields class 0 instead of panicking.
+pub fn argmax_logits(logits: &[f32]) -> usize {
+    let mut pred = 0usize;
+    let mut best = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best {
+            best = v;
+            pred = i;
+        }
+    }
+    pred
 }
 
 /// The coordinator pipeline. Built by
-/// [`crate::coordinator::PipelineBuilder`].
+/// [`crate::coordinator::PipelineBuilder`]. Owns a [`CloudScratch`] arena
+/// that persists across every cloud the pipeline (or the serving lane
+/// wrapping it) ever classifies.
 pub struct Pipeline {
     rt: Runtime,
     hw: HardwareConfig,
     cfg: PipelineConfig,
+    scratch: CloudScratch,
+    art_sa1: String,
+    art_sa2: String,
+    art_head: String,
 }
 
 impl Pipeline {
@@ -70,7 +122,16 @@ impl Pipeline {
     /// Only [`crate::coordinator::PipelineBuilder`] calls this; every
     /// external constructor goes through the builder.
     pub(crate) fn from_parts(rt: Runtime, hw: HardwareConfig, cfg: PipelineConfig) -> Self {
-        Self { rt, hw, cfg }
+        let artifact = |base: &str| {
+            if cfg.quantized {
+                format!("{base}_q16")
+            } else {
+                base.to_string()
+            }
+        };
+        let (art_sa1, art_sa2, art_head) = (artifact("sa1"), artifact("sa2"), artifact("head"));
+        let scratch = CloudScratch::new(cfg.fidelity);
+        Self { rt, hw, cfg, scratch, art_sa1, art_sa2, art_head }
     }
 
     /// A shareable handle to the runtime's executor (for
@@ -89,14 +150,6 @@ impl Pipeline {
         self.rt.backend()
     }
 
-    fn artifact(&self, base: &str) -> String {
-        if self.cfg.quantized {
-            format!("{base}_q16")
-        } else {
-            base.to_string()
-        }
-    }
-
     /// FPS through the distance + MAX-search engines (the paper's
     /// Fig. 10(b) flow). Returns sampled indices; charges cycles/energy
     /// to the engines. Works on either fidelity tier.
@@ -106,77 +159,101 @@ impl Pipeline {
         m: usize,
         start: usize,
     ) -> Vec<usize> {
-        let d0 = apd.scan_distances(start);
-        cam.load_initial(&d0);
-        cam.invalidate(start);
         let mut idx = Vec::with_capacity(m);
+        let mut dist = Vec::new();
+        Self::cam_fps_into(apd, cam, m, start, &mut idx, &mut dist);
+        idx
+    }
+
+    /// Buffer-filling variant of [`Self::cam_fps`]: sampled indices land
+    /// in `idx` and every distance scan lands in `dist` (both cleared and
+    /// refilled), so a warm pair of scratch buffers runs the whole FPS
+    /// loop without heap traffic.
+    pub fn cam_fps_into(
+        apd: &mut dyn DistanceEngine,
+        cam: &mut dyn MaxSearchEngine,
+        m: usize,
+        start: usize,
+        idx: &mut Vec<usize>,
+        dist: &mut Vec<u32>,
+    ) {
+        apd.scan_distances_into(start, dist);
+        cam.load_initial(dist);
+        cam.invalidate(start);
+        idx.clear();
         idx.push(start);
         for _ in 1..m {
             let (_, best) = cam.max_search();
             idx.push(best);
             cam.invalidate(best);
-            let d = apd.scan_distances(best);
-            for (j, &dj) in d.iter().enumerate() {
+            apd.scan_distances_into(best, dist);
+            for (j, &dj) in dist.iter().enumerate() {
                 cam.update_min(j, dj);
             }
         }
-        idx
     }
 
     /// Lattice query on the distance engine: one distance scan per
     /// centroid, hits filtered against the grid-space range; the
     /// sorter/merger unit (Fig. 3(a)) keeps the k *nearest* in-range
     /// points and its cycle/energy cost is charged alongside the scan's.
-    fn cam_lattice_query(
+    /// Groups stream straight into the CSR arena buffer.
+    fn cam_lattice_query_into(
         apd: &mut dyn DistanceEngine,
         centroids: &[usize],
         grid_range: u32,
         k: usize,
+        sorter: &mut TopKSorter,
+        dist: &mut Vec<u32>,
+        out: &mut GroupsCsr,
         stats: &mut CloudStats,
-    ) -> Vec<Vec<usize>> {
-        centroids
-            .iter()
-            .map(|&ci| {
-                let d = apd.scan_distances(ci);
-                let mut sorter = TopKSorter::new(k);
-                for (j, &dj) in d.iter().enumerate() {
-                    if dj <= grid_range {
-                        sorter.push(dj, j);
-                    }
+    ) {
+        out.clear();
+        for &ci in centroids {
+            apd.scan_distances_into(ci, dist);
+            sorter.reset(k);
+            for (j, &dj) in dist.iter().enumerate() {
+                if dj <= grid_range {
+                    sorter.push(dj, j);
                 }
-                // sorter accepts one hit/cycle, overlapped with the scan:
-                // only the overflow beyond the scan length costs extra
-                stats.preproc_cycles += sorter.cycles().saturating_sub(d.len() as u64 / 16);
-                stats.ledger.merge(sorter.ledger());
-                let mut grp: Vec<usize> = sorter.take().into_iter().map(|(_, j)| j).collect();
-                if grp.is_empty() {
-                    let nearest =
-                        (0..d.len()).min_by_key(|&j| d[j]).expect("non-empty tile");
-                    grp.push(nearest);
-                }
-                let first = grp[0];
-                while grp.len() < k {
-                    grp.push(first);
-                }
-                grp
-            })
-            .collect()
+            }
+            // sorter accepts one hit/cycle, overlapped with the scan:
+            // only the overflow beyond the scan length costs extra
+            stats.preproc_cycles += sorter.cycles().saturating_sub(dist.len() as u64 / 16);
+            stats.ledger.merge(sorter.ledger());
+            let start = out.indices.len();
+            for &(_, j) in sorter.entries() {
+                out.indices.push(j);
+            }
+            // one padding convention for the whole crate (PointNet++
+            // repeat-first; empty groups fall back to the nearest point)
+            sampling::query::pad_and_seal(out, start, k, || {
+                (0..dist.len()).min_by_key(|&j| dist[j]).expect("non-empty tile")
+            });
+        }
     }
 
     /// One sampling+grouping level through the CIM engines (approximate
-    /// path) or the float reference (exact ablation).
-    fn level(
-        &self,
+    /// path) or the float reference (exact ablation), refilling the
+    /// arena's [`LevelIndices`] in place.
+    fn level_into(
+        cfg: &PipelineConfig,
+        apd: &mut dyn DistanceEngine,
+        cam: &mut dyn MaxSearchEngine,
+        sorter: &mut TopKSorter,
+        dist: &mut Vec<u32>,
+        fps_ds: &mut Vec<f32>,
         pts_f: &[Point3],
         pts_q: &[QPoint3],
         m: usize,
         k: usize,
         radius: f32,
+        out: &mut LevelIndices,
         stats: &mut CloudStats,
-    ) -> LevelIndices {
-        if self.cfg.exact_sampling {
-            let (centroids, trace) = sampling::fps_l2(pts_f, m, 0);
-            let groups = sampling::ball_query(pts_f, &centroids, radius, k);
+    ) {
+        if cfg.exact_sampling {
+            let trace = sampling::fps_l2_into(pts_f, m, 0, &mut out.centroids, fps_ds);
+            sampling::ball_query_into(pts_f, &out.centroids, radius, k, &mut out.groups);
             // exact path still costs energy — on the digital baseline
             // datapath (this is what Fig. 12(b) charges Baseline-2 for)
             stats.ledger.charge(
@@ -185,20 +262,125 @@ impl Pipeline {
             );
             stats.ledger.charge(crate::energy::Event::MacDigital, trace.point_reads * 3);
             stats.preproc_cycles += trace.point_reads / 8;
-            LevelIndices { centroids, groups }
         } else {
-            let mut apd = engine::distance_engine(self.cfg.fidelity, ApdCimConfig::default());
+            // Lane-resident engines: reset (identical to freshly built at
+            // the accounting level) instead of reallocated.
+            apd.reset();
+            cam.reset();
             apd.load_tile(pts_q);
-            let mut cam = engine::max_search_engine(self.cfg.fidelity, CamConfig::default());
-            let centroids = Self::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
+            Self::cam_fps_into(apd, cam, m, 0, &mut out.centroids, dist);
             let grid_range = quant::radius_to_grid(LATTICE_SCALE * radius);
-            let groups =
-                Self::cam_lattice_query(apd.as_mut(), &centroids, grid_range, k, stats);
+            Self::cam_lattice_query_into(
+                apd,
+                &out.centroids,
+                grid_range,
+                k,
+                sorter,
+                dist,
+                &mut out.groups,
+                stats,
+            );
             stats.preproc_cycles += apd.cycles() + cam.cycles();
             stats.ledger.merge(apd.ledger());
             stats.ledger.merge(cam.ledger());
-            LevelIndices { centroids, groups }
         }
+    }
+
+    /// The quantize → sample → group → gather front half shared by
+    /// [`Self::classify`] and [`Self::preprocess`] — one definition, so
+    /// the bench probe can never drift from the production path. `acts`
+    /// decides how the activation buffers `f1`/`f2` are produced
+    /// (executor vs. zero-fill); returns `(c1_dim, c2_dim)`.
+    fn preprocess_stages(
+        cfg: &PipelineConfig,
+        m: &crate::runtime::ModelMeta,
+        scratch: &mut CloudScratch,
+        cloud: &PointCloud,
+        acts: Activations<'_>,
+        stats: &mut CloudStats,
+    ) -> Result<(usize, usize)> {
+        // On the approximate path the network "sees" PTQ16 coordinates:
+        // quantize then dequantize (half-LSB rounding), exactly what the
+        // 16-bit on-chip format stores. Both views refill arena buffers.
+        quant::quantize_cloud_into(cloud, &mut scratch.q1);
+        if cfg.exact_sampling {
+            scratch.pts1_f.clear();
+            scratch.pts1_f.extend_from_slice(&cloud.points);
+        } else {
+            quant::dequantize_cloud_into(&scratch.q1, &mut scratch.pts1_f);
+        }
+
+        // ---- level 1: sample S1 centroids, group K1, MLP1 ----
+        Self::level_into(
+            cfg,
+            scratch.apd.as_mut(),
+            scratch.cam.as_mut(),
+            &mut scratch.sorter,
+            &mut scratch.dist,
+            &mut scratch.fps_ds,
+            &scratch.pts1_f,
+            &scratch.q1,
+            m.s1,
+            m.k1,
+            m.r1,
+            &mut scratch.l1,
+            stats,
+        );
+        gather_level1(&scratch.l1, &scratch.pts1_f, &mut scratch.c1_f, &mut scratch.g1);
+        match acts {
+            Activations::Execute { rt, art_sa1, .. } => {
+                rt.execute_into(art_sa1, &scratch.g1, &mut scratch.f1)?; // [S1, 128]
+            }
+            Activations::Zero => {
+                scratch.f1.clear();
+                scratch.f1.resize(m.s1 * m.mlp1.last().expect("mlp1 dims"), 0.0);
+            }
+        }
+        let c1_dim = scratch.f1.len() / m.s1;
+
+        // ---- level 2 over the sampled centroids ----
+        {
+            let (q2, q1, l1) = (&mut scratch.q2, &scratch.q1, &scratch.l1);
+            q2.clear();
+            q2.extend(l1.centroids.iter().map(|&i| q1[i]));
+        }
+        Self::level_into(
+            cfg,
+            scratch.apd.as_mut(),
+            scratch.cam.as_mut(),
+            &mut scratch.sorter,
+            &mut scratch.dist,
+            &mut scratch.fps_ds,
+            &scratch.c1_f,
+            &scratch.q2,
+            m.s2,
+            m.k2,
+            m.r2,
+            &mut scratch.l2,
+            stats,
+        );
+        gather_level2(
+            &scratch.l2,
+            &scratch.c1_f,
+            &scratch.f1,
+            c1_dim,
+            &mut scratch.c2_f,
+            &mut scratch.g2,
+        );
+        match acts {
+            Activations::Execute { rt, art_sa2, .. } => {
+                rt.execute_into(art_sa2, &scratch.g2, &mut scratch.f2)?; // [S2, 256]
+            }
+            Activations::Zero => {
+                scratch.f2.clear();
+                scratch.f2.resize(m.s2 * m.mlp2.last().expect("mlp2 dims"), 0.0);
+            }
+        }
+        let c2_dim = scratch.f2.len() / m.s2;
+
+        // ---- gather the global-layer input ----
+        gather_global(&scratch.c2_f, &scratch.f2, c2_dim, &mut scratch.g3);
+        Ok((c1_dim, c2_dim))
     }
 
     /// Classify one cloud end-to-end. The cloud must have exactly the
@@ -206,95 +388,79 @@ impl Pipeline {
     /// shapes; segmentation-scale clouds go through MSP first — see
     /// `examples/segmentation_tiles.rs`).
     pub fn classify(&mut self, cloud: &PointCloud) -> Result<CloudResult> {
-        let m = self.rt.meta.model.clone();
         ensure!(
-            cloud.len() == m.n_points,
+            cloud.len() == self.rt.meta.model.n_points,
             "classifier expects {} points, got {}",
-            m.n_points,
+            self.rt.meta.model.n_points,
             cloud.len()
         );
         let t0 = Instant::now();
         let mut stats = CloudStats::default();
-        let mut sc = engine::mac_engine(self.cfg.fidelity, ScCimConfig::default());
+        self.scratch.begin_cloud();
+        let Self { rt, cfg, scratch, art_sa1, art_sa2, art_head, .. } = self;
+        let rt: &Runtime = rt;
+        let m = &rt.meta.model;
+        scratch.sc.reset();
 
-        // On the approximate path the network "sees" PTQ16 coordinates:
-        // quantize then dequantize (half-LSB rounding), exactly what the
-        // 16-bit on-chip format stores.
-        let q1 = quant::quantize_cloud(cloud);
-        let pts1_f: Vec<Point3> = if self.cfg.exact_sampling {
-            cloud.points.clone()
-        } else {
-            q1.iter().map(quant::dequantize_point).collect()
-        };
+        let acts =
+            Activations::Execute { rt, art_sa1: art_sa1.as_str(), art_sa2: art_sa2.as_str() };
+        let (c1_dim, c2_dim) = Self::preprocess_stages(cfg, m, scratch, cloud, acts, &mut stats)?;
+        rt.execute_into(art_head, &scratch.g3, &mut scratch.logits)?;
+        ensure!(scratch.logits.len() == m.num_classes, "bad head output");
 
-        // ---- level 1: sample S1 centroids, group K1, MLP1 via PJRT ----
-        let l1 = self.level(&pts1_f, &q1, m.s1, m.k1, m.r1, &mut stats);
-        let c1_f: Vec<Point3> = l1.centroids.iter().map(|&i| pts1_f[i]).collect();
-        let mut g1 = Vec::with_capacity(m.s1 * m.k1 * 3);
-        for (s, grp) in l1.groups.iter().enumerate() {
-            let c = c1_f[s];
-            for &j in grp {
-                let p = pts1_f[j];
-                g1.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
-            }
-        }
-        let f1 = self.rt.execute(&self.artifact("sa1"), &g1)?; // [S1, 128]
-        let c1_dim = f1.len() / m.s1;
-        sc.matmul_cost(m.s1 * m.k1, 3, 64);
-        sc.matmul_cost(m.s1 * m.k1, 64, 64);
-        sc.matmul_cost(m.s1 * m.k1, 64, 128);
+        // SC-CIM pricing of the full matmul schedule the executor ran
+        // (running totals, so pricing after the fact charges the exact
+        // same cycles and ledger events as the old interleaved order).
+        let (in2, in3) = (3 + c1_dim, 3 + c2_dim);
+        scratch.sc.matmul_cost(m.s1 * m.k1, 3, 64);
+        scratch.sc.matmul_cost(m.s1 * m.k1, 64, 64);
+        scratch.sc.matmul_cost(m.s1 * m.k1, 64, 128);
+        scratch.sc.matmul_cost(m.s2 * m.k2, in2, 128);
+        scratch.sc.matmul_cost(m.s2 * m.k2, 128, 128);
+        scratch.sc.matmul_cost(m.s2 * m.k2, 128, 256);
+        scratch.sc.matmul_cost(m.s2, in3, 256);
+        scratch.sc.matmul_cost(m.s2, 256, 512);
+        scratch.sc.matmul_cost(1, 512, 256);
+        scratch.sc.matmul_cost(1, 256, 128);
+        scratch.sc.matmul_cost(1, 128, m.num_classes);
 
-        // ---- level 2 over the sampled centroids ----
-        let q2: Vec<QPoint3> = l1.centroids.iter().map(|&i| q1[i]).collect();
-        let l2 = self.level(&c1_f, &q2, m.s2, m.k2, m.r2, &mut stats);
-        let c2_f: Vec<Point3> = l2.centroids.iter().map(|&i| c1_f[i]).collect();
-        let in2 = 3 + c1_dim;
-        let mut g2 = Vec::with_capacity(m.s2 * m.k2 * in2);
-        for (s, grp) in l2.groups.iter().enumerate() {
-            let c = c2_f[s];
-            for &j in grp {
-                let p = c1_f[j];
-                g2.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
-                g2.extend_from_slice(&f1[j * c1_dim..(j + 1) * c1_dim]);
-            }
-        }
-        let f2 = self.rt.execute(&self.artifact("sa2"), &g2)?; // [S2, 256]
-        let c2_dim = f2.len() / m.s2;
-        sc.matmul_cost(m.s2 * m.k2, in2, 128);
-        sc.matmul_cost(m.s2 * m.k2, 128, 128);
-        sc.matmul_cost(m.s2 * m.k2, 128, 256);
-
-        // ---- global layer + head ----
-        let in3 = 3 + c2_dim;
-        let mut g3 = Vec::with_capacity(m.s2 * in3);
-        for (s, c) in c2_f.iter().enumerate() {
-            g3.extend_from_slice(&[c.x, c.y, c.z]);
-            g3.extend_from_slice(&f2[s * c2_dim..(s + 1) * c2_dim]);
-        }
-        let logits = self.rt.execute(&self.artifact("head"), &g3)?;
-        ensure!(logits.len() == m.num_classes, "bad head output");
-        sc.matmul_cost(m.s2, in3, 256);
-        sc.matmul_cost(m.s2, 256, 512);
-        sc.matmul_cost(1, 512, 256);
-        sc.matmul_cost(1, 256, 128);
-        sc.matmul_cost(1, 128, m.num_classes);
-
-        stats.feature_cycles += sc.cycles();
-        stats.ledger.merge(sc.ledger());
+        stats.feature_cycles += scratch.sc.cycles();
+        stats.ledger.merge(scratch.sc.ledger());
         // grouped tensors spill through on-chip SRAM once each way
         stats.ledger.charge(
             crate::energy::Event::SramBit,
-            16 * (g1.len() as u64 + g2.len() as u64 + g3.len() as u64),
+            16 * (scratch.g1.len() as u64 + scratch.g2.len() as u64 + scratch.g3.len() as u64),
         );
+        let pred = argmax_logits(&scratch.logits);
+        let logits = scratch.logits.clone();
+        scratch.end_cloud(&mut stats);
         stats.host_wall_s = t0.elapsed().as_secs_f64();
-
-        let pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
         Ok(CloudResult { logits, pred, stats })
+    }
+
+    /// Run only the host-side preprocessing + gather stages (quantize →
+    /// FPS → lattice query → CSR gathers) on the lane's scratch arena,
+    /// filling the activation buffers with zeros instead of executing the
+    /// MLPs. This is the probe `benches/preprocess_throughput.rs` times:
+    /// it exercises exactly the stages the no-per-cloud-allocation
+    /// contract covers, with identical preprocessing cycle/energy
+    /// accounting to [`Self::classify`].
+    pub fn preprocess(&mut self, cloud: &PointCloud) -> Result<CloudStats> {
+        ensure!(
+            cloud.len() == self.rt.meta.model.n_points,
+            "preprocess expects {} points, got {}",
+            self.rt.meta.model.n_points,
+            cloud.len()
+        );
+        let t0 = Instant::now();
+        let mut stats = CloudStats::default();
+        self.scratch.begin_cloud();
+        let Self { rt, cfg, scratch, .. } = self;
+        let m = &rt.meta.model;
+        Self::preprocess_stages(cfg, m, scratch, cloud, Activations::Zero, &mut stats)?;
+        scratch.end_cloud(&mut stats);
+        stats.host_wall_s = t0.elapsed().as_secs_f64();
+        Ok(stats)
     }
 
     /// The hardware model used for latency/energy pricing.
@@ -305,6 +471,53 @@ impl Pipeline {
     /// The pipeline configuration this instance was built with.
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
+    }
+}
+
+/// Gather level-1 centroids and centered neighbor coordinates into the
+/// arena buffers (`c1_f`, `g1 = [S1, K1, 3]`).
+fn gather_level1(l1: &LevelIndices, pts1_f: &[Point3], c1_f: &mut Vec<Point3>, g1: &mut Vec<f32>) {
+    c1_f.clear();
+    c1_f.extend(l1.centroids.iter().map(|&i| pts1_f[i]));
+    g1.clear();
+    for (s, grp) in l1.groups.iter().enumerate() {
+        let c = c1_f[s];
+        for &j in grp {
+            let p = pts1_f[j];
+            g1.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
+        }
+    }
+}
+
+/// Gather level-2 centroids plus centered coordinates and level-1
+/// features into the arena buffers (`c2_f`, `g2 = [S2, K2, 3 + C1]`).
+fn gather_level2(
+    l2: &LevelIndices,
+    c1_f: &[Point3],
+    f1: &[f32],
+    c1_dim: usize,
+    c2_f: &mut Vec<Point3>,
+    g2: &mut Vec<f32>,
+) {
+    c2_f.clear();
+    c2_f.extend(l2.centroids.iter().map(|&i| c1_f[i]));
+    g2.clear();
+    for (s, grp) in l2.groups.iter().enumerate() {
+        let c = c2_f[s];
+        for &j in grp {
+            let p = c1_f[j];
+            g2.extend_from_slice(&[p.x - c.x, p.y - c.y, p.z - c.z]);
+            g2.extend_from_slice(&f1[j * c1_dim..(j + 1) * c1_dim]);
+        }
+    }
+}
+
+/// Gather the global-layer input (`g3 = [S2, 3 + C2]`) into the arena.
+fn gather_global(c2_f: &[Point3], f2: &[f32], c2_dim: usize, g3: &mut Vec<f32>) {
+    g3.clear();
+    for (s, c) in c2_f.iter().enumerate() {
+        g3.extend_from_slice(&[c.x, c.y, c.z]);
+        g3.extend_from_slice(&f2[s * c2_dim..(s + 1) * c2_dim]);
     }
 }
 
@@ -325,6 +538,17 @@ mod tests {
     }
 
     #[test]
+    fn argmax_is_first_max_and_nan_safe() {
+        assert_eq!(argmax_logits(&[0.1, 0.9, 0.9, 0.3]), 1); // first max wins
+        assert_eq!(argmax_logits(&[-1.0, -0.5, -2.0]), 1);
+        assert_eq!(argmax_logits(&[f32::NAN, 0.5, 0.7]), 2); // NaN skipped
+        assert_eq!(argmax_logits(&[0.5, f32::NAN, 0.1]), 0);
+        assert_eq!(argmax_logits(&[f32::NAN, f32::NAN]), 0); // all-NaN: no panic
+        assert_eq!(argmax_logits(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax_logits(&[]), 0);
+    }
+
+    #[test]
     fn classify_produces_logits_and_costs() {
         let Some(cfg) = cfg() else { return };
         let mut p = PipelineBuilder::from_config(cfg).build().unwrap();
@@ -334,6 +558,7 @@ mod tests {
         assert!(r.stats.preproc_cycles > 0);
         assert!(r.stats.feature_cycles > 0);
         assert!(!r.stats.ledger.is_empty());
+        assert!(r.stats.scratch_bytes > 0, "arena must be warm after a cloud");
     }
 
     #[test]
@@ -372,5 +597,30 @@ mod tests {
         assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles);
         assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles);
         assert_eq!(a.stats.ledger, b.stats.ledger);
+    }
+
+    #[test]
+    fn preprocess_matches_classify_preproc_accounting() {
+        // The bench probe must charge the same preprocessing cycles as the
+        // full classify path on the same cloud, and settle to zero scratch
+        // growth once warm.
+        let mut p = PipelineBuilder::new()
+            .artifacts_dir(
+                std::env::temp_dir()
+                    .join("pc2im-pipeline-no-artifacts")
+                    .to_string_lossy()
+                    .into_owned(),
+            )
+            .build()
+            .unwrap();
+        let cloud = make_class_cloud(2, 1024, 77);
+        let full = p.classify(&cloud).unwrap();
+        let pre = p.preprocess(&cloud).unwrap();
+        assert_eq!(pre.preproc_cycles, full.stats.preproc_cycles);
+        assert_eq!(pre.feature_cycles, 0);
+        assert_eq!(pre.scratch_allocs, 0, "warm probe must not grow the arena");
+        let pre2 = p.preprocess(&cloud).unwrap();
+        assert_eq!(pre2.preproc_cycles, pre.preproc_cycles);
+        assert_eq!(pre2.scratch_allocs, 0);
     }
 }

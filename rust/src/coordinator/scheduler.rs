@@ -13,6 +13,12 @@
 //! Fig. 13 experiment path byte-for-byte unchanged while the two engines
 //! stay bit-identical (enforced by `rust/tests/serve_determinism.rs`).
 //!
+//! The scheduler owns its [`Pipeline`] — and therefore that pipeline's
+//! [`crate::coordinator::CloudScratch`] arena — for its whole lifetime,
+//! so every batch it classifies reuses the same warmed scratch: steady
+//! state allocates nothing per cloud in the preprocessing + gather
+//! stages.
+//!
 //! Built by [`crate::coordinator::PipelineBuilder::build_scheduler`].
 
 use crate::cim::apd_cim::ApdCimConfig;
@@ -61,7 +67,10 @@ impl BatchScheduler {
         // worker threads. This emulates the double-buffered tile flow; the
         // warm results only serve as prefetch (deterministic recompute
         // below keeps bookkeeping exact and single-owner). Engines come
-        // from the configured fidelity tier, same as the real run.
+        // from the configured fidelity tier, same as the real run — and,
+        // like the authoritative lane's scratch arena, each warm worker
+        // builds its engines and buffers once and reuses them across its
+        // whole chunk instead of reallocating per cloud.
         let fidelity = self.pipeline.config().fidelity;
         if self.workers > 1 && clouds.len() > 1 {
             let (tx, rx) = mpsc::channel::<usize>();
@@ -69,17 +78,27 @@ impl BatchScheduler {
                 for (w, chunk) in clouds.chunks(clouds.len().div_ceil(self.workers)).enumerate() {
                     let tx = tx.clone();
                     scope.spawn(move || {
+                        let mut q = Vec::new();
+                        let mut idx = Vec::new();
+                        let mut dist = Vec::new();
+                        let mut apd = engine::distance_engine(fidelity, ApdCimConfig::default());
+                        let mut cam = engine::max_search_engine(fidelity, CamConfig::default());
                         for (i, cloud) in chunk.iter().enumerate() {
-                            let q = crate::quant::quantize_cloud(cloud);
-                            let mut apd =
-                                engine::distance_engine(fidelity, ApdCimConfig::default());
+                            crate::quant::quantize_cloud_into(cloud, &mut q);
                             if q.len() <= apd.capacity() {
+                                apd.reset();
+                                cam.reset();
                                 apd.load_tile(&q);
-                                let mut cam =
-                                    engine::max_search_engine(fidelity, CamConfig::default());
                                 // prefetch: first 32 FPS iterations
                                 let m = 32.min(q.len());
-                                let _ = Pipeline::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
+                                Pipeline::cam_fps_into(
+                                    apd.as_mut(),
+                                    cam.as_mut(),
+                                    m,
+                                    0,
+                                    &mut idx,
+                                    &mut dist,
+                                );
                             }
                             let _ = tx.send(w * 1_000_000 + i);
                         }

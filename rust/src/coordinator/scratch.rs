@@ -1,0 +1,203 @@
+//! The per-lane scratch arena: every per-cloud temporary of the request
+//! path, owned by one [`crate::coordinator::Pipeline`] and reused for the
+//! whole request stream.
+//!
+//! PC2IM's thesis is that point-cloud preprocessing is memory-bound and
+//! the win comes from eliminating repetitive temporary-data traffic. The
+//! host hot path mirrors that: instead of re-allocating the quantized
+//! cloud, the dequantized view, the CSR groups, the gather buffers and
+//! the MLP activations for every cloud, a lane allocates them **once**
+//! (growing only while buffers warm up to the workload's shape) and then
+//! refills them in place. The CIM engine models live here too — reset per
+//! cloud, never rebuilt — so their tile/TD storage is equally persistent.
+//!
+//! Accounting: [`CloudScratch::begin_cloud`] snapshots every tracked
+//! buffer's capacity and [`CloudScratch::end_cloud`] reports into
+//! [`CloudStats`] how many buffers had to grow during the cloud
+//! (`scratch_allocs`) and how many bytes the tracked refill buffers
+//! hold (`scratch_bytes`; the engines' own storage is sized once at
+//! construction and excluded — the numbers track what can grow). On a warmed lane serving same-shaped clouds,
+//! `scratch_allocs` is zero — the no-per-cloud-allocation contract the
+//! scratch-reuse tests pin down. Bounded bookkeeping outside the arena
+//! (the O(#event-kinds) energy-ledger map, result cloning at the API
+//! boundary) is deliberately not part of the contract; the arena covers
+//! the O(points) data plane.
+
+use crate::cim::apd_cim::ApdCimConfig;
+use crate::cim::max_cam::CamConfig;
+use crate::cim::sc_cim::ScCimConfig;
+use crate::cim::sorter::TopKSorter;
+use crate::coordinator::pipeline::LevelIndices;
+use crate::coordinator::stats::CloudStats;
+use crate::engine::{self, DistanceEngine, Fidelity, MacEngine, MaxSearchEngine};
+use crate::pointcloud::Point3;
+use crate::quant::QPoint3;
+
+/// Capacity-tracked buffers in the arena (see
+/// [`CloudScratch::buffer_bytes`]).
+const TRACKED_BUFFERS: usize = 19;
+
+/// All reusable per-cloud state of one pipeline lane: the fidelity-tier
+/// engine models, the streaming top-k sorter, and every coordinate /
+/// index / activation buffer the classify path fills.
+///
+/// Construction is tied to the lane's engine tier; the arena then lives
+/// exactly as long as its [`crate::coordinator::Pipeline`] — across every
+/// cloud of a batch, every request of a serve stream.
+pub struct CloudScratch {
+    /// Lane-local distance engine (APD-CIM model of the chosen tier).
+    pub(crate) apd: Box<dyn DistanceEngine>,
+    /// Lane-local MAX-search engine (Ping-Pong-MAX CAM model).
+    pub(crate) cam: Box<dyn MaxSearchEngine>,
+    /// Lane-local MAC engine (SC-CIM pricing model).
+    pub(crate) sc: Box<dyn MacEngine>,
+    /// Streaming top-k sorter reused across every centroid.
+    pub(crate) sorter: TopKSorter,
+    /// Quantized level-1 cloud (PTQ16 grid view).
+    pub(crate) q1: Vec<QPoint3>,
+    /// Quantized level-2 input (level-1 centroids on the grid).
+    pub(crate) q2: Vec<QPoint3>,
+    /// Float view the network sees at level 1 (dequantized PTQ16).
+    pub(crate) pts1_f: Vec<Point3>,
+    /// Level-1 centroid coordinates.
+    pub(crate) c1_f: Vec<Point3>,
+    /// Level-2 centroid coordinates.
+    pub(crate) c2_f: Vec<Point3>,
+    /// Level-1 sampling + CSR grouping output.
+    pub(crate) l1: LevelIndices,
+    /// Level-2 sampling + CSR grouping output.
+    pub(crate) l2: LevelIndices,
+    /// Distance-scan landing buffer (one full-array scan at a time).
+    pub(crate) dist: Vec<u32>,
+    /// Temporary-distance array of the exact-sampling (float FPS) path.
+    pub(crate) fps_ds: Vec<f32>,
+    /// Gathered level-1 groups, `[S1, K1, 3]` flattened.
+    pub(crate) g1: Vec<f32>,
+    /// Gathered level-2 groups, `[S2, K2, 3 + C1]` flattened.
+    pub(crate) g2: Vec<f32>,
+    /// Gathered global input, `[S2, 3 + C2]` flattened.
+    pub(crate) g3: Vec<f32>,
+    /// Level-1 MLP activations from the executor.
+    pub(crate) f1: Vec<f32>,
+    /// Level-2 MLP activations from the executor.
+    pub(crate) f2: Vec<f32>,
+    /// Head output (raw logits) from the executor.
+    pub(crate) logits: Vec<f32>,
+    /// Byte capacities snapshotted by [`Self::begin_cloud`].
+    caps_before: [u64; TRACKED_BUFFERS],
+}
+
+impl CloudScratch {
+    /// A cold arena for the given engine tier: all buffers empty, all
+    /// engines fresh. The first cloud warms it; subsequent same-shaped
+    /// clouds reuse everything.
+    pub(crate) fn new(fidelity: Fidelity) -> Self {
+        Self {
+            apd: engine::distance_engine(fidelity, ApdCimConfig::default()),
+            cam: engine::max_search_engine(fidelity, CamConfig::default()),
+            sc: engine::mac_engine(fidelity, ScCimConfig::default()),
+            sorter: TopKSorter::new(1),
+            q1: Vec::new(),
+            q2: Vec::new(),
+            pts1_f: Vec::new(),
+            c1_f: Vec::new(),
+            c2_f: Vec::new(),
+            l1: LevelIndices::default(),
+            l2: LevelIndices::default(),
+            dist: Vec::new(),
+            fps_ds: Vec::new(),
+            g1: Vec::new(),
+            g2: Vec::new(),
+            g3: Vec::new(),
+            f1: Vec::new(),
+            f2: Vec::new(),
+            logits: Vec::new(),
+            caps_before: [0; TRACKED_BUFFERS],
+        }
+    }
+
+    /// Byte capacity of every tracked arena buffer, in a fixed order.
+    fn buffer_bytes(&self) -> [u64; TRACKED_BUFFERS] {
+        use std::mem::size_of;
+        let v = |cap: usize, elem: usize| (cap * elem) as u64;
+        [
+            v(self.q1.capacity(), size_of::<QPoint3>()),
+            v(self.q2.capacity(), size_of::<QPoint3>()),
+            v(self.pts1_f.capacity(), size_of::<Point3>()),
+            v(self.c1_f.capacity(), size_of::<Point3>()),
+            v(self.c2_f.capacity(), size_of::<Point3>()),
+            v(self.l1.centroids.capacity(), size_of::<usize>()),
+            v(self.l1.groups.offsets.capacity(), size_of::<usize>()),
+            v(self.l1.groups.indices.capacity(), size_of::<usize>()),
+            v(self.l2.centroids.capacity(), size_of::<usize>()),
+            v(self.l2.groups.offsets.capacity(), size_of::<usize>()),
+            v(self.l2.groups.indices.capacity(), size_of::<usize>()),
+            v(self.dist.capacity(), size_of::<u32>()),
+            v(self.fps_ds.capacity(), size_of::<f32>()),
+            v(self.g1.capacity(), size_of::<f32>()),
+            v(self.g2.capacity(), size_of::<f32>()),
+            v(self.g3.capacity(), size_of::<f32>()),
+            v(self.f1.capacity(), size_of::<f32>()),
+            v(self.f2.capacity(), size_of::<f32>()),
+            v(self.logits.capacity(), size_of::<f32>()),
+        ]
+    }
+
+    /// Snapshot buffer capacities at the start of a cloud.
+    pub(crate) fn begin_cloud(&mut self) {
+        self.caps_before = self.buffer_bytes();
+    }
+
+    /// Record the cloud's scratch accounting into `stats`:
+    /// `scratch_allocs` = tracked buffers that had to grow during the
+    /// cloud (0 once the lane is warm), `scratch_bytes` = bytes the
+    /// tracked refill buffers hold now (engine-internal storage is fixed
+    /// at construction and not counted — the figure tracks what can
+    /// grow).
+    pub(crate) fn end_cloud(&self, stats: &mut CloudStats) {
+        let now = self.buffer_bytes();
+        stats.scratch_allocs =
+            now.iter().zip(&self.caps_before).filter(|(a, b)| a > b).count() as u64;
+        stats.scratch_bytes = now.iter().sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_arena_is_empty_and_accounted() {
+        let mut s = CloudScratch::new(Fidelity::Fast);
+        let mut stats = CloudStats::default();
+        s.begin_cloud();
+        s.end_cloud(&mut stats);
+        assert_eq!(stats.scratch_allocs, 0);
+        // The only cold capacity is each CSR's always-present leading
+        // offsets element (GroupsCsr::new starts offsets at [0]).
+        let cold = 2 * std::mem::size_of::<usize>() as u64;
+        assert_eq!(stats.scratch_bytes, cold);
+    }
+
+    #[test]
+    fn growth_is_counted_then_settles() {
+        let mut s = CloudScratch::new(Fidelity::Fast);
+        let mut stats = CloudStats::default();
+        s.begin_cloud();
+        s.q1.resize(100, QPoint3::default());
+        s.dist.extend(0..50u32);
+        s.end_cloud(&mut stats);
+        assert_eq!(stats.scratch_allocs, 2);
+        assert!(stats.scratch_bytes >= (100 * 6 + 50 * 4) as u64);
+        // warm pass over the same shapes: no growth
+        let mut warm = CloudStats::default();
+        s.begin_cloud();
+        s.q1.clear();
+        s.q1.resize(100, QPoint3::default());
+        s.dist.clear();
+        s.dist.extend(0..50u32);
+        s.end_cloud(&mut warm);
+        assert_eq!(warm.scratch_allocs, 0);
+        assert_eq!(warm.scratch_bytes, stats.scratch_bytes);
+    }
+}

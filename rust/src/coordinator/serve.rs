@@ -9,6 +9,14 @@
 //! [`crate::runtime::Executor`] behind an `Arc` — same weight storage,
 //! same prepared-artifact cache, no per-lane duplication.
 //!
+//! Each lane's pipeline carries its own
+//! [`crate::coordinator::CloudScratch`] arena, and the lanes outlive
+//! every `run()` call — so scratch warmed by one request stream keeps
+//! serving the next, and steady-state classification allocates nothing
+//! per cloud in the preprocessing + gather stages (the per-cloud
+//! `scratch_allocs` accounting makes this observable; isolation across
+//! requests is pinned by `rust/tests/scratch_reuse.rs`).
+//!
 //! ```text
 //!   requests ──> [bounded queue, depth D] ──┬─> lane 0: Pipeline ─┐
 //!                 (submit blocks when full)  ├─> lane 1: Pipeline ─┼─> (seq, result)

@@ -15,6 +15,16 @@ pub struct CloudStats {
     pub ledger: EnergyLedger,
     /// Host wall-clock seconds (PJRT execution + sampling simulation).
     pub host_wall_s: f64,
+    /// Bytes held by the lane's tracked scratch refill buffers after
+    /// this cloud. Engine-internal storage (CIM tiles, CAM pairs and
+    /// search scratch, sorter pipeline) is fixed at lane construction
+    /// and deliberately excluded — this figure tracks what can grow.
+    /// Host-side observability; excluded from the determinism digest.
+    pub scratch_bytes: u64,
+    /// Arena buffers that had to grow (reallocate) during this cloud —
+    /// zero on a warmed lane serving same-shaped clouds (host-side;
+    /// excluded from the determinism digest).
+    pub scratch_allocs: u64,
 }
 
 impl CloudStats {
@@ -31,9 +41,10 @@ impl CloudStats {
 
 /// Aggregate over a batch / test set.
 ///
-/// Every field except `host_wall_s` is deterministic (simulated cycles
-/// and event counts); `host_wall_s` is host timing and is excluded from
-/// the serving determinism contract
+/// Every field except `host_wall_s`, `scratch_bytes` and
+/// `scratch_allocs` is deterministic (simulated cycles and event
+/// counts); the host-side fields are timing/memory observability and are
+/// excluded from the serving determinism contract
 /// ([`crate::coordinator::serve::stats_digest`]).
 #[derive(Debug, Clone, Default)]
 pub struct BatchStats {
@@ -49,6 +60,11 @@ pub struct BatchStats {
     pub ledger: EnergyLedger,
     /// Summed host wall-clock seconds (timing, not simulation).
     pub host_wall_s: f64,
+    /// Largest per-cloud scratch-arena footprint seen (host-side).
+    pub scratch_bytes: u64,
+    /// Summed arena-buffer growth events — on a warmed lane only the
+    /// first clouds of a stream contribute (host-side).
+    pub scratch_allocs: u64,
 }
 
 impl BatchStats {
@@ -60,6 +76,8 @@ impl BatchStats {
         self.feature_cycles += s.feature_cycles;
         self.ledger.merge(&s.ledger);
         self.host_wall_s += s.host_wall_s;
+        self.scratch_bytes = self.scratch_bytes.max(s.scratch_bytes);
+        self.scratch_allocs += s.scratch_allocs;
     }
 
     /// Fraction of clouds classified correctly (0 when empty).
@@ -101,6 +119,8 @@ mod tests {
         let mut s = CloudStats::default();
         s.preproc_cycles = 100;
         s.feature_cycles = 50;
+        s.scratch_bytes = 512;
+        s.scratch_allocs = 3;
         s.ledger.charge(Event::SramBit, 10);
         b.push(&s, true);
         b.push(&s, false);
@@ -109,6 +129,8 @@ mod tests {
         assert!((b.accuracy() - 0.5).abs() < 1e-12);
         assert_eq!(b.preproc_cycles, 200);
         assert_eq!(b.ledger.count(Event::SramBit), 20);
+        assert_eq!(b.scratch_bytes, 512, "footprint folds as a max");
+        assert_eq!(b.scratch_allocs, 6, "growth events fold as a sum");
     }
 
     #[test]

@@ -26,12 +26,16 @@ impl DistanceEngine for ApdCim {
         ApdCim::load_tile(self, tile);
     }
 
-    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
-        ApdCim::scan_distances(self, ref_idx)
+    fn scan_distances_into(&mut self, ref_idx: usize, out: &mut Vec<u32>) {
+        ApdCim::scan_distances_into(self, ref_idx, out);
     }
 
-    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
-        ApdCim::scan_distances_to(self, r)
+    fn scan_distances_to_into(&mut self, r: &QPoint3, out: &mut Vec<u32>) {
+        ApdCim::scan_distances_to_into(self, r, out);
+    }
+
+    fn reset(&mut self) {
+        ApdCim::reset(self);
     }
 
     fn cycles(&self) -> u64 {
@@ -64,6 +68,10 @@ impl MaxSearchEngine for CamArray {
         self.bit_cam_max()
     }
 
+    fn reset(&mut self) {
+        CamArray::reset(self);
+    }
+
     fn live_td(&self, i: usize) -> u32 {
         CamArray::live_td(self, i)
     }
@@ -88,6 +96,10 @@ impl MacEngine for ScCim {
 
     fn matmul_cost(&mut self, n: usize, k: usize, m: usize) -> u64 {
         ScCim::matmul_cost(self, n, k, m)
+    }
+
+    fn reset(&mut self) {
+        ScCim::reset(self);
     }
 
     fn cycles(&self) -> u64 {

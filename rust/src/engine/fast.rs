@@ -59,22 +59,16 @@ impl FastDistance {
         n.div_ceil(self.cfg.distances_per_cycle()) as u64
     }
 
-    fn scan_to(&mut self, r: QPoint3) -> Vec<u32> {
+    fn scan_to_into(&mut self, r: QPoint3, out: &mut Vec<u32>) {
         // Reference readout into bit-parallel input registers: 48 bits.
         self.ledger.charge(Event::RegBit, 48);
         self.cycles += 1;
-        let out: Vec<u32> = self
-            .xs
-            .iter()
-            .zip(&self.ys)
-            .zip(&self.zs)
-            .map(|((&x, &y), &z)| {
-                x.abs_diff(r.x) as u32 + y.abs_diff(r.y) as u32 + z.abs_diff(r.z) as u32
-            })
-            .collect();
+        out.clear();
+        out.extend(self.xs.iter().zip(&self.ys).zip(&self.zs).map(|((&x, &y), &z)| {
+            x.abs_diff(r.x) as u32 + y.abs_diff(r.y) as u32 + z.abs_diff(r.z) as u32
+        }));
         self.ledger.charge(Event::ApdDistanceOp, out.len() as u64);
         self.cycles += self.scan_cycles(out.len());
-        out
     }
 }
 
@@ -106,14 +100,22 @@ impl DistanceEngine for FastDistance {
         self.cycles += self.scan_cycles(tile.len());
     }
 
-    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
+    fn scan_distances_into(&mut self, ref_idx: usize, out: &mut Vec<u32>) {
         assert!(ref_idx < self.xs.len(), "reference {ref_idx} not resident");
         let r = QPoint3 { x: self.xs[ref_idx], y: self.ys[ref_idx], z: self.zs[ref_idx] };
-        self.scan_to(r)
+        self.scan_to_into(r, out);
     }
 
-    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
-        self.scan_to(*r)
+    fn scan_distances_to_into(&mut self, r: &QPoint3, out: &mut Vec<u32>) {
+        self.scan_to_into(*r, out);
+    }
+
+    fn reset(&mut self) {
+        self.xs.clear();
+        self.ys.clear();
+        self.zs.clear();
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
     }
 
     fn cycles(&self) -> u64 {
@@ -177,6 +179,13 @@ impl MaxSearchEngine for FastMaxSearch {
         self.live[i] = 0;
         self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
         self.cycles += 1;
+    }
+
+    fn reset(&mut self) {
+        self.live.fill(0);
+        self.occupied.fill(false);
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
     }
 
     fn max_search(&mut self) -> (u32, usize) {
@@ -257,6 +266,11 @@ impl MacEngine for FastMac {
         let cycles = waves * 4;
         self.cycles += cycles;
         cycles
+    }
+
+    fn reset(&mut self) {
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
     }
 
     fn cycles(&self) -> u64 {

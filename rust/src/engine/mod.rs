@@ -87,7 +87,11 @@ impl std::fmt::Display for Fidelity {
 /// The APD-CIM distance-array contract: a resident tile of quantized
 /// points and full-array 19-bit L1 distance scans, with cycle and energy
 /// accounting charged exactly as the silicon would.
-pub trait DistanceEngine {
+///
+/// `Send` because every engine lives inside a serving lane's
+/// [`crate::coordinator::CloudScratch`] arena and moves to that lane's
+/// worker thread.
+pub trait DistanceEngine: Send {
     /// Point capacity of the array.
     fn capacity(&self) -> usize;
     /// Number of points currently resident.
@@ -100,11 +104,30 @@ pub trait DistanceEngine {
     /// Panics if the tile exceeds the array capacity.
     fn load_tile(&mut self, tile: &[QPoint3]);
     /// Scan every resident point's L1 distance to the point stored at
-    /// `ref_idx`. Charges one distance op per point plus the reference
-    /// readout.
-    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32>;
-    /// Scan against an arbitrary reference point (cross-tile queries).
-    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32>;
+    /// `ref_idx` into `out` (cleared and refilled — the scratch-arena
+    /// request path). Charges one distance op per point plus the
+    /// reference readout.
+    fn scan_distances_into(&mut self, ref_idx: usize, out: &mut Vec<u32>);
+    /// Scan against an arbitrary reference point (cross-tile queries),
+    /// refilling `out`.
+    fn scan_distances_to_into(&mut self, r: &QPoint3, out: &mut Vec<u32>);
+    /// Allocating convenience wrapper over [`Self::scan_distances_into`].
+    fn scan_distances(&mut self, ref_idx: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.scan_distances_into(ref_idx, &mut out);
+        out
+    }
+    /// Allocating convenience wrapper over
+    /// [`Self::scan_distances_to_into`].
+    fn scan_distances_to(&mut self, r: &QPoint3) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.scan_distances_to_into(r, &mut out);
+        out
+    }
+    /// Back to the fresh-array state — resident tile dropped, cycles and
+    /// ledger zeroed — keeping all buffer capacity, so one lane-local
+    /// engine serves a whole request stream without reallocating.
+    fn reset(&mut self);
     /// Cycle count accumulated so far.
     fn cycles(&self) -> u64;
     /// Event ledger accumulated so far.
@@ -113,7 +136,8 @@ pub trait DistanceEngine {
 
 /// The Ping-Pong-MAX CAM contract: temporary distances with in-situ
 /// min-update and MSB-first arg-max search, never reading a TD out.
-pub trait MaxSearchEngine {
+/// `Send` for the same lane-scratch reason as [`DistanceEngine`].
+pub trait MaxSearchEngine: Send {
     /// TD capacity of the array.
     fn capacity(&self) -> usize;
     /// Load initial distances for a fresh tile; entries beyond
@@ -127,6 +151,9 @@ pub trait MaxSearchEngine {
     /// Arg-max over the live TDs; returns `(max_value, index)`, lowest
     /// index winning ties. Charges the bit-search plus one data-CAM pass.
     fn max_search(&mut self) -> (u32, usize);
+    /// Back to the fresh-array state — every entry unoccupied, cycles and
+    /// ledger zeroed — keeping all buffer capacity (lane reuse).
+    fn reset(&mut self);
     /// Current live TD of entry `i` (diagnostic view).
     fn live_td(&self, i: usize) -> u32;
     /// Number of occupied TD entries.
@@ -139,12 +166,15 @@ pub trait MaxSearchEngine {
 
 /// The SC-CIM MAC contract: bit-exact 16-bit dot products and macro-level
 /// matmul pricing (4 input-cluster cycles per wave).
-pub trait MacEngine {
+/// `Send` for the same lane-scratch reason as [`DistanceEngine`].
+pub trait MacEngine: Send {
     /// Bit-exact dot product of unsigned activations and signed weights.
     fn dot(&mut self, x: &[u16], w: &[i16]) -> i64;
     /// Cost of an `n x k . k x m` matmul: charges every MAC, returns the
     /// cycles added.
     fn matmul_cost(&mut self, n: usize, k: usize, m: usize) -> u64;
+    /// Zero the cycle counter and ledger (lane reuse across clouds).
+    fn reset(&mut self);
     /// Cycle count accumulated so far.
     fn cycles(&self) -> u64;
     /// Event ledger accumulated so far.

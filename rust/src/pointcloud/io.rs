@@ -69,6 +69,32 @@ fn read_u32(f: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Write a labelled set in the testset.bin format [`read_testset`]
+/// parses. Every cloud must have the same point count; lengths of
+/// `clouds` and `labels` must match.
+pub fn write_testset(path: impl AsRef<Path>, clouds: &[PointCloud], labels: &[i32]) -> Result<()> {
+    ensure!(clouds.len() == labels.len(), "clouds/labels length mismatch");
+    let n_points = clouds.first().map_or(0, |c| c.len());
+    ensure!(
+        clouds.iter().all(|c| c.len() == n_points),
+        "testset clouds must share one point count"
+    );
+    let mut bytes = Vec::with_capacity(16 + clouds.len() * (4 + n_points * 12));
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&(clouds.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&(n_points as u32).to_le_bytes());
+    let mut flat = Vec::new();
+    for (cloud, label) in clouds.iter().zip(labels) {
+        bytes.extend_from_slice(&label.to_le_bytes());
+        cloud.to_flat_into(&mut flat);
+        for v in &flat {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
 /// Write a cloud as raw little-endian `f32` xyz triples (example helper).
 pub fn write_cloud_raw(path: impl AsRef<Path>, pc: &PointCloud) -> Result<()> {
     let flat = pc.to_flat();

@@ -113,10 +113,18 @@ impl PointCloud {
     /// the testset.bin format use).
     pub fn to_flat(&self) -> Vec<f32> {
         let mut v = Vec::with_capacity(self.points.len() * 3);
-        for p in &self.points {
-            v.extend_from_slice(&[p.x, p.y, p.z]);
-        }
+        self.to_flat_into(&mut v);
         v
+    }
+
+    /// Buffer-filling variant of [`Self::to_flat`]: `out` is cleared and
+    /// refilled, so a warm buffer flattens a same-sized cloud without
+    /// allocating (the scratch-arena request path).
+    pub fn to_flat_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for p in &self.points {
+            out.extend_from_slice(&[p.x, p.y, p.z]);
+        }
     }
 
     /// Rebuild a cloud from the flat layout written by [`Self::to_flat`].

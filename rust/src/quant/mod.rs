@@ -67,7 +67,17 @@ pub fn quantize_point(p: &crate::pointcloud::Point3) -> QPoint3 {
 
 /// Quantize every point of a cloud onto the u16 grid.
 pub fn quantize_cloud(pc: &crate::pointcloud::PointCloud) -> Vec<QPoint3> {
-    pc.points.iter().map(quantize_point).collect()
+    let mut out = Vec::new();
+    quantize_cloud_into(pc, &mut out);
+    out
+}
+
+/// Buffer-filling variant of [`quantize_cloud`]: `out` is cleared and
+/// refilled in place, so a warm buffer quantizes a same-sized cloud
+/// without touching the heap (the scratch-arena request path).
+pub fn quantize_cloud_into(pc: &crate::pointcloud::PointCloud, out: &mut Vec<QPoint3>) {
+    out.clear();
+    out.extend(pc.points.iter().map(quantize_point));
 }
 
 /// Dequantize one grid point back to float coordinates.
@@ -77,6 +87,14 @@ pub fn dequantize_point(q: &QPoint3) -> crate::pointcloud::Point3 {
         dequantize_coord(q.y),
         dequantize_coord(q.z),
     )
+}
+
+/// Buffer-filling dequantization of a whole grid cloud: `out` is cleared
+/// and refilled with the [-1, 1] float view of `qs` (the counterpart of
+/// [`quantize_cloud_into`] on the scratch-arena request path).
+pub fn dequantize_cloud_into(qs: &[QPoint3], out: &mut Vec<crate::pointcloud::Point3>) {
+    out.clear();
+    out.extend(qs.iter().map(dequantize_point));
 }
 
 /// The f32 L1 radius expressed on the integer grid (for lattice queries).
@@ -143,6 +161,23 @@ mod tests {
         let (qp, qq) = (quantize_point(&p), quantize_point(&q));
         let grid_l1 = qp.l1(&qq) as f32 / (u16::MAX as f32) * 2.0;
         assert!((grid_l1 - p.l1(&q)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_capacity() {
+        let pc = crate::pointcloud::PointCloud::new(vec![
+            Point3::new(0.1, -0.2, 0.3),
+            Point3::new(-0.9, 0.8, 0.0),
+        ]);
+        let mut q = Vec::new();
+        quantize_cloud_into(&pc, &mut q);
+        assert_eq!(q, quantize_cloud(&pc));
+        let cap = q.capacity();
+        quantize_cloud_into(&pc, &mut q); // warm refill: no growth
+        assert_eq!(q.capacity(), cap);
+        let mut f = Vec::new();
+        dequantize_cloud_into(&q, &mut f);
+        assert_eq!(f, q.iter().map(dequantize_point).collect::<Vec<_>>());
     }
 
     #[test]

@@ -252,6 +252,24 @@ pub trait Executor: Send + Sync {
     fn load(&self, name: &str, meta: &ArtifactMeta, artifacts_dir: &Path) -> Result<()>;
     /// Run a prepared artifact on flattened row-major f32 input data.
     fn execute(&self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>>;
+    /// Run a prepared artifact, writing the flattened output into `out`
+    /// (cleared and refilled) so lane-local activation buffers keep their
+    /// capacity across requests. The default implementation falls back to
+    /// [`Self::execute`]; backends that can produce the result in place
+    /// (the reference interpreter does) override it to skip the extra
+    /// output allocation.
+    fn execute_into(
+        &self,
+        name: &str,
+        meta: &ArtifactMeta,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let v = self.execute(name, meta, data)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
     /// Number of prepared artifacts currently cached.
     fn cached(&self) -> usize;
 }
@@ -349,6 +367,15 @@ impl Runtime {
     /// flattened f32 input (row-major, must match the artifact's
     /// input_shape); returns the flattened f32 output.
     pub fn execute(&self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.execute_into(name, data, &mut out)?;
+        Ok(out)
+    }
+
+    /// Buffer-filling variant of [`Self::execute`]: the flattened output
+    /// lands in `out` (cleared and refilled), so per-lane activation
+    /// buffers keep their capacity across requests.
+    pub fn execute_into(&self, name: &str, data: &[f32], out: &mut Vec<f32>) -> Result<()> {
         self.load(name)?;
         let meta = &self.meta.artifacts[name];
         let expect: usize = meta.input_shape.iter().product();
@@ -358,7 +385,7 @@ impl Runtime {
             data.len(),
             meta.input_shape
         );
-        self.exec.execute(name, meta, data)
+        self.exec.execute_into(name, meta, data, out)
     }
 
     /// Number of prepared executables currently cached.

@@ -98,9 +98,19 @@ pub fn mlp_layer_ref(x: &[f32], rows: usize, layer: &DenseLayer, relu: bool) -> 
 /// Max-pool over the neighbor axis: `x[s, k, c] -> [s, c]`
 /// (mirrors `ref.py::grouped_max_ref`).
 pub fn grouped_max_ref(x: &[f32], s: usize, k: usize, c: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    grouped_max_ref_into(x, s, k, c, &mut out);
+    out
+}
+
+/// Buffer-filling variant of [`grouped_max_ref`]: `out` is cleared and
+/// refilled, so a warm lane-local activation buffer absorbs the pooled
+/// features without allocating.
+pub fn grouped_max_ref_into(x: &[f32], s: usize, k: usize, c: usize, out: &mut Vec<f32>) {
     assert_eq!(x.len(), s * k * c, "input is not [s, k, c]");
     assert!(k > 0);
-    let mut out = vec![f32::NEG_INFINITY; s * c];
+    out.clear();
+    out.resize(s * c, f32::NEG_INFINITY);
     for si in 0..s {
         let os = &mut out[si * c..(si + 1) * c];
         for ki in 0..k {
@@ -112,7 +122,6 @@ pub fn grouped_max_ref(x: &[f32], s: usize, k: usize, c: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Manhattan distance of `points[n, 3]` to `r` (mirrors
@@ -294,14 +303,16 @@ impl ReferenceExecutor {
     }
 
     /// Run one set-abstraction artifact: per-point MLP stack then grouped
-    /// max over the K neighbor axis.
-    fn run_sa(
+    /// max over the K neighbor axis, pooled straight into `out` (the MLP
+    /// intermediates still allocate; only the output buffer is reused).
+    fn run_sa_into(
         &self,
         stack: &[DenseLayer],
         meta: &ArtifactMeta,
         k_default: usize,
         data: &[f32],
-    ) -> Result<Vec<f32>> {
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let cin = stack[0].cin;
         let (s, k) = match meta.input_shape.as_slice() {
             [s, k, c] => {
@@ -319,12 +330,19 @@ impl ReferenceExecutor {
         let rows = s * k;
         let h = apply_stack_ref(stack, data, rows, true);
         let c_out = stack.last().unwrap().cout;
-        Ok(grouped_max_ref(&h, s, k, c_out))
+        grouped_max_ref_into(&h, s, k, c_out, out);
+        Ok(())
     }
 
     /// Run the head artifact: MLP3 stack, global max over the point sets,
-    /// then the head stack with raw logits out.
-    fn run_head(&self, w: &ModelWeights, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+    /// then the head stack with raw logits written into `out`.
+    fn run_head_into(
+        &self,
+        w: &ModelWeights,
+        meta: &ArtifactMeta,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let cin = w.mlp3[0].cin;
         let rows = match meta.input_shape.as_slice() {
             [s, c] => {
@@ -339,7 +357,10 @@ impl ReferenceExecutor {
         let h = apply_stack_ref(&w.mlp3, data, rows, true);
         let c = w.mlp3.last().unwrap().cout;
         let pooled = grouped_max_ref(&h, 1, rows, c); // global max over the S2 sets
-        Ok(apply_stack_ref(&w.head, &pooled, 1, false))
+        let logits = apply_stack_ref(&w.head, &pooled, 1, false);
+        out.clear();
+        out.extend_from_slice(&logits);
+        Ok(())
     }
 }
 
@@ -369,13 +390,25 @@ impl Executor for ReferenceExecutor {
     }
 
     fn execute(&self, name: &str, meta: &ArtifactMeta, data: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.execute_into(name, meta, data, &mut out)?;
+        Ok(out)
+    }
+
+    fn execute_into(
+        &self,
+        name: &str,
+        meta: &ArtifactMeta,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let quantized = name.ends_with("_q16");
         let base = name.strip_suffix("_q16").unwrap_or(name);
         let w = self.weights_for(quantized);
         match base {
-            "sa1" => self.run_sa(&w.mlp1, meta, self.model.k1, data),
-            "sa2" => self.run_sa(&w.mlp2, meta, self.model.k2, data),
-            "head" => self.run_head(w, meta, data),
+            "sa1" => self.run_sa_into(&w.mlp1, meta, self.model.k1, data, out),
+            "sa2" => self.run_sa_into(&w.mlp2, meta, self.model.k2, data, out),
+            "head" => self.run_head_into(w, meta, data, out),
             other => {
                 bail!("reference executor cannot execute artifact {other:?} as a one-input graph")
             }

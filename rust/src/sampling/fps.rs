@@ -32,6 +32,23 @@ pub fn fps_l2(points: &[Point3], m: usize, start: usize) -> (Vec<usize>, FpsTrac
     })
 }
 
+/// Buffer-filling variant of [`fps_l2`] for the scratch-arena request
+/// path: sampled indices land in `idx` and the temporary-distance array
+/// `D_s` lives in `ds`, both cleared and refilled — a warm pair of
+/// buffers samples a same-sized cloud with zero heap allocation.
+pub fn fps_l2_into(
+    points: &[Point3],
+    m: usize,
+    start: usize,
+    idx: &mut Vec<usize>,
+    ds: &mut Vec<f32>,
+) -> FpsTrace {
+    fps_generic_into(points.len(), m, start, idx, ds, |i, j| {
+        debug_assert!(i < points.len() && j < points.len());
+        points[i].l2_sq(&points[j])
+    })
+}
+
 /// Approximate Manhattan FPS (paper eq. 2) on f32 coordinates.
 pub fn fps_l1(points: &[Point3], m: usize, start: usize) -> (Vec<usize>, FpsTrace) {
     fps_generic(points.len(), m, start, |i, j| points[i].l1(&points[j]))
@@ -49,13 +66,28 @@ fn fps_generic<D: PartialOrd + Copy>(
     start: usize,
     dist: impl Fn(usize, usize) -> D,
 ) -> (Vec<usize>, FpsTrace) {
+    let mut idx = Vec::with_capacity(m);
+    let mut ds = Vec::new();
+    let trace = fps_generic_into(n, m, start, &mut idx, &mut ds, dist);
+    (idx, trace)
+}
+
+fn fps_generic_into<D: PartialOrd + Copy>(
+    n: usize,
+    m: usize,
+    start: usize,
+    idx: &mut Vec<usize>,
+    ds: &mut Vec<D>,
+    dist: impl Fn(usize, usize) -> D,
+) -> FpsTrace {
     assert!(m >= 1 && m <= n, "cannot sample {m} of {n}");
     assert!(start < n);
     let mut trace = FpsTrace::default();
-    let mut ds: Vec<D> = (0..n).map(|i| dist(i, start)).collect();
+    ds.clear();
+    ds.extend((0..n).map(|i| dist(i, start)));
     trace.point_reads += n as u64;
     trace.td_writes += n as u64;
-    let mut idx = Vec::with_capacity(m);
+    idx.clear();
     idx.push(start);
     for _ in 1..m {
         trace.iterations += 1;
@@ -80,7 +112,7 @@ fn fps_generic<D: PartialOrd + Copy>(
         trace.point_reads += n as u64;
         trace.td_reads += n as u64;
     }
-    (idx, trace)
+    trace
 }
 
 #[cfg(test)]
@@ -128,6 +160,21 @@ mod tests {
         let (a, _) = fps_l1(&pts, 6, 0);
         let (b, _) = fps_l1_grid(&q, 6, 0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_buffers() {
+        let pts = cloud(150);
+        let (want_idx, want_trace) = fps_l2(&pts, 24, 3);
+        let mut idx = Vec::new();
+        let mut ds = Vec::new();
+        let trace = fps_l2_into(&pts, 24, 3, &mut idx, &mut ds);
+        assert_eq!(idx, want_idx);
+        assert_eq!(trace, want_trace);
+        let (ci, cd) = (idx.capacity(), ds.capacity());
+        fps_l2_into(&pts, 24, 3, &mut idx, &mut ds); // warm: no growth
+        assert_eq!(idx, want_idx);
+        assert_eq!((idx.capacity(), ds.capacity()), (ci, cd));
     }
 
     #[test]

@@ -3,10 +3,107 @@
 //!
 //! Short groups are padded by repeating the first hit — PointNet++
 //! convention, mirrored by `python/compile/sampling.py`.
+//!
+//! The request path consumes groups in the flat CSR layout
+//! ([`GroupsCsr`]): the `_into` variants refill a caller-owned arena
+//! without allocating once warm; the nested `Vec<Vec<usize>>` spellings
+//! remain as thin wrappers for the experiments and property tests.
 
 use crate::pointcloud::Point3;
 use crate::quant::QPoint3;
 use crate::sampling::LATTICE_SCALE;
+
+/// Flat CSR grouping: group `s` is `indices[offsets[s]..offsets[s + 1]]`.
+///
+/// One pair of flat buffers replaces the per-centroid `Vec<Vec<usize>>`
+/// nesting on the request path, so a warmed buffer regroups a same-shaped
+/// cloud with zero heap allocation and the gather loops walk one
+/// contiguous index stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupsCsr {
+    /// Group boundaries; always starts at 0, length = group count + 1.
+    /// Crate-visible only: the always-starts-at-0 / sealed-groups
+    /// invariant that [`Self::len`] and [`Self::group`] index by is
+    /// enforced by keeping external writers out.
+    pub(crate) offsets: Vec<usize>,
+    /// Concatenated member indices of every group (crate-visible for the
+    /// in-crate query writers; read through [`Self::group`]/[`Self::iter`]).
+    pub(crate) indices: Vec<usize>,
+}
+
+impl GroupsCsr {
+    /// An empty grouping (zero groups).
+    pub fn new() -> Self {
+        Self { offsets: vec![0], indices: Vec::new() }
+    }
+
+    /// Drop all groups but keep both buffers' capacity (warm reuse).
+    pub fn clear(&mut self) {
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.indices.clear();
+    }
+
+    /// Close the group under construction: everything pushed onto
+    /// `indices` since the last seal becomes one group.
+    pub fn seal_group(&mut self) {
+        self.offsets.push(self.indices.len());
+    }
+
+    /// Number of sealed groups.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// True when no group has been sealed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The members of group `s`.
+    pub fn group(&self, s: usize) -> &[usize] {
+        &self.indices[self.offsets[s]..self.offsets[s + 1]]
+    }
+
+    /// Iterate the groups in order as index slices.
+    pub fn iter(&self) -> impl Iterator<Item = &[usize]> {
+        self.offsets.windows(2).map(|w| &self.indices[w[0]..w[1]])
+    }
+
+    /// Expand into the nested layout (compat wrapper for non-hot paths).
+    pub fn to_nested(&self) -> Vec<Vec<usize>> {
+        self.iter().map(|g| g.to_vec()).collect()
+    }
+}
+
+impl Default for GroupsCsr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Stream one centroid's accepted hits into `out`, applying the padding
+/// convention in place: an empty group gets `fallback()`, short groups
+/// repeat their first member until they are `k` long, then the group is
+/// sealed. `start` is `out.indices.len()` before the hits were pushed.
+/// Crate-visible so the engine-backed lattice query in the coordinator
+/// applies the exact same convention as the reference queries here.
+pub(crate) fn pad_and_seal(
+    out: &mut GroupsCsr,
+    start: usize,
+    k: usize,
+    fallback: impl FnOnce() -> usize,
+) {
+    if out.indices.len() == start {
+        let fb = fallback();
+        out.indices.push(fb);
+    }
+    let first = out.indices[start];
+    while out.indices.len() - start < k {
+        out.indices.push(first);
+    }
+    out.seal_group();
+}
 
 /// Exact L2 ball query: up to `k` neighbors within `radius` of each
 /// centroid (given by index into `points`). Returns `[centroids.len()][k]`.
@@ -16,23 +113,35 @@ pub fn ball_query(
     radius: f32,
     k: usize,
 ) -> Vec<Vec<usize>> {
+    let mut out = GroupsCsr::new();
+    ball_query_into(points, centroid_idx, radius, k, &mut out);
+    out.to_nested()
+}
+
+/// CSR-filling variant of [`ball_query`]: `out` is cleared and refilled,
+/// allocating nothing once its buffers are warm.
+pub fn ball_query_into(
+    points: &[Point3],
+    centroid_idx: &[usize],
+    radius: f32,
+    k: usize,
+    out: &mut GroupsCsr,
+) {
     let r2 = radius * radius;
-    centroid_idx
-        .iter()
-        .map(|&ci| {
-            let c = &points[ci];
-            let mut grp = Vec::with_capacity(k);
-            for (i, p) in points.iter().enumerate() {
-                if p.l2_sq(c) <= r2 {
-                    grp.push(i);
-                    if grp.len() == k {
-                        break;
-                    }
+    out.clear();
+    for &ci in centroid_idx {
+        let c = &points[ci];
+        let start = out.indices.len();
+        for (i, p) in points.iter().enumerate() {
+            if p.l2_sq(c) <= r2 {
+                out.indices.push(i);
+                if out.indices.len() - start == k {
+                    break;
                 }
             }
-            pad_group(grp, k, || nearest_by(points, c, |a, b| a.l2_sq(b)))
-        })
-        .collect()
+        }
+        pad_and_seal(out, start, k, || nearest_by(points, c, |a, b| a.l2_sq(b)));
+    }
 }
 
 /// The paper's lattice query: an L1 ball of range `LATTICE_SCALE * radius`.
@@ -43,23 +152,34 @@ pub fn lattice_query(
     radius: f32,
     k: usize,
 ) -> Vec<Vec<usize>> {
+    let mut out = GroupsCsr::new();
+    lattice_query_into(points, centroid_idx, radius, k, &mut out);
+    out.to_nested()
+}
+
+/// CSR-filling variant of [`lattice_query`].
+pub fn lattice_query_into(
+    points: &[Point3],
+    centroid_idx: &[usize],
+    radius: f32,
+    k: usize,
+    out: &mut GroupsCsr,
+) {
     let lim = LATTICE_SCALE * radius;
-    centroid_idx
-        .iter()
-        .map(|&ci| {
-            let c = &points[ci];
-            let mut grp = Vec::with_capacity(k);
-            for (i, p) in points.iter().enumerate() {
-                if p.l1(c) <= lim {
-                    grp.push(i);
-                    if grp.len() == k {
-                        break;
-                    }
+    out.clear();
+    for &ci in centroid_idx {
+        let c = &points[ci];
+        let start = out.indices.len();
+        for (i, p) in points.iter().enumerate() {
+            if p.l1(c) <= lim {
+                out.indices.push(i);
+                if out.indices.len() - start == k {
+                    break;
                 }
             }
-            pad_group(grp, k, || nearest_by(points, c, |a, b| a.l1(b)))
-        })
-        .collect()
+        }
+        pad_and_seal(out, start, k, || nearest_by(points, c, |a, b| a.l1(b)));
+    }
 }
 
 /// Integer-grid lattice query — the APD-CIM datapath view: 19-bit L1
@@ -70,29 +190,40 @@ pub fn lattice_query_grid(
     grid_range: u32,
     k: usize,
 ) -> Vec<Vec<usize>> {
-    centroid_idx
-        .iter()
-        .map(|&ci| {
-            let c = points[ci];
-            let mut grp = Vec::with_capacity(k);
-            for (i, p) in points.iter().enumerate() {
-                if p.l1(&c) <= grid_range {
-                    grp.push(i);
-                    if grp.len() == k {
-                        break;
-                    }
+    let mut out = GroupsCsr::new();
+    lattice_query_grid_into(points, centroid_idx, grid_range, k, &mut out);
+    out.to_nested()
+}
+
+/// CSR-filling variant of [`lattice_query_grid`].
+pub fn lattice_query_grid_into(
+    points: &[QPoint3],
+    centroid_idx: &[usize],
+    grid_range: u32,
+    k: usize,
+    out: &mut GroupsCsr,
+) {
+    out.clear();
+    for &ci in centroid_idx {
+        let c = points[ci];
+        let start = out.indices.len();
+        for (i, p) in points.iter().enumerate() {
+            if p.l1(&c) <= grid_range {
+                out.indices.push(i);
+                if out.indices.len() - start == k {
+                    break;
                 }
             }
-            pad_group(grp, k, || {
-                points
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, p)| p.l1(&c))
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-        })
-        .collect()
+        }
+        pad_and_seal(out, start, k, || {
+            points
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.l1(&c))
+                .map(|(i, _)| i)
+                .unwrap()
+        });
+    }
 }
 
 /// k nearest neighbors (L2) of each query point; result rows sorted by
@@ -123,17 +254,6 @@ fn nearest_by(points: &[Point3], c: &Point3, d: impl Fn(&Point3, &Point3) -> f32
         .min_by(|(_, a), (_, b)| d(a, c).partial_cmp(&d(b, c)).unwrap())
         .map(|(i, _)| i)
         .unwrap()
-}
-
-fn pad_group(mut grp: Vec<usize>, k: usize, fallback: impl FnOnce() -> usize) -> Vec<usize> {
-    if grp.is_empty() {
-        grp.push(fallback());
-    }
-    let first = grp[0];
-    while grp.len() < k {
-        grp.push(first);
-    }
-    grp
 }
 
 #[cfg(test)]
@@ -204,6 +324,27 @@ mod tests {
         let b: std::collections::HashSet<_> = grid_groups[0].iter().collect();
         let inter = a.intersection(&b).count() as f64;
         assert!(inter / a.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn csr_matches_nested_and_reuses_capacity() {
+        let pts = cloud(400, 9);
+        let centroids: Vec<usize> = (0..8).collect();
+        let nested = lattice_query(&pts, &centroids, 0.3, 16);
+        let mut csr = GroupsCsr::new();
+        lattice_query_into(&pts, &centroids, 0.3, 16, &mut csr);
+        assert_eq!(csr.len(), nested.len());
+        assert_eq!(csr.to_nested(), nested);
+        for (s, grp) in csr.iter().enumerate() {
+            assert_eq!(grp, nested[s].as_slice());
+            assert_eq!(grp, csr.group(s));
+            assert_eq!(grp.len(), 16);
+        }
+        // warm refill: same result, no buffer growth
+        let (co, ci) = (csr.offsets.capacity(), csr.indices.capacity());
+        lattice_query_into(&pts, &centroids, 0.3, 16, &mut csr);
+        assert_eq!(csr.to_nested(), nested);
+        assert_eq!((csr.offsets.capacity(), csr.indices.capacity()), (co, ci));
     }
 
     #[test]

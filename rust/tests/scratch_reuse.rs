@@ -1,0 +1,123 @@
+//! The scratch-arena contracts, tested hermetically:
+//!
+//! 1. **Cross-request isolation** — on one warmed pipeline, classifying
+//!    clouds A, B, then A again must give bit-identical logits and
+//!    deterministic stats for the two A runs (no scratch contamination),
+//!    on both fidelity tiers and through the serving engine at 1 and 4
+//!    workers.
+//! 2. **Zero per-cloud allocation** — once a lane is warm, the
+//!    preprocessing + gather stages refill the arena in place:
+//!    `CloudStats::scratch_allocs` is 0 for every cloud after the first
+//!    few, across tiers and the exact-sampling ablation.
+
+use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::{BatchStats, CloudResult, PipelineBuilder};
+use pc2im::engine::Fidelity;
+use pc2im::pointcloud::synthetic::make_class_cloud;
+use pc2im::pointcloud::PointCloud;
+
+fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
+    PipelineConfig {
+        artifacts_dir: std::env::temp_dir()
+            .join("pc2im-scratch-no-artifacts")
+            .to_string_lossy()
+            .into_owned(),
+        fidelity,
+        ..PipelineConfig::default()
+    }
+}
+
+/// The per-cloud digest the isolation contract compares: logits plus
+/// every deterministic stats field, rendered through the same
+/// `stats_digest` the serving engine prints.
+fn cloud_digest(r: &CloudResult) -> String {
+    let mut agg = BatchStats::default();
+    agg.push(&r.stats, true);
+    let hw = HardwareConfig::default();
+    format!("logits={:?} pred={} {}", r.logits, r.pred, stats_digest(&agg, &hw))
+}
+
+fn clouds_ab() -> (PointCloud, PointCloud) {
+    (make_class_cloud(1, 1024, 11), make_class_cloud(6, 1024, 99))
+}
+
+#[test]
+fn warmed_pipeline_gives_bit_identical_repeat_results() {
+    let (a, b) = clouds_ab();
+    for fidelity in Fidelity::ALL {
+        let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity)).build().unwrap();
+        let first = pipe.classify(&a).unwrap();
+        let other = pipe.classify(&b).unwrap();
+        let again = pipe.classify(&a).unwrap();
+        assert_eq!(first.logits, again.logits, "{fidelity}: A logits drifted after B");
+        assert_eq!(
+            cloud_digest(&first),
+            cloud_digest(&again),
+            "{fidelity}: A stats digest drifted after B"
+        );
+        // ...and B really is a different cloud, so the match above is not
+        // vacuous scratch echo.
+        assert_ne!(first.logits, other.logits, "{fidelity}: A and B should differ");
+    }
+}
+
+#[test]
+fn steady_state_classify_allocates_nothing_in_preprocessing() {
+    for fidelity in Fidelity::ALL {
+        for exact in [false, true] {
+            let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                .exact_sampling(exact)
+                .build()
+                .unwrap();
+            // Warm-up: the first clouds may grow arena buffers.
+            let warm = pipe.classify(&make_class_cloud(0, 1024, 1)).unwrap();
+            assert!(warm.stats.scratch_bytes > 0);
+            pipe.classify(&make_class_cloud(3, 1024, 2)).unwrap();
+            // Steady state: every further same-shaped cloud refills in place.
+            for seed in 10..16u64 {
+                let cloud = make_class_cloud((seed % 8) as usize, 1024, seed);
+                let r = pipe.classify(&cloud).unwrap();
+                assert_eq!(
+                    r.stats.scratch_allocs, 0,
+                    "fidelity={fidelity} exact={exact} seed={seed}: warm classify grew the arena"
+                );
+                assert_eq!(r.stats.scratch_bytes, warm.stats.scratch_bytes);
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_lanes_are_isolated_across_requests() {
+    let (a, b) = clouds_ab();
+    let stream = vec![a.clone(), b, a];
+    let labels = vec![1, 6, 1];
+    for fidelity in Fidelity::ALL {
+        for workers in [1usize, 4] {
+            let mut engine = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                .build_serve(ServeConfig { workers, queue_depth: 2, ..ServeConfig::default() })
+                .unwrap();
+            // Two runs over the same stream: the second reuses lane
+            // scratch warmed by the first.
+            let cold = engine.run(&stream, &labels).unwrap();
+            let warmrun = engine.run(&stream, &labels).unwrap();
+            for report in [&cold, &warmrun] {
+                assert_eq!(
+                    report.results[0].logits, report.results[2].logits,
+                    "fidelity={fidelity} workers={workers}: repeated cloud A diverged"
+                );
+                assert_eq!(
+                    cloud_digest(&report.results[0]),
+                    cloud_digest(&report.results[2]),
+                    "fidelity={fidelity} workers={workers}: A digests diverged"
+                );
+            }
+            assert_eq!(
+                cloud_digest(&cold.results[0]),
+                cloud_digest(&warmrun.results[0]),
+                "fidelity={fidelity} workers={workers}: warm run drifted from cold run"
+            );
+        }
+    }
+}
