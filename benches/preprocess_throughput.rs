@@ -1,6 +1,7 @@
 //! Preprocessing-stage throughput: clouds/sec for the host-side
 //! quantize → FPS → lattice-query → CSR-gather stages alone
-//! (`Pipeline::preprocess`, no MLP execution), cold vs. warm scratch.
+//! (`Pipeline::preprocess`, no MLP execution), cold vs. warm scratch,
+//! plus the **pruned-vs-full-scan axis** of the Fast tier.
 //!
 //! The point is the arena: a cold pipeline pays the scratch warm-up on
 //! its first cloud, a warm pipeline refills every buffer in place — the
@@ -8,18 +9,44 @@
 //! `scratch_allocs` per cloud, so bit-rot in the no-per-cloud-allocation
 //! contract fails the CI smoke lane loudly.
 //!
+//! The prune axis runs the same warm workload through the Fast tier with
+//! the median-partition pruned kernels on and off, asserting the stats
+//! digest byte-identical per cell (pruning must never change simulated
+//! results) and — outside smoke mode — the pruned path faster. A
+//! kernel-level FPS sweep does the same per Table-I tile scale.
+//!
 //! Run with: `cargo bench --bench preprocess_throughput`
 //! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
 //! `PC2IM_BENCH_SMOKE=1`; `PC2IM_BENCH_JSON=<path>` appends one JSON line
-//! per configuration. The committed deterministic anchor is
-//! BENCH_prep.json; host clouds/sec printed here is machine-dependent.)
+//! per configuration. The committed deterministic anchors are
+//! BENCH_prep.json and BENCH_prune.json; host clouds/sec printed here is
+//! machine-dependent.)
 
 #[path = "harness.rs"]
 mod harness;
 
-use pc2im::coordinator::PipelineBuilder;
-use pc2im::engine::Fidelity;
-use pc2im::pointcloud::synthetic::make_labelled_batch;
+use pc2im::cim::apd_cim::ApdCimConfig;
+use pc2im::cim::max_cam::CamConfig;
+use pc2im::config::HardwareConfig;
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::{BatchStats, Pipeline, PipelineBuilder};
+use pc2im::engine::fast::PrunedPreprocessor;
+use pc2im::engine::{distance_engine, max_search_engine, Fidelity};
+use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
+use pc2im::quant::quantize_cloud;
+use pc2im::sampling::MedianIndex;
+
+/// Deterministic digest of one preprocessing run (simulated fields only)
+/// — asserted byte-identical between the pruned and full-scan cells.
+fn preprocess_digest(pipe: &mut Pipeline, clouds: &[pc2im::pointcloud::PointCloud]) -> String {
+    let hw = HardwareConfig::default();
+    let mut agg = BatchStats::default();
+    for c in clouds {
+        let stats = pipe.preprocess(c).expect("preprocess");
+        agg.push(&stats, true);
+    }
+    stats_digest(&agg, &hw)
+}
 
 fn main() {
     let smoke = harness::smoke_mode();
@@ -74,5 +101,101 @@ fn main() {
             allocs
         });
         println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean_warm.max(1e-12));
+    }
+
+    // ---- pruned vs full-scan axis (Fast tier, warm scratch) ----
+    harness::header("pruned vs full-scan preprocessing (fast tier, digest asserted equal)");
+    let (clouds, _) = make_labelled_batch(batch, 1024, 32000);
+    let mut means = [0.0f64; 2];
+    let mut digests: Vec<String> = Vec::new();
+    for (slot, prune) in [(0usize, true), (1, false)] {
+        let mut pipe = PipelineBuilder::new()
+            .fidelity(Fidelity::Fast)
+            .prune(prune)
+            .build()
+            .expect("hermetic pipeline");
+        digests.push(preprocess_digest(&mut pipe, &clouds)); // also warms scratch
+        let name = format!("preprocess fid=fast batch={batch} prune={prune}");
+        means[slot] = harness::bench(&name, iters, || {
+            let mut allocs = 0u64;
+            for c in &clouds {
+                allocs += pipe.preprocess(c).expect("preprocess").scratch_allocs;
+            }
+            assert_eq!(allocs, 0, "warm preprocessing must be allocation-free");
+            allocs
+        });
+        println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / means[slot].max(1e-12));
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "pruning changed the simulated stats digest — it must be byte-identical"
+    );
+    println!(
+        "{:56} {:>9.2}x pruned speedup",
+        "",
+        means[1].max(1e-12) / means[0].max(1e-12)
+    );
+    if !smoke {
+        assert!(
+            means[0] < means[1],
+            "pruned preprocessing ({:.6}s) must beat the full scan ({:.6}s)",
+            means[0],
+            means[1]
+        );
+    }
+
+    // ---- kernel-level FPS sweep across Table-I tile scales ----
+    harness::header("pruned vs engine-loop FPS kernels (per Table-I tile scale)");
+    let scales: &[DatasetScale] = if smoke { &[DatasetScale::Small] } else { &DatasetScale::ALL };
+    for &scale in scales {
+        let cloud = make_workload_cloud(scale, 17);
+        let q = quantize_cloud(&cloud);
+        let cap = ApdCimConfig::default().capacity();
+        let tile: Vec<_> = q[..cap.min(q.len())].to_vec();
+        let (n, m) = (tile.len(), (cap.min(q.len()) / 4).max(2));
+
+        let mut index = MedianIndex::new();
+        let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut idx = Vec::new();
+        let name = format!("fps pruned {scale:?} n={n} m={m}");
+        let pruned_mean = harness::bench(&name, iters, || {
+            pp.reset();
+            index.build(&tile);
+            pp.fps_into(&index, m, 0, &mut idx);
+            idx.len()
+        });
+
+        let mut apd = distance_engine(Fidelity::Fast, ApdCimConfig::default());
+        let mut cam = max_search_engine(Fidelity::Fast, CamConfig::default());
+        let mut idx_full = Vec::new();
+        let mut dist = Vec::new();
+        let name = format!("fps engine-loop {scale:?} n={n} m={m}");
+        let full_mean = harness::bench(&name, iters, || {
+            apd.reset();
+            cam.reset();
+            apd.load_tile(&tile);
+            Pipeline::cam_fps_into(apd.as_mut(), cam.as_mut(), m, 0, &mut idx_full, &mut dist);
+            idx_full.len()
+        });
+
+        // Digest asserted equal per cell: samples, cycles and ledger.
+        assert_eq!(idx, idx_full, "{scale:?}: pruned FPS diverged");
+        assert_eq!(pp.cycles(), apd.cycles() + cam.cycles(), "{scale:?}: cycles diverged");
+        let mut want = pc2im::energy::EnergyLedger::new();
+        want.merge(apd.ledger());
+        want.merge(cam.ledger());
+        assert_eq!(pp.ledger(), &want, "{scale:?}: ledger diverged");
+        println!(
+            "{:56} {:>9.2}x pruned speedup",
+            "",
+            full_mean.max(1e-12) / pruned_mean.max(1e-12)
+        );
+        if !smoke {
+            assert!(
+                pruned_mean < full_mean,
+                "{scale:?}: pruned FPS ({pruned_mean:.6}s) must beat the engine loop \
+                 ({full_mean:.6}s)"
+            );
+        }
     }
 }

@@ -15,8 +15,10 @@ use pc2im::config::HardwareConfig;
 use pc2im::coordinator::Pipeline;
 use pc2im::energy::{EnergyLedger, Event};
 use pc2im::pointcloud::synthetic::make_street_cloud;
+use pc2im::pointcloud::Point3;
 use pc2im::quant::quantize_cloud;
-use pc2im::sampling::msp::{array_utilization, fixed_grid_partition, msp_partition};
+use pc2im::sampling::msp::{array_utilization, fixed_grid_partition, msp_partition_into};
+use pc2im::sampling::{knn_into, GroupsCsr, TilePartition};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(16384);
@@ -26,12 +28,16 @@ fn main() -> anyhow::Result<()> {
     println!("segmentation-scale preprocessing on a {n}-point street cloud\n");
 
     // --- partitioning comparison (Fig. 5(b)) ---
-    let tiles = msp_partition(&cloud, hw.tile_capacity);
+    // The request path uses the flat CSR partition: one pair of buffers,
+    // refillable in place, utilization read straight off the CSR.
+    let mut msp_scratch = Vec::new();
+    let mut tiles = TilePartition::new();
+    msp_partition_into(&cloud, hw.tile_capacity, &mut msp_scratch, &mut tiles);
     let grid = fixed_grid_partition(&cloud, 2);
     println!(
         "MSP: {} tiles, utilization {:.1}% | fixed-shape: {} tiles, utilization {:.1}%\n",
         tiles.len(),
-        array_utilization(&tiles, hw.tile_capacity) * 100.0,
+        tiles.utilization(hw.tile_capacity) * 100.0,
         grid.len(),
         array_utilization(&grid, hw.tile_capacity) * 100.0,
     );
@@ -41,8 +47,10 @@ fn main() -> anyhow::Result<()> {
     let mut total_cycles = 0u64;
     let mut ledger = EnergyLedger::new();
     let sample_ratio = 4; // SA1 samples n/4 centroids
-    for (t, tile) in tiles.iter().enumerate() {
-        let pts: Vec<_> = tile.indices.iter().map(|&i| q[i]).collect();
+    let mut all_centroids: Vec<Point3> = Vec::new(); // FP decoder input below
+    for t in 0..tiles.len() {
+        let members = tiles.tiles.group(t);
+        let pts: Vec<_> = members.iter().map(|&i| q[i]).collect();
         let mut apd = ApdCim::new(ApdCimConfig::default());
         apd.load_tile(&pts);
         let m = (pts.len() / sample_ratio).max(1);
@@ -50,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         let idx = Pipeline::cam_fps(&mut apd, cam.active_mut(), m, 0);
         total_cycles += apd.cycles() + (cam.active().cycles() - before);
         ledger.merge(apd.ledger());
+        all_centroids.extend(idx.iter().map(|&s| cloud.points[members[s]]));
         println!(
             "tile {t:2}: {:4} pts -> {m:3} centroids (first 5: {:?}), {:6} APD cycles",
             pts.len(),
@@ -59,6 +68,26 @@ fn main() -> anyhow::Result<()> {
         cam.swap(); // next tile loads while this one's results drain
     }
     ledger.merge(&cam.merged_ledger());
+
+    // --- feature propagation (the segmentation decoder's kNN path) ---
+    // Upsample back to full resolution: every raw point takes its k=3
+    // nearest sampled centroids (fewer on degenerate tiny clouds),
+    // grouped in the flat CSR layout — the same warm-buffer contract as
+    // the classification request path.
+    let fp_k = 3.min(all_centroids.len());
+    let mut fp_groups = GroupsCsr::new();
+    let mut fp_scratch = Vec::new();
+    knn_into(&all_centroids, &cloud.points, fp_k, &mut fp_scratch, &mut fp_groups);
+    assert_eq!(fp_groups.len(), cloud.len());
+    let g0 = fp_groups.group(0);
+    println!(
+        "\nFP upsampling: {} fine points x k={fp_k} over {} coarse centroids \
+         (CSR: {} indices in one flat buffer; point 0 -> {:?})",
+        fp_groups.len(),
+        all_centroids.len(),
+        fp_groups.len() * fp_k,
+        g0,
+    );
 
     let c = hw.energy();
     println!(

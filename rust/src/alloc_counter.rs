@@ -1,0 +1,59 @@
+//! Test-only counting global allocator (behind the `alloc-counter`
+//! cargo feature).
+//!
+//! The scratch arena's no-per-cloud-allocation contract is normally
+//! asserted through the arena's own capacity accounting
+//! ([`crate::coordinator::CloudStats::scratch_allocs`]); that proves the
+//! *tracked* buffers never grow, but cannot see an untracked allocation
+//! someone sneaks into the hot path. Building with
+//! `--features alloc-counter` installs this counting allocator so
+//! `rust/tests/scratch_reuse.rs` can pin the contract at the allocator
+//! level: a warmed `Pipeline::preprocess` performs **zero** calls into
+//! the global allocator. CI runs that lane explicitly.
+//!
+//! Never enable the feature in production builds: every allocation pays
+//! one relaxed atomic increment.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Heap-allocation calls observed process-wide (alloc + realloc; frees
+/// are not counted — the contract is about acquiring memory).
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`]-backed allocator that counts every allocating call.
+pub struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`; the counter is a relaxed atomic
+// with no other side effects, so all `GlobalAlloc` contracts are
+// inherited unchanged.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Allocating calls (alloc/alloc_zeroed/realloc) made so far,
+/// process-wide. Diff two readings around a region to count its
+/// allocations; single-threaded tests see exact figures.
+pub fn allocation_count() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}

@@ -78,6 +78,17 @@ impl TopKSorter {
         self.cycles
     }
 
+    /// Cycles this stream costs beyond the `scan_len`-point APD distance
+    /// scan it overlaps with (Fig. 3(a)): the sorter accepts one element
+    /// per cycle in parallel with the scan producing
+    /// `distances_per_cycle` distances per cycle, so only the overflow
+    /// is charged. The one definition shared by the engine-driven
+    /// lattice query and the pruned kernels — their byte-identical
+    /// accounting depends on this fold never diverging.
+    pub fn overflow_beyond_scan(&self, scan_len: usize, distances_per_cycle: usize) -> u64 {
+        self.cycles.saturating_sub((scan_len / distances_per_cycle) as u64)
+    }
+
     /// Event ledger accumulated so far.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger

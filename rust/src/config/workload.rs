@@ -66,6 +66,12 @@ pub struct PipelineConfig {
     /// Engine implementation tier (bit-exact gate-level models vs the
     /// fast native tier with identical outputs/cycles/ledgers).
     pub fidelity: Fidelity,
+    /// Drive the Fast tier's FPS/lattice scans through the
+    /// median-partition pruned kernels (on by default; outputs, cycles,
+    /// ledgers and digests are byte-identical either way — only host
+    /// time differs). Ignored by tiers without partition-aware scans
+    /// (the gate-level tier) and by the exact-sampling ablation.
+    pub prune: bool,
 }
 
 impl Default for PipelineConfig {
@@ -76,6 +82,7 @@ impl Default for PipelineConfig {
             artifacts_dir: "artifacts".to_string(),
             tile_parallelism: 2,
             fidelity: Fidelity::BitExact,
+            prune: true,
         }
     }
 }
@@ -99,5 +106,6 @@ mod tests {
         assert!(!p.quantized && !p.exact_sampling);
         assert_eq!(p.artifacts_dir, "artifacts");
         assert_eq!(p.fidelity, Fidelity::BitExact);
+        assert!(p.prune, "pruned kernels are the default fast path");
     }
 }

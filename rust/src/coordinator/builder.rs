@@ -80,6 +80,15 @@ impl PipelineBuilder {
         self
     }
 
+    /// Median-partition pruned preprocessing kernels on tiers that
+    /// support them (on by default; byte-identical outputs and
+    /// accounting, less host work — `prune(false)` forces the
+    /// full-scan engine loop, the bench's comparison axis).
+    pub fn prune(mut self, on: bool) -> Self {
+        self.cfg.prune = on;
+        self
+    }
+
     /// Replace the hardware model used for latency/energy pricing.
     pub fn hardware(mut self, hw: HardwareConfig) -> Self {
         self.hw = hw;

@@ -34,11 +34,12 @@ use crate::cim::sorter::TopKSorter;
 use crate::config::{HardwareConfig, PipelineConfig};
 use crate::coordinator::scratch::CloudScratch;
 use crate::coordinator::stats::CloudStats;
+use crate::engine::fast::PrunedPreprocessor;
 use crate::engine::{DistanceEngine, MaxSearchEngine};
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
-use crate::sampling::{self, GroupsCsr, LATTICE_SCALE};
+use crate::sampling::{self, GroupsCsr, MedianIndex, LATTICE_SCALE};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -219,7 +220,8 @@ impl Pipeline {
             }
             // sorter accepts one hit/cycle, overlapped with the scan:
             // only the overflow beyond the scan length costs extra
-            stats.preproc_cycles += sorter.cycles().saturating_sub(dist.len() as u64 / 16);
+            stats.preproc_cycles +=
+                sorter.overflow_beyond_scan(dist.len(), apd.distances_per_cycle());
             stats.ledger.merge(sorter.ledger());
             let start = out.indices.len();
             for &(_, j) in sorter.entries() {
@@ -234,8 +236,10 @@ impl Pipeline {
     }
 
     /// One sampling+grouping level through the CIM engines (approximate
-    /// path) or the float reference (exact ablation), refilling the
-    /// arena's [`LevelIndices`] in place.
+    /// path), the median-partition pruned kernels (Fast tier with
+    /// pruning enabled — byte-identical outputs and accounting, less
+    /// host work), or the float reference (exact ablation), refilling
+    /// the arena's [`LevelIndices`] in place.
     fn level_into(
         cfg: &PipelineConfig,
         apd: &mut dyn DistanceEngine,
@@ -243,6 +247,8 @@ impl Pipeline {
         sorter: &mut TopKSorter,
         dist: &mut Vec<u32>,
         fps_ds: &mut Vec<f32>,
+        index: &mut MedianIndex,
+        pruned: &mut PrunedPreprocessor,
         pts_f: &[Point3],
         pts_q: &[QPoint3],
         m: usize,
@@ -262,6 +268,28 @@ impl Pipeline {
             );
             stats.ledger.charge(crate::energy::Event::MacDigital, trace.point_reads * 3);
             stats.preproc_cycles += trace.point_reads / 8;
+        } else if cfg.prune && apd.supports_partition_pruning() {
+            // Median-partition pruned kernels: the index is rebuilt in
+            // place per level (host-side work, charged nothing — exactly
+            // like the paper's host-offloaded median partitioning), then
+            // FPS and the lattice query skip whole cells via exact
+            // bounding-box lower bounds. Accounting is the same closed
+            // form the engines charge, so every simulated statistic is
+            // identical to the engine-driven path below.
+            pruned.reset();
+            index.build(pts_q);
+            pruned.fps_into(index, m, 0, &mut out.centroids);
+            let grid_range = quant::radius_to_grid(LATTICE_SCALE * radius);
+            pruned.lattice_query_into(
+                index,
+                &out.centroids,
+                grid_range,
+                k,
+                sorter,
+                &mut out.groups,
+            );
+            stats.preproc_cycles += pruned.cycles();
+            stats.ledger.merge(pruned.ledger());
         } else {
             // Lane-resident engines: reset (identical to freshly built at
             // the accounting level) instead of reallocated.
@@ -318,6 +346,8 @@ impl Pipeline {
             &mut scratch.sorter,
             &mut scratch.dist,
             &mut scratch.fps_ds,
+            &mut scratch.index,
+            &mut scratch.pruned,
             &scratch.pts1_f,
             &scratch.q1,
             m.s1,
@@ -351,6 +381,8 @@ impl Pipeline {
             &mut scratch.sorter,
             &mut scratch.dist,
             &mut scratch.fps_ds,
+            &mut scratch.index,
+            &mut scratch.pruned,
             &scratch.c1_f,
             &scratch.q2,
             m.s2,

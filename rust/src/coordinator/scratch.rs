@@ -29,13 +29,16 @@ use crate::cim::sc_cim::ScCimConfig;
 use crate::cim::sorter::TopKSorter;
 use crate::coordinator::pipeline::LevelIndices;
 use crate::coordinator::stats::CloudStats;
+use crate::engine::fast::PrunedPreprocessor;
 use crate::engine::{self, DistanceEngine, Fidelity, MacEngine, MaxSearchEngine};
 use crate::pointcloud::Point3;
 use crate::quant::QPoint3;
+use crate::sampling::MedianIndex;
 
 /// Capacity-tracked buffers in the arena (see
-/// [`CloudScratch::buffer_bytes`]).
-const TRACKED_BUFFERS: usize = 19;
+/// [`CloudScratch::buffer_bytes`]): 19 refill buffers plus the median
+/// partition index's 6 and the pruned kernels' 3 working buffers.
+const TRACKED_BUFFERS: usize = 28;
 
 /// All reusable per-cloud state of one pipeline lane: the fidelity-tier
 /// engine models, the streaming top-k sorter, and every coordinate /
@@ -53,6 +56,12 @@ pub struct CloudScratch {
     pub(crate) sc: Box<dyn MacEngine>,
     /// Streaming top-k sorter reused across every centroid.
     pub(crate) sorter: TopKSorter,
+    /// Median-partition spatial index, rebuilt in place per level (the
+    /// pruned Fast-tier kernels scan against it; idle on other paths).
+    pub(crate) index: MedianIndex,
+    /// Pruned FPS/lattice kernels with their own closed-form accounting
+    /// (used when the lane's distance engine supports pruning).
+    pub(crate) pruned: PrunedPreprocessor,
     /// Quantized level-1 cloud (PTQ16 grid view).
     pub(crate) q1: Vec<QPoint3>,
     /// Quantized level-2 input (level-1 centroids on the grid).
@@ -97,6 +106,8 @@ impl CloudScratch {
             cam: engine::max_search_engine(fidelity, CamConfig::default()),
             sc: engine::mac_engine(fidelity, ScCimConfig::default()),
             sorter: TopKSorter::new(1),
+            index: MedianIndex::new(),
+            pruned: PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default()),
             q1: Vec::new(),
             q2: Vec::new(),
             pts1_f: Vec::new(),
@@ -120,7 +131,18 @@ impl CloudScratch {
     fn buffer_bytes(&self) -> [u64; TRACKED_BUFFERS] {
         use std::mem::size_of;
         let v = |cap: usize, elem: usize| (cap * elem) as u64;
+        let idx = self.index.buffer_bytes();
+        let pp = self.pruned.buffer_bytes();
         [
+            idx[0],
+            idx[1],
+            idx[2],
+            idx[3],
+            idx[4],
+            idx[5],
+            pp[0],
+            pp[1],
+            pp[2],
             v(self.q1.capacity(), size_of::<QPoint3>()),
             v(self.q2.capacity(), size_of::<QPoint3>()),
             v(self.pts1_f.capacity(), size_of::<Point3>()),

@@ -1,8 +1,12 @@
 //! The event ledger: hardware models charge discrete events; the ledger
 //! prices them with [`EnergyConstants`] and reports per-category breakdowns.
+//!
+//! Storage is a fixed `[u64; Event::COUNT]` indexed by the event's
+//! discriminant — charging, merging and comparing ledgers never touch the
+//! heap, so per-cloud stats bookkeeping is allocation-free end to end
+//! (the request path's allocator-level zero-alloc contract includes it).
 
 use super::constants::EnergyConstants;
-use std::collections::BTreeMap;
 
 /// Every countable hardware event in the simulators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -35,7 +39,56 @@ pub enum Event {
     MacDigital,
 }
 
+/// Compile-time exhaustiveness guard: adding an [`Event`] variant turns
+/// this match non-exhaustive and fails the build — pointing here, where
+/// [`Event::COUNT`] and [`Event::ALL`] must grow with it — instead of
+/// letting the first `charge()` of the new event panic out of bounds.
+#[allow(dead_code)]
+const fn _event_count_guard(ev: Event) {
+    match ev {
+        Event::DramBit
+        | Event::SramBit
+        | Event::RegBit
+        | Event::ApdDistanceOp
+        | Event::CamSearchCell
+        | Event::CamComparePair
+        | Event::CamWriteBit
+        | Event::DigitalCompareBit
+        | Event::AdderBit
+        | Event::MacBs
+        | Event::MacBt
+        | Event::MacSc
+        | Event::MacDigital => (),
+    }
+}
+
 impl Event {
+    /// Number of distinct event kinds (sizes the ledger's count array).
+    pub const COUNT: usize = 13;
+
+    /// Every event kind, in declaration (= pricing-report) order.
+    pub const ALL: [Event; Event::COUNT] = [
+        Event::DramBit,
+        Event::SramBit,
+        Event::RegBit,
+        Event::ApdDistanceOp,
+        Event::CamSearchCell,
+        Event::CamComparePair,
+        Event::CamWriteBit,
+        Event::DigitalCompareBit,
+        Event::AdderBit,
+        Event::MacBs,
+        Event::MacBt,
+        Event::MacSc,
+        Event::MacDigital,
+    ];
+
+    /// The event's slot in a ledger's fixed count array.
+    #[inline]
+    fn slot(self) -> usize {
+        self as usize
+    }
+
     /// Energy of one occurrence of this event in picojoules.
     pub fn unit_energy_pj(self, c: &EnergyConstants) -> f64 {
         match self {
@@ -56,11 +109,13 @@ impl Event {
     }
 }
 
-/// Accumulates event counts; prices them on demand. Cheap to merge so each
-/// engine keeps its own ledger and the coordinator folds them together.
-#[derive(Debug, Clone, Default, PartialEq)]
+/// Accumulates event counts; prices them on demand. A fixed array indexed
+/// by [`Event`] — charge/merge/compare are heap-free — and cheap to merge,
+/// so each engine keeps its own ledger and the coordinator folds them
+/// together.
+#[derive(Clone, Default, PartialEq)]
 pub struct EnergyLedger {
-    counts: BTreeMap<Event, u64>,
+    counts: [u64; Event::COUNT],
 }
 
 impl EnergyLedger {
@@ -72,19 +127,19 @@ impl EnergyLedger {
     /// Record `n` occurrences of `ev`.
     #[inline]
     pub fn charge(&mut self, ev: Event, n: u64) {
-        *self.counts.entry(ev).or_insert(0) += n;
+        self.counts[ev.slot()] += n;
     }
 
     /// Occurrences of `ev` recorded so far.
     pub fn count(&self, ev: Event) -> u64 {
-        self.counts.get(&ev).copied().unwrap_or(0)
+        self.counts[ev.slot()]
     }
 
     /// Total energy in picojoules under the given constants.
     pub fn total_pj(&self, c: &EnergyConstants) -> f64 {
-        self.counts
+        Event::ALL
             .iter()
-            .map(|(ev, n)| ev.unit_energy_pj(c) * (*n as f64))
+            .map(|&ev| ev.unit_energy_pj(c) * (self.count(ev) as f64))
             .sum()
     }
 
@@ -95,17 +150,18 @@ impl EnergyLedger {
 
     /// Fold another ledger into this one.
     pub fn merge(&mut self, other: &EnergyLedger) {
-        for (ev, n) in &other.counts {
-            self.charge(*ev, *n);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
         }
     }
 
-    /// Per-event breakdown sorted by energy, descending (for reports).
+    /// Per-event breakdown sorted by energy, descending (for reports);
+    /// only events actually charged appear.
     pub fn breakdown_pj(&self, c: &EnergyConstants) -> Vec<(Event, f64)> {
-        let mut v: Vec<(Event, f64)> = self
-            .counts
+        let mut v: Vec<(Event, f64)> = Event::ALL
             .iter()
-            .map(|(ev, n)| (*ev, ev.unit_energy_pj(c) * (*n as f64)))
+            .filter(|&&ev| self.count(ev) > 0)
+            .map(|&ev| (ev, ev.unit_energy_pj(c) * (self.count(ev) as f64)))
             .collect();
         v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         v
@@ -123,7 +179,21 @@ impl EnergyLedger {
 
     /// True when nothing has been charged yet.
     pub fn is_empty(&self) -> bool {
-        self.counts.is_empty()
+        self.counts.iter().all(|&n| n == 0)
+    }
+}
+
+impl std::fmt::Debug for EnergyLedger {
+    /// Map-style rendering of the charged (non-zero) events, so test
+    /// failure output reads like the old map-backed ledger did.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut m = f.debug_map();
+        for ev in Event::ALL {
+            if self.count(ev) > 0 {
+                m.entry(&ev, &self.count(ev));
+            }
+        }
+        m.finish()
     }
 }
 
@@ -162,6 +232,25 @@ mod tests {
         let b = l.breakdown_pj(&c);
         assert_eq!(b[0].0, Event::SramBit);
         assert!(b[0].1 >= b[1].1);
+    }
+
+    #[test]
+    fn fixed_array_semantics() {
+        // Every variant owns a distinct slot inside the fixed array.
+        for (i, ev) in Event::ALL.iter().enumerate() {
+            assert_eq!(ev.slot(), i, "{ev:?} out of declaration order");
+        }
+        // Charging zero occurrences leaves the ledger empty and equal to
+        // a fresh one (the map-backed ledger used to materialize a node).
+        let mut l = EnergyLedger::new();
+        l.charge(Event::MacSc, 0);
+        assert!(l.is_empty());
+        assert_eq!(l, EnergyLedger::new());
+        // Breakdown reports only charged events.
+        l.charge(Event::RegBit, 2);
+        let b = l.breakdown_pj(&EnergyConstants::default());
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].0, Event::RegBit);
     }
 
     #[test]

@@ -22,6 +22,10 @@ impl DistanceEngine for ApdCim {
         ApdCim::len(self)
     }
 
+    fn distances_per_cycle(&self) -> usize {
+        self.config().distances_per_cycle()
+    }
+
     fn load_tile(&mut self, tile: &[QPoint3]) {
         ApdCim::load_tile(self, tile);
     }

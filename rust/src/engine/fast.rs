@@ -20,6 +20,18 @@
 //!   datapath is exact, so `sum(x[i] * w[i])` is the same number) and
 //!   reuses the 4-cycles-per-wave cost formula.
 //!
+//! On top of the per-operation engines, this module holds the
+//! median-partition **pruned preprocessing kernels**
+//! ([`PrunedPreprocessor`]): FPS and lattice-query rewritten against a
+//! [`MedianIndex`] so whole leaf cells are skipped via exact
+//! bounding-box L1 lower bounds, while every hardware charge is made in
+//! the same closed form the per-operation engines make it — outputs,
+//! cycles, ledgers and serve digests stay byte-identical to both engine
+//! tiers; only host time drops. The distance work that survives pruning
+//! runs through a blocked SoA microkernel (fixed-width unrolled lanes),
+//! which also feeds [`FastDistance`]'s
+//! [`DistanceEngine::scan_distances_into`] implementation.
+//!
 //! Bit-identity with the `BitExact` tier — outputs, cycles, ledgers — is
 //! enforced by `rust/tests/fidelity_equivalence.rs`.
 
@@ -27,8 +39,10 @@ use super::{DistanceEngine, MacEngine, MaxSearchEngine};
 use crate::cim::apd_cim::ApdCimConfig;
 use crate::cim::max_cam::CamConfig;
 use crate::cim::sc_cim::ScCimConfig;
+use crate::cim::sorter::TopKSorter;
 use crate::energy::{EnergyLedger, Event};
 use crate::quant::{QPoint3, TD_BITS};
+use crate::sampling::{GroupsCsr, MedianIndex};
 
 /// Fast-tier distance array: SoA coordinate storage, native `abs_diff`
 /// scans, APD-CIM-identical accounting.
@@ -64,11 +78,50 @@ impl FastDistance {
         self.ledger.charge(Event::RegBit, 48);
         self.cycles += 1;
         out.clear();
-        out.extend(self.xs.iter().zip(&self.ys).zip(&self.zs).map(|((&x, &y), &z)| {
-            x.abs_diff(r.x) as u32 + y.abs_diff(r.y) as u32 + z.abs_diff(r.z) as u32
-        }));
+        out.resize(self.xs.len(), 0);
+        l1_soa_lanes(&self.xs, &self.ys, &self.zs, r, |k, d| out[k] = d);
         self.ledger.charge(Event::ApdDistanceOp, out.len() as u64);
         self.cycles += self.scan_cycles(out.len());
+    }
+}
+
+/// Width of one blocked-SoA distance lane group. Eight u16 lanes fill a
+/// 128-bit vector register; the fixed-size inner block below gives the
+/// autovectorizer a branch-free body.
+const SOA_LANES: usize = 8;
+
+/// Blocked SoA L1-distance microkernel: computes every member's 19-bit
+/// L1 distance to `r` from the coordinate lane slices and hands
+/// `(member_offset, distance)` to `sink` in order. The main loop runs in
+/// fixed-width unrolled blocks of [`SOA_LANES`]; the tail runs scalar.
+#[inline]
+fn l1_soa_lanes(
+    xs: &[u16],
+    ys: &[u16],
+    zs: &[u16],
+    r: QPoint3,
+    mut sink: impl FnMut(usize, u32),
+) {
+    debug_assert!(xs.len() == ys.len() && ys.len() == zs.len());
+    let n = xs.len();
+    let blocks = n / SOA_LANES;
+    for b in 0..blocks {
+        let base = b * SOA_LANES;
+        let mut d = [0u32; SOA_LANES];
+        for j in 0..SOA_LANES {
+            d[j] = xs[base + j].abs_diff(r.x) as u32
+                + ys[base + j].abs_diff(r.y) as u32
+                + zs[base + j].abs_diff(r.z) as u32;
+        }
+        for (j, dj) in d.into_iter().enumerate() {
+            sink(base + j, dj);
+        }
+    }
+    for k in blocks * SOA_LANES..n {
+        let d = xs[k].abs_diff(r.x) as u32
+            + ys[k].abs_diff(r.y) as u32
+            + zs[k].abs_diff(r.z) as u32;
+        sink(k, d);
     }
 }
 
@@ -79,6 +132,10 @@ impl DistanceEngine for FastDistance {
 
     fn len(&self) -> usize {
         self.xs.len()
+    }
+
+    fn distances_per_cycle(&self) -> usize {
+        self.cfg.distances_per_cycle()
     }
 
     fn load_tile(&mut self, tile: &[QPoint3]) {
@@ -125,6 +182,303 @@ impl DistanceEngine for FastDistance {
     fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }
+
+    fn supports_partition_pruning(&self) -> bool {
+        true
+    }
+}
+
+/// Median-partition pruned preprocessing kernels — the Fast tier's FPS
+/// and lattice query rewritten against a [`MedianIndex`].
+///
+/// Exactness argument (why pruning is byte-identical, not approximate):
+///
+/// - **FPS min-update**: the kernel keeps the full temporary-distance
+///   array `live` (permutation order) plus each cell's running maximum.
+///   After sampling centroid `c`, a cell may be skipped iff
+///   `lb(c, cell) >= cellmax`: every member's distance to `c` is then
+///   `>= lb >= cellmax >= live[i]`, so `min(live[i], d) = live[i]` for
+///   the whole cell — no value can change. Skipped cells keep exact TDs.
+/// - **FPS max-select**: the arg-max over exact TDs is found from the
+///   per-cell maxima, then resolved to the *lowest original index*
+///   attaining it — the CAM's lowest-matchline priority.
+/// - **Lattice query**: a cell is skipped iff `lb(centroid, cell) >`
+///   the grid range — no member can be in range. Surviving hits are
+///   sorted back into original-index order before streaming into the
+///   [`TopKSorter`], so the sorter's order-dependent cycle/energy
+///   accounting is reproduced exactly, not just its output.
+///
+/// Accounting: every charge the engine-driven loop makes
+/// (`load_tile`/scan/`load_initial`/`update_min`/`invalidate`/searches,
+/// and the bit-CAM search energy, which needs one cheap flat pass over
+/// the exact TDs) is made here in identical closed form — the ledger and
+/// cycle totals folded into [`crate::coordinator::CloudStats`] are
+/// byte-identical to both engine tiers. Only host time changes.
+pub struct PrunedPreprocessor {
+    apd_cfg: ApdCimConfig,
+    cam_cfg: CamConfig,
+    /// Temporary distances (`D_s`) in index-permutation order.
+    live: Vec<u32>,
+    /// Running maximum live TD per index cell.
+    cellmax: Vec<u32>,
+    /// `(original index, distance)` lattice hits of one centroid.
+    hits: Vec<(u32, u32)>,
+    cycles: u64,
+    ledger: EnergyLedger,
+}
+
+impl PrunedPreprocessor {
+    /// Fresh kernels for the given engine geometries (accounting must
+    /// price against the same configs the per-operation engines use).
+    pub fn new(apd_cfg: ApdCimConfig, cam_cfg: CamConfig) -> Self {
+        Self {
+            apd_cfg,
+            cam_cfg,
+            live: Vec::new(),
+            cellmax: Vec::new(),
+            hits: Vec::new(),
+            cycles: 0,
+            ledger: EnergyLedger::new(),
+        }
+    }
+
+    /// Zero the cycle counter and ledger (lane reuse across clouds);
+    /// working buffers keep their capacity.
+    pub fn reset(&mut self) {
+        self.cycles = 0;
+        self.ledger = EnergyLedger::new();
+    }
+
+    /// Cycle count accumulated so far (APD + CAM + sorter overflow,
+    /// summed — the same total the engine-driven loop spreads across
+    /// `apd.cycles() + cam.cycles()` + the sorter's stats line).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Event ledger accumulated so far.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Byte capacities of the growable working buffers (scratch-arena
+    /// accounting; order is stable).
+    pub fn buffer_bytes(&self) -> [u64; 3] {
+        use std::mem::size_of;
+        [
+            (self.live.capacity() * size_of::<u32>()) as u64,
+            (self.cellmax.capacity() * size_of::<u32>()) as u64,
+            (self.hits.capacity() * size_of::<(u32, u32)>()) as u64,
+        ]
+    }
+
+    fn scan_cycles(&self, n: usize) -> u64 {
+        n.div_ceil(self.apd_cfg.distances_per_cycle()) as u64
+    }
+
+    /// Closed-form charges of one full-array distance scan (reference
+    /// readout + one distance op per resident point).
+    fn charge_scan(&mut self, n: usize) {
+        self.ledger.charge(Event::RegBit, 48);
+        self.cycles += 1;
+        self.ledger.charge(Event::ApdDistanceOp, n as u64);
+        self.cycles += self.scan_cycles(n);
+    }
+
+    /// Zero the TD of original index `i` (a sampled centroid drops out)
+    /// and restore its cell's running maximum.
+    fn invalidate(&mut self, index: &MedianIndex, i: usize) {
+        let p = index.pos(i);
+        self.live[p] = 0;
+        let c = index.cell_index_of(p);
+        let cell = index.cells()[c];
+        self.cellmax[c] = self.live[cell.start as usize..cell.end as usize]
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0);
+        self.ledger.charge(Event::CamWriteBit, TD_BITS as u64);
+        self.cycles += 1;
+    }
+
+    /// Pruned farthest-point sampling over an indexed tile: `m` sampled
+    /// original indices land in `idx` (cleared and refilled),
+    /// byte-identical to [`crate::coordinator::Pipeline::cam_fps_into`]
+    /// driven over either engine tier — indices, cycle total and ledger.
+    pub fn fps_into(&mut self, index: &MedianIndex, m: usize, start: usize, idx: &mut Vec<usize>) {
+        let n = index.len();
+        assert!(
+            n <= self.apd_cfg.capacity(),
+            "tile of {n} exceeds APD-CIM capacity {}",
+            self.apd_cfg.capacity()
+        );
+        assert!(n <= self.cam_cfg.capacity(), "tile TDs exceed CAM capacity");
+        assert!(m >= 1 && start < n, "cannot sample {m} of {n} from {start}");
+
+        // Tile load into the distance array (SRAM writes, row-parallel).
+        self.ledger.charge(Event::SramBit, n as u64 * 48);
+        self.cycles += self.scan_cycles(n);
+        // Initial scan against the seed point.
+        self.charge_scan(n);
+        let r0 = index.point(start);
+        self.live.clear();
+        self.live.resize(n, 0);
+        self.cellmax.clear();
+        self.cellmax.resize(index.cells().len(), 0);
+        for (c, cell) in index.cells().iter().enumerate() {
+            let (xs, ys, zs) = index.cell_soa(cell);
+            let live = &mut self.live[cell.start as usize..cell.end as usize];
+            let mut mx = 0u32;
+            l1_soa_lanes(xs, ys, zs, r0, |k, d| {
+                live[k] = d;
+                mx = mx.max(d);
+            });
+            self.cellmax[c] = mx;
+        }
+        // CAM initial-TD load.
+        self.ledger.charge(Event::CamWriteBit, n as u64 * TD_BITS as u64 * 2);
+        self.cycles += n.div_ceil(self.cam_cfg.n_groups) as u64;
+        self.invalidate(index, start);
+        idx.clear();
+        idx.push(start);
+
+        for _ in 1..m {
+            // --- MAX search: arg-max from the per-cell maxima, lowest
+            // original index winning ties (matchline priority). ---
+            let best_val = self.cellmax.iter().copied().max().expect("non-empty tile");
+            let mut best_orig = usize::MAX;
+            for (c, cell) in index.cells().iter().enumerate() {
+                if self.cellmax[c] != best_val {
+                    continue;
+                }
+                for p in cell.start as usize..cell.end as usize {
+                    if self.live[p] == best_val {
+                        best_orig = best_orig.min(index.orig(p));
+                    }
+                }
+            }
+            debug_assert!(best_orig != usize::MAX);
+            // Analytic bit-search energy over the exact TDs (one cheap
+            // flat pass; same formula as FastMaxSearch::max_search).
+            let mut searched: u64 = 0;
+            for &v in &self.live {
+                let xor = v ^ best_val;
+                let h = if xor == 0 { 0 } else { 31 - xor.leading_zeros() };
+                searched += (TD_BITS - h) as u64;
+            }
+            self.ledger.charge(Event::CamSearchCell, searched);
+            self.cycles += TD_BITS as u64;
+            // Data-CAM resolve cycle: every occupied cell participates.
+            self.ledger.charge(Event::CamSearchCell, n as u64);
+            self.cycles += 1;
+
+            idx.push(best_orig);
+            self.invalidate(index, best_orig);
+
+            // --- scan + min-update, pruned per cell. ---
+            self.charge_scan(n);
+            self.ledger.charge(Event::CamComparePair, n as u64);
+            self.ledger.charge(Event::CamWriteBit, n as u64 * TD_BITS as u64);
+            let r = index.point(best_orig);
+            for (c, cell) in index.cells().iter().enumerate() {
+                // Exact skip: every member's distance to `r` is >= the
+                // box bound >= the cell's max TD, so no TD can shrink.
+                if cell.l1_lower_bound(&r) >= self.cellmax[c] {
+                    continue;
+                }
+                let (xs, ys, zs) = index.cell_soa(cell);
+                let live = &mut self.live[cell.start as usize..cell.end as usize];
+                let mut mx = 0u32;
+                l1_soa_lanes(xs, ys, zs, r, |k, d| {
+                    let v = live[k].min(d);
+                    live[k] = v;
+                    mx = mx.max(v);
+                });
+                self.cellmax[c] = mx;
+            }
+        }
+    }
+
+    /// Pruned lattice query over an indexed tile: one simulated
+    /// full-array scan per centroid, hits gathered only from cells whose
+    /// box bound admits the grid range, re-sorted into original-index
+    /// order and streamed through the real [`TopKSorter`] — groups, the
+    /// sorter's cycle overflow and its ledger are byte-identical to the
+    /// engine-driven query.
+    pub fn lattice_query_into(
+        &mut self,
+        index: &MedianIndex,
+        centroids: &[usize],
+        grid_range: u32,
+        k: usize,
+        sorter: &mut TopKSorter,
+        out: &mut GroupsCsr,
+    ) {
+        let n = index.len();
+        out.clear();
+        for &ci in centroids {
+            let r = index.point(ci);
+            self.charge_scan(n);
+            sorter.reset(k);
+            self.hits.clear();
+            for cell in index.cells() {
+                if cell.l1_lower_bound(&r) > grid_range {
+                    continue;
+                }
+                let base = cell.start as usize;
+                let (xs, ys, zs) = index.cell_soa(cell);
+                let hits = &mut self.hits;
+                l1_soa_lanes(xs, ys, zs, r, |kk, d| {
+                    if d <= grid_range {
+                        hits.push((index.orig(base + kk) as u32, d));
+                    }
+                });
+            }
+            // The engine-driven scan streams hits in original-index
+            // order; the sorter's energy is order-dependent, so restore
+            // that order before pushing.
+            self.hits.sort_unstable_by_key(|&(o, _)| o);
+            for &(o, d) in &self.hits {
+                sorter.push(d, o as usize);
+            }
+            // Sorter accepts one hit/cycle overlapped with the scan;
+            // only the overflow beyond the scan length costs extra
+            // (the one shared fold — see TopKSorter::overflow_beyond_scan).
+            self.cycles += sorter.overflow_beyond_scan(n, self.apd_cfg.distances_per_cycle());
+            self.ledger.merge(sorter.ledger());
+            let start = out.indices.len();
+            for &(_, j) in sorter.entries() {
+                out.indices.push(j);
+            }
+            crate::sampling::query::pad_and_seal(out, start, k, || nearest_pruned(index, &r));
+        }
+    }
+}
+
+/// Branch-and-bound nearest point to `r` (L1, lowest original index on
+/// ties) — the pruned spelling of the empty-group fallback
+/// `(0..n).min_by_key(|&j| dist[j])`.
+fn nearest_pruned(index: &MedianIndex, r: &QPoint3) -> usize {
+    let mut best_d = u32::MAX;
+    let mut best_i = usize::MAX;
+    for cell in index.cells() {
+        // `>` not `>=`: a cell whose bound ties the best distance may
+        // still hold an equal-distance point with a lower index.
+        if cell.l1_lower_bound(r) > best_d {
+            continue;
+        }
+        let base = cell.start as usize;
+        let (xs, ys, zs) = index.cell_soa(cell);
+        l1_soa_lanes(xs, ys, zs, *r, |k, d| {
+            let o = index.orig(base + k);
+            if d < best_d || (d == best_d && o < best_i) {
+                best_d = d;
+                best_i = o;
+            }
+        });
+    }
+    debug_assert!(best_i != usize::MAX, "non-empty tile");
+    best_i
 }
 
 /// Fast-tier MAX search: flat live-TD storage, analytic bit-CAM energy.
@@ -347,6 +701,123 @@ mod tests {
         }
         assert_eq!(MaxSearchEngine::ledger(&gate), fast.ledger());
         assert_eq!(gate.bit_cam_max(), fast.max_search());
+    }
+
+    #[test]
+    fn pruned_fps_matches_engine_loop() {
+        for (n, seed) in [(65usize, 21u64), (777, 5), (1024, 9), (2048, 13)] {
+            let t = tile(n, seed);
+            let m = (n / 4).max(2);
+            // Reference: the engine-driven loop on the fast tier.
+            let mut apd = FastDistance::new(ApdCimConfig::default());
+            let mut cam = FastMaxSearch::new(CamConfig::default());
+            apd.load_tile(&t);
+            let want_idx = crate::coordinator::Pipeline::cam_fps(&mut apd, &mut cam, m, 0);
+            // Pruned kernels over the median index.
+            let mut index = MedianIndex::new();
+            index.build(&t);
+            let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+            let mut idx = Vec::new();
+            pp.fps_into(&index, m, 0, &mut idx);
+            assert_eq!(idx, want_idx, "n={n}");
+            let mut want_ledger = EnergyLedger::new();
+            want_ledger.merge(DistanceEngine::ledger(&apd));
+            want_ledger.merge(MaxSearchEngine::ledger(&cam));
+            assert_eq!(pp.ledger(), &want_ledger, "n={n} ledger");
+            assert_eq!(
+                pp.cycles(),
+                DistanceEngine::cycles(&apd) + MaxSearchEngine::cycles(&cam),
+                "n={n} cycles"
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_fps_handles_duplicate_points() {
+        // Duplicates force distance ties (and an all-zero TD endgame when
+        // m exhausts the distinct points) — the tie-break and the
+        // degenerate lowest-index behaviour must match the engine loop.
+        let mut t = tile(16, 3);
+        for i in 8..16 {
+            t[i] = t[i - 8];
+        }
+        let mut apd = FastDistance::new(ApdCimConfig::default());
+        let mut cam = FastMaxSearch::new(CamConfig::default());
+        apd.load_tile(&t);
+        let want_idx = crate::coordinator::Pipeline::cam_fps(&mut apd, &mut cam, 16, 0);
+        let mut index = MedianIndex::new();
+        index.build(&t);
+        let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut idx = Vec::new();
+        pp.fps_into(&index, 16, 0, &mut idx);
+        assert_eq!(idx, want_idx);
+        let mut want_ledger = EnergyLedger::new();
+        want_ledger.merge(DistanceEngine::ledger(&apd));
+        want_ledger.merge(MaxSearchEngine::ledger(&cam));
+        assert_eq!(pp.ledger(), &want_ledger);
+    }
+
+    #[test]
+    fn pruned_lattice_matches_full_scan_reference() {
+        let n = 1024usize;
+        let t = tile(n, 33);
+        let centroids = vec![0usize, 5, 17, 999];
+        let (k, grid_range) = (32usize, crate::quant::radius_to_grid(1.6 * 0.2));
+        let mut index = MedianIndex::new();
+        index.build(&t);
+        let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut sorter = TopKSorter::new(1);
+        let mut out = GroupsCsr::new();
+        pp.lattice_query_into(&index, &centroids, grid_range, k, &mut sorter, &mut out);
+        // Reference: full scans + the same sorter/padding convention.
+        let mut apd = FastDistance::new(ApdCimConfig::default());
+        apd.load_tile(&t);
+        let mut ref_sorter = TopKSorter::new(1);
+        let mut ref_out = GroupsCsr::new();
+        let mut dist = Vec::new();
+        let mut want_cycles = 0u64;
+        let mut want_ledger = EnergyLedger::new();
+        for &ci in &centroids {
+            apd.scan_distances_into(ci, &mut dist);
+            ref_sorter.reset(k);
+            for (j, &dj) in dist.iter().enumerate() {
+                if dj <= grid_range {
+                    ref_sorter.push(dj, j);
+                }
+            }
+            want_cycles += ref_sorter
+                .overflow_beyond_scan(dist.len(), ApdCimConfig::default().distances_per_cycle());
+            want_ledger.merge(ref_sorter.ledger());
+            let start = ref_out.indices.len();
+            for &(_, j) in ref_sorter.entries() {
+                ref_out.indices.push(j);
+            }
+            crate::sampling::query::pad_and_seal(&mut ref_out, start, k, || {
+                (0..dist.len()).min_by_key(|&j| dist[j]).unwrap()
+            });
+        }
+        assert_eq!(out, ref_out, "groups");
+        // The pruned kernel charges the scans itself (the reference
+        // engine charged them into `apd`, minus its tile load).
+        let scans = centroids.len() as u64;
+        want_cycles += scans * (1 + n.div_ceil(16) as u64);
+        want_ledger.charge(Event::RegBit, 48 * scans);
+        want_ledger.charge(Event::ApdDistanceOp, n as u64 * scans);
+        assert_eq!(pp.cycles(), want_cycles, "cycles");
+        assert_eq!(pp.ledger(), &want_ledger, "ledger");
+    }
+
+    #[test]
+    fn pruned_nearest_matches_linear_scan() {
+        let t = tile(333, 44);
+        let mut index = MedianIndex::new();
+        index.build(&t);
+        for r in [t[0], t[200], QPoint3 { x: 0, y: u16::MAX, z: 1000 }] {
+            let want = (0..t.len())
+                .min_by_key(|&j| t[j].l1(&r))
+                .unwrap();
+            assert_eq!(nearest_pruned(&index, &r), want);
+        }
     }
 
     #[test]

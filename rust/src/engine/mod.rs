@@ -100,6 +100,9 @@ pub trait DistanceEngine: Send {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Distances the array produces per cycle (one activated PTG row) —
+    /// the overlap rate the sorter/merger cost fold prices against.
+    fn distances_per_cycle(&self) -> usize;
     /// Load a tile (replacing any resident one); charged as SRAM writes.
     /// Panics if the tile exceeds the array capacity.
     fn load_tile(&mut self, tile: &[QPoint3]);
@@ -132,6 +135,16 @@ pub trait DistanceEngine: Send {
     fn cycles(&self) -> u64;
     /// Event ledger accumulated so far.
     fn ledger(&self) -> &EnergyLedger;
+    /// Partition-aware scan surface: true when this tier's FPS and
+    /// lattice-query scans may be driven through the median-partition
+    /// pruned kernels ([`fast::PrunedPreprocessor`]) instead of the
+    /// per-operation engine loop. The gate-level tier always scans the
+    /// full array (that is what the silicon does, and what its figures
+    /// are authoritative on); the Fast tier prunes, byte-identically in
+    /// outputs, cycles and ledgers.
+    fn supports_partition_pruning(&self) -> bool {
+        false
+    }
 }
 
 /// The Ping-Pong-MAX CAM contract: temporary distances with in-situ
@@ -223,6 +236,14 @@ mod tests {
     #[test]
     fn default_is_bit_exact() {
         assert_eq!(Fidelity::default(), Fidelity::BitExact);
+    }
+
+    #[test]
+    fn only_the_fast_tier_advertises_partition_pruning() {
+        let bx = distance_engine(Fidelity::BitExact, ApdCimConfig::default());
+        assert!(!bx.supports_partition_pruning(), "gate level always full-scans");
+        let fa = distance_engine(Fidelity::Fast, ApdCimConfig::default());
+        assert!(fa.supports_partition_pruning());
     }
 
     #[test]

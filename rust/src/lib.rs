@@ -26,6 +26,8 @@
 #![warn(missing_docs)]
 
 pub mod accel;
+#[cfg(feature = "alloc-counter")]
+pub mod alloc_counter;
 pub mod cim;
 pub mod config;
 pub mod coordinator;

@@ -76,6 +76,7 @@ fn pipeline_config(args: &Args, default_fidelity: Fidelity) -> Result<PipelineCo
     Ok(PipelineConfig {
         quantized: args.flags.iter().any(|f| f == "quantized"),
         exact_sampling: args.flags.iter().any(|f| f == "exact"),
+        prune: !args.flags.iter().any(|f| f == "no-prune"),
         artifacts_dir: args
             .opts
             .get("artifacts")
@@ -178,6 +179,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
         stats.mean_energy_pj(&hw.energy()) * 1e-6,
         stats.host_wall_s,
     );
+    println!(
+        "scratch: {:.1} KiB arena footprint | {} grow events across {} clouds \
+         (0 after warm-up = the no-per-cloud-allocation contract held)",
+        stats.scratch_bytes as f64 / 1024.0,
+        stats.scratch_allocs,
+        stats.n,
+    );
     Ok(())
 }
 
@@ -202,7 +210,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // value was forgotten must not silently serve the default workload.
     let known_opts =
         ["workers", "queue-depth", "clouds", "seed", "artifacts", "parallelism", "fidelity"];
-    let known_flags = ["quantized", "exact"];
+    let known_flags = ["quantized", "exact", "no-prune"];
     for key in args.opts.keys() {
         if !known_opts.contains(&key.as_str()) {
             bail!("unknown serve option --{key}; see `pc2im help`");
@@ -261,6 +269,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.accuracy() * 100.0
         );
         println!("stats {}", serve::stats_digest(&stats, &hw));
+        println!(
+            "scratch: {:.1} KiB lane footprint | {} grow events across {n} clouds",
+            stats.scratch_bytes as f64 / 1024.0,
+            stats.scratch_allocs,
+        );
     } else {
         let mut engine = PipelineBuilder::from_config(cfg).build_serve(serve_cfg)?;
         let hw = *engine.pipeline().hardware();
@@ -290,6 +303,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             lat.last().unwrap() * 1e3
         );
         println!("stats {}", serve::stats_digest(&report.stats, &hw));
+        println!(
+            "scratch: {:.1} KiB max lane footprint | {} grow events across {n} clouds \
+             ({} lanes warm up independently)",
+            report.stats.scratch_bytes as f64 / 1024.0,
+            report.stats.scratch_allocs,
+            engine.workers(),
+        );
     }
     Ok(())
 }
@@ -331,7 +351,10 @@ fn help() {
          \n\
          common options: --artifacts DIR (default: artifacts)\n\
          \u{20}               --fidelity bit-exact|fast  engine tier (identical outputs,\n\
-         \u{20}               cycles and energy ledgers on both; only host speed differs)"
+         \u{20}               cycles and energy ledgers on both; only host speed differs)\n\
+         \u{20}               --no-prune  force full-scan preprocessing on the fast tier\n\
+         \u{20}               (median-partition pruned kernels are on by default and\n\
+         \u{20}               byte-identical; the flag exists for A/B timing)"
     );
 }
 

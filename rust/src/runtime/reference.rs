@@ -25,7 +25,7 @@ use crate::rng::Rng64;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashSet;
 use std::path::Path;
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 
 /// One dense layer: row-major `w[cin][cout]` plus bias.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,9 +68,25 @@ pub struct ModelWeights {
 /// Point-wise dense layer: `x[rows, cin] @ w + b`, optional ReLU
 /// (mirrors `ref.py::mlp_layer_ref`).
 pub fn mlp_layer_ref(x: &[f32], rows: usize, layer: &DenseLayer, relu: bool) -> Vec<f32> {
+    let mut out = Vec::new();
+    mlp_layer_ref_into(x, rows, layer, relu, &mut out);
+    out
+}
+
+/// Buffer-filling variant of [`mlp_layer_ref`]: `out` is cleared and
+/// refilled, so a warm layer buffer absorbs the activations without
+/// allocating (the executor's ping-pong request path).
+pub fn mlp_layer_ref_into(
+    x: &[f32],
+    rows: usize,
+    layer: &DenseLayer,
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), rows * layer.cin, "input is not [rows, cin]");
     let (cin, cout) = (layer.cin, layer.cout);
-    let mut out = vec![0.0f32; rows * cout];
+    out.clear();
+    out.resize(rows * cout, 0.0);
     for r in 0..rows {
         let xr = &x[r * cin..(r + 1) * cin];
         let or = &mut out[r * cout..(r + 1) * cout];
@@ -92,7 +108,6 @@ pub fn mlp_layer_ref(x: &[f32], rows: usize, layer: &DenseLayer, relu: bool) -> 
             }
         }
     }
-    out
 }
 
 /// Max-pool over the neighbor axis: `x[s, k, c] -> [s, c]`
@@ -136,10 +151,36 @@ pub fn l1_distance_ref(points: &[f32], r: [f32; 3]) -> Vec<f32> {
 
 /// Apply an MLP stack; every layer ReLUs except (optionally) the last.
 pub fn apply_stack_ref(stack: &[DenseLayer], x: &[f32], rows: usize, last_relu: bool) -> Vec<f32> {
-    let mut cur = x.to_vec();
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    apply_stack_ref_into(stack, x, rows, last_relu, &mut a, &mut b).to_vec()
+}
+
+/// Ping-pong variant of [`apply_stack_ref`]: layer intermediates
+/// alternate between the two caller buffers `a` and `b`, so a warm pair
+/// runs any depth of stack with zero heap allocation. Returns the slice
+/// (one of the two buffers) holding the final activations.
+pub fn apply_stack_ref_into<'v>(
+    stack: &[DenseLayer],
+    x: &[f32],
+    rows: usize,
+    last_relu: bool,
+    a: &'v mut Vec<f32>,
+    b: &'v mut Vec<f32>,
+) -> &'v [f32] {
+    if stack.is_empty() {
+        a.clear();
+        a.extend_from_slice(x);
+        return a;
+    }
+    let (mut cur, mut nxt) = (a, b);
     for (i, layer) in stack.iter().enumerate() {
         let relu = last_relu || i + 1 < stack.len();
-        cur = mlp_layer_ref(&cur, rows, layer, relu);
+        if i == 0 {
+            mlp_layer_ref_into(x, rows, layer, relu, cur);
+        } else {
+            mlp_layer_ref_into(cur, rows, layer, relu, nxt);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
     }
     cur
 }
@@ -241,17 +282,33 @@ fn synthetic_weights(model: &ModelMeta) -> ModelWeights {
     }
 }
 
+/// One checkout of reusable interpreter scratch: the ping-pong pair the
+/// MLP stacks alternate between, plus the pooled-feature staging buffer
+/// of the head graph. Pooled per executor so steady-state execution
+/// allocates nothing per call.
+#[derive(Default)]
+struct LayerScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    pooled: Vec<f32>,
+}
+
 /// The default executor: interprets the feature graphs in f32.
 ///
 /// Thread-safe per the [`Executor`] contract: the weight stacks are
 /// read-only after construction and the loaded-artifact bookkeeping sits
 /// behind an `RwLock`, so one instance serves any number of worker lanes
-/// concurrently (execution itself is lock-free).
+/// concurrently (execution itself is lock-free — the layer-scratch pool
+/// below takes its `Mutex` only for an O(1) checkout/return around each
+/// call, never during the math).
 pub struct ReferenceExecutor {
     model: ModelMeta,
     fp: ModelWeights,
     q16: ModelWeights,
     loaded: RwLock<HashSet<String>>,
+    /// Warm [`LayerScratch`] checkouts; grows to at most the number of
+    /// concurrently executing lanes, then every call reuses a warm pair.
+    scratch: Mutex<Vec<LayerScratch>>,
 }
 
 impl ReferenceExecutor {
@@ -291,7 +348,13 @@ impl ReferenceExecutor {
             mlp3: ptq16_stack(&fp.mlp3),
             head: ptq16_stack(&fp.head),
         };
-        Ok(Self { model: model.clone(), fp, q16, loaded: RwLock::new(HashSet::new()) })
+        Ok(Self {
+            model: model.clone(),
+            fp,
+            q16,
+            loaded: RwLock::new(HashSet::new()),
+            scratch: Mutex::new(Vec::new()),
+        })
     }
 
     fn weights_for(&self, quantized: bool) -> &ModelWeights {
@@ -302,9 +365,21 @@ impl ReferenceExecutor {
         }
     }
 
+    /// Check a warm layer-scratch out of the pool (a cold one if the
+    /// pool is momentarily drained by concurrent lanes).
+    fn take_scratch(&self) -> LayerScratch {
+        self.scratch.lock().expect("scratch pool poisoned").pop().unwrap_or_default()
+    }
+
+    /// Return a checkout so the next call reuses its warm buffers.
+    fn put_scratch(&self, sc: LayerScratch) {
+        self.scratch.lock().expect("scratch pool poisoned").push(sc);
+    }
+
     /// Run one set-abstraction artifact: per-point MLP stack then grouped
-    /// max over the K neighbor axis, pooled straight into `out` (the MLP
-    /// intermediates still allocate; only the output buffer is reused).
+    /// max over the K neighbor axis, pooled straight into `out`. The MLP
+    /// intermediates ping-pong between pooled lane buffers, so a warm
+    /// executor runs the whole graph without allocating.
     fn run_sa_into(
         &self,
         stack: &[DenseLayer],
@@ -328,14 +403,17 @@ impl ReferenceExecutor {
             }
         };
         let rows = s * k;
-        let h = apply_stack_ref(stack, data, rows, true);
+        let mut sc = self.take_scratch();
+        let h = apply_stack_ref_into(stack, data, rows, true, &mut sc.a, &mut sc.b);
         let c_out = stack.last().unwrap().cout;
-        grouped_max_ref_into(&h, s, k, c_out, out);
+        grouped_max_ref_into(h, s, k, c_out, out);
+        self.put_scratch(sc);
         Ok(())
     }
 
     /// Run the head artifact: MLP3 stack, global max over the point sets,
-    /// then the head stack with raw logits written into `out`.
+    /// then the head stack with raw logits written into `out` — all
+    /// intermediates in pooled lane buffers.
     fn run_head_into(
         &self,
         w: &ModelWeights,
@@ -354,12 +432,15 @@ impl ReferenceExecutor {
                 data.len() / cin
             }
         };
-        let h = apply_stack_ref(&w.mlp3, data, rows, true);
+        let mut sc = self.take_scratch();
+        let h = apply_stack_ref_into(&w.mlp3, data, rows, true, &mut sc.a, &mut sc.b);
         let c = w.mlp3.last().unwrap().cout;
-        let pooled = grouped_max_ref(&h, 1, rows, c); // global max over the S2 sets
-        let logits = apply_stack_ref(&w.head, &pooled, 1, false);
+        // global max over the S2 sets
+        grouped_max_ref_into(h, 1, rows, c, &mut sc.pooled);
+        let logits = apply_stack_ref_into(&w.head, &sc.pooled, 1, false, &mut sc.a, &mut sc.b);
         out.clear();
-        out.extend_from_slice(&logits);
+        out.extend_from_slice(logits);
+        self.put_scratch(sc);
         Ok(())
     }
 }
@@ -455,6 +536,27 @@ mod tests {
         let d = l1_distance_ref(&[1.0, -2.0, 3.0, 0.0, 0.0, 0.0], [1.0, -2.0, 3.0]);
         assert_eq!(d[0], 0.0);
         assert_eq!(d[1], 6.0);
+    }
+
+    #[test]
+    fn ping_pong_stack_matches_allocating_path() {
+        let stack = vec![
+            layer(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, -1.0], &[0.1, 0.2, 0.3]),
+            layer(3, 2, &[1.0, -1.0, 0.5, 0.5, -2.0, 2.0], &[0.0, -0.1]),
+        ];
+        let x = [0.5f32, -1.5, 2.0, 0.25];
+        let want = apply_stack_ref(&stack, &x, 2, false);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let got = apply_stack_ref_into(&stack, &x, 2, false, &mut a, &mut b);
+        assert_eq!(got, want.as_slice());
+        // Warm pass: identical output, no buffer growth.
+        let caps = (a.capacity(), b.capacity());
+        let got2 = apply_stack_ref_into(&stack, &x, 2, false, &mut a, &mut b).to_vec();
+        assert_eq!(got2, want);
+        assert_eq!((a.capacity(), b.capacity()), caps);
+        // Empty stack passes the input through via buffer `a`.
+        let empty: Stack = Vec::new();
+        assert_eq!(apply_stack_ref_into(&empty, &x, 2, false, &mut a, &mut b), &x[..]);
     }
 
     #[test]

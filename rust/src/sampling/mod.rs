@@ -10,10 +10,12 @@ pub mod msp;
 pub mod query;
 
 pub use fps::{fps_l1, fps_l1_grid, fps_l2, fps_l2_into, FpsTrace};
-pub use msp::{msp_partition, Tile};
+pub use msp::{
+    msp_partition, msp_partition_into, IndexCell, MedianIndex, Tile, TilePartition, INDEX_LEAF,
+};
 pub use query::{
-    ball_query, ball_query_into, knn, lattice_query, lattice_query_grid, lattice_query_grid_into,
-    lattice_query_into, GroupsCsr,
+    ball_query, ball_query_into, knn, knn_into, lattice_query, lattice_query_grid,
+    lattice_query_grid_into, lattice_query_into, GroupsCsr,
 };
 
 /// The paper's empirical lattice scale: L = 1.6 * R (ball-query radius).

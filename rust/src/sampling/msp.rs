@@ -6,8 +6,18 @@
 //! the paper measures ~15% higher array utilization on S3DIS. The host CPU
 //! executes MSP (the paper offloads it identically); we use an O(n) median
 //! selection per split.
+//!
+//! The same median-split recursion, taken a few levels deeper over the
+//! *quantized* cloud, yields [`MedianIndex`] — the shallow KD/median tree
+//! the Fast engine tier prunes its FPS and lattice-query scans against
+//! (see [`crate::engine::fast::PrunedPreprocessor`]). Each leaf cell
+//! carries an axis-aligned bounding box on the u16 grid, so an L1
+//! distance lower bound per cell decides in O(1) whether any of its
+//! points can matter to the current scan.
 
 use crate::pointcloud::PointCloud;
+use crate::quant::QPoint3;
+use crate::sampling::GroupsCsr;
 
 /// One spatial tile: indices into the parent cloud.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -33,45 +43,18 @@ impl Tile {
 /// Partition `pc` into tiles of at most `tile_size` points via median
 /// splits along the widest axis. Equal-population by construction: sizes
 /// differ by at most 1 across the whole partition.
+///
+/// Nested-`Vec` convenience wrapper over [`msp_partition_into`] — one
+/// implementation of the split, so the two spellings cannot drift.
 pub fn msp_partition(pc: &PointCloud, tile_size: usize) -> Vec<Tile> {
-    assert!(tile_size > 0);
-    let mut out = Vec::new();
-    let all: Vec<usize> = (0..pc.len()).collect();
-    let mut stack = vec![(all, 0u32)];
-    while let Some((mut idx, depth)) = stack.pop() {
-        if idx.len() <= tile_size {
-            if !idx.is_empty() {
-                out.push(Tile { indices: idx, depth });
-            }
-            continue;
-        }
-        // Widest axis of this subset's bounding box.
-        let mut lo = [f32::MAX; 3];
-        let mut hi = [f32::MIN; 3];
-        for &i in &idx {
-            for a in 0..3 {
-                let v = pc.points[i].coord(a);
-                lo[a] = lo[a].min(v);
-                hi[a] = hi[a].max(v);
-            }
-        }
-        let axis = (0..3)
-            .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
-            .unwrap();
-        // O(n) median split (ties broken by index for determinism).
-        let mid = idx.len() / 2;
-        idx.select_nth_unstable_by(mid, |&a, &b| {
-            pc.points[a]
-                .coord(axis)
-                .partial_cmp(&pc.points[b].coord(axis))
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        let right = idx.split_off(mid);
-        stack.push((idx, depth + 1));
-        stack.push((right, depth + 1));
-    }
-    out
+    let mut scratch = Vec::new();
+    let mut csr = TilePartition::new();
+    msp_partition_into(pc, tile_size, &mut scratch, &mut csr);
+    csr.tiles
+        .iter()
+        .zip(&csr.depths)
+        .map(|(g, &depth)| Tile { indices: g.to_vec(), depth })
+        .collect()
 }
 
 /// Fixed-shape spatial tiling (the TiPU-style baseline): a uniform
@@ -103,6 +86,310 @@ pub fn fixed_grid_partition(pc: &PointCloud, grid: usize) -> Vec<Tile> {
         .filter(|b| !b.is_empty())
         .map(|indices| Tile { indices, depth: 0 })
         .collect()
+}
+
+/// Flat CSR spelling of an MSP partition: tile `t`'s member indices are
+/// `tiles.group(t)` and its split depth is `depths[t]` — the
+/// allocation-free counterpart of `Vec<Tile>` for the segmentation /
+/// feature-propagation request path (refill with
+/// [`msp_partition_into`]).
+#[derive(Debug, Clone, Default)]
+pub struct TilePartition {
+    /// Member-point indices of every tile, in flat CSR form.
+    pub tiles: GroupsCsr,
+    /// Split-tree depth of each tile (parallel to the CSR groups).
+    pub depths: Vec<u32>,
+}
+
+impl TilePartition {
+    /// An empty partition.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of tiles.
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// True when the partition holds no tiles.
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// CIM-array utilization of this partition (the CSR counterpart of
+    /// [`array_utilization`]): mean fill ratio of the on-chip point
+    /// capacity across tiles.
+    pub fn utilization(&self, capacity: usize) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .tiles
+            .iter()
+            .map(|t| (t.len().min(capacity) as f64) / capacity as f64)
+            .sum();
+        sum / self.len() as f64
+    }
+}
+
+/// CSR-filling variant of [`msp_partition`]: `out` and `scratch` are
+/// cleared and refilled, so a warmed pair partitions a same-sized cloud
+/// with zero heap allocation. `scratch` holds the index permutation the
+/// median splits select on. Tile contents and order are identical to
+/// [`msp_partition`]'s.
+pub fn msp_partition_into(
+    pc: &PointCloud,
+    tile_size: usize,
+    scratch: &mut Vec<usize>,
+    out: &mut TilePartition,
+) {
+    assert!(tile_size > 0);
+    out.tiles.clear();
+    out.depths.clear();
+    scratch.clear();
+    scratch.extend(0..pc.len());
+    msp_split(pc, scratch, 0, tile_size, out);
+}
+
+/// Recursive median split over one index range (`idx`), emitting tiles in
+/// the same order as [`msp_partition`]'s explicit stack (right subrange
+/// first, because the stack pops last-pushed-first).
+fn msp_split(
+    pc: &PointCloud,
+    idx: &mut [usize],
+    depth: u32,
+    tile_size: usize,
+    out: &mut TilePartition,
+) {
+    if idx.len() <= tile_size {
+        if !idx.is_empty() {
+            out.tiles.indices.extend_from_slice(idx);
+            out.tiles.seal_group();
+            out.depths.push(depth);
+        }
+        return;
+    }
+    // Widest axis of this subset's bounding box.
+    let mut lo = [f32::MAX; 3];
+    let mut hi = [f32::MIN; 3];
+    for &i in idx.iter() {
+        for a in 0..3 {
+            let v = pc.points[i].coord(a);
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    let axis = (0..3)
+        .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
+        .unwrap();
+    // O(n) median split (ties broken by index for determinism).
+    let mid = idx.len() / 2;
+    idx.select_nth_unstable_by(mid, |&a, &b| {
+        pc.points[a]
+            .coord(axis)
+            .partial_cmp(&pc.points[b].coord(axis))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let (left, right) = idx.split_at_mut(mid);
+    msp_split(pc, right, depth + 1, tile_size, out);
+    msp_split(pc, left, depth + 1, tile_size, out);
+}
+
+/// Points per [`MedianIndex`] leaf cell. Sized to the APD-CIM point
+/// cluster (32): small enough that whole-cell pruning bites even on the
+/// 256-point level-2 tile, large enough that the unpruned remainder runs
+/// as full blocked-SoA microkernel lanes.
+pub const INDEX_LEAF: usize = 32;
+
+/// One leaf cell of a [`MedianIndex`]: a contiguous permutation range
+/// plus its axis-aligned bounding box on the u16 grid.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IndexCell {
+    /// First member's position in the index permutation.
+    pub start: u32,
+    /// One-past-last member's position in the index permutation.
+    pub end: u32,
+    /// Per-axis bounding-box minimum (grid coordinates).
+    pub lo: [u16; 3],
+    /// Per-axis bounding-box maximum (grid coordinates).
+    pub hi: [u16; 3],
+}
+
+impl IndexCell {
+    /// L1 distance lower bound from `r` to any point inside the cell's
+    /// bounding box (0 when `r` lies inside it). Exact-pruning key: every
+    /// member's true distance to `r` is `>=` this bound.
+    #[inline]
+    pub fn l1_lower_bound(&self, r: &QPoint3) -> u32 {
+        let axis = |v: u16, lo: u16, hi: u16| -> u32 {
+            if v < lo {
+                (lo - v) as u32
+            } else if v > hi {
+                (v - hi) as u32
+            } else {
+                0
+            }
+        };
+        axis(r.x, self.lo[0], self.hi[0])
+            + axis(r.y, self.lo[1], self.hi[1])
+            + axis(r.z, self.lo[2], self.hi[2])
+    }
+}
+
+/// A shallow median-split spatial index over one quantized tile — the
+/// paper's median partitioning (Fig. 5(b)) carried down to
+/// [`INDEX_LEAF`]-point cells, rebuilt in place per cloud inside the
+/// per-lane scratch arena.
+///
+/// The index stores a permutation of the tile plus the members'
+/// coordinates in **SoA layout, permuted so every cell is contiguous**:
+/// the pruned kernels walk cells, take an O(1) bounding-box L1 lower
+/// bound, and either skip the whole cell or hand its coordinate slices to
+/// the blocked distance microkernel. Construction is host-side work and
+/// charges nothing — the hardware accounting of a pruned scan is
+/// closed-form identical to the full-array scan it replaces.
+#[derive(Debug, Clone, Default)]
+pub struct MedianIndex {
+    /// `perm[p]` = original tile index of the point at position `p`.
+    perm: Vec<u32>,
+    /// `inv[i]` = position of original tile index `i` in the permutation.
+    inv: Vec<u32>,
+    /// x coordinates in permutation order (SoA microkernel feed).
+    xs: Vec<u16>,
+    /// y coordinates in permutation order.
+    ys: Vec<u16>,
+    /// z coordinates in permutation order.
+    zs: Vec<u16>,
+    /// Leaf cells, covering the permutation exactly.
+    cells: Vec<IndexCell>,
+}
+
+impl MedianIndex {
+    /// An empty index (build one with [`Self::build`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True when no tile has been indexed.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// The leaf cells.
+    pub fn cells(&self) -> &[IndexCell] {
+        &self.cells
+    }
+
+    /// Original tile index of the point at permutation position `p`.
+    #[inline]
+    pub fn orig(&self, p: usize) -> usize {
+        self.perm[p] as usize
+    }
+
+    /// Permutation position of original tile index `i`.
+    #[inline]
+    pub fn pos(&self, i: usize) -> usize {
+        self.inv[i] as usize
+    }
+
+    /// Grid coordinates of original tile index `i`.
+    #[inline]
+    pub fn point(&self, i: usize) -> QPoint3 {
+        let p = self.pos(i);
+        QPoint3 { x: self.xs[p], y: self.ys[p], z: self.zs[p] }
+    }
+
+    /// Index of the cell containing permutation position `p` (cells
+    /// cover the permutation contiguously, so this is a binary search).
+    #[inline]
+    pub fn cell_index_of(&self, p: usize) -> usize {
+        self.cells.partition_point(|c| (c.end as usize) <= p)
+    }
+
+    /// The SoA coordinate slices of cell `c` (permutation order).
+    #[inline]
+    pub fn cell_soa(&self, c: &IndexCell) -> (&[u16], &[u16], &[u16]) {
+        let (s, e) = (c.start as usize, c.end as usize);
+        (&self.xs[s..e], &self.ys[s..e], &self.zs[s..e])
+    }
+
+    /// Rebuild the index over `pts` in place: all buffers are cleared and
+    /// refilled, so a warmed index re-indexes a same-sized tile with zero
+    /// heap allocation.
+    pub fn build(&mut self, pts: &[QPoint3]) {
+        let n = pts.len();
+        self.perm.clear();
+        self.perm.extend(0..n as u32);
+        self.cells.clear();
+        split_cells(pts, &mut self.perm, 0, &mut self.cells);
+        self.inv.clear();
+        self.inv.resize(n, 0);
+        self.xs.clear();
+        self.ys.clear();
+        self.zs.clear();
+        for (p, &i) in self.perm.iter().enumerate() {
+            self.inv[i as usize] = p as u32;
+            let q = pts[i as usize];
+            self.xs.push(q.x);
+            self.ys.push(q.y);
+            self.zs.push(q.z);
+        }
+    }
+
+    /// Byte capacities of the index's growable buffers (scratch-arena
+    /// accounting; order is stable).
+    pub fn buffer_bytes(&self) -> [u64; 6] {
+        use std::mem::size_of;
+        [
+            (self.perm.capacity() * size_of::<u32>()) as u64,
+            (self.inv.capacity() * size_of::<u32>()) as u64,
+            (self.xs.capacity() * size_of::<u16>()) as u64,
+            (self.ys.capacity() * size_of::<u16>()) as u64,
+            (self.zs.capacity() * size_of::<u16>()) as u64,
+            (self.cells.capacity() * size_of::<IndexCell>()) as u64,
+        ]
+    }
+}
+
+/// Recursive median split of one permutation range into leaf cells.
+/// Every split puts `len/2` points left and the rest right (ties broken
+/// by original index), so ranges strictly shrink and recursion depth is
+/// `ceil(log2(n / INDEX_LEAF))` — shallow by construction.
+fn split_cells(pts: &[QPoint3], range: &mut [u32], base: u32, cells: &mut Vec<IndexCell>) {
+    if range.is_empty() {
+        return;
+    }
+    // Bounding box of the range (u16 grid).
+    let mut lo = [u16::MAX; 3];
+    let mut hi = [u16::MIN; 3];
+    for &i in range.iter() {
+        let q = pts[i as usize];
+        for (a, v) in [q.x, q.y, q.z].into_iter().enumerate() {
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    if range.len() <= INDEX_LEAF {
+        cells.push(IndexCell { start: base, end: base + range.len() as u32, lo, hi });
+        return;
+    }
+    let axis = (0..3).max_by_key(|&a| hi[a] - lo[a]).unwrap();
+    let coord = |i: u32| -> u16 {
+        let q = pts[i as usize];
+        [q.x, q.y, q.z][axis]
+    };
+    let mid = range.len() / 2;
+    range.select_nth_unstable_by(mid, |&a, &b| coord(a).cmp(&coord(b)).then(a.cmp(&b)));
+    let (left, right) = range.split_at_mut(mid);
+    split_cells(pts, left, base, cells);
+    split_cells(pts, right, base + mid as u32, cells);
 }
 
 /// CIM-array utilization of a partition: mean fill ratio of the on-chip
@@ -160,6 +447,77 @@ mod tests {
             "MSP utilization {msp_u:.3} should exceed fixed-grid {grid_u:.3}"
         );
         assert!(msp_u > 0.95);
+    }
+
+    #[test]
+    fn csr_partition_matches_nested_and_reuses_buffers() {
+        let pc = make_street_cloud(4096, 11);
+        let nested = msp_partition(&pc, 512);
+        let mut scratch = Vec::new();
+        let mut csr = TilePartition::new();
+        msp_partition_into(&pc, 512, &mut scratch, &mut csr);
+        assert_eq!(csr.len(), nested.len());
+        for (t, tile) in nested.iter().enumerate() {
+            assert_eq!(csr.tiles.group(t), tile.indices.as_slice(), "tile {t}");
+            assert_eq!(csr.depths[t], tile.depth, "tile {t} depth");
+        }
+        // warm refill: identical result, no buffer growth
+        let caps = (
+            csr.tiles.offsets.capacity(),
+            csr.tiles.indices.capacity(),
+            csr.depths.capacity(),
+            scratch.capacity(),
+        );
+        msp_partition_into(&pc, 512, &mut scratch, &mut csr);
+        assert_eq!(csr.len(), nested.len());
+        assert_eq!(
+            caps,
+            (
+                csr.tiles.offsets.capacity(),
+                csr.tiles.indices.capacity(),
+                csr.depths.capacity(),
+                scratch.capacity(),
+            )
+        );
+    }
+
+    #[test]
+    fn median_index_covers_tile_with_tight_cells() {
+        use crate::quant::quantize_cloud;
+        let pc = make_workload_cloud(DatasetScale::Small, 8);
+        let q = quantize_cloud(&pc);
+        let mut index = MedianIndex::new();
+        index.build(&q);
+        assert_eq!(index.len(), q.len());
+        // The cells partition the permutation exactly, every point sits
+        // inside its cell's bbox, and perm/inv are mutually inverse.
+        let mut covered = 0usize;
+        for cell in index.cells() {
+            assert!(cell.start < cell.end);
+            assert_eq!(covered, cell.start as usize, "cells must be contiguous");
+            covered = cell.end as usize;
+            assert!((cell.end - cell.start) as usize <= INDEX_LEAF);
+            let (xs, ys, zs) = index.cell_soa(cell);
+            for p in cell.start as usize..cell.end as usize {
+                let i = index.orig(p);
+                assert_eq!(index.pos(i), p);
+                let pt = q[i];
+                assert_eq!(index.point(i), pt);
+                let k = p - cell.start as usize;
+                assert_eq!((xs[k], ys[k], zs[k]), (pt.x, pt.y, pt.z));
+                assert!(pt.x >= cell.lo[0] && pt.x <= cell.hi[0]);
+                assert!(pt.y >= cell.lo[1] && pt.y <= cell.hi[1]);
+                assert!(pt.z >= cell.lo[2] && pt.z <= cell.hi[2]);
+                // The lower bound really lower-bounds member distances.
+                let r = q[0];
+                assert!(cell.l1_lower_bound(&r) <= pt.l1(&r));
+            }
+        }
+        assert_eq!(covered, q.len());
+        // Warm rebuild: same structure, no buffer growth.
+        let bytes = index.buffer_bytes();
+        index.build(&q);
+        assert_eq!(index.buffer_bytes(), bytes);
     }
 
     #[test]

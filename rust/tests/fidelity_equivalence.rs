@@ -11,13 +11,15 @@ use pc2im::cim::sc_cim::ScCimConfig;
 use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
 use pc2im::coordinator::serve::stats_digest;
 use pc2im::coordinator::{Pipeline, PipelineBuilder};
+use pc2im::energy::EnergyLedger;
+use pc2im::engine::fast::PrunedPreprocessor;
 use pc2im::engine::{
     distance_engine, mac_engine, max_search_engine, DistanceEngine, Fidelity, MaxSearchEngine,
 };
 use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
 use pc2im::quant::{quantize_cloud, QPoint3, TD_BITS};
 use pc2im::rng::Rng64;
-use pc2im::sampling::msp_partition;
+use pc2im::sampling::{msp_partition, MedianIndex};
 
 fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
     PipelineConfig {
@@ -81,6 +83,41 @@ fn engines_bit_identical_across_table1_scales() {
             let pts: Vec<QPoint3> = tile.indices.iter().map(|&i| q[i]).collect();
             let m = 64.min(pts.len());
             check_tile(&pts, m, &format!("{scale:?} tile {t}"));
+        }
+    }
+}
+
+/// The pruned kernels against the *gate-level* tier, tile by tile across
+/// every Table-I point distribution: identical FPS samples and identical
+/// total cycle/ledger accounting (the pruned kernels fold the APD + CAM
+/// charges into one accumulator; the gate engines keep them separate —
+/// the sums must match exactly).
+#[test]
+fn pruned_kernels_bit_identical_to_gate_level_across_table1_scales() {
+    for scale in DatasetScale::ALL {
+        let cloud = make_workload_cloud(scale, 23);
+        let q = quantize_cloud(&cloud);
+        let tiles = msp_partition(&cloud, ApdCimConfig::default().capacity());
+        for (t, tile) in tiles.iter().take(2).enumerate() {
+            let ctx = format!("{scale:?} tile {t}");
+            let pts: Vec<QPoint3> = tile.indices.iter().map(|&i| q[i]).collect();
+            let m = 64.min(pts.len());
+            let mut apd = distance_engine(Fidelity::BitExact, ApdCimConfig::default());
+            let mut cam = max_search_engine(Fidelity::BitExact, CamConfig::default());
+            apd.load_tile(&pts);
+            let want_idx = Pipeline::cam_fps(apd.as_mut(), cam.as_mut(), m, 0);
+
+            let mut index = MedianIndex::new();
+            index.build(&pts);
+            let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+            let mut idx = Vec::new();
+            pp.fps_into(&index, m, 0, &mut idx);
+            assert_eq!(idx, want_idx, "{ctx}: FPS samples");
+            let mut want_ledger = EnergyLedger::new();
+            want_ledger.merge(apd.ledger());
+            want_ledger.merge(cam.ledger());
+            assert_eq!(pp.ledger(), &want_ledger, "{ctx}: ledger");
+            assert_eq!(pp.cycles(), apd.cycles() + cam.cycles(), "{ctx}: cycles");
         }
     }
 }
@@ -159,6 +196,43 @@ fn classify_bit_identical_between_tiers() {
         assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles, "cloud {i} preproc");
         assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles, "cloud {i} feature");
         assert_eq!(a.stats.ledger, b.stats.ledger, "cloud {i} ledger");
+    }
+}
+
+/// The pruning axis at pipeline level: Fast+pruned (the default),
+/// Fast+full-scan and the gate-level tier must classify bit-identically
+/// — logits, cycles, ledgers — and the preprocessing-only probe must
+/// charge the same accounting on all three.
+#[test]
+fn pruned_pipeline_bit_identical_to_full_scan_and_gate_level() {
+    let mut gate = PipelineBuilder::from_config(hermetic_cfg(Fidelity::BitExact)).build().unwrap();
+    let mut full = PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
+        .prune(false)
+        .build()
+        .unwrap();
+    let mut pruned = PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
+        .prune(true)
+        .build()
+        .unwrap();
+    assert!(gate.config().prune, "prune flag defaults on (gate tier ignores it)");
+    let (clouds, _) = make_labelled_batch(3, 1024, 77);
+    for (i, cloud) in clouds.iter().enumerate() {
+        let a = gate.classify(cloud).unwrap();
+        let b = full.classify(cloud).unwrap();
+        let c = pruned.classify(cloud).unwrap();
+        assert_eq!(a.logits, c.logits, "cloud {i} logits (gate vs pruned)");
+        assert_eq!(b.logits, c.logits, "cloud {i} logits (full vs pruned)");
+        assert_eq!(a.pred, c.pred, "cloud {i} pred");
+        assert_eq!(a.stats.preproc_cycles, c.stats.preproc_cycles, "cloud {i} preproc");
+        assert_eq!(b.stats.preproc_cycles, c.stats.preproc_cycles, "cloud {i} preproc full");
+        assert_eq!(a.stats.feature_cycles, c.stats.feature_cycles, "cloud {i} feature");
+        assert_eq!(a.stats.ledger, c.stats.ledger, "cloud {i} ledger (gate vs pruned)");
+        assert_eq!(b.stats.ledger, c.stats.ledger, "cloud {i} ledger (full vs pruned)");
+
+        let pa = gate.preprocess(cloud).unwrap();
+        let pc = pruned.preprocess(cloud).unwrap();
+        assert_eq!(pa.preproc_cycles, pc.preproc_cycles, "cloud {i} probe cycles");
+        assert_eq!(pa.ledger, pc.ledger, "cloud {i} probe ledger");
     }
 }
 

@@ -66,24 +66,66 @@ fn warmed_pipeline_gives_bit_identical_repeat_results() {
 fn steady_state_classify_allocates_nothing_in_preprocessing() {
     for fidelity in Fidelity::ALL {
         for exact in [false, true] {
+            for prune in [true, false] {
+                let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                    .exact_sampling(exact)
+                    .prune(prune)
+                    .build()
+                    .unwrap();
+                // Warm-up: the first clouds may grow arena buffers (on
+                // the pruned fast tier that includes the median
+                // partition index and the pruned kernels' TD buffers).
+                let warm = pipe.classify(&make_class_cloud(0, 1024, 1)).unwrap();
+                assert!(warm.stats.scratch_bytes > 0);
+                pipe.classify(&make_class_cloud(3, 1024, 2)).unwrap();
+                // Steady state: every further same-shaped cloud refills
+                // in place.
+                for seed in 10..16u64 {
+                    let cloud = make_class_cloud((seed % 8) as usize, 1024, seed);
+                    let r = pipe.classify(&cloud).unwrap();
+                    assert_eq!(
+                        r.stats.scratch_allocs, 0,
+                        "fidelity={fidelity} exact={exact} prune={prune} seed={seed}: \
+                         warm classify grew the arena"
+                    );
+                    assert_eq!(r.stats.scratch_bytes, warm.stats.scratch_bytes);
+                }
+            }
+        }
+    }
+}
+
+/// The allocator-level spelling of the zero-alloc contract: once warm,
+/// `Pipeline::preprocess` makes **zero calls into the global allocator**
+/// — not merely "no tracked buffer grew". Only compiled under the
+/// test-only `alloc-counter` feature (a counting `#[global_allocator]`),
+/// and CI runs this lane with `--test-threads=1`: the counter is
+/// process-wide, so concurrent tests in this binary would add their own
+/// allocations to the window.
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_preprocess_is_allocator_silent() {
+    use pc2im::alloc_counter::allocation_count;
+    let clouds: Vec<_> = (0..4).map(|s| make_class_cloud(s % 8, 1024, 40 + s as u64)).collect();
+    for fidelity in Fidelity::ALL {
+        for prune in [true, false] {
             let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
-                .exact_sampling(exact)
+                .prune(prune)
                 .build()
                 .unwrap();
-            // Warm-up: the first clouds may grow arena buffers.
-            let warm = pipe.classify(&make_class_cloud(0, 1024, 1)).unwrap();
-            assert!(warm.stats.scratch_bytes > 0);
-            pipe.classify(&make_class_cloud(3, 1024, 2)).unwrap();
-            // Steady state: every further same-shaped cloud refills in place.
-            for seed in 10..16u64 {
-                let cloud = make_class_cloud((seed % 8) as usize, 1024, seed);
-                let r = pipe.classify(&cloud).unwrap();
-                assert_eq!(
-                    r.stats.scratch_allocs, 0,
-                    "fidelity={fidelity} exact={exact} seed={seed}: warm classify grew the arena"
-                );
-                assert_eq!(r.stats.scratch_bytes, warm.stats.scratch_bytes);
+            for c in &clouds {
+                pipe.preprocess(c).unwrap(); // warm the arena
             }
+            let before = allocation_count();
+            for c in &clouds {
+                let stats = pipe.preprocess(c).unwrap();
+                assert_eq!(stats.scratch_allocs, 0, "tracked-buffer contract");
+            }
+            let grew = allocation_count() - before;
+            assert_eq!(
+                grew, 0,
+                "fidelity={fidelity} prune={prune}: warm preprocess hit the allocator {grew} times"
+            );
         }
     }
 }
