@@ -12,29 +12,33 @@
 //! The prune axis runs the same warm workload through the Fast tier with
 //! the median-partition pruned kernels on and off, asserting the stats
 //! digest byte-identical per cell (pruning must never change simulated
-//! results) and — outside smoke mode — the pruned path faster. A
-//! kernel-level FPS sweep does the same per Table-I tile scale.
+//! results) and — outside smoke mode — the pruned path faster.
+//! Kernel-level FPS and kNN sweeps do the same per Table-I tile scale
+//! (the kNN cells pin groups, cycles and ledgers between the
+//! branch-and-bound replay and the engine loop).
 //!
 //! Run with: `cargo bench --bench preprocess_throughput`
 //! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
 //! `PC2IM_BENCH_SMOKE=1`; `PC2IM_BENCH_JSON=<path>` appends one JSON line
 //! per configuration. The committed deterministic anchors are
-//! BENCH_prep.json and BENCH_prune.json; host clouds/sec printed here is
-//! machine-dependent.)
+//! BENCH_prep.json, BENCH_prune.json and BENCH_knn.json; host clouds/sec
+//! printed here is machine-dependent.)
 
 #[path = "harness.rs"]
 mod harness;
 
 use pc2im::cim::apd_cim::ApdCimConfig;
 use pc2im::cim::max_cam::CamConfig;
+use pc2im::cim::TopKSorter;
 use pc2im::config::HardwareConfig;
 use pc2im::coordinator::serve::stats_digest;
-use pc2im::coordinator::{BatchStats, Pipeline, PipelineBuilder};
+use pc2im::coordinator::{BatchStats, CloudStats, Pipeline, PipelineBuilder};
+use pc2im::energy::{EnergyLedger, Event};
 use pc2im::engine::fast::PrunedPreprocessor;
 use pc2im::engine::{distance_engine, max_search_engine, Fidelity};
 use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
-use pc2im::quant::quantize_cloud;
-use pc2im::sampling::MedianIndex;
+use pc2im::quant::{quantize_cloud, QPoint3};
+use pc2im::sampling::{GroupsCsr, MedianIndex};
 
 /// Deterministic digest of one preprocessing run (simulated fields only)
 /// — asserted byte-identical between the pruned and full-scan cells.
@@ -194,6 +198,84 @@ fn main() {
             assert!(
                 pruned_mean < full_mean,
                 "{scale:?}: pruned FPS ({pruned_mean:.6}s) must beat the engine loop \
+                 ({full_mean:.6}s)"
+            );
+        }
+    }
+
+    // ---- kernel-level kNN sweep across Table-I tile scales ----
+    harness::header("pruned vs engine-loop kNN kernels (per Table-I tile scale)");
+    for &scale in scales {
+        let cloud = make_workload_cloud(scale, 29);
+        let q = quantize_cloud(&cloud);
+        let cap = ApdCimConfig::default().capacity();
+        let tile: Vec<_> = q[..cap.min(q.len())].to_vec();
+        let n = tile.len();
+        let k = 16.min(n);
+        // Resident and off-tile queries alike, like the decoder's FP path.
+        let mut queries: Vec<QPoint3> = (0..32).map(|i| tile[(i * 61) % n]).collect();
+        queries.push(QPoint3 { x: 0, y: 0, z: 0 });
+        queries.push(QPoint3 { x: u16::MAX, y: 9_000, z: 50_000 });
+
+        let mut index = MedianIndex::new();
+        let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut sorter = TopKSorter::new(1);
+        let mut out = GroupsCsr::new();
+        let name = format!("knn pruned {scale:?} n={n} k={k}");
+        let pruned_mean = harness::bench(&name, iters, || {
+            pp.reset();
+            index.build(&tile);
+            pp.knn_into(&index, &queries, k, &mut sorter, &mut out);
+            out.len()
+        });
+
+        let mut apd = distance_engine(Fidelity::Fast, ApdCimConfig::default());
+        let mut out_full = GroupsCsr::new();
+        let mut dist = Vec::new();
+        let mut stats = CloudStats::default();
+        let name = format!("knn engine-loop {scale:?} n={n} k={k}");
+        let full_mean = harness::bench(&name, iters, || {
+            apd.reset();
+            stats = CloudStats::default();
+            apd.load_tile(&tile);
+            Pipeline::cam_knn_into(
+                apd.as_mut(),
+                &queries,
+                k,
+                &mut sorter,
+                &mut dist,
+                &mut out_full,
+                &mut stats,
+            );
+            out_full.len()
+        });
+
+        // Digest asserted equal per cell: groups, cycles and ledger (the
+        // engine side charged its tile load; fold it onto the pruned
+        // side before comparing).
+        assert_eq!(out, out_full, "{scale:?}: pruned kNN diverged");
+        let load = n.div_ceil(ApdCimConfig::default().distances_per_cycle()) as u64;
+        assert_eq!(
+            pp.cycles() + load,
+            apd.cycles() + stats.preproc_cycles,
+            "{scale:?}: kNN cycles diverged"
+        );
+        let mut got = EnergyLedger::new();
+        got.merge(pp.ledger());
+        got.charge(Event::SramBit, n as u64 * 48);
+        let mut want = EnergyLedger::new();
+        want.merge(apd.ledger());
+        want.merge(&stats.ledger);
+        assert_eq!(got, want, "{scale:?}: kNN ledger diverged");
+        println!(
+            "{:56} {:>9.2}x pruned speedup",
+            "",
+            full_mean.max(1e-12) / pruned_mean.max(1e-12)
+        );
+        if !smoke {
+            assert!(
+                pruned_mean < full_mean,
+                "{scale:?}: pruned kNN ({pruned_mean:.6}s) must beat the engine loop \
                  ({full_mean:.6}s)"
             );
         }

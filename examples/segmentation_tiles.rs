@@ -18,7 +18,7 @@ use pc2im::pointcloud::synthetic::make_street_cloud;
 use pc2im::pointcloud::Point3;
 use pc2im::quant::quantize_cloud;
 use pc2im::sampling::msp::{array_utilization, fixed_grid_partition, msp_partition_into};
-use pc2im::sampling::{knn_into, GroupsCsr, TilePartition};
+use pc2im::sampling::{knn_into, GroupsCsr, KnnHeap, TilePartition};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(16384);
@@ -76,8 +76,8 @@ fn main() -> anyhow::Result<()> {
     // the classification request path.
     let fp_k = 3.min(all_centroids.len());
     let mut fp_groups = GroupsCsr::new();
-    let mut fp_scratch = Vec::new();
-    knn_into(&all_centroids, &cloud.points, fp_k, &mut fp_scratch, &mut fp_groups);
+    let mut fp_heap = KnnHeap::new();
+    knn_into(&all_centroids, &cloud.points, fp_k, &mut fp_heap, &mut fp_groups);
     assert_eq!(fp_groups.len(), cloud.len());
     let g0 = fp_groups.group(0);
     println!(

@@ -68,6 +68,48 @@ impl TopKSorter {
         self.entries.truncate(self.k);
     }
 
+    /// Accept `count` streamed elements that are *proven* to fall off the
+    /// end of a saturated pipeline, without probing insertion.
+    ///
+    /// Once the pipeline holds `k` entries, a rejected [`Self::push`]
+    /// costs exactly one cycle and one comparator pass over all `k`
+    /// occupied stages — independent of the element's distance. The
+    /// partition-pruned kNN kernel uses this to replay the engine loop's
+    /// stream charge-identically for cell members whose bounding-box
+    /// lower bound strictly exceeds the current k-th best (they cannot
+    /// insert, so their distances are never computed). Totals are
+    /// additive, so batching a run of rejected elements into one call is
+    /// byte-identical to `count` losing pushes.
+    ///
+    /// Caller contract: the pipeline must be saturated (`entries.len() ==
+    /// k`) and every batched element must compare `>= ` the current k-th
+    /// best entry under the `(distance, index)` order.
+    ///
+    /// ```
+    /// use pc2im::cim::sorter::TopKSorter;
+    /// let mut probed = TopKSorter::new(2);
+    /// let mut batched = TopKSorter::new(2);
+    /// for s in [&mut probed, &mut batched] {
+    ///     s.push(3, 0);
+    ///     s.push(5, 1);
+    /// }
+    /// probed.push(9, 2); // rejected the slow way
+    /// probed.push(7, 3); // rejected the slow way
+    /// batched.push_beyond(2);
+    /// assert_eq!(probed.entries(), batched.entries());
+    /// assert_eq!(probed.cycles(), batched.cycles());
+    /// assert_eq!(probed.ledger(), batched.ledger());
+    /// ```
+    pub fn push_beyond(&mut self, count: u64) {
+        if count == 0 {
+            return;
+        }
+        debug_assert_eq!(self.entries.len(), self.k, "push_beyond needs a saturated pipeline");
+        self.cycles += count;
+        self.ledger
+            .charge(Event::DigitalCompareBit, ENTRY_BITS * self.entries.len().max(1) as u64 * count);
+    }
+
     /// Sorted (ascending) k-nearest collected so far.
     pub fn take(self) -> Vec<(u32, usize)> {
         self.entries
@@ -181,6 +223,36 @@ mod tests {
         let (m, cycles) = TopKSorter::merge(&a, &b, 4, &mut ledger);
         assert_eq!(m, vec![(1, 0), (2, 3), (3, 4), (4, 1)]);
         assert_eq!(cycles, 4);
+    }
+
+    #[test]
+    fn push_beyond_matches_losing_pushes_exactly() {
+        let mut rng = Rng64::new(17);
+        let vals: Vec<u32> = (0..64).map(|_| rng.below(1 << 19) as u32).collect();
+        let mut probed = TopKSorter::new(5);
+        let mut batched = TopKSorter::new(5);
+        for (i, &d) in vals.iter().enumerate() {
+            probed.push(d, i);
+            batched.push(d, i);
+        }
+        let worst = *probed.entries().last().unwrap();
+        // A mixed tail: losing elements batched, winners still pushed.
+        let tail = [(worst.0 + 7, 100usize), (worst.0, 101), (0, 102), (worst.0 + 1, 103)];
+        let mut run = 0u64;
+        for &(d, i) in &tail {
+            probed.push(d, i);
+            if (d, i) >= worst {
+                run += 1;
+            } else {
+                batched.push_beyond(run);
+                run = 0;
+                batched.push(d, i);
+            }
+        }
+        batched.push_beyond(run);
+        assert_eq!(probed.entries(), batched.entries());
+        assert_eq!(probed.cycles(), batched.cycles());
+        assert_eq!(probed.ledger(), batched.ledger());
     }
 
     #[test]

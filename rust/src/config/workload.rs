@@ -66,11 +66,15 @@ pub struct PipelineConfig {
     /// Engine implementation tier (bit-exact gate-level models vs the
     /// fast native tier with identical outputs/cycles/ledgers).
     pub fidelity: Fidelity,
-    /// Drive the Fast tier's FPS/lattice scans through the
-    /// median-partition pruned kernels (on by default; outputs, cycles,
-    /// ledgers and digests are byte-identical either way — only host
-    /// time differs). Ignored by tiers without partition-aware scans
-    /// (the gate-level tier) and by the exact-sampling ablation.
+    /// Drive the spatial queries through the index-backed pruned kernels
+    /// (`sampling::spatial`; on by default). On the Fast tier this routes
+    /// FPS, the lattice query and kNN through the median-partition
+    /// branch-and-bound kernels; on the exact-sampling ablation it routes
+    /// the float L2 FPS/ball query through the float spatial index on
+    /// either tier. Outputs, cycles, ledgers and digests are
+    /// byte-identical either way — only host time differs. Ignored only
+    /// by the gate-level tier's approximate path (no partition-aware
+    /// scans there).
     pub prune: bool,
 }
 

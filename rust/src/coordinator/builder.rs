@@ -80,10 +80,12 @@ impl PipelineBuilder {
         self
     }
 
-    /// Median-partition pruned preprocessing kernels on tiers that
-    /// support them (on by default; byte-identical outputs and
-    /// accounting, less host work — `prune(false)` forces the
-    /// full-scan engine loop, the bench's comparison axis).
+    /// Index-backed pruned spatial-query kernels (on by default): the
+    /// median-partition FPS/lattice/kNN kernels on tiers that support
+    /// them, and the float-index FPS/ball-query kernels on the
+    /// exact-sampling ablation. Byte-identical outputs and accounting,
+    /// less host work — `prune(false)` forces the full-scan reference
+    /// loops, the bench's comparison axis.
     pub fn prune(mut self, on: bool) -> Self {
         self.cfg.prune = on;
         self

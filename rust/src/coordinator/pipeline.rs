@@ -235,11 +235,73 @@ impl Pipeline {
         }
     }
 
+    /// kNN on the distance engine: one full-array distance scan per
+    /// query point, with every resident point streamed through the
+    /// sorter/merger unit (Fig. 3(a)) — no range filter, so the sorter
+    /// pipeline sees all `n` candidates in original-index order and
+    /// keeps the k nearest under the `(distance, index)` tie rule.
+    /// Groups stream straight into the CSR arena buffer; the sorter's
+    /// cycle overflow and ledger fold into `stats` exactly like the
+    /// lattice query's.
+    ///
+    /// This loop *defines* the hardware accounting of kNN on both
+    /// fidelity tiers; the partition-pruned replay
+    /// ([`crate::engine::fast::PrunedPreprocessor::knn_into`]) is pinned
+    /// byte-identical to it.
+    ///
+    /// ```
+    /// use pc2im::cim::sorter::TopKSorter;
+    /// use pc2im::coordinator::{CloudStats, Pipeline};
+    /// use pc2im::engine::{distance_engine, Fidelity};
+    /// use pc2im::quant::QPoint3;
+    /// use pc2im::sampling::GroupsCsr;
+    ///
+    /// let tile: Vec<QPoint3> = (0..64u16)
+    ///     .map(|i| QPoint3 { x: i * 7, y: i * 3, z: 1000 - i })
+    ///     .collect();
+    /// let mut apd = distance_engine(Fidelity::Fast, Default::default());
+    /// apd.load_tile(&tile);
+    /// let (mut sorter, mut dist) = (TopKSorter::new(1), Vec::new());
+    /// let (mut out, mut stats) = (GroupsCsr::new(), CloudStats::default());
+    /// Pipeline::cam_knn_into(
+    ///     apd.as_mut(), &[tile[5]], 4, &mut sorter, &mut dist, &mut out, &mut stats,
+    /// );
+    /// assert_eq!(out.group(0)[0], 5); // a resident query is its own nearest
+    /// assert_eq!(out.group(0).len(), 4);
+    /// ```
+    pub fn cam_knn_into(
+        apd: &mut dyn DistanceEngine,
+        queries: &[QPoint3],
+        k: usize,
+        sorter: &mut TopKSorter,
+        dist: &mut Vec<u32>,
+        out: &mut GroupsCsr,
+        stats: &mut CloudStats,
+    ) {
+        assert!(k >= 1 && k <= apd.len(), "cannot take {k} nearest of {}", apd.len());
+        out.clear();
+        for q in queries {
+            apd.scan_distances_to_into(q, dist);
+            sorter.reset(k);
+            for (j, &dj) in dist.iter().enumerate() {
+                sorter.push(dj, j);
+            }
+            stats.preproc_cycles +=
+                sorter.overflow_beyond_scan(dist.len(), apd.distances_per_cycle());
+            stats.ledger.merge(sorter.ledger());
+            for &(_, j) in sorter.entries() {
+                out.indices.push(j);
+            }
+            out.seal_group();
+        }
+    }
+
     /// One sampling+grouping level through the CIM engines (approximate
     /// path), the median-partition pruned kernels (Fast tier with
     /// pruning enabled — byte-identical outputs and accounting, less
-    /// host work), or the float reference (exact ablation), refilling
-    /// the arena's [`LevelIndices`] in place.
+    /// host work), or the float reference (exact ablation, itself
+    /// partition-pruned through the float spatial index unless pruning
+    /// is disabled), refilling the arena's [`LevelIndices`] in place.
     fn level_into(
         cfg: &PipelineConfig,
         apd: &mut dyn DistanceEngine,
@@ -249,6 +311,8 @@ impl Pipeline {
         fps_ds: &mut Vec<f32>,
         index: &mut MedianIndex,
         pruned: &mut PrunedPreprocessor,
+        findex: &mut sampling::FloatIndex,
+        fq: &mut sampling::FloatQuery,
         pts_f: &[Point3],
         pts_q: &[QPoint3],
         m: usize,
@@ -258,8 +322,21 @@ impl Pipeline {
         stats: &mut CloudStats,
     ) {
         if cfg.exact_sampling {
-            let trace = sampling::fps_l2_into(pts_f, m, 0, &mut out.centroids, fps_ds);
-            sampling::ball_query_into(pts_f, &out.centroids, radius, k, &mut out.groups);
+            // The exact ablation is host/digital-baseline work, so its
+            // pruned spelling is tier-independent: gate on `cfg.prune`
+            // alone. Samples, groups and the FpsTrace the charges price
+            // are byte-identical either way (the float spatial layer's
+            // contract — see `sampling::spatial`).
+            let trace = if cfg.prune {
+                findex.build(pts_f);
+                let trace = fq.fps_into(findex, pts_f, m, 0, &mut out.centroids);
+                fq.ball_query_into(findex, pts_f, &out.centroids, radius, k, &mut out.groups);
+                trace
+            } else {
+                let trace = sampling::fps_l2_into(pts_f, m, 0, &mut out.centroids, fps_ds);
+                sampling::ball_query_into(pts_f, &out.centroids, radius, k, &mut out.groups);
+                trace
+            };
             // exact path still costs energy — on the digital baseline
             // datapath (this is what Fig. 12(b) charges Baseline-2 for)
             stats.ledger.charge(
@@ -348,6 +425,8 @@ impl Pipeline {
             &mut scratch.fps_ds,
             &mut scratch.index,
             &mut scratch.pruned,
+            &mut scratch.findex,
+            &mut scratch.fq,
             &scratch.pts1_f,
             &scratch.q1,
             m.s1,
@@ -383,6 +462,8 @@ impl Pipeline {
             &mut scratch.fps_ds,
             &mut scratch.index,
             &mut scratch.pruned,
+            &mut scratch.findex,
+            &mut scratch.fq,
             &scratch.c1_f,
             &scratch.q2,
             m.s2,

@@ -33,12 +33,13 @@ use crate::engine::fast::PrunedPreprocessor;
 use crate::engine::{self, DistanceEngine, Fidelity, MacEngine, MaxSearchEngine};
 use crate::pointcloud::Point3;
 use crate::quant::QPoint3;
-use crate::sampling::MedianIndex;
+use crate::sampling::{FloatIndex, FloatQuery, MedianIndex};
 
 /// Capacity-tracked buffers in the arena (see
 /// [`CloudScratch::buffer_bytes`]): 19 refill buffers plus the median
-/// partition index's 6 and the pruned kernels' 3 working buffers.
-const TRACKED_BUFFERS: usize = 28;
+/// partition index's 7, the pruned grid kernels' 4, the float spatial
+/// index's 4 and the float pruned kernels' 4 working buffers.
+const TRACKED_BUFFERS: usize = 38;
 
 /// All reusable per-cloud state of one pipeline lane: the fidelity-tier
 /// engine models, the streaming top-k sorter, and every coordinate /
@@ -59,9 +60,15 @@ pub struct CloudScratch {
     /// Median-partition spatial index, rebuilt in place per level (the
     /// pruned Fast-tier kernels scan against it; idle on other paths).
     pub(crate) index: MedianIndex,
-    /// Pruned FPS/lattice kernels with their own closed-form accounting
-    /// (used when the lane's distance engine supports pruning).
+    /// Pruned FPS/lattice/kNN kernels with their own closed-form
+    /// accounting (used when the lane's distance engine supports
+    /// pruning).
     pub(crate) pruned: PrunedPreprocessor,
+    /// Float-domain spatial index, rebuilt in place per level (the
+    /// exact-sampling ablation's pruned kernels scan against it).
+    pub(crate) findex: FloatIndex,
+    /// Pruned float FPS/ball-query/kNN kernels of the exact ablation.
+    pub(crate) fq: FloatQuery,
     /// Quantized level-1 cloud (PTQ16 grid view).
     pub(crate) q1: Vec<QPoint3>,
     /// Quantized level-2 input (level-1 centroids on the grid).
@@ -108,6 +115,8 @@ impl CloudScratch {
             sorter: TopKSorter::new(1),
             index: MedianIndex::new(),
             pruned: PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default()),
+            findex: FloatIndex::new(),
+            fq: FloatQuery::new(),
             q1: Vec::new(),
             q2: Vec::new(),
             pts1_f: Vec::new(),
@@ -133,6 +142,8 @@ impl CloudScratch {
         let v = |cap: usize, elem: usize| (cap * elem) as u64;
         let idx = self.index.buffer_bytes();
         let pp = self.pruned.buffer_bytes();
+        let fidx = self.findex.buffer_bytes();
+        let fq = self.fq.buffer_bytes();
         [
             idx[0],
             idx[1],
@@ -140,9 +151,19 @@ impl CloudScratch {
             idx[3],
             idx[4],
             idx[5],
+            idx[6],
             pp[0],
             pp[1],
             pp[2],
+            pp[3],
+            fidx[0],
+            fidx[1],
+            fidx[2],
+            fidx[3],
+            fq[0],
+            fq[1],
+            fq[2],
+            fq[3],
             v(self.q1.capacity(), size_of::<QPoint3>()),
             v(self.q2.capacity(), size_of::<QPoint3>()),
             v(self.pts1_f.capacity(), size_of::<Point3>()),

@@ -188,8 +188,8 @@ impl DistanceEngine for FastDistance {
     }
 }
 
-/// Median-partition pruned preprocessing kernels — the Fast tier's FPS
-/// and lattice query rewritten against a [`MedianIndex`].
+/// Median-partition pruned preprocessing kernels — the Fast tier's FPS,
+/// lattice query and kNN rewritten against a [`MedianIndex`].
 ///
 /// Exactness argument (why pruning is byte-identical, not approximate):
 ///
@@ -207,6 +207,15 @@ impl DistanceEngine for FastDistance {
 ///   sorted back into original-index order before streaming into the
 ///   [`TopKSorter`], so the sorter's order-dependent cycle/energy
 ///   accounting is reproduced exactly, not just its output.
+/// - **kNN**: branch-and-bound in original-index order. A cell may drop
+///   out of distance computation iff the sorter pipeline is saturated
+///   and `lb(query, cell) >` the current k-th best distance — every
+///   member's `(distance, index)` then compares strictly greater than
+///   the k-th best entry, so the engine loop would reject its push. A
+///   rejected push on a saturated pipeline costs exactly one cycle and
+///   one full comparator pass regardless of the distance value, so runs
+///   of proven-rejected members are replayed charge-identically through
+///   [`TopKSorter::push_beyond`] without touching their coordinates.
 ///
 /// Accounting: every charge the engine-driven loop makes
 /// (`load_tile`/scan/`load_initial`/`update_min`/`invalidate`/searches,
@@ -223,6 +232,8 @@ pub struct PrunedPreprocessor {
     cellmax: Vec<u32>,
     /// `(original index, distance)` lattice hits of one centroid.
     hits: Vec<(u32, u32)>,
+    /// Per-cell bounding-box lower bound of one kNN query.
+    cell_lb: Vec<u32>,
     cycles: u64,
     ledger: EnergyLedger,
 }
@@ -237,6 +248,7 @@ impl PrunedPreprocessor {
             live: Vec::new(),
             cellmax: Vec::new(),
             hits: Vec::new(),
+            cell_lb: Vec::new(),
             cycles: 0,
             ledger: EnergyLedger::new(),
         }
@@ -263,12 +275,13 @@ impl PrunedPreprocessor {
 
     /// Byte capacities of the growable working buffers (scratch-arena
     /// accounting; order is stable).
-    pub fn buffer_bytes(&self) -> [u64; 3] {
+    pub fn buffer_bytes(&self) -> [u64; 4] {
         use std::mem::size_of;
         [
             (self.live.capacity() * size_of::<u32>()) as u64,
             (self.cellmax.capacity() * size_of::<u32>()) as u64,
             (self.hits.capacity() * size_of::<(u32, u32)>()) as u64,
+            (self.cell_lb.capacity() * size_of::<u32>()) as u64,
         ]
     }
 
@@ -290,7 +303,7 @@ impl PrunedPreprocessor {
     fn invalidate(&mut self, index: &MedianIndex, i: usize) {
         let p = index.pos(i);
         self.live[p] = 0;
-        let c = index.cell_index_of(p);
+        let c = index.cell_of(i);
         let cell = index.cells()[c];
         self.cellmax[c] = self.live[cell.start as usize..cell.end as usize]
             .iter()
@@ -451,6 +464,69 @@ impl PrunedPreprocessor {
                 out.indices.push(j);
             }
             crate::sampling::query::pad_and_seal(out, start, k, || nearest_pruned(index, &r));
+        }
+    }
+
+    /// Partition-pruned kNN over an indexed tile: one simulated
+    /// full-array scan per query, then a branch-and-bound replay of the
+    /// engine-driven sorter stream
+    /// ([`crate::coordinator::Pipeline::cam_knn_into`]) in original-index
+    /// order — groups, the sorter's cycle overflow and its ledger are
+    /// byte-identical to the engine loop on either tier.
+    ///
+    /// Candidates stream by original index. Until the pipeline holds `k`
+    /// entries every push inserts, so the prefix is replayed verbatim.
+    /// Once saturated, a member of a cell whose box bound strictly
+    /// exceeds the current k-th best distance is *proven* rejected (its
+    /// `(distance, index)` compares greater than the k-th best entry:
+    /// its distance is strictly larger, or — on the `lb ==` boundary the
+    /// strict skip test refuses — possibly tied, which is why ties are
+    /// still computed). Proven-rejected runs are batch-charged through
+    /// [`TopKSorter::push_beyond`] without reading coordinates; everything
+    /// else goes through a real [`TopKSorter::push`].
+    pub fn knn_into(
+        &mut self,
+        index: &MedianIndex,
+        queries: &[QPoint3],
+        k: usize,
+        sorter: &mut TopKSorter,
+        out: &mut GroupsCsr,
+    ) {
+        let n = index.len();
+        assert!(k >= 1 && k <= n, "cannot take {k} nearest of {n}");
+        out.clear();
+        for q in queries {
+            self.charge_scan(n);
+            sorter.reset(k);
+            self.cell_lb.clear();
+            self.cell_lb.extend(index.cells().iter().map(|c| c.l1_lower_bound(q)));
+            let mut run = 0u64;
+            for i in 0..n {
+                if sorter.entries().len() == k {
+                    // Saturated: skip iff the member's cell bound proves
+                    // the push would fall off the pipeline (`>` strict —
+                    // an equal bound can still tie-insert under a higher
+                    // resident index).
+                    let worst = sorter.entries()[k - 1].0;
+                    if self.cell_lb[index.cell_of(i)] > worst {
+                        run += 1;
+                        continue;
+                    }
+                    if run > 0 {
+                        sorter.push_beyond(run);
+                        run = 0;
+                    }
+                }
+                sorter.push(index.point(i).l1(q), i);
+            }
+            sorter.push_beyond(run);
+            self.cycles +=
+                sorter.overflow_beyond_scan(n, self.apd_cfg.distances_per_cycle());
+            self.ledger.merge(sorter.ledger());
+            for &(_, j) in sorter.entries() {
+                out.indices.push(j);
+            }
+            out.seal_group();
         }
     }
 }
@@ -805,6 +881,90 @@ mod tests {
         want_ledger.charge(Event::ApdDistanceOp, n as u64 * scans);
         assert_eq!(pp.cycles(), want_cycles, "cycles");
         assert_eq!(pp.ledger(), &want_ledger, "ledger");
+    }
+
+    /// Engine-loop kNN reference on a fast-tier APD, returning everything
+    /// the pruned kernel must reproduce (groups) plus the loop's own
+    /// accounting for the charge-identity asserts.
+    fn knn_engine_reference(
+        t: &[QPoint3],
+        queries: &[QPoint3],
+        k: usize,
+    ) -> (GroupsCsr, u64, EnergyLedger) {
+        let mut apd = FastDistance::new(ApdCimConfig::default());
+        apd.load_tile(t);
+        let mut sorter = TopKSorter::new(1);
+        let mut dist = Vec::new();
+        let mut out = GroupsCsr::new();
+        let mut stats = crate::coordinator::CloudStats::default();
+        crate::coordinator::Pipeline::cam_knn_into(
+            &mut apd,
+            queries,
+            k,
+            &mut sorter,
+            &mut dist,
+            &mut out,
+            &mut stats,
+        );
+        let mut ledger = EnergyLedger::new();
+        ledger.merge(DistanceEngine::ledger(&apd));
+        ledger.merge(&stats.ledger);
+        (out, DistanceEngine::cycles(&apd) + stats.preproc_cycles, ledger)
+    }
+
+    fn assert_pruned_knn_matches(t: &[QPoint3], queries: &[QPoint3], k: usize, tag: &str) {
+        let n = t.len();
+        let (want_out, want_cycles, want_ledger) = knn_engine_reference(t, queries, k);
+        let mut index = MedianIndex::new();
+        index.build(t);
+        let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut sorter = TopKSorter::new(1);
+        let mut out = GroupsCsr::new();
+        pp.knn_into(&index, queries, k, &mut sorter, &mut out);
+        assert_eq!(out, want_out, "{tag}: groups");
+        // The engine side charged its tile load (SRAM writes + load
+        // cycles); the pruned kernel assumes a loaded array, like the
+        // lattice query. Add the load to the pruned side and demand
+        // byte-identity.
+        let mut got_ledger = EnergyLedger::new();
+        got_ledger.merge(pp.ledger());
+        got_ledger.charge(Event::SramBit, n as u64 * 48);
+        assert_eq!(got_ledger, want_ledger, "{tag}: ledger");
+        let load_cycles = n.div_ceil(ApdCimConfig::default().distances_per_cycle()) as u64;
+        assert_eq!(pp.cycles() + load_cycles, want_cycles, "{tag}: cycles");
+    }
+
+    #[test]
+    fn pruned_knn_matches_engine_loop() {
+        for (n, seed) in [(65usize, 21u64), (777, 5), (2048, 13)] {
+            let t = tile(n, seed);
+            // Resident points and off-tile queries alike.
+            let mut queries: Vec<QPoint3> = (0..8).map(|i| t[(i * 97) % n]).collect();
+            queries.push(QPoint3 { x: 0, y: 0, z: 0 });
+            queries.push(QPoint3 { x: u16::MAX, y: 12_000, z: 40_000 });
+            for k in [1usize, 16, n.min(63)] {
+                assert_pruned_knn_matches(&t, &queries, k, &format!("n={n} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_knn_handles_duplicates_and_all_ties() {
+        // Duplicate points force exact (distance, index) tie chains
+        // through the sorter; all-identical tiles degenerate every
+        // distance to a single value, so the k lowest indices must win
+        // and no cell may ever be skipped incorrectly.
+        let mut dup = tile(64, 3);
+        for i in 16..64 {
+            dup[i] = dup[i % 16];
+        }
+        let queries: Vec<QPoint3> = dup[..6].to_vec();
+        for k in [1usize, 20, 64] {
+            assert_pruned_knn_matches(&dup, &queries, k, &format!("dup k={k}"));
+        }
+        let same = vec![QPoint3 { x: 100, y: 200, z: 300 }; 40];
+        let far = vec![QPoint3 { x: 100, y: 200, z: 300 }, QPoint3 { x: 0, y: 0, z: 0 }];
+        assert_pruned_knn_matches(&same, &far, 7, "all-ties");
     }
 
     #[test]

@@ -135,13 +135,14 @@ pub trait DistanceEngine: Send {
     fn cycles(&self) -> u64;
     /// Event ledger accumulated so far.
     fn ledger(&self) -> &EnergyLedger;
-    /// Partition-aware scan surface: true when this tier's FPS and
-    /// lattice-query scans may be driven through the median-partition
-    /// pruned kernels ([`fast::PrunedPreprocessor`]) instead of the
-    /// per-operation engine loop. The gate-level tier always scans the
-    /// full array (that is what the silicon does, and what its figures
-    /// are authoritative on); the Fast tier prunes, byte-identically in
-    /// outputs, cycles and ledgers.
+    /// Partition-aware scan surface: true when this tier's FPS,
+    /// lattice-query and kNN scans may be driven through the
+    /// median-partition pruned kernels ([`fast::PrunedPreprocessor`])
+    /// instead of the per-operation engine loop. The gate-level tier
+    /// always scans the full array (that is what the silicon does, and
+    /// what its figures are authoritative on); the Fast tier prunes,
+    /// byte-identically in outputs, cycles and ledgers (the contract
+    /// documented in `sampling::spatial`).
     fn supports_partition_pruning(&self) -> bool {
         false
     }

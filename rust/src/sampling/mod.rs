@@ -4,19 +4,25 @@
 //!
 //! Mirrors `python/compile/sampling.py`; the same invariants are tested on
 //! both sides (plus proptest properties here).
+//!
+//! The index-backed pruned spellings of every query — and the written
+//! contract that keeps them bit-identical to these references — live in
+//! [`spatial`].
 
 pub mod fps;
 pub mod msp;
 pub mod query;
+pub mod spatial;
 
 pub use fps::{fps_l1, fps_l1_grid, fps_l2, fps_l2_into, FpsTrace};
 pub use msp::{
     msp_partition, msp_partition_into, IndexCell, MedianIndex, Tile, TilePartition, INDEX_LEAF,
 };
 pub use query::{
-    ball_query, ball_query_into, knn, knn_into, lattice_query, lattice_query_grid,
-    lattice_query_grid_into, lattice_query_into, GroupsCsr,
+    ball_query, ball_query_into, knn, lattice_query, lattice_query_grid, lattice_query_grid_into,
+    lattice_query_into, GroupsCsr,
 };
+pub use spatial::{knn_into, FloatCell, FloatIndex, FloatQuery, KnnHeap};
 
 /// The paper's empirical lattice scale: L = 1.6 * R (ball-query radius).
 pub const LATTICE_SCALE: f32 = 1.6;

@@ -117,6 +117,12 @@ impl TilePartition {
         self.tiles.is_empty()
     }
 
+    /// Iterate the tiles in order as member-index slices (delegates to
+    /// the underlying CSR grouping).
+    pub fn iter(&self) -> impl Iterator<Item = &[usize]> {
+        self.tiles.iter()
+    }
+
     /// CIM-array utilization of this partition (the CSR counterpart of
     /// [`array_utilization`]): mean fill ratio of the on-chip point
     /// capacity across tiles.
@@ -256,6 +262,10 @@ pub struct MedianIndex {
     perm: Vec<u32>,
     /// `inv[i]` = position of original tile index `i` in the permutation.
     inv: Vec<u32>,
+    /// `cellof[i]` = leaf-cell id containing original tile index `i` —
+    /// the O(1) original-index-order lookup the pruned kNN stream replay
+    /// walks (no permutation hop, no binary search).
+    cellof: Vec<u32>,
     /// x coordinates in permutation order (SoA microkernel feed).
     xs: Vec<u16>,
     /// y coordinates in permutation order.
@@ -313,6 +323,14 @@ impl MedianIndex {
         self.cells.partition_point(|c| (c.end as usize) <= p)
     }
 
+    /// Index of the cell containing **original tile index** `i` (O(1)
+    /// table lookup; the original-index-order counterpart of
+    /// [`Self::cell_index_of`]).
+    #[inline]
+    pub fn cell_of(&self, i: usize) -> usize {
+        self.cellof[i] as usize
+    }
+
     /// The SoA coordinate slices of cell `c` (permutation order).
     #[inline]
     pub fn cell_soa(&self, c: &IndexCell) -> (&[u16], &[u16], &[u16]) {
@@ -341,15 +359,23 @@ impl MedianIndex {
             self.ys.push(q.y);
             self.zs.push(q.z);
         }
+        self.cellof.clear();
+        self.cellof.resize(n, 0);
+        for (c, cell) in self.cells.iter().enumerate() {
+            for p in cell.start as usize..cell.end as usize {
+                self.cellof[self.perm[p] as usize] = c as u32;
+            }
+        }
     }
 
     /// Byte capacities of the index's growable buffers (scratch-arena
     /// accounting; order is stable).
-    pub fn buffer_bytes(&self) -> [u64; 6] {
+    pub fn buffer_bytes(&self) -> [u64; 7] {
         use std::mem::size_of;
         [
             (self.perm.capacity() * size_of::<u32>()) as u64,
             (self.inv.capacity() * size_of::<u32>()) as u64,
+            (self.cellof.capacity() * size_of::<u32>()) as u64,
             (self.xs.capacity() * size_of::<u16>()) as u64,
             (self.ys.capacity() * size_of::<u16>()) as u64,
             (self.zs.capacity() * size_of::<u16>()) as u64,

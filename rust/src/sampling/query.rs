@@ -228,49 +228,25 @@ pub fn lattice_query_grid_into(
 
 /// k nearest neighbors (L2) of each query point; result rows sorted by
 /// ascending distance. Used by point-feature-propagation upsampling.
+///
+/// Thin nested-layout wrapper over the spatial layer's bounded max-heap
+/// select ([`crate::sampling::spatial::knn_into`]), which the request
+/// path calls directly with warmed buffers.
 pub fn knn(points: &[Point3], queries: &[Point3], k: usize) -> Vec<Vec<usize>> {
     let mut out = GroupsCsr::new();
-    let mut scratch = Vec::new();
-    knn_into(points, queries, k, &mut scratch, &mut out);
+    let mut heap = crate::sampling::spatial::KnnHeap::new();
+    crate::sampling::spatial::knn_into(points, queries, k, &mut heap, &mut out);
     out.to_nested()
 }
 
-/// CSR-filling variant of [`knn`] for the feature-propagation request
-/// path: `out` is cleared and refilled with one k-long group per query,
-/// and `scratch` holds the per-query candidate ordering — a warmed pair
-/// of buffers upsamples a same-shaped level with zero heap allocation.
-pub fn knn_into(
+/// Linear-scan nearest point to `c` under metric `d`; `min_by` keeps the
+/// *first* minimum, so exact ties resolve to the lowest index — the tie
+/// rule the pruned spellings in `sampling::spatial` must reproduce.
+pub(crate) fn nearest_by(
     points: &[Point3],
-    queries: &[Point3],
-    k: usize,
-    scratch: &mut Vec<usize>,
-    out: &mut GroupsCsr,
-) {
-    assert!(k <= points.len());
-    out.clear();
-    for q in queries {
-        scratch.clear();
-        scratch.extend(0..points.len());
-        // Partial selection: O(n) select of the k nearest, then sort
-        // only that prefix — rows stay sorted by ascending distance
-        // (ties by index), matching `python/compile/sampling.py::knn`.
-        let cmp = |&a: &usize, &b: &usize| {
-            points[a]
-                .l2_sq(q)
-                .partial_cmp(&points[b].l2_sq(q))
-                .unwrap()
-                .then(a.cmp(&b))
-        };
-        if k < scratch.len() {
-            scratch.select_nth_unstable_by(k, cmp);
-        }
-        scratch[..k].sort_unstable_by(cmp);
-        out.indices.extend_from_slice(&scratch[..k]);
-        out.seal_group();
-    }
-}
-
-fn nearest_by(points: &[Point3], c: &Point3, d: impl Fn(&Point3, &Point3) -> f32) -> usize {
+    c: &Point3,
+    d: impl Fn(&Point3, &Point3) -> f32,
+) -> usize {
     points
         .iter()
         .enumerate()
@@ -382,24 +358,6 @@ mod tests {
             all.sort_by(|a, b| a.partial_cmp(b).unwrap());
             assert!((dists[4] - all[4]).abs() < 1e-9);
         }
-    }
-
-    #[test]
-    fn knn_csr_matches_nested_and_reuses_buffers() {
-        let pts = cloud(120, 8);
-        let queries: Vec<Point3> = cloud(10, 9);
-        let nested = knn(&pts, &queries, 4);
-        let mut scratch = Vec::new();
-        let mut csr = GroupsCsr::new();
-        knn_into(&pts, &queries, 4, &mut scratch, &mut csr);
-        assert_eq!(csr.to_nested(), nested);
-        let caps = (csr.offsets.capacity(), csr.indices.capacity(), scratch.capacity());
-        knn_into(&pts, &queries, 4, &mut scratch, &mut csr); // warm: no growth
-        assert_eq!(csr.to_nested(), nested);
-        assert_eq!(
-            caps,
-            (csr.offsets.capacity(), csr.indices.capacity(), scratch.capacity())
-        );
     }
 
     #[test]

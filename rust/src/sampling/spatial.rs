@@ -1,0 +1,873 @@
+//! The unified index-backed spatial-query layer: one documented contract
+//! for every neighbor search the request path runs — FPS, lattice query,
+//! kNN and ball query — shared by both fidelity tiers and by the
+//! exact-sampling ablation.
+//!
+//! # Layer map
+//!
+//! ```text
+//!                 spatial-query contract (this module)
+//!                 tie rule: lowest-original-index everywhere
+//!                 bound rule: exact per-cell lower bounds only
+//!        ┌──────────────────────┴──────────────────────────┐
+//!   grid domain (u16 / L1, hardware-accounted)      float domain (f32 / L2,
+//!        │                                          exact-sampling ablation)
+//!   [`MedianIndex`] — leaf cells + bbox                    │
+//!   [`IndexCell::l1_lower_bound`]                  [`FloatIndex`] — leaf cells + bbox
+//!        │                                         [`FloatCell::l2_sq_lower_bound`]
+//!   engine loops (both tiers, via                          │
+//!   `DistanceEngine`):                             [`FloatQuery`] — pruned
+//!   `Pipeline::cam_fps_into`,                      `fps_into` / `ball_query_into` /
+//!   `Pipeline::cam_lattice_query_into`,            `knn_into`, byte-identical
+//!   `Pipeline::cam_knn_into`                       outputs and [`FpsTrace`]s
+//!        │
+//!   pruned kernels (Fast tier):
+//!   `engine::fast::PrunedPreprocessor`
+//!   fps / lattice_query / knn — byte-identical
+//!   outputs, cycles and ledgers
+//! ```
+//!
+//! Shared primitives live here: the bounded max-heap k-nearest select
+//! ([`KnnHeap`], also the fix for the old sort-everything `knn_into`),
+//! the float-domain index and pruned kernels, and re-exports of the whole
+//! query family so one import path covers the layer.
+//!
+//! # The query contract
+//!
+//! Three rules make partition pruning *exact* (bit-identical, never
+//! approximate), and every kernel in the layer obeys them:
+//!
+//! 1. **Lower bounds are exact.** A cell may be skipped only on a proof
+//!    that no member can matter. On the grid, [`IndexCell::l1_lower_bound`]
+//!    is integer arithmetic: every member's true L1 distance is `>=` the
+//!    bound, exactly. On floats, [`FloatCell::l2_sq_lower_bound`] clamps
+//!    the query into the box with the same subtract/square/sum expression
+//!    shape as [`Point3::l2_sq`]; IEEE-754 rounding is monotone in each
+//!    operand, so the computed bound never exceeds any member's computed
+//!    distance — the skip test compares like against like.
+//! 2. **Ties go to the lowest original index.** The CAM resolves matches
+//!    by matchline priority, the sorter orders entries by
+//!    `(distance, index)`, `f32` argmax/argmin scans keep the first
+//!    winner — so every pruned kernel resolves equal distances to the
+//!    lowest original index, and skip tests use *strict* comparisons
+//!    wherever a tied cell could still hold a lower-index winner.
+//! 3. **Accounting is charge-identical, not just output-identical.** The
+//!    hardware charges of a pruned kernel are the same closed forms the
+//!    engine loop charges (scans priced at full array length, sorter
+//!    streams replayed push-for-push in original-index order) — outputs,
+//!    cycles, energy ledgers and serve digests cannot tell the paths
+//!    apart. Only host time drops. The float kernels reproduce the
+//!    [`FpsTrace`] the same way: reads priced closed-form, writes counted
+//!    only where the full scan would also write.
+//!
+//! # Example: the float layer end to end
+//!
+//! ```
+//! use pc2im::pointcloud::Point3;
+//! use pc2im::sampling::spatial::{FloatIndex, FloatQuery};
+//! use pc2im::sampling::{ball_query, fps_l2, GroupsCsr};
+//!
+//! let pts: Vec<Point3> = (0..256)
+//!     .map(|i| Point3::new((i % 16) as f32 / 16.0, (i / 16) as f32 / 16.0, 0.25))
+//!     .collect();
+//! let mut index = FloatIndex::new();
+//! index.build(&pts);
+//!
+//! // Pruned float FPS: identical samples *and* identical memory trace.
+//! let mut fq = FloatQuery::new();
+//! let mut idx = Vec::new();
+//! let trace = fq.fps_into(&index, &pts, 32, 0, &mut idx);
+//! let (want_idx, want_trace) = fps_l2(&pts, 32, 0);
+//! assert_eq!(idx, want_idx);
+//! assert_eq!(trace, want_trace);
+//!
+//! // Pruned ball query: identical groups.
+//! let mut groups = GroupsCsr::new();
+//! fq.ball_query_into(&index, &pts, &idx, 0.2, 8, &mut groups);
+//! assert_eq!(groups.to_nested(), ball_query(&pts, &idx, 0.2, 8));
+//! ```
+
+use crate::pointcloud::Point3;
+use crate::sampling::fps::FpsTrace;
+use crate::sampling::query::{pad_and_seal, GroupsCsr};
+use crate::sampling::INDEX_LEAF;
+use std::cmp::Ordering;
+
+pub use crate::sampling::fps::{fps_l1, fps_l1_grid, fps_l2, fps_l2_into};
+pub use crate::sampling::msp::{IndexCell, MedianIndex};
+pub use crate::sampling::query::{
+    ball_query, ball_query_into, knn, lattice_query, lattice_query_grid,
+    lattice_query_grid_into, lattice_query_into,
+};
+
+/// Total order on `(squared distance, original index)` — the layer's one
+/// tie rule, identical to the streaming sorter's entry order on the grid
+/// side. Panics on NaN distances, like every float comparator in the
+/// sampling reference kernels.
+#[inline]
+fn entry_cmp(a: (f32, usize), b: (f32, usize)) -> Ordering {
+    a.0.partial_cmp(&b.0)
+        .expect("NaN distance in kNN selection")
+        .then(a.1.cmp(&b.1))
+}
+
+/// A bounded max-heap over `(squared distance, original index)` entries —
+/// the k-nearest select shared by the full-scan [`knn_into`] and the
+/// partition-pruned [`FloatQuery::knn_into`].
+///
+/// The heap keeps at most `k` entries ordered by the layer's tie rule
+/// (`(distance, index)` lexicographic); its root is the current k-th
+/// best, which doubles as the branch-and-bound pruning threshold. A
+/// warmed heap selects with zero heap allocation.
+///
+/// ```
+/// use pc2im::sampling::spatial::KnnHeap;
+///
+/// let mut heap = KnnHeap::new();
+/// for (i, d) in [5.0f32, 1.0, 3.0, 1.0, 4.0].into_iter().enumerate() {
+///     heap.offer(2, d, i);
+/// }
+/// // Two nearest of the stream; the duplicate distance 1.0 resolves to
+/// // the lower original index first.
+/// assert_eq!(heap.worst(), Some((1.0, 3)));
+/// let mut out = pc2im::sampling::GroupsCsr::new();
+/// heap.emit_sorted_into(&mut out);
+/// assert_eq!(out.group(0), &[1, 3]);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct KnnHeap {
+    /// Max-heap storage: `buf[0]` is the worst retained entry.
+    buf: Vec<(f32, usize)>,
+}
+
+impl KnnHeap {
+    /// An empty heap.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of retained entries.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no entry is retained.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drop all entries, keeping capacity (warm reuse across queries).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// The worst retained entry — the current k-th best once the heap
+    /// holds `k` entries, i.e. the branch-and-bound skip threshold.
+    pub fn worst(&self) -> Option<(f32, usize)> {
+        self.buf.first().copied()
+    }
+
+    /// Offer one candidate to a `k`-bounded selection: kept while fewer
+    /// than `k` entries are retained, otherwise it replaces the root iff
+    /// it beats it under the `(distance, index)` tie rule.
+    pub fn offer(&mut self, k: usize, d: f32, i: usize) {
+        if k == 0 {
+            return;
+        }
+        if self.buf.len() < k {
+            self.buf.push((d, i));
+            self.sift_up(self.buf.len() - 1);
+        } else if entry_cmp((d, i), self.buf[0]) == Ordering::Less {
+            self.buf[0] = (d, i);
+            self.sift_down();
+        }
+    }
+
+    /// Sort the retained entries ascending by `(distance, index)`, append
+    /// them to `out` as one sealed group, and clear the heap for the next
+    /// query.
+    pub fn emit_sorted_into(&mut self, out: &mut GroupsCsr) {
+        self.buf.sort_unstable_by(|&a, &b| entry_cmp(a, b));
+        out.indices.extend(self.buf.iter().map(|&(_, i)| i));
+        out.seal_group();
+        self.buf.clear();
+    }
+
+    /// Byte capacity of the heap buffer (scratch-arena accounting).
+    pub fn buffer_bytes(&self) -> u64 {
+        (self.buf.capacity() * std::mem::size_of::<(f32, usize)>()) as u64
+    }
+
+    fn sift_up(&mut self, mut c: usize) {
+        while c > 0 {
+            let p = (c - 1) / 2;
+            if entry_cmp(self.buf[c], self.buf[p]) == Ordering::Greater {
+                self.buf.swap(c, p);
+                c = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self) {
+        let n = self.buf.len();
+        let mut p = 0usize;
+        loop {
+            let (l, r) = (2 * p + 1, 2 * p + 2);
+            let mut largest = p;
+            if l < n && entry_cmp(self.buf[l], self.buf[largest]) == Ordering::Greater {
+                largest = l;
+            }
+            if r < n && entry_cmp(self.buf[r], self.buf[largest]) == Ordering::Greater {
+                largest = r;
+            }
+            if largest == p {
+                return;
+            }
+            self.buf.swap(p, largest);
+            p = largest;
+        }
+    }
+}
+
+/// k nearest neighbors (L2) of each query point via the bounded max-heap
+/// select: `out` is cleared and refilled with one k-long group per query,
+/// rows sorted by ascending distance (ties by lowest index) — the same
+/// contract as `python/compile/sampling.py::knn`, now in
+/// `O(n log k)` per query instead of a full candidate sort.
+///
+/// ```
+/// use pc2im::pointcloud::Point3;
+/// use pc2im::sampling::spatial::{knn_into, KnnHeap};
+/// use pc2im::sampling::GroupsCsr;
+///
+/// let pts = vec![
+///     Point3::new(0.0, 0.0, 0.0),
+///     Point3::new(1.0, 0.0, 0.0),
+///     Point3::new(0.1, 0.0, 0.0),
+/// ];
+/// let (mut heap, mut out) = (KnnHeap::new(), GroupsCsr::new());
+/// knn_into(&pts, &[Point3::new(0.0, 0.0, 0.0)], 2, &mut heap, &mut out);
+/// assert_eq!(out.group(0), &[0, 2]);
+/// ```
+pub fn knn_into(
+    points: &[Point3],
+    queries: &[Point3],
+    k: usize,
+    heap: &mut KnnHeap,
+    out: &mut GroupsCsr,
+) {
+    assert!(k <= points.len(), "cannot take {k} nearest of {}", points.len());
+    out.clear();
+    for q in queries {
+        heap.clear();
+        for (i, p) in points.iter().enumerate() {
+            heap.offer(k, p.l2_sq(q), i);
+        }
+        heap.emit_sorted_into(out);
+    }
+}
+
+/// One leaf cell of a [`FloatIndex`]: a contiguous permutation range plus
+/// its axis-aligned bounding box in float coordinates — the f32/L2
+/// counterpart of the grid-domain [`IndexCell`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FloatCell {
+    /// First member's position in the index permutation.
+    pub start: u32,
+    /// One-past-last member's position in the index permutation.
+    pub end: u32,
+    /// Per-axis bounding-box minimum.
+    pub lo: [f32; 3],
+    /// Per-axis bounding-box maximum.
+    pub hi: [f32; 3],
+}
+
+impl FloatCell {
+    /// Exact squared-L2 lower bound from `r` to any point inside the
+    /// cell's bounding box (0 when `r` lies inside it).
+    ///
+    /// Exactness under rounding: each per-axis clamp distance is computed
+    /// with the same subtraction [`Point3::l2_sq`] performs, and rounded
+    /// f32 subtraction, squaring and summation are monotone in their
+    /// operands — so the computed bound is `<=` every member's *computed*
+    /// squared distance, never just its real-valued one.
+    #[inline]
+    pub fn l2_sq_lower_bound(&self, r: &Point3) -> f32 {
+        let axis = |v: f32, lo: f32, hi: f32| -> f32 {
+            if v < lo {
+                lo - v
+            } else if v > hi {
+                v - hi
+            } else {
+                0.0
+            }
+        };
+        let dx = axis(r.x, self.lo[0], self.hi[0]);
+        let dy = axis(r.y, self.lo[1], self.hi[1]);
+        let dz = axis(r.z, self.lo[2], self.hi[2]);
+        dx * dx + dy * dy + dz * dz
+    }
+}
+
+/// A shallow median-split spatial index over float points — the
+/// [`MedianIndex`] recursion carried over to the f32/L2 domain so the
+/// exact-sampling ablation's reference kernels prune the same way the
+/// approximate pipeline does.
+///
+/// The index stores only structure (permutation, inverse, per-point cell
+/// id, leaf cells with bounding boxes); coordinates stay in the caller's
+/// point slice, so every pruned kernel computes distances through the
+/// *same* [`Point3`] methods as the full-scan reference — bit-identical
+/// f32 results by construction. Rebuild in place per cloud; a warmed
+/// index re-indexes a same-sized cloud with zero heap allocation.
+#[derive(Debug, Clone, Default)]
+pub struct FloatIndex {
+    /// `perm[p]` = original index of the point at position `p`.
+    perm: Vec<u32>,
+    /// `inv[i]` = position of original index `i` in the permutation.
+    inv: Vec<u32>,
+    /// `cellof[i]` = leaf-cell id containing original index `i`.
+    cellof: Vec<u32>,
+    /// Leaf cells, covering the permutation exactly.
+    cells: Vec<FloatCell>,
+}
+
+impl FloatIndex {
+    /// An empty index (build one with [`Self::build`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True when no cloud has been indexed.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// The leaf cells.
+    pub fn cells(&self) -> &[FloatCell] {
+        &self.cells
+    }
+
+    /// Original index of the point at permutation position `p`.
+    #[inline]
+    pub fn orig(&self, p: usize) -> usize {
+        self.perm[p] as usize
+    }
+
+    /// Permutation position of original index `i`.
+    #[inline]
+    pub fn pos(&self, i: usize) -> usize {
+        self.inv[i] as usize
+    }
+
+    /// Leaf-cell id containing original index `i`.
+    #[inline]
+    pub fn cell_of(&self, i: usize) -> usize {
+        self.cellof[i] as usize
+    }
+
+    /// Rebuild the index over `pts` in place: all buffers are cleared and
+    /// refilled, so a warmed index re-indexes a same-sized cloud with
+    /// zero heap allocation.
+    pub fn build(&mut self, pts: &[Point3]) {
+        let n = pts.len();
+        self.perm.clear();
+        self.perm.extend(0..n as u32);
+        self.cells.clear();
+        split_float_cells(pts, &mut self.perm, 0, &mut self.cells);
+        self.inv.clear();
+        self.inv.resize(n, 0);
+        self.cellof.clear();
+        self.cellof.resize(n, 0);
+        for (c, cell) in self.cells.iter().enumerate() {
+            for p in cell.start as usize..cell.end as usize {
+                let i = self.perm[p] as usize;
+                self.inv[i] = p as u32;
+                self.cellof[i] = c as u32;
+            }
+        }
+    }
+
+    /// Byte capacities of the index's growable buffers (scratch-arena
+    /// accounting; order is stable).
+    pub fn buffer_bytes(&self) -> [u64; 4] {
+        use std::mem::size_of;
+        [
+            (self.perm.capacity() * size_of::<u32>()) as u64,
+            (self.inv.capacity() * size_of::<u32>()) as u64,
+            (self.cellof.capacity() * size_of::<u32>()) as u64,
+            (self.cells.capacity() * size_of::<FloatCell>()) as u64,
+        ]
+    }
+}
+
+/// Recursive median split of one permutation range into float leaf
+/// cells — the same split rule as the grid index (widest axis, median at
+/// `len/2`, ties by original index), only the coordinates are f32.
+fn split_float_cells(pts: &[Point3], range: &mut [u32], base: u32, cells: &mut Vec<FloatCell>) {
+    if range.is_empty() {
+        return;
+    }
+    let mut lo = [f32::MAX; 3];
+    let mut hi = [f32::MIN; 3];
+    for &i in range.iter() {
+        let p = pts[i as usize];
+        for (a, v) in [p.x, p.y, p.z].into_iter().enumerate() {
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    if range.len() <= INDEX_LEAF {
+        cells.push(FloatCell { start: base, end: base + range.len() as u32, lo, hi });
+        return;
+    }
+    let axis = (0..3)
+        .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
+        .unwrap();
+    let mid = range.len() / 2;
+    range.select_nth_unstable_by(mid, |&a, &b| {
+        pts[a as usize]
+            .coord(axis)
+            .partial_cmp(&pts[b as usize].coord(axis))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let (left, right) = range.split_at_mut(mid);
+    split_float_cells(pts, left, base, cells);
+    split_float_cells(pts, right, base + mid as u32, cells);
+}
+
+/// Partition-pruned float-domain query kernels over a [`FloatIndex`]:
+/// the exact-sampling ablation's FPS, ball query and kNN with whole leaf
+/// cells skipped via exact squared-L2 bounding-box lower bounds.
+///
+/// Outputs are bit-identical to the full-scan reference kernels
+/// ([`fps_l2_into`], [`ball_query_into`], [`knn_into`]), including every
+/// tie, and [`Self::fps_into`] reproduces the full scan's [`FpsTrace`]
+/// exactly — reads priced closed-form at full array length, writes
+/// counted only where the full scan would also write (a skipped cell is
+/// skipped precisely because no write could happen there). Only host
+/// time differs. Working buffers warm up once and refill in place.
+#[derive(Debug, Clone, Default)]
+pub struct FloatQuery {
+    /// Temporary distances (`D_s`) in index-permutation order.
+    live: Vec<f32>,
+    /// Running maximum live TD per index cell.
+    cellmax: Vec<f32>,
+    /// In-range original indices of one ball-query centroid.
+    hits: Vec<usize>,
+    /// Bounded k-nearest select of one kNN query.
+    heap: KnnHeap,
+}
+
+impl FloatQuery {
+    /// Fresh kernels with cold working buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Byte capacities of the growable working buffers (scratch-arena
+    /// accounting; order is stable).
+    pub fn buffer_bytes(&self) -> [u64; 4] {
+        use std::mem::size_of;
+        [
+            (self.live.capacity() * size_of::<f32>()) as u64,
+            (self.cellmax.capacity() * size_of::<f32>()) as u64,
+            (self.hits.capacity() * size_of::<usize>()) as u64,
+            self.heap.buffer_bytes(),
+        ]
+    }
+
+    /// Pruned exact (L2) farthest-point sampling: `m` sampled indices
+    /// land in `idx` (cleared and refilled), bit-identical to
+    /// [`fps_l2_into`] — samples, tie resolution and the returned
+    /// [`FpsTrace`] — while whole cells whose bound proves no temporary
+    /// distance can shrink are skipped.
+    pub fn fps_into(
+        &mut self,
+        index: &FloatIndex,
+        pts: &[Point3],
+        m: usize,
+        start: usize,
+        idx: &mut Vec<usize>,
+    ) -> FpsTrace {
+        let n = index.len();
+        assert_eq!(n, pts.len(), "index was built over a different cloud");
+        assert!(m >= 1 && m <= n, "cannot sample {m} of {n}");
+        assert!(start < n);
+        let mut trace = FpsTrace::default();
+        let seed = pts[start];
+        self.live.clear();
+        self.live.resize(n, 0.0);
+        self.cellmax.clear();
+        self.cellmax.resize(index.cells().len(), 0.0);
+        for (c, cell) in index.cells().iter().enumerate() {
+            let mut mx = 0.0f32;
+            for p in cell.start as usize..cell.end as usize {
+                let d = pts[index.orig(p)].l2_sq(&seed);
+                self.live[p] = d;
+                mx = mx.max(d);
+            }
+            self.cellmax[c] = mx;
+        }
+        trace.point_reads += n as u64;
+        trace.td_writes += n as u64;
+        idx.clear();
+        idx.push(start);
+        for _ in 1..m {
+            trace.iterations += 1;
+            // argmax D_s from the per-cell maxima, resolved to the lowest
+            // original index attaining it — the reference scan's
+            // first-strict-winner rule, cell-wise.
+            let best_val = self.cellmax.iter().copied().fold(0.0f32, f32::max);
+            let mut best_orig = usize::MAX;
+            for (c, cell) in index.cells().iter().enumerate() {
+                if self.cellmax[c] != best_val {
+                    continue;
+                }
+                for p in cell.start as usize..cell.end as usize {
+                    if self.live[p] == best_val {
+                        best_orig = best_orig.min(index.orig(p));
+                    }
+                }
+            }
+            debug_assert!(best_orig != usize::MAX);
+            trace.td_reads += n as u64;
+            idx.push(best_orig);
+            // Min-update, pruned per cell: a skipped cell's bound proves
+            // `d >= lb >= cellmax >= live[p]`, so the reference's strict
+            // `d < ds[i]` write can never fire there — the td_writes
+            // count stays exact.
+            let r = pts[best_orig];
+            for (c, cell) in index.cells().iter().enumerate() {
+                if cell.l2_sq_lower_bound(&r) >= self.cellmax[c] {
+                    continue;
+                }
+                let mut mx = 0.0f32;
+                for p in cell.start as usize..cell.end as usize {
+                    let d = pts[index.orig(p)].l2_sq(&r);
+                    if d < self.live[p] {
+                        self.live[p] = d;
+                        trace.td_writes += 1;
+                    }
+                    mx = mx.max(self.live[p]);
+                }
+                self.cellmax[c] = mx;
+            }
+            trace.point_reads += n as u64;
+            trace.td_reads += n as u64;
+        }
+        trace
+    }
+
+    /// Pruned exact (L2) ball query, bit-identical to
+    /// [`ball_query_into`]: cells whose bound exceeds the squared radius
+    /// are skipped, surviving hits are restored to original-index order
+    /// (the reference accepts the first `k` in-range points by index),
+    /// and short groups pad through the shared convention with the
+    /// pruned nearest-point fallback.
+    pub fn ball_query_into(
+        &mut self,
+        index: &FloatIndex,
+        pts: &[Point3],
+        centroid_idx: &[usize],
+        radius: f32,
+        k: usize,
+        out: &mut GroupsCsr,
+    ) {
+        assert_eq!(index.len(), pts.len(), "index was built over a different cloud");
+        let r2 = radius * radius;
+        out.clear();
+        for &ci in centroid_idx {
+            let c = pts[ci];
+            let start = out.indices.len();
+            self.hits.clear();
+            for cell in index.cells() {
+                // `>` not `>=`: a boundary cell can still hold points at
+                // exactly the radius, which are in range.
+                if cell.l2_sq_lower_bound(&c) > r2 {
+                    continue;
+                }
+                for p in cell.start as usize..cell.end as usize {
+                    let o = index.orig(p);
+                    if pts[o].l2_sq(&c) <= r2 {
+                        self.hits.push(o);
+                    }
+                }
+            }
+            self.hits.sort_unstable();
+            self.hits.truncate(k);
+            out.indices.extend_from_slice(&self.hits);
+            pad_and_seal(out, start, k, || nearest_l2_pruned(index, pts, &c));
+        }
+    }
+
+    /// Pruned k-nearest-neighbors (L2) of each query point,
+    /// bit-identical to the full-scan [`knn_into`]: the bounded max-heap
+    /// root is the branch-and-bound threshold, and a cell is skipped only
+    /// when the heap is full and the cell's bound *strictly* exceeds the
+    /// current k-th best (a tied cell can still hold an equal-distance,
+    /// lower-index winner).
+    pub fn knn_into(
+        &mut self,
+        index: &FloatIndex,
+        pts: &[Point3],
+        queries: &[Point3],
+        k: usize,
+        out: &mut GroupsCsr,
+    ) {
+        assert_eq!(index.len(), pts.len(), "index was built over a different cloud");
+        assert!(k <= pts.len(), "cannot take {k} nearest of {}", pts.len());
+        out.clear();
+        for q in queries {
+            self.heap.clear();
+            for cell in index.cells() {
+                if self.heap.len() == k {
+                    if let Some((wd, _)) = self.heap.worst() {
+                        if cell.l2_sq_lower_bound(q) > wd {
+                            continue;
+                        }
+                    }
+                }
+                for p in cell.start as usize..cell.end as usize {
+                    let o = index.orig(p);
+                    self.heap.offer(k, pts[o].l2_sq(q), o);
+                }
+            }
+            self.heap.emit_sorted_into(out);
+        }
+    }
+}
+
+/// Branch-and-bound nearest point to `c` (L2, lowest original index on
+/// exact ties) — the pruned spelling of the reference empty-group
+/// fallback (`nearest_by` with `l2_sq`, whose `min_by` keeps the first,
+/// i.e. lowest-index, minimum).
+fn nearest_l2_pruned(index: &FloatIndex, pts: &[Point3], c: &Point3) -> usize {
+    let mut best_d = f32::INFINITY;
+    let mut best_i = usize::MAX;
+    for cell in index.cells() {
+        // `>` not `>=`: a cell whose bound ties the best distance may
+        // still hold an equal-distance point with a lower index.
+        if cell.l2_sq_lower_bound(c) > best_d {
+            continue;
+        }
+        for p in cell.start as usize..cell.end as usize {
+            let o = index.orig(p);
+            let d = pts[o].l2_sq(c);
+            if d < best_d || (d == best_d && o < best_i) {
+                best_d = d;
+                best_i = o;
+            }
+        }
+    }
+    debug_assert!(best_i != usize::MAX, "non-empty cloud");
+    best_i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::synthetic::{make_class_cloud, make_workload_cloud, DatasetScale};
+    use crate::sampling::query::nearest_by;
+
+    fn cloud(n: usize, seed: u64) -> Vec<Point3> {
+        make_class_cloud(3, n, seed).points
+    }
+
+    /// The retired full-sort kNN (select_nth + prefix sort), kept here as
+    /// the tie-order oracle the heap select is pinned against.
+    fn knn_full_sort(points: &[Point3], queries: &[Point3], k: usize) -> Vec<Vec<usize>> {
+        queries
+            .iter()
+            .map(|q| {
+                let mut scratch: Vec<usize> = (0..points.len()).collect();
+                let cmp = |&a: &usize, &b: &usize| {
+                    points[a]
+                        .l2_sq(q)
+                        .partial_cmp(&points[b].l2_sq(q))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                };
+                if k < scratch.len() {
+                    scratch.select_nth_unstable_by(k, cmp);
+                }
+                scratch[..k].sort_unstable_by(cmp);
+                scratch[..k].to_vec()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn heap_knn_pins_old_sorter_tie_order() {
+        // Duplicated points force exact distance ties: the heap select
+        // must resolve them to the lowest original index, exactly like
+        // the retired full sort did.
+        let mut pts = cloud(64, 9);
+        for i in 32..64 {
+            pts[i] = pts[i - 32];
+        }
+        let queries: Vec<Point3> = pts[..8].to_vec();
+        for k in [1usize, 3, 33, 64] {
+            let want = knn_full_sort(&pts, &queries, k);
+            let (mut heap, mut out) = (KnnHeap::new(), GroupsCsr::new());
+            knn_into(&pts, &queries, k, &mut heap, &mut out);
+            assert_eq!(out.to_nested(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn heap_reuses_capacity_across_queries() {
+        let pts = cloud(300, 4);
+        let queries = cloud(16, 5);
+        let (mut heap, mut out) = (KnnHeap::new(), GroupsCsr::new());
+        knn_into(&pts, &queries, 8, &mut heap, &mut out);
+        let want = out.to_nested();
+        let caps = (heap.buffer_bytes(), out.offsets.capacity(), out.indices.capacity());
+        knn_into(&pts, &queries, 8, &mut heap, &mut out); // warm: no growth
+        assert_eq!(out.to_nested(), want);
+        assert_eq!(
+            caps,
+            (heap.buffer_bytes(), out.offsets.capacity(), out.indices.capacity())
+        );
+    }
+
+    #[test]
+    fn float_index_covers_cloud_with_sound_bounds() {
+        let pts = cloud(777, 12);
+        let mut index = FloatIndex::new();
+        index.build(&pts);
+        assert_eq!(index.len(), pts.len());
+        let mut covered = 0usize;
+        for (c, cell) in index.cells().iter().enumerate() {
+            assert_eq!(covered, cell.start as usize, "cells must be contiguous");
+            covered = cell.end as usize;
+            assert!((cell.end - cell.start) as usize <= INDEX_LEAF);
+            for p in cell.start as usize..cell.end as usize {
+                let i = index.orig(p);
+                assert_eq!(index.pos(i), p);
+                assert_eq!(index.cell_of(i), c);
+                let pt = pts[i];
+                for (a, v) in [pt.x, pt.y, pt.z].into_iter().enumerate() {
+                    assert!(v >= cell.lo[a] && v <= cell.hi[a]);
+                }
+                // The bound really lower-bounds computed member distances,
+                // from references inside and far outside the cloud.
+                for r in [pts[0], Point3::new(9.0, -9.0, 3.0)] {
+                    assert!(cell.l2_sq_lower_bound(&r) <= pt.l2_sq(&r));
+                }
+            }
+        }
+        assert_eq!(covered, pts.len());
+        // Warm rebuild: same structure, no buffer growth.
+        let bytes = index.buffer_bytes();
+        index.build(&pts);
+        assert_eq!(index.buffer_bytes(), bytes);
+    }
+
+    #[test]
+    fn pruned_float_fps_matches_reference_across_scales() {
+        for scale in DatasetScale::ALL {
+            let pts = make_workload_cloud(scale, 21).points;
+            let n = pts.len().min(2048);
+            let pts = &pts[..n];
+            let m = (n / 8).max(2);
+            let (want_idx, want_trace) = fps_l2(pts, m, 0);
+            let mut index = FloatIndex::new();
+            index.build(pts);
+            let mut fq = FloatQuery::new();
+            let mut idx = Vec::new();
+            let trace = fq.fps_into(&index, pts, m, 0, &mut idx);
+            assert_eq!(idx, want_idx, "{scale:?} samples");
+            assert_eq!(trace, want_trace, "{scale:?} trace");
+        }
+    }
+
+    #[test]
+    fn pruned_float_fps_handles_duplicates_and_all_ties() {
+        // Duplicate points exhaust the distinct set: the reference starts
+        // repeating the lowest all-zero-TD index, and the pruned kernel
+        // must reproduce that degenerate endgame exactly.
+        let mut pts = cloud(16, 3);
+        for i in 8..16 {
+            pts[i] = pts[i - 8];
+        }
+        let (want_idx, want_trace) = fps_l2(&pts, 16, 0);
+        let mut index = FloatIndex::new();
+        index.build(&pts);
+        let mut fq = FloatQuery::new();
+        let mut idx = Vec::new();
+        let trace = fq.fps_into(&index, &pts, 16, 0, &mut idx);
+        assert_eq!(idx, want_idx);
+        assert_eq!(trace, want_trace);
+        // All-ties: every point identical.
+        let same = vec![Point3::new(0.25, -0.5, 0.125); 40];
+        let (want_idx, want_trace) = fps_l2(&same, 7, 0);
+        index.build(&same);
+        let trace = fq.fps_into(&index, &same, 7, 0, &mut idx);
+        assert_eq!(idx, want_idx);
+        assert_eq!(trace, want_trace);
+    }
+
+    #[test]
+    fn pruned_ball_query_matches_reference() {
+        let pts = cloud(900, 31);
+        let centroids: Vec<usize> = (0..24).map(|i| i * 37).collect();
+        let mut index = FloatIndex::new();
+        index.build(&pts);
+        let mut fq = FloatQuery::new();
+        let mut out = GroupsCsr::new();
+        for (radius, k) in [(0.3f32, 16usize), (1e-7, 4), (3.0, 8)] {
+            fq.ball_query_into(&index, &pts, &centroids, radius, k, &mut out);
+            assert_eq!(
+                out.to_nested(),
+                ball_query(&pts, &centroids, radius, k),
+                "radius={radius} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_float_knn_matches_full_scan() {
+        let pts = cloud(600, 8);
+        let queries = cloud(20, 77);
+        let mut index = FloatIndex::new();
+        index.build(&pts);
+        let mut fq = FloatQuery::new();
+        let (mut heap, mut want, mut got) = (KnnHeap::new(), GroupsCsr::new(), GroupsCsr::new());
+        for k in [1usize, 4, 17] {
+            knn_into(&pts, &queries, k, &mut heap, &mut want);
+            fq.knn_into(&index, &pts, &queries, k, &mut got);
+            assert_eq!(got, want, "k={k}");
+        }
+        // Duplicate-heavy tie endgame.
+        let mut dup = cloud(64, 2);
+        for i in 16..64 {
+            dup[i] = dup[i % 16];
+        }
+        index.build(&dup);
+        knn_into(&dup, &queries, 20, &mut heap, &mut want);
+        fq.knn_into(&index, &dup, &queries, 20, &mut got);
+        assert_eq!(got, want, "duplicate ties");
+    }
+
+    #[test]
+    fn pruned_nearest_matches_reference_fallback() {
+        let pts = cloud(333, 44);
+        let mut index = FloatIndex::new();
+        index.build(&pts);
+        for r in [pts[0], pts[200], Point3::new(4.0, 4.0, -4.0)] {
+            assert_eq!(
+                nearest_l2_pruned(&index, &pts, &r),
+                nearest_by(&pts, &r, |a, b| a.l2_sq(b))
+            );
+        }
+    }
+}

@@ -8,10 +8,11 @@
 use pc2im::cim::apd_cim::ApdCimConfig;
 use pc2im::cim::max_cam::CamConfig;
 use pc2im::cim::sc_cim::ScCimConfig;
+use pc2im::cim::TopKSorter;
 use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
 use pc2im::coordinator::serve::stats_digest;
-use pc2im::coordinator::{Pipeline, PipelineBuilder};
-use pc2im::energy::EnergyLedger;
+use pc2im::coordinator::{CloudStats, Pipeline, PipelineBuilder};
+use pc2im::energy::{EnergyLedger, Event};
 use pc2im::engine::fast::PrunedPreprocessor;
 use pc2im::engine::{
     distance_engine, mac_engine, max_search_engine, DistanceEngine, Fidelity, MaxSearchEngine,
@@ -19,7 +20,7 @@ use pc2im::engine::{
 use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
 use pc2im::quant::{quantize_cloud, QPoint3, TD_BITS};
 use pc2im::rng::Rng64;
-use pc2im::sampling::{msp_partition, MedianIndex};
+use pc2im::sampling::{msp_partition, GroupsCsr, MedianIndex};
 
 fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
     PipelineConfig {
@@ -119,6 +120,104 @@ fn pruned_kernels_bit_identical_to_gate_level_across_table1_scales() {
             assert_eq!(pp.ledger(), &want_ledger, "{ctx}: ledger");
             assert_eq!(pp.cycles(), apd.cycles() + cam.cycles(), "{ctx}: cycles");
         }
+    }
+}
+
+/// Drive one kNN workload through all three execution strategies — the
+/// gate-level engine loop, the Fast full-scan engine loop, and the
+/// partition-pruned branch-and-bound replay — and demand identical CSR
+/// groups and identical total cycle/ledger accounting. The pruned
+/// kernel skips whole cells with batched `push_beyond` charging, so its
+/// fold must land on the exact per-push numbers the engine loops
+/// accumulate.
+fn knn_three_way(pts: &[QPoint3], queries: &[QPoint3], k: usize, ctx: &str) {
+    let mut want: Option<(GroupsCsr, u64, EnergyLedger)> = None;
+    for fidelity in Fidelity::ALL {
+        let mut apd = distance_engine(fidelity, ApdCimConfig::default());
+        apd.load_tile(pts);
+        let mut sorter = TopKSorter::new(1);
+        let mut dist = Vec::new();
+        let mut out = GroupsCsr::new();
+        let mut stats = CloudStats::default();
+        Pipeline::cam_knn_into(apd.as_mut(), queries, k, &mut sorter, &mut dist, &mut out, &mut stats);
+        let mut ledger = EnergyLedger::new();
+        ledger.merge(apd.ledger());
+        ledger.merge(&stats.ledger);
+        let cycles = apd.cycles() + stats.preproc_cycles;
+        match &want {
+            None => want = Some((out, cycles, ledger)),
+            Some((w_out, w_cycles, w_ledger)) => {
+                assert_eq!(&out, w_out, "{ctx}: groups ({fidelity})");
+                assert_eq!(cycles, *w_cycles, "{ctx}: cycles ({fidelity})");
+                assert_eq!(&ledger, w_ledger, "{ctx}: ledger ({fidelity})");
+            }
+        }
+    }
+    let (want_out, want_cycles, want_ledger) = want.expect("at least one tier ran");
+
+    let mut index = MedianIndex::new();
+    index.build(pts);
+    let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+    let mut sorter = TopKSorter::new(1);
+    let mut out = GroupsCsr::new();
+    pp.knn_into(&index, queries, k, &mut sorter, &mut out);
+    assert_eq!(out, want_out, "{ctx}: groups (pruned)");
+    // The engine loops charged their tile load (SRAM writes + load
+    // cycles); the pruned kernel assumes a loaded array. Fold the load
+    // onto the pruned side and demand byte-identity.
+    let mut got_ledger = EnergyLedger::new();
+    got_ledger.merge(pp.ledger());
+    got_ledger.charge(Event::SramBit, pts.len() as u64 * 48);
+    assert_eq!(got_ledger, want_ledger, "{ctx}: ledger (pruned)");
+    let load = pts.len().div_ceil(ApdCimConfig::default().distances_per_cycle()) as u64;
+    assert_eq!(pp.cycles() + load, want_cycles, "{ctx}: cycles (pruned)");
+}
+
+#[test]
+fn knn_bit_identical_across_tiers_and_pruning_on_table1_scales() {
+    for scale in DatasetScale::ALL {
+        let cloud = make_workload_cloud(scale, 41);
+        let q = quantize_cloud(&cloud);
+        let tiles = msp_partition(&cloud, ApdCimConfig::default().capacity());
+        for (t, tile) in tiles.iter().take(2).enumerate() {
+            let pts: Vec<QPoint3> = tile.indices.iter().map(|&i| q[i]).collect();
+            // Resident and cross-tile queries alike.
+            let mut queries: Vec<QPoint3> =
+                (0..6).map(|i| pts[(i * 131) % pts.len()]).collect();
+            queries.push(QPoint3 { x: 0, y: 0, z: 0 });
+            queries.push(QPoint3 { x: u16::MAX, y: 9_000, z: 50_000 });
+            let k = 16.min(pts.len());
+            knn_three_way(&pts, &queries, k, &format!("{scale:?} tile {t}"));
+        }
+    }
+}
+
+#[test]
+fn knn_endgames_bit_identical_across_tiers_and_pruning() {
+    // Duplicate-heavy and all-identical tiles: distances tie constantly,
+    // so the (distance, index) rule decides everything and no cell may
+    // be pruned incorrectly.
+    let mut rng = Rng64::new(99);
+    let mut dup: Vec<QPoint3> = (0..48)
+        .map(|_| QPoint3 {
+            x: rng.below(1u64 << 16) as u16,
+            y: rng.below(1u64 << 16) as u16,
+            z: rng.below(1u64 << 16) as u16,
+        })
+        .collect();
+    for i in 12..48 {
+        dup[i] = dup[i % 12];
+    }
+    let mut queries: Vec<QPoint3> = dup[..5].to_vec();
+    queries.push(QPoint3 { x: 0, y: 0, z: 0 });
+    for k in [1usize, 13, 48] {
+        knn_three_way(&dup, &queries, k, &format!("dup k={k}"));
+    }
+
+    let same = vec![QPoint3 { x: 7, y: 7, z: 7 }; 33];
+    let far = vec![QPoint3 { x: 7, y: 7, z: 7 }, QPoint3 { x: 60_000, y: 1, z: 2 }];
+    for k in [5usize, 33] {
+        knn_three_way(&same, &far, k, &format!("all-ties k={k}"));
     }
 }
 
@@ -283,5 +382,43 @@ fn exact_sampling_ablation_is_tier_invariant_too() {
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles);
         assert_eq!(a.stats.ledger, b.stats.ledger);
+    }
+}
+
+/// The exact ablation's float FPS + ball query run partition-pruned
+/// through the float spatial index by default, on either tier; forcing
+/// the full-scan reference loops must not change a single logit, cycle
+/// or ledger count. All four (tier, prune) combinations must agree.
+#[test]
+fn exact_sampling_pruning_is_invariant_across_tiers() {
+    let (clouds, _) = make_labelled_batch(2, 1024, 61);
+    let mut want: Option<Vec<(Vec<f32>, usize, u64, u64, EnergyLedger)>> = None;
+    for fidelity in Fidelity::ALL {
+        for prune in [true, false] {
+            let mut p = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                .exact_sampling(true)
+                .prune(prune)
+                .build()
+                .unwrap();
+            let got: Vec<_> = clouds
+                .iter()
+                .map(|c| {
+                    let r = p.classify(c).unwrap();
+                    (
+                        r.logits.clone(),
+                        r.pred,
+                        r.stats.preproc_cycles,
+                        r.stats.feature_cycles,
+                        r.stats.ledger.clone(),
+                    )
+                })
+                .collect();
+            match &want {
+                None => want = Some(got),
+                Some(w) => {
+                    assert!(&got == w, "fidelity={fidelity} prune={prune} diverged");
+                }
+            }
+        }
     }
 }

@@ -108,26 +108,77 @@ fn warm_preprocess_is_allocator_silent() {
     use pc2im::alloc_counter::allocation_count;
     let clouds: Vec<_> = (0..4).map(|s| make_class_cloud(s % 8, 1024, 40 + s as u64)).collect();
     for fidelity in Fidelity::ALL {
-        for prune in [true, false] {
-            let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
-                .prune(prune)
-                .build()
-                .unwrap();
-            for c in &clouds {
-                pipe.preprocess(c).unwrap(); // warm the arena
+        for exact in [false, true] {
+            for prune in [true, false] {
+                let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                    .exact_sampling(exact)
+                    .prune(prune)
+                    .build()
+                    .unwrap();
+                for c in &clouds {
+                    pipe.preprocess(c).unwrap(); // warm the arena
+                }
+                let before = allocation_count();
+                for c in &clouds {
+                    let stats = pipe.preprocess(c).unwrap();
+                    assert_eq!(stats.scratch_allocs, 0, "tracked-buffer contract");
+                }
+                let grew = allocation_count() - before;
+                assert_eq!(
+                    grew, 0,
+                    "fidelity={fidelity} exact={exact} prune={prune}: \
+                     warm preprocess hit the allocator {grew} times"
+                );
             }
-            let before = allocation_count();
-            for c in &clouds {
-                let stats = pipe.preprocess(c).unwrap();
-                assert_eq!(stats.scratch_allocs, 0, "tracked-buffer contract");
-            }
-            let grew = allocation_count() - before;
-            assert_eq!(
-                grew, 0,
-                "fidelity={fidelity} prune={prune}: warm preprocess hit the allocator {grew} times"
-            );
         }
     }
+}
+
+/// The same allocator-level contract for the standalone query layer:
+/// once a [`pc2im::sampling::KnnHeap`]/CSR pair (float full-scan path)
+/// and a sorter/index/kernel set (grid partition-pruned path) are warm,
+/// repeated kNN over same-shaped inputs makes **zero** calls into the
+/// global allocator — the contract that lets the segmentation decoder's
+/// FP upsampling ride the request path's warm-buffer discipline.
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_knn_is_allocator_silent() {
+    use pc2im::alloc_counter::allocation_count;
+    use pc2im::cim::apd_cim::ApdCimConfig;
+    use pc2im::cim::max_cam::CamConfig;
+    use pc2im::cim::TopKSorter;
+    use pc2im::engine::fast::PrunedPreprocessor;
+    use pc2im::quant::{quantize_cloud, QPoint3};
+    use pc2im::sampling::{knn_into, GroupsCsr, KnnHeap, MedianIndex};
+
+    let cloud = make_class_cloud(2, 1024, 7);
+    let k = 16;
+
+    // Float full-scan heap select (the FP-upsampling kernel).
+    let fqueries = cloud.points[..32].to_vec();
+    let mut heap = KnnHeap::new();
+    let mut out = GroupsCsr::new();
+    knn_into(&cloud.points, &fqueries, k, &mut heap, &mut out); // warm
+    let before = allocation_count();
+    knn_into(&cloud.points, &fqueries, k, &mut heap, &mut out);
+    let grew = allocation_count() - before;
+    assert_eq!(grew, 0, "warm float kNN hit the allocator {grew} times");
+
+    // Grid partition-pruned replay, including the warm index rebuild.
+    let pts = quantize_cloud(&cloud);
+    let queries: Vec<QPoint3> = (0..32).map(|i| pts[i * 31]).collect();
+    let mut index = MedianIndex::new();
+    let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+    let mut sorter = TopKSorter::new(1);
+    let mut gout = GroupsCsr::new();
+    index.build(&pts);
+    pp.knn_into(&index, &queries, k, &mut sorter, &mut gout); // warm
+    let before = allocation_count();
+    pp.reset();
+    index.build(&pts);
+    pp.knn_into(&index, &queries, k, &mut sorter, &mut gout);
+    let grew = allocation_count() - before;
+    assert_eq!(grew, 0, "warm pruned kNN hit the allocator {grew} times");
 }
 
 #[test]
