@@ -1,11 +1,19 @@
 //! Serving-engine throughput: sweeps fidelity tier x worker lanes x batch
-//! size through `ServeEngine::run` and reports clouds/sec alongside the
-//! harness's min/mean/max timings.
+//! size through `ServeEngine::run`, then drives the open-loop load
+//! generator (`ServeEngine::run_open_loop`) over the same streams and
+//! reports virtual tail latency alongside the harness's min/mean/max
+//! timings.
 //!
 //! The fidelity axis is the point: the `fast` tier must beat `bit-exact`
-//! on host clouds/sec while printing the *same* stats digest — the bench
-//! asserts digest equality across every cell of the sweep (worker counts
-//! and tiers alike).
+//! on host clouds/sec while printing the *same* stats digest — and the
+//! open-loop cells must print that same digest again, whatever the
+//! offered rate. The bench keeps **one** expected digest per batch scale
+//! and asserts every closed- and open-loop cell against it.
+//!
+//! It also fails loudly if the committed BENCH_serve.json anchor and this
+//! harness disagree: schema version, the pinned digest-field list vs what
+//! `stats_digest` actually prints, and the presence/shape of the
+//! latency-under-load rows are all checked before any cell runs.
 //!
 //! Run with: `cargo bench --bench serve_throughput`
 //! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
@@ -17,20 +25,116 @@
 #[path = "harness.rs"]
 mod harness;
 
-use pc2im::config::ServeConfig;
+use std::collections::HashMap;
+
+use pc2im::config::{HardwareConfig, ServeConfig};
 use pc2im::coordinator::serve::stats_digest;
-use pc2im::coordinator::PipelineBuilder;
+use pc2im::coordinator::{BatchStats, PipelineBuilder};
 use pc2im::engine::Fidelity;
 use pc2im::pointcloud::synthetic::make_labelled_batch;
+use pc2im::runtime::json::{self, Value};
+
+/// The workload seed shared by every cell (same stream prefix per batch
+/// size, so digests are comparable across cells).
+const STREAM_SEED: u64 = 7000;
+
+/// Fail loudly if BENCH_serve.json and this harness disagree: the anchor
+/// is only useful while its schema matches what the bench (and
+/// `scripts/gen_bench_baseline.py`) believe it is.
+fn check_bench_serve_contract() {
+    let text = std::fs::read_to_string("BENCH_serve.json")
+        .expect("BENCH_serve.json must sit at the repo root");
+    let doc = json::parse(&text).expect("BENCH_serve.json must parse");
+    assert_eq!(
+        doc.get("schema").and_then(Value::as_usize),
+        Some(2),
+        "BENCH_serve.json schema drifted from this harness (want 2); \
+         regenerate with scripts/gen_bench_baseline.py"
+    );
+
+    // The digest-field list pinned in the anchor must be exactly the
+    // fields `stats_digest` prints, in order.
+    let digest = stats_digest(&BatchStats::default(), &HardwareConfig::default());
+    let live: Vec<String> =
+        digest.split(' ').map(|kv| kv.split('=').next().unwrap().to_owned()).collect();
+    let pinned: Vec<String> = doc
+        .get("engine")
+        .and_then(|e| e.get("determinism_digest_fields"))
+        .and_then(Value::as_arr)
+        .expect("BENCH_serve.json: engine.determinism_digest_fields missing")
+        .iter()
+        .map(|v| v.as_str().expect("digest field names are strings").to_owned())
+        .collect();
+    assert_eq!(
+        pinned, live,
+        "BENCH_serve.json digest-field list drifted from stats_digest()"
+    );
+
+    // Every throughput scale carries latency-under-load rows with the
+    // full key set and monotone percentiles.
+    let Some(Value::Obj(scales)) = doc.get("serve_throughput") else {
+        panic!("BENCH_serve.json: serve_throughput must be an object");
+    };
+    let Some(Value::Obj(lat)) = doc.get("latency_under_load") else {
+        panic!("BENCH_serve.json: latency_under_load missing (schema 2)");
+    };
+    for scale in scales.keys() {
+        let rows = lat
+            .get(scale)
+            .and_then(Value::as_arr)
+            .unwrap_or_else(|| panic!("latency_under_load missing rows for {scale:?}"));
+        assert!(!rows.is_empty(), "{scale}: empty latency_under_load");
+        for row in rows {
+            let num = |k: &str| {
+                row.get(k)
+                    .and_then(Value::as_f64)
+                    .unwrap_or_else(|| panic!("{scale}: latency row missing key {k:?}"))
+            };
+            for k in ["arrival_rate_per_s", "utilization", "offered", "completed", "shed"] {
+                num(k);
+            }
+            for k in ["backpressured", "max_in_system", "max_ms"] {
+                num(k);
+            }
+            let (p50, p99, p999) = (num("p50_ms"), num("p99_ms"), num("p999_ms"));
+            assert!(
+                p50 <= p99 && p99 <= p999,
+                "{scale}: committed percentiles not monotone ({p50} / {p99} / {p999})"
+            );
+            assert_eq!(
+                num("completed") + num("shed"),
+                num("offered"),
+                "{scale}: offered requests must be completed or shed"
+            );
+        }
+    }
+}
 
 fn main() {
+    check_bench_serve_contract();
+
     let smoke = harness::smoke_mode();
     let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     let batch_sweep: &[usize] = if smoke { &[4] } else { &[8, 32] };
+    let rate_sweep: &[f64] = if smoke { &[8_000.0] } else { &[4_000.0, 16_000.0] };
     let iters = if smoke { 1 } else { 3 };
 
+    // One expected digest per batch scale, shared by every closed- AND
+    // open-loop cell: the load model must never reach the numeric
+    // stream, whatever the workers / tier / offered rate.
+    let mut expected: HashMap<usize, String> = HashMap::new();
+    let mut check = |batch: usize, digest: String, cell: &str| match expected.entry(batch) {
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert(digest);
+        }
+        std::collections::hash_map::Entry::Occupied(e) => assert_eq!(
+            e.get(),
+            &digest,
+            "{cell}: serve digest must not depend on workers, fidelity, or load"
+        ),
+    };
+
     harness::header("shard-parallel serving engine (fidelity x workers x batch)");
-    let mut digest: Option<String> = None;
     for fidelity in Fidelity::ALL {
         for &workers in worker_sweep {
             for &batch in batch_sweep {
@@ -39,7 +143,7 @@ fn main() {
                     .build_serve(ServeConfig { workers, queue_depth: 8, ..ServeConfig::default() })
                     .expect("serving engine must build hermetically");
                 let n_points = engine.pipeline().meta().model.n_points;
-                let (clouds, labels) = make_labelled_batch(batch, n_points, 7000);
+                let (clouds, labels) = make_labelled_batch(batch, n_points, STREAM_SEED);
                 let hw = *engine.pipeline().hardware();
                 let name = format!("serve fid={fidelity} workers={workers} batch={batch}");
                 let mut last_digest = String::new();
@@ -49,20 +153,49 @@ fn main() {
                     report.results.len()
                 });
                 println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean.max(1e-12));
-                // Determinism across the whole sweep: every cell with the
-                // same per-cloud stream prefix agrees — across worker
-                // counts AND fidelity tiers. Compare the fixed smallest
-                // batch everywhere.
-                if batch == batch_sweep[0] {
-                    match &digest {
-                        None => digest = Some(last_digest.clone()),
-                        Some(d) => assert_eq!(
-                            d, &last_digest,
-                            "serve digest must not depend on workers or fidelity"
-                        ),
-                    }
-                }
+                check(batch, last_digest, &name);
             }
+        }
+    }
+
+    harness::header("open-loop load generator (virtual-clock tail latency)");
+    for &batch in batch_sweep {
+        for &rate in rate_sweep {
+            let mut engine = PipelineBuilder::new()
+                .fidelity(Fidelity::Fast)
+                .build_serve(ServeConfig {
+                    workers: 2,
+                    queue_depth: 8,
+                    open_loop: true,
+                    arrival_rate: rate,
+                    ..ServeConfig::default()
+                })
+                .expect("serving engine must build hermetically");
+            let n_points = engine.pipeline().meta().model.n_points;
+            let (clouds, labels) = make_labelled_batch(batch, n_points, STREAM_SEED);
+            let hw = *engine.pipeline().hardware();
+            let name = format!("serve open-loop rate={rate} batch={batch}");
+            let mut digest = String::new();
+            let mut load = None;
+            harness::bench(&name, iters, || {
+                let report = engine
+                    .run_open_loop(&clouds, &labels, rate, STREAM_SEED)
+                    .expect("open-loop run");
+                digest = stats_digest(&report.serve.stats, &hw);
+                load = Some(report.load.clone());
+                report.serve.results.len()
+            });
+            let load = load.expect("bench body ran");
+            println!(
+                "{:56} p50={:.3} ms p99={:.3} ms p999={:.3} ms shed={} bp={}",
+                "",
+                load.p50_s * 1e3,
+                load.p99_s * 1e3,
+                load.p999_s * 1e3,
+                load.shed,
+                load.backpressured
+            );
+            check(batch, digest, &name);
         }
     }
 }

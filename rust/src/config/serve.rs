@@ -16,7 +16,7 @@ use anyhow::{ensure, Result};
 /// a clear error instead of silently clamping, and both the CLI and
 /// [`crate::coordinator::PipelineBuilder::build_serve`] call it before
 /// building the engine.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServeConfig {
     /// Worker lanes, each owning one `Pipeline`. `1` degenerates to the
     /// single-threaded [`crate::coordinator::BatchScheduler`] behaviour.
@@ -29,13 +29,32 @@ pub struct ServeConfig {
     /// Synthetic clouds the CLI generates for one serve run. Must be at
     /// least 1.
     pub n_clouds: usize,
-    /// Base RNG seed for the synthetic request stream.
+    /// Base RNG seed for the synthetic request stream (and, XOR'd with a
+    /// fixed salt, for the open-loop arrival schedule).
     pub seed: u64,
+    /// Open-loop serving mode (`--open-loop`): after classifying the
+    /// stream, replay it through the virtual-clock load model — seeded
+    /// Poisson arrivals at [`ServeConfig::arrival_rate`], per-request
+    /// service time = simulated accelerator latency — and report
+    /// p50/p99/p999 tail latency, the queue-depth histogram and
+    /// shed/backpressure counters. Requires a positive `arrival_rate`.
+    pub open_loop: bool,
+    /// Offered load in requests per **virtual** second for open-loop
+    /// serving (`--arrival-rate R`). Ignored (and allowed to stay 0) in
+    /// closed-loop mode.
+    pub arrival_rate: f64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_depth: 8, n_clouds: 32, seed: 0 }
+        Self {
+            workers: 4,
+            queue_depth: 8,
+            n_clouds: 32,
+            seed: 0,
+            open_loop: false,
+            arrival_rate: 0.0,
+        }
     }
 }
 
@@ -59,6 +78,13 @@ impl ServeConfig {
             "serve needs at least one cloud in the workload (got --clouds {})",
             self.n_clouds
         );
+        if self.open_loop {
+            ensure!(
+                self.arrival_rate.is_finite() && self.arrival_rate > 0.0,
+                "open-loop serving needs a finite positive --arrival-rate (got {})",
+                self.arrival_rate
+            );
+        }
         Ok(())
     }
 }
@@ -82,5 +108,20 @@ mod tests {
             let err = cfg.validate().unwrap_err().to_string();
             assert!(err.contains(needle), "{err}");
         }
+    }
+
+    #[test]
+    fn open_loop_needs_positive_finite_rate() {
+        // Closed-loop runs never look at the rate, so 0 stays valid there.
+        ServeConfig::default().validate().unwrap();
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let cfg =
+                ServeConfig { open_loop: true, arrival_rate: bad, ..ServeConfig::default() };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("--arrival-rate"), "{err}");
+        }
+        ServeConfig { open_loop: true, arrival_rate: 1000.0, ..ServeConfig::default() }
+            .validate()
+            .unwrap();
     }
 }

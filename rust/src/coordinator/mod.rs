@@ -26,5 +26,5 @@ pub use builder::PipelineBuilder;
 pub use pipeline::{argmax_logits, CloudResult, Pipeline};
 pub use scheduler::BatchScheduler;
 pub use scratch::CloudScratch;
-pub use serve::{ServeEngine, ServeReport};
+pub use serve::{OpenLoopReport, OpenLoopSim, OpenLoopStats, ServeEngine, ServeReport};
 pub use stats::{BatchStats, CloudStats};

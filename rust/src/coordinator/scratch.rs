@@ -22,6 +22,13 @@
 //! (the O(#event-kinds) energy-ledger map, result cloning at the API
 //! boundary) is deliberately not part of the contract; the arena covers
 //! the O(points) data plane.
+//!
+//! The open-loop load model follows the same discipline outside the
+//! per-cloud arena: [`crate::coordinator::OpenLoopSim`] lives inside the
+//! `ServeEngine` and refills its arrival/timestamp/histogram buffers in
+//! place, so a warm open-loop replay — timestamp and percentile
+//! accounting included — makes zero allocator calls (pinned by the
+//! alloc-counter lane in `rust/tests/scratch_reuse.rs`).
 
 use crate::cim::apd_cim::ApdCimConfig;
 use crate::cim::max_cam::CamConfig;

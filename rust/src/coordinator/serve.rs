@@ -37,7 +37,8 @@ use crate::config::HardwareConfig;
 use crate::coordinator::pipeline::{CloudResult, Pipeline};
 use crate::coordinator::stats::BatchStats;
 use crate::pointcloud::PointCloud;
-use anyhow::{anyhow, Result};
+use crate::rng::Rng64;
+use anyhow::{anyhow, ensure, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
@@ -105,6 +106,249 @@ pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
     )
 }
 
+/// Salt XOR'd into the arrival-schedule seed so the load model draws
+/// from a different deterministic stream than the synthetic workload
+/// that shares the CLI `--seed` (ASCII "OPENLOOP").
+const ARRIVAL_SEED_SALT: u64 = 0x4F50_454E_4C4F_4F50;
+
+/// Fill `out` with `n` seeded Poisson arrival times in **virtual**
+/// seconds: exponential inter-arrival gaps `-ln(1 - u) / rate` drawn from
+/// the repo's deterministic [`Rng64`], so the same seed reproduces the
+/// schedule bit-for-bit on every run and platform (pinned by
+/// `rust/tests/serve_latency.rs`). Times are non-decreasing and finite.
+pub fn poisson_arrivals_into(rate: f64, seed: u64, n: usize, out: &mut Vec<f64>) {
+    assert!(rate.is_finite() && rate > 0.0, "arrival rate must be finite and positive");
+    let mut rng = Rng64::new(seed ^ ARRIVAL_SEED_SALT);
+    out.clear();
+    out.reserve(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        // u is in [0, 1), so 1 - u is in (0, 1] and the gap is finite
+        // and >= 0.
+        t += -(1.0 - rng.f64()).ln() / rate;
+        out.push(t);
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted slice — the same
+/// `sorted[(p * (len - 1)) as usize]` rule the closed-loop CLI prints for
+/// host latency; 0 when no request completed.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(p * (sorted.len() - 1) as f64) as usize]
+}
+
+/// Aggregate load metrics of one open-loop replay: completion/shed/
+/// backpressure counters, the queue-depth histogram, and the virtual
+/// tail-latency percentiles. Every field is a deterministic function of
+/// (service times, arrival rate, seed, workers, queue depth) — compare
+/// with [`OpenLoopStats::digest`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpenLoopStats {
+    /// Requests that were admitted and completed service.
+    pub completed: usize,
+    /// Requests dropped because the bounded queue was full at arrival.
+    /// An open-loop generator cannot be blocked, so overload turns into
+    /// shed requests rather than backpressure on the client.
+    pub shed: usize,
+    /// Admitted requests that had to wait (service started after their
+    /// arrival because every server was busy).
+    pub backpressured: usize,
+    /// Largest in-system population observed (waiting + in service);
+    /// `queue_depth + workers` bounds it by construction.
+    pub max_in_system: usize,
+    /// Queue-occupancy histogram sampled at every arrival:
+    /// `queue_depth_hist[d]` counts arrivals that found `d` requests
+    /// waiting. Length `queue_depth + 1`; entries sum to the offered
+    /// request count.
+    pub queue_depth_hist: Vec<u64>,
+    /// Median enqueue-to-complete latency over completed requests, in
+    /// virtual seconds.
+    pub p50_s: f64,
+    /// 99th-percentile virtual latency.
+    pub p99_s: f64,
+    /// 99.9th-percentile virtual latency.
+    pub p999_s: f64,
+    /// Worst completed-request virtual latency.
+    pub max_latency_s: f64,
+}
+
+impl OpenLoopStats {
+    /// Render every load metric as one comparable line — the open-loop
+    /// counterpart of [`stats_digest`]. `serve --open-loop` prints it and
+    /// `rust/tests/serve_latency.rs` asserts byte equality across repeat
+    /// runs with the same seed.
+    pub fn digest(&self) -> String {
+        format!(
+            "completed={} shed={} backpressured={} max_in_system={} p50_us={:.3} \
+             p99_us={:.3} p999_us={:.3} max_us={:.3} hist={:?}",
+            self.completed,
+            self.shed,
+            self.backpressured,
+            self.max_in_system,
+            self.p50_s * 1e6,
+            self.p99_s * 1e6,
+            self.p999_s * 1e6,
+            self.max_latency_s * 1e6,
+            self.queue_depth_hist,
+        )
+    }
+}
+
+/// Deterministic discrete-event simulator of the open-loop serving
+/// queue: Poisson arrivals feed a FIFO of capacity `queue_depth` in
+/// front of `workers` virtual servers whose per-request service time is
+/// the cloud's **simulated** accelerator latency — so the virtual clock
+/// is machine-independent and bit-reproducible, unlike host wall-clock.
+///
+/// All working storage is owned and refilled in place: once the buffers
+/// are warm, replaying an entire request stream (timestamps, histogram
+/// and percentile accounting included) makes zero allocator calls —
+/// pinned by the alloc-counter lane in `rust/tests/scratch_reuse.rs`.
+#[derive(Debug, Default)]
+pub struct OpenLoopSim {
+    arrivals: Vec<f64>,
+    dequeue: Vec<f64>,
+    complete: Vec<f64>,
+    server_free: Vec<f64>,
+    waiting: Vec<f64>,
+    latencies: Vec<f64>,
+    stats: OpenLoopStats,
+}
+
+impl OpenLoopSim {
+    /// An empty simulator; buffers grow on first use, then stay warm.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Replay `service_s` (per-request service times, in submission
+    /// order) against seeded Poisson arrivals and return the aggregate
+    /// load metrics. Per-request timestamps are readable afterwards via
+    /// [`OpenLoopSim::timestamps`].
+    ///
+    /// Event order is fully deterministic: arrivals are processed in
+    /// schedule order, a freed server is picked lowest-index-first on
+    /// ties, and admitted requests start at `max(arrival, earliest
+    /// server-free instant)` — FIFO, so start times are non-decreasing.
+    pub fn simulate(
+        &mut self,
+        service_s: &[f64],
+        arrival_rate: f64,
+        seed: u64,
+        workers: usize,
+        queue_depth: usize,
+    ) -> &OpenLoopStats {
+        assert!(workers >= 1 && queue_depth >= 1, "builder validates ServeConfig first");
+        let n = service_s.len();
+        poisson_arrivals_into(arrival_rate, seed, n, &mut self.arrivals);
+        self.dequeue.clear();
+        self.dequeue.resize(n, f64::INFINITY);
+        self.complete.clear();
+        self.complete.resize(n, f64::INFINITY);
+        self.server_free.clear();
+        self.server_free.resize(workers, 0.0);
+        // Start times of waiting-then-served requests, consumed through a
+        // head cursor: FIFO start times are non-decreasing, so popping
+        // from the front needs no reshuffling (and `reserve(n)` up front
+        // keeps later, busier seeds from regrowing a warm buffer).
+        self.waiting.clear();
+        self.waiting.reserve(n);
+        let mut head = 0usize;
+        self.stats.completed = 0;
+        self.stats.shed = 0;
+        self.stats.backpressured = 0;
+        self.stats.max_in_system = 0;
+        self.stats.queue_depth_hist.clear();
+        self.stats.queue_depth_hist.resize(queue_depth + 1, 0);
+        for i in 0..n {
+            let t = self.arrivals[i];
+            // Retire every queued request whose service started by `t`.
+            while head < self.waiting.len() && self.waiting[head] <= t {
+                head += 1;
+            }
+            let queued = self.waiting.len() - head;
+            self.stats.queue_depth_hist[queued] += 1;
+            let busy = self.server_free.iter().filter(|&&f| f > t).count();
+            if queued >= queue_depth {
+                // Bounded queue full: the open-loop generator never
+                // blocks, so this arrival is shed. Its classification
+                // already ran (the digest covers the full stream);
+                // only its timestamps stay infinite.
+                self.stats.shed += 1;
+                self.stats.max_in_system = self.stats.max_in_system.max(queued + busy);
+                continue;
+            }
+            // Earliest-free server, lowest index on ties.
+            let mut s = 0usize;
+            for (j, &f) in self.server_free.iter().enumerate().skip(1) {
+                if f < self.server_free[s] {
+                    s = j;
+                }
+            }
+            let free = self.server_free[s];
+            let start = if free > t {
+                self.stats.backpressured += 1;
+                self.waiting.push(free);
+                free
+            } else {
+                t
+            };
+            self.dequeue[i] = start;
+            self.complete[i] = start + service_s[i];
+            self.server_free[s] = self.complete[i];
+            self.stats.completed += 1;
+            self.stats.max_in_system = self.stats.max_in_system.max(queued + busy + 1);
+        }
+        self.latencies.clear();
+        self.latencies.reserve(n);
+        for i in 0..n {
+            if self.complete[i].is_finite() {
+                self.latencies.push(self.complete[i] - self.arrivals[i]);
+            }
+        }
+        // total_cmp: no NaNs can occur, but it also keeps this sort
+        // allocation-free and panic-free by construction.
+        self.latencies.sort_unstable_by(f64::total_cmp);
+        self.stats.p50_s = percentile(&self.latencies, 0.50);
+        self.stats.p99_s = percentile(&self.latencies, 0.99);
+        self.stats.p999_s = percentile(&self.latencies, 0.999);
+        self.stats.max_latency_s = self.latencies.last().copied().unwrap_or(0.0);
+        &self.stats
+    }
+
+    /// Aggregate metrics of the most recent [`OpenLoopSim::simulate`].
+    pub fn stats(&self) -> &OpenLoopStats {
+        &self.stats
+    }
+
+    /// `(enqueue, dequeue, complete)` virtual timestamps of request `i`
+    /// from the most recent replay; dequeue/complete are
+    /// `f64::INFINITY` when the request was shed.
+    pub fn timestamps(&self, i: usize) -> (f64, f64, f64) {
+        (self.arrivals[i], self.dequeue[i], self.complete[i])
+    }
+}
+
+/// Everything one open-loop run produces: the closed-loop numeric report
+/// (per-cloud results with virtual timestamps stamped into their stats,
+/// plus the digest-relevant aggregate) and the load model's metrics.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// The underlying serve report — numerically identical to a
+    /// closed-loop [`ServeEngine::run`] over the same stream, which is
+    /// why the stats digest is invariant across load levels too.
+    pub serve: ServeReport,
+    /// Aggregate metrics of the virtual-clock replay.
+    pub load: OpenLoopStats,
+    /// Offered load in requests per virtual second.
+    pub arrival_rate: f64,
+    /// Seed of the arrival schedule (pre-salt; the CLI `--seed`).
+    pub arrival_seed: u64,
+}
+
 /// The shard-parallel serving engine: N worker lanes over a bounded
 /// request queue, sharing one executor. Built by
 /// [`crate::coordinator::PipelineBuilder::build_serve`], which validates
@@ -113,6 +357,11 @@ pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
 pub struct ServeEngine {
     lanes: Vec<Pipeline>,
     depth: usize,
+    /// Open-loop virtual-clock simulator; its buffers stay warm across
+    /// `run_open_loop` calls like the lanes' scratch arenas do.
+    sim: OpenLoopSim,
+    /// Per-request simulated service times, refilled per open-loop run.
+    service: Vec<f64>,
 }
 
 impl ServeEngine {
@@ -121,7 +370,7 @@ impl ServeEngine {
     /// [`crate::coordinator::PipelineBuilder::build_serve`] calls this.
     pub(crate) fn from_lanes(lanes: Vec<Pipeline>, depth: usize) -> Self {
         assert!(!lanes.is_empty() && depth >= 1, "builder validates ServeConfig first");
-        Self { lanes, depth }
+        Self { lanes, depth, sim: OpenLoopSim::new(), service: Vec::new() }
     }
 
     /// Worker-lane count.
@@ -164,33 +413,44 @@ impl ServeEngine {
         // Result path: unbounded, tagged with the sequence id.
         let (res_tx, res_rx) = mpsc::channel::<(usize, Result<CloudResult>)>();
 
+        let cpus = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         std::thread::scope(|scope| {
-            for lane in self.lanes.iter_mut() {
+            for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
                 let req_rx = &req_rx;
                 let completed = &completed;
                 let res_tx = res_tx.clone();
-                scope.spawn(move || loop {
-                    // Holding the lock across recv() just serializes the
-                    // dequeue, not the classification work. A poisoned
-                    // lock is recovered (the receiver has no invariant to
-                    // protect) so one dead lane cannot strand the queue.
-                    let msg = {
-                        let guard = match req_rx.lock() {
-                            Ok(g) => g,
-                            Err(poisoned) => poisoned.into_inner(),
+                scope.spawn(move || {
+                    // Best-effort lane affinity: keep each lane's warm
+                    // scratch arena on one core's caches. Failure is
+                    // harmless — placement never reaches the digest.
+                    crate::simd::pin_current_thread(lane_idx % cpus);
+                    loop {
+                        // Holding the lock across recv() just serializes
+                        // the dequeue, not the classification work. A
+                        // poisoned lock is recovered (the receiver has no
+                        // invariant to protect) so one dead lane cannot
+                        // strand the queue.
+                        let msg = {
+                            let guard = match req_rx.lock() {
+                                Ok(g) => g,
+                                Err(poisoned) => poisoned.into_inner(),
+                            };
+                            guard.recv()
                         };
-                        guard.recv()
-                    };
-                    let Ok(seq) = msg else { break };
-                    // A panic inside classify becomes this cloud's error
-                    // instead of deadlocking the submit loop.
-                    let out = catch_unwind(AssertUnwindSafe(|| lane.classify(&clouds[seq])))
-                        .unwrap_or_else(|_| {
-                            Err(anyhow!("worker lane panicked while classifying cloud {seq}"))
-                        });
-                    completed.fetch_add(1, Ordering::SeqCst);
-                    if res_tx.send((seq, out)).is_err() {
-                        break;
+                        let Ok(seq) = msg else { break };
+                        // A panic inside classify becomes this cloud's
+                        // error instead of deadlocking the submit loop.
+                        let out =
+                            catch_unwind(AssertUnwindSafe(|| lane.classify(&clouds[seq])))
+                                .unwrap_or_else(|_| {
+                                    Err(anyhow!(
+                                        "worker lane panicked while classifying cloud {seq}"
+                                    ))
+                                });
+                        completed.fetch_add(1, Ordering::SeqCst);
+                        if res_tx.send((seq, out)).is_err() {
+                            break;
+                        }
                     }
                 });
             }
@@ -224,6 +484,56 @@ impl ServeEngine {
             workers,
             wall_s: t0.elapsed().as_secs_f64(),
             max_in_flight,
+        })
+    }
+
+    /// Serve the labelled stream once (the closed-loop deterministic
+    /// numeric path), then replay it through the open-loop load model:
+    /// seeded Poisson arrivals at `arrival_rate` requests per **virtual**
+    /// second, one virtual server per worker lane whose service time is
+    /// the cloud's *simulated* accelerator latency, and the engine's
+    /// bounded queue in front. Per-request enqueue/dequeue/complete
+    /// timestamps are stamped into each result's
+    /// [`crate::coordinator::CloudStats`] and folded into p50/p99/p999
+    /// tail latency, the queue-depth histogram and shed/backpressure
+    /// counters.
+    ///
+    /// Shedding is a load-model outcome, not a numeric one: every request
+    /// is classified regardless, so [`stats_digest`] over
+    /// `report.serve.stats` covers the full stream and stays invariant
+    /// across worker counts, fidelity tiers, SIMD modes *and* arrival
+    /// rates — while the load metrics honestly depend on `workers`,
+    /// `queue_depth` and the offered rate. Because the clock is virtual,
+    /// the load metrics are bit-reproducible per seed on any host.
+    pub fn run_open_loop(
+        &mut self,
+        clouds: &[PointCloud],
+        labels: &[i32],
+        arrival_rate: f64,
+        seed: u64,
+    ) -> Result<OpenLoopReport> {
+        ensure!(
+            arrival_rate.is_finite() && arrival_rate > 0.0,
+            "open-loop serving needs a finite positive --arrival-rate (got {arrival_rate})"
+        );
+        let mut serve = self.run(clouds, labels)?;
+        let hw = *self.lanes[0].hardware();
+        self.service.clear();
+        self.service.reserve(serve.results.len());
+        self.service.extend(serve.results.iter().map(|r| r.stats.simulated_latency_s(&hw)));
+        let workers = self.lanes.len();
+        self.sim.simulate(&self.service, arrival_rate, seed, workers, self.depth);
+        for (i, r) in serve.results.iter_mut().enumerate() {
+            let (enq, deq, com) = self.sim.timestamps(i);
+            r.stats.enqueue_s = enq;
+            r.stats.dequeue_s = deq;
+            r.stats.complete_s = com;
+        }
+        Ok(OpenLoopReport {
+            serve,
+            load: self.sim.stats().clone(),
+            arrival_rate,
+            arrival_seed: seed,
         })
     }
 }
@@ -284,6 +594,98 @@ mod tests {
         assert_eq!(agg.preproc_cycles, manual.preproc_cycles);
         assert_eq!(agg.feature_cycles, manual.feature_cycles);
         assert_eq!(agg.ledger, manual.ledger);
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_monotone() {
+        let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        poisson_arrivals_into(5000.0, 9, 256, &mut a);
+        poisson_arrivals_into(5000.0, 9, 256, &mut b);
+        poisson_arrivals_into(5000.0, 10, 256, &mut c);
+        assert_eq!(a, b, "same seed must reproduce the schedule bit-for-bit");
+        assert_ne!(a, c, "different seeds must differ");
+        let mut prev = 0.0f64;
+        for &t in &a {
+            assert!(t.is_finite() && t >= prev, "arrivals must be non-decreasing");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn sim_matches_brute_force_invariants() {
+        // Constant-ish service times, rate well above the 2-server
+        // capacity so sheds and backpressure both occur.
+        let service: Vec<f64> = (0..200).map(|i| 1e-4 + (i % 5) as f64 * 2e-5).collect();
+        let (workers, depth) = (2usize, 3usize);
+        let mut sim = OpenLoopSim::new();
+        let stats = sim.simulate(&service, 25_000.0, 7, workers, depth).clone();
+        assert_eq!(stats.completed + stats.shed, service.len());
+        assert!(stats.shed > 0, "overload must shed: {stats:?}");
+        assert!(stats.backpressured > 0, "overload must queue: {stats:?}");
+        assert!(stats.max_in_system <= depth + workers);
+        assert_eq!(stats.queue_depth_hist.len(), depth + 1);
+        assert_eq!(stats.queue_depth_hist.iter().sum::<u64>(), service.len() as u64);
+        assert!(stats.p50_s <= stats.p99_s && stats.p99_s <= stats.p999_s);
+        assert!(stats.p999_s <= stats.max_latency_s);
+        // Brute-force cross-check of the event ordering: per request,
+        // start >= arrival, complete = start + service, and no instant
+        // has more than `workers` requests in service.
+        for i in 0..service.len() {
+            let (enq, deq, com) = sim.timestamps(i);
+            if deq.is_finite() {
+                assert!(deq >= enq, "request {i} started before it arrived");
+                assert_eq!(com, deq + service[i], "request {i} service time");
+                let in_service = (0..service.len())
+                    .filter(|&j| {
+                        let (_, dj, cj) = sim.timestamps(j);
+                        dj.is_finite() && dj <= deq && deq < cj
+                    })
+                    .count();
+                assert!(in_service <= workers, "request {i}: {in_service} concurrent services");
+            } else {
+                assert!(com.is_infinite(), "shed request {i} must not complete");
+            }
+        }
+    }
+
+    #[test]
+    fn sim_underload_sheds_nothing_and_replays_identically() {
+        // 1e-4 s service on 4 servers = 40k req/s capacity; offer 8k.
+        let service = vec![1e-4f64; 128];
+        let mut sim = OpenLoopSim::new();
+        let first = sim.simulate(&service, 8_000.0, 3, 4, 8).clone();
+        assert_eq!(first.shed, 0, "{first:?}");
+        assert_eq!(first.completed, 128);
+        // Warm replay with the same inputs is bit-identical, digest
+        // included.
+        let again = sim.simulate(&service, 8_000.0, 3, 4, 8).clone();
+        assert_eq!(first, again);
+        assert_eq!(first.digest(), again.digest());
+    }
+
+    #[test]
+    fn open_loop_report_stamps_timestamps() {
+        let (clouds, labels) = workload(6);
+        let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+            .build_serve(ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() })
+            .unwrap();
+        let report = engine.run_open_loop(&clouds, &labels, 4_000.0, 1).unwrap();
+        assert_eq!(report.serve.results.len(), 6);
+        assert_eq!(report.load.completed + report.load.shed, 6);
+        assert_eq!(report.arrival_rate, 4_000.0);
+        let hw = HardwareConfig::default();
+        for r in &report.serve.results {
+            assert!(r.stats.enqueue_s.is_finite());
+            if r.stats.dequeue_s.is_finite() {
+                assert!(r.stats.dequeue_s >= r.stats.enqueue_s);
+                assert_eq!(
+                    r.stats.complete_s,
+                    r.stats.dequeue_s + r.stats.simulated_latency_s(&hw),
+                );
+            }
+        }
+        // A rejected rate fails loudly before any classification.
+        assert!(engine.run_open_loop(&clouds, &labels, 0.0, 1).is_err());
     }
 
     #[test]

@@ -25,6 +25,20 @@ pub struct CloudStats {
     /// zero on a warmed lane serving same-shaped clouds (host-side;
     /// excluded from the determinism digest).
     pub scratch_allocs: u64,
+    /// Open-loop virtual-clock arrival (enqueue) time of this request in
+    /// seconds, stamped by
+    /// [`crate::coordinator::ServeEngine::run_open_loop`]; 0 on
+    /// closed-loop runs. Load-model observability — excluded from the
+    /// determinism digest, which covers the numeric stream only.
+    pub enqueue_s: f64,
+    /// Open-loop virtual dequeue (service-start) time in seconds;
+    /// `f64::INFINITY` when the load model shed this request (the bounded
+    /// queue was full at its arrival). 0 on closed-loop runs.
+    pub dequeue_s: f64,
+    /// Open-loop virtual completion time in seconds (`dequeue_s` plus the
+    /// cloud's simulated accelerator latency); `f64::INFINITY` when shed.
+    /// 0 on closed-loop runs.
+    pub complete_s: f64,
 }
 
 impl CloudStats {

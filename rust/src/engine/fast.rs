@@ -85,44 +85,17 @@ impl FastDistance {
     }
 }
 
-/// Width of one blocked-SoA distance lane group. Eight u16 lanes fill a
-/// 128-bit vector register; the fixed-size inner block below gives the
-/// autovectorizer a branch-free body.
-const SOA_LANES: usize = 8;
-
 /// Blocked SoA L1-distance microkernel: computes every member's 19-bit
 /// L1 distance to `r` from the coordinate lane slices and hands
-/// `(member_offset, distance)` to `sink` in order. The main loop runs in
-/// fixed-width unrolled blocks of [`SOA_LANES`]; the tail runs scalar.
+/// `(member_offset, distance)` to `sink` in order,
+/// [`crate::simd::LANES`]-wide blocks first then a scalar tail. Routed
+/// through [`crate::simd::l1_lanes`], which picks the SSE2 or scalar body
+/// at runtime — both emit identical distances in identical order (exact
+/// integer arithmetic), so the choice never reaches cycles, ledgers or
+/// digests.
 #[inline]
-fn l1_soa_lanes(
-    xs: &[u16],
-    ys: &[u16],
-    zs: &[u16],
-    r: QPoint3,
-    mut sink: impl FnMut(usize, u32),
-) {
-    debug_assert!(xs.len() == ys.len() && ys.len() == zs.len());
-    let n = xs.len();
-    let blocks = n / SOA_LANES;
-    for b in 0..blocks {
-        let base = b * SOA_LANES;
-        let mut d = [0u32; SOA_LANES];
-        for j in 0..SOA_LANES {
-            d[j] = xs[base + j].abs_diff(r.x) as u32
-                + ys[base + j].abs_diff(r.y) as u32
-                + zs[base + j].abs_diff(r.z) as u32;
-        }
-        for (j, dj) in d.into_iter().enumerate() {
-            sink(base + j, dj);
-        }
-    }
-    for k in blocks * SOA_LANES..n {
-        let d = xs[k].abs_diff(r.x) as u32
-            + ys[k].abs_diff(r.y) as u32
-            + zs[k].abs_diff(r.z) as u32;
-        sink(k, d);
-    }
+fn l1_soa_lanes(xs: &[u16], ys: &[u16], zs: &[u16], r: QPoint3, sink: impl FnMut(usize, u32)) {
+    crate::simd::l1_lanes(xs, ys, zs, r, sink)
 }
 
 impl DistanceEngine for FastDistance {

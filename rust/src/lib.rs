@@ -40,3 +40,4 @@ pub mod quant;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod simd;

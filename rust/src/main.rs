@@ -208,9 +208,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // ...and on anything unrecognized: a misspelled key or a key whose
     // value was forgotten must not silently serve the default workload.
-    let known_opts =
-        ["workers", "queue-depth", "clouds", "seed", "artifacts", "parallelism", "fidelity"];
-    let known_flags = ["quantized", "exact", "no-prune"];
+    let known_opts = [
+        "workers",
+        "queue-depth",
+        "clouds",
+        "seed",
+        "artifacts",
+        "parallelism",
+        "fidelity",
+        "arrival-rate",
+        "simd",
+    ];
+    let known_flags = ["quantized", "exact", "no-prune", "open-loop"];
     for key in args.opts.keys() {
         if !known_opts.contains(&key.as_str()) {
             bail!("unknown serve option --{key}; see `pc2im help`");
@@ -236,9 +245,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: parse_opt(args, "queue-depth", d.queue_depth)?,
         n_clouds: parse_opt(args, "clouds", d.n_clouds)?,
         seed: parse_opt(args, "seed", d.seed)?,
+        open_loop: args.flags.iter().any(|f| f == "open-loop"),
+        arrival_rate: parse_opt(args, "arrival-rate", d.arrival_rate)?,
     };
-    // Zero values are rejected here, at parse time — never clamped.
+    // Zero values are rejected here, at parse time — never clamped
+    // (including a missing/bad --arrival-rate when --open-loop is set).
     serve_cfg.validate()?;
+    // SIMD backend selection is process-wide: both backends are
+    // bit-identical, so --simd scalar only changes host speed (an A/B
+    // switch and the fallback escape hatch).
+    if let Some(v) = args.opts.get("simd") {
+        pc2im::simd::set_mode(v.parse()?);
+    }
     // Serving defaults to the fast tier (identical outputs and digests,
     // only host throughput differs).
     let mut cfg = pipeline_config(args, Fidelity::Fast)?;
@@ -248,6 +266,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fidelity = cfg.fidelity;
     let n = serve_cfg.n_clouds;
     let seed = serve_cfg.seed;
+
+    if serve_cfg.open_loop {
+        // Open-loop mode always runs the serving engine (one virtual
+        // server per worker lane, even at --workers 1): classify the
+        // stream, then replay it through the seeded Poisson virtual
+        // clock. Every latency figure below is virtual-clock and
+        // bit-reproducible per seed; only the digest-excluded host
+        // wall-clock depends on the machine.
+        let rate = serve_cfg.arrival_rate;
+        let mut engine = PipelineBuilder::from_config(cfg).build_serve(serve_cfg)?;
+        let hw = *engine.pipeline().hardware();
+        let (clouds, labels) =
+            make_labelled_batch(n, engine.pipeline().meta().model.n_points, seed);
+        println!(
+            "serving {n} clouds open-loop at {rate:.1} req/s on {} workers (queue depth {}, \
+             seed {seed}, {fidelity} engines, {} kernels)...",
+            engine.workers(),
+            engine.queue_depth(),
+            pc2im::simd::active_backend(),
+        );
+        let report = engine.run_open_loop(&clouds, &labels, rate, seed)?;
+        let load = &report.load;
+        println!(
+            "offered {n} | completed {} | shed {} | backpressured {} | max in-system {} \
+             (cap {})",
+            load.completed,
+            load.shed,
+            load.backpressured,
+            load.max_in_system,
+            engine.queue_depth() + engine.workers(),
+        );
+        println!(
+            "virtual latency p50 {:.3} ms | p99 {:.3} ms | p999 {:.3} ms | max {:.3} ms",
+            load.p50_s * 1e3,
+            load.p99_s * 1e3,
+            load.p999_s * 1e3,
+            load.max_latency_s * 1e3,
+        );
+        println!("queue depth at arrival (histogram): {:?}", load.queue_depth_hist);
+        println!("stats {}", serve::stats_digest(&report.serve.stats, &hw));
+        println!("load {}", load.digest());
+        return Ok(());
+    }
 
     if serve_cfg.workers == 1 {
         // Degenerate case: the single-threaded scheduler (the engine the
@@ -344,6 +405,11 @@ fn help() {
          \u{20}  serve        shard-parallel serving engine (clouds/sec + digest)\n\
          \u{20}               [--workers N] [--clouds M] [--queue-depth D] [--seed S]\n\
          \u{20}               [--fidelity T]  (default: fast)\n\
+         \u{20}               [--open-loop --arrival-rate R]  seeded-Poisson open-loop\n\
+         \u{20}               load at R req/s on a virtual clock: p50/p99/p999 tail\n\
+         \u{20}               latency, queue-depth histogram, shed/backpressure counters\n\
+         \u{20}               (bit-reproducible per seed; digest unchanged)\n\
+         \u{20}               [--simd auto|scalar]  kernel backend A/B (bit-identical)\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
          \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\
          \u{20}               [--fidelity T]  (default: bit-exact)\n\

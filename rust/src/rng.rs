@@ -56,6 +56,15 @@ impl Rng64 {
         lo + (hi - lo) * self.f32()
     }
 
+    /// Uniform in [0, 1) with the full 53 bits of double precision — the
+    /// f64 twin of [`Rng64::f32`]. Drives the open-loop Poisson arrival
+    /// schedule, where bit-for-bit reproducibility of the virtual clock
+    /// is part of the serving contract.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
     /// Uniform integer in [0, n) (n > 0).
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
@@ -109,6 +118,18 @@ mod tests {
         for _ in 0..10_000 {
             let v = r.f32();
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_derived_from_bits() {
+        let mut r = Rng64::new(5);
+        let mut bits = Rng64::new(5);
+        for _ in 0..10_000 {
+            let want = (bits.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            assert_eq!(v, want);
         }
     }
 

@@ -91,21 +91,18 @@ pub fn mlp_layer_ref_into(
         let xr = &x[r * cin..(r + 1) * cin];
         let or = &mut out[r * cout..(r + 1) * cout];
         or.copy_from_slice(&layer.b);
+        // The row loop stays scalar control flow (incl. the zero-input
+        // skip), so the per-output accumulation order is the same in both
+        // SIMD modes; the vectorized axpy/ReLU bodies are bit-identical
+        // to their scalar twins (crate::simd's contract).
         for (i, &xi) in xr.iter().enumerate() {
             if xi == 0.0 {
                 continue;
             }
-            let wr = &layer.w[i * cout..(i + 1) * cout];
-            for (o, &wv) in or.iter_mut().zip(wr) {
-                *o += xi * wv;
-            }
+            crate::simd::axpy(xi, &layer.w[i * cout..(i + 1) * cout], or);
         }
         if relu {
-            for o in or.iter_mut() {
-                if *o < 0.0 {
-                    *o = 0.0;
-                }
-            }
+            crate::simd::relu_in_place(or);
         }
     }
 }
@@ -130,11 +127,7 @@ pub fn grouped_max_ref_into(x: &[f32], s: usize, k: usize, c: usize, out: &mut V
         let os = &mut out[si * c..(si + 1) * c];
         for ki in 0..k {
             let row = &x[(si * k + ki) * c..(si * k + ki + 1) * c];
-            for (o, &v) in os.iter_mut().zip(row) {
-                if v > *o {
-                    *o = v;
-                }
-            }
+            crate::simd::max_in_place(os, row);
         }
     }
 }

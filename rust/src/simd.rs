@@ -1,0 +1,549 @@
+//! SIMD host floor: vectorized twins of the request path's hot
+//! microkernels with a runtime-selected scalar fallback, plus best-effort
+//! worker-lane CPU affinity.
+//!
+//! Three kernels carry almost all host time once the architectural wins
+//! land (Mesorasi's observation — see PAPERS.md): the blocked-SoA L1
+//! distance scan ([`l1_lanes`], behind `engine::fast::l1_soa_lanes`) and
+//! the reference executor's MLP microkernels ([`axpy`] +
+//! [`relu_in_place`] for the dense layers, [`max_in_place`] for grouped
+//! max pooling). Each has two entry points — a `_vector` variant using
+//! SSE2 intrinsics and a `_scalar` variant — and a dispatching wrapper
+//! that picks one at runtime via the process-wide [`SimdMode`].
+//!
+//! # Bit-identity contract
+//!
+//! The vector and scalar variants return **bit-identical** results — not
+//! merely approximately equal — so the serving determinism digest cannot
+//! depend on which backend ran (pinned by `rust/tests/simd_equivalence.rs`
+//! and `rust/tests/serve_latency.rs`). The rules that make this true:
+//!
+//! - **L1 distances are exact integers.** `|a - b|` over u16 lanes is
+//!   computed as `(a -sat b) | (b -sat a)` (one side is always zero), and
+//!   the three widened u32 sums stay below 2^18 — no overflow, no
+//!   rounding, any summation order.
+//! - **axpy preserves the scalar rounding sequence.** The vector body is
+//!   `y = y + a * x` as a separate round-after-multiply then
+//!   round-after-add (`_mm_mul_ps` + `_mm_add_ps`, never a fused
+//!   multiply-add), which is exactly the scalar `*o += a * v` under
+//!   IEEE-754, lane by lane. Accumulation *order* across calls is the
+//!   caller's (the MLP row loop is scalar control flow in both modes).
+//! - **ReLU and max keep the scalar's NaN/−0.0 semantics.** ReLU is
+//!   `if v < 0.0 { 0.0 }` — implemented with a `cmplt` mask (NOT
+//!   `max_ps`), so NaN and −0.0 pass through unchanged in both modes.
+//!   Grouped max is `if v > acc { acc = v }` — a `cmpgt` select, so an
+//!   accumulated NaN is never displaced and −0.0 never replaces +0.0.
+//!
+//! SSE2 is the x86_64 baseline, so the vector path needs no CPU probing;
+//! on other architectures the `_vector` entry points compile to the
+//! scalar body and the dispatcher reports the `"scalar"` backend.
+
+use crate::quant::QPoint3;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel backend the dispatching wrappers select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the vector kernels when the target has them (the default).
+    Auto,
+    /// Force the scalar fallback everywhere (`--simd scalar`); outputs
+    /// are bit-identical by contract, so this only changes host speed.
+    Scalar,
+}
+
+impl std::str::FromStr for SimdMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "scalar" => Ok(SimdMode::Scalar),
+            other => anyhow::bail!("unknown SIMD mode {other:?} (valid: auto, scalar)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+        })
+    }
+}
+
+const MODE_AUTO: u8 = 0;
+const MODE_SCALAR: u8 = 1;
+
+/// Process-wide backend selector. Relaxed ordering is enough: the value
+/// only gates *which* of two bit-identical kernels runs, so a racing
+/// reader observing a stale mode cannot change any output.
+static MODE: AtomicU8 = AtomicU8::new(MODE_AUTO);
+
+/// Select the kernel backend process-wide (the CLI's `--simd` flag).
+pub fn set_mode(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Auto => MODE_AUTO,
+        SimdMode::Scalar => MODE_SCALAR,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The currently selected [`SimdMode`].
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_SCALAR => SimdMode::Scalar,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// Whether this build carries vector kernel bodies at all (SSE2 is the
+/// x86_64 baseline; other targets compile the scalar body into the
+/// `_vector` entry points).
+pub fn vector_available() -> bool {
+    cfg!(all(target_arch = "x86_64", target_feature = "sse2"))
+}
+
+/// The backend the dispatching wrappers will actually run right now.
+pub fn active_backend() -> &'static str {
+    if vector_enabled() {
+        "sse2"
+    } else {
+        "scalar"
+    }
+}
+
+#[inline]
+fn vector_enabled() -> bool {
+    vector_available() && mode() == SimdMode::Auto
+}
+
+/// Width of one blocked-SoA distance lane group: eight u16 lanes fill a
+/// 128-bit vector register, and the scalar fallback keeps the same block
+/// shape so both backends emit `(index, distance)` pairs in the same
+/// order.
+pub const LANES: usize = 8;
+
+/// Blocked SoA L1-distance microkernel: computes every member's 19-bit
+/// L1 distance to `r` from the coordinate lane slices and hands
+/// `(member_offset, distance)` to `sink` in order — [`LANES`]-wide blocks
+/// first, then a scalar tail. Dispatches on [`mode`].
+#[inline]
+pub fn l1_lanes(xs: &[u16], ys: &[u16], zs: &[u16], r: QPoint3, sink: impl FnMut(usize, u32)) {
+    if vector_enabled() {
+        l1_lanes_vector(xs, ys, zs, r, sink)
+    } else {
+        l1_lanes_scalar(xs, ys, zs, r, sink)
+    }
+}
+
+/// Scalar body of [`l1_lanes`]; fixed-width unrolled blocks give the
+/// compiler a branch-free body even without explicit intrinsics.
+pub fn l1_lanes_scalar(
+    xs: &[u16],
+    ys: &[u16],
+    zs: &[u16],
+    r: QPoint3,
+    mut sink: impl FnMut(usize, u32),
+) {
+    debug_assert!(xs.len() == ys.len() && ys.len() == zs.len());
+    let n = xs.len();
+    let blocks = n / LANES;
+    for b in 0..blocks {
+        let base = b * LANES;
+        let mut d = [0u32; LANES];
+        for j in 0..LANES {
+            d[j] = xs[base + j].abs_diff(r.x) as u32
+                + ys[base + j].abs_diff(r.y) as u32
+                + zs[base + j].abs_diff(r.z) as u32;
+        }
+        for (j, dj) in d.into_iter().enumerate() {
+            sink(base + j, dj);
+        }
+    }
+    for k in blocks * LANES..n {
+        let d = xs[k].abs_diff(r.x) as u32
+            + ys[k].abs_diff(r.y) as u32
+            + zs[k].abs_diff(r.z) as u32;
+        sink(k, d);
+    }
+}
+
+/// Vector body of [`l1_lanes`] (SSE2 on x86_64, scalar elsewhere).
+pub fn l1_lanes_vector(
+    xs: &[u16],
+    ys: &[u16],
+    zs: &[u16],
+    r: QPoint3,
+    sink: impl FnMut(usize, u32),
+) {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    {
+        sse2::l1_lanes(xs, ys, zs, r, sink)
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+    {
+        l1_lanes_scalar(xs, ys, zs, r, sink)
+    }
+}
+
+/// `y[i] += a * x[i]` — the dense-layer inner loop of the reference
+/// executor. Dispatches on [`mode`]; both backends round multiply and add
+/// separately (no FMA), so results are bit-identical.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    if vector_enabled() {
+        axpy_vector(a, x, y)
+    } else {
+        axpy_scalar(a, x, y)
+    }
+}
+
+/// Scalar body of [`axpy`].
+pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+/// Vector body of [`axpy`] (SSE2 on x86_64, scalar elsewhere).
+pub fn axpy_vector(a: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    {
+        sse2::axpy(a, x, y)
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+    {
+        axpy_scalar(a, x, y)
+    }
+}
+
+/// In-place ReLU: `v[i] = 0.0 if v[i] < 0.0`. NaN and −0.0 pass through
+/// unchanged in both backends. Dispatches on [`mode`].
+#[inline]
+pub fn relu_in_place(v: &mut [f32]) {
+    if vector_enabled() {
+        relu_in_place_vector(v)
+    } else {
+        relu_in_place_scalar(v)
+    }
+}
+
+/// Scalar body of [`relu_in_place`].
+pub fn relu_in_place_scalar(v: &mut [f32]) {
+    for o in v.iter_mut() {
+        if *o < 0.0 {
+            *o = 0.0;
+        }
+    }
+}
+
+/// Vector body of [`relu_in_place`] (SSE2 on x86_64, scalar elsewhere).
+pub fn relu_in_place_vector(v: &mut [f32]) {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    {
+        sse2::relu_in_place(v)
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+    {
+        relu_in_place_scalar(v)
+    }
+}
+
+/// Elementwise running max: `acc[i] = row[i] if row[i] > acc[i]` — the
+/// grouped max-pooling inner loop. An accumulated NaN is never displaced,
+/// matching the scalar comparison. Dispatches on [`mode`].
+#[inline]
+pub fn max_in_place(acc: &mut [f32], row: &[f32]) {
+    if vector_enabled() {
+        max_in_place_vector(acc, row)
+    } else {
+        max_in_place_scalar(acc, row)
+    }
+}
+
+/// Scalar body of [`max_in_place`].
+pub fn max_in_place_scalar(acc: &mut [f32], row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    for (o, &v) in acc.iter_mut().zip(row) {
+        if v > *o {
+            *o = v;
+        }
+    }
+}
+
+/// Vector body of [`max_in_place`] (SSE2 on x86_64, scalar elsewhere).
+pub fn max_in_place_vector(acc: &mut [f32], row: &[f32]) {
+    #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+    {
+        sse2::max_in_place(acc, row)
+    }
+    #[cfg(not(all(target_arch = "x86_64", target_feature = "sse2")))]
+    {
+        max_in_place_scalar(acc, row)
+    }
+}
+
+/// Best-effort pin of the calling thread to one CPU — the serving
+/// engine's per-lane affinity (lane `i` pins to CPU
+/// `i % available_parallelism`, keeping a lane's warm scratch arena on
+/// one core's caches). Returns whether the pin took effect; failure (or a
+/// non-Linux/non-x86_64 target, where this is a no-op) is harmless: the
+/// determinism contract never depends on placement.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    {
+        // Raw sched_setaffinity(2) syscall (x86_64 number 203, pid 0 =
+        // calling thread): the vendored crate set has no libc. A 1024-bit
+        // mask matches the kernel's default CPU-set size.
+        const MASK_WORDS: usize = 16;
+        let mut mask = [0u64; MASK_WORDS];
+        mask[(cpu / 64) % MASK_WORDS] |= 1u64 << (cpu % 64);
+        let ret: i64;
+        // SAFETY: the syscall only reads MASK_WORDS * 8 bytes at `mask`,
+        // which is exactly the live stack array; rcx/r11 are declared
+        // clobbered per the x86_64 syscall ABI.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 203i64 => ret,
+                in("rdi") 0usize,
+                in("rsi") MASK_WORDS * 8,
+                in("rdx") mask.as_ptr(),
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        ret == 0
+    }
+    #[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
+mod sse2 {
+    //! SSE2 kernel bodies. Every intrinsic here is statically available:
+    //! SSE2 is part of the x86_64 baseline, so the `cfg` gate on this
+    //! module is a compile-time fact, not a runtime probe.
+
+    use super::LANES;
+    use crate::quant::QPoint3;
+    use std::arch::x86_64::*;
+
+    pub fn l1_lanes(
+        xs: &[u16],
+        ys: &[u16],
+        zs: &[u16],
+        r: QPoint3,
+        mut sink: impl FnMut(usize, u32),
+    ) {
+        debug_assert!(xs.len() == ys.len() && ys.len() == zs.len());
+        let n = xs.len();
+        let blocks = n / LANES;
+        // SAFETY: SSE2 is statically enabled (module cfg); every load
+        // reads LANES u16 values inside the equal-length slices, every
+        // store writes into the local block array.
+        unsafe {
+            let rx = _mm_set1_epi16(r.x as i16);
+            let ry = _mm_set1_epi16(r.y as i16);
+            let rz = _mm_set1_epi16(r.z as i16);
+            let zero = _mm_setzero_si128();
+            for b in 0..blocks {
+                let base = b * LANES;
+                let vx = _mm_loadu_si128(xs.as_ptr().add(base) as *const __m128i);
+                let vy = _mm_loadu_si128(ys.as_ptr().add(base) as *const __m128i);
+                let vz = _mm_loadu_si128(zs.as_ptr().add(base) as *const __m128i);
+                // |a - b| over unsigned 16-bit lanes: one saturating
+                // difference is the answer, the other is zero.
+                let dx = _mm_or_si128(_mm_subs_epu16(vx, rx), _mm_subs_epu16(rx, vx));
+                let dy = _mm_or_si128(_mm_subs_epu16(vy, ry), _mm_subs_epu16(ry, vy));
+                let dz = _mm_or_si128(_mm_subs_epu16(vz, rz), _mm_subs_epu16(rz, vz));
+                // Widen to u32 (interleave with zero) and sum: exact
+                // integers, max 3 * 65535 < 2^18.
+                let lo = _mm_add_epi32(
+                    _mm_add_epi32(_mm_unpacklo_epi16(dx, zero), _mm_unpacklo_epi16(dy, zero)),
+                    _mm_unpacklo_epi16(dz, zero),
+                );
+                let hi = _mm_add_epi32(
+                    _mm_add_epi32(_mm_unpackhi_epi16(dx, zero), _mm_unpackhi_epi16(dy, zero)),
+                    _mm_unpackhi_epi16(dz, zero),
+                );
+                let mut d = [0u32; LANES];
+                _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, lo);
+                _mm_storeu_si128(d.as_mut_ptr().add(4) as *mut __m128i, hi);
+                for (j, dj) in d.into_iter().enumerate() {
+                    sink(base + j, dj);
+                }
+            }
+        }
+        for k in blocks * LANES..n {
+            let d = xs[k].abs_diff(r.x) as u32
+                + ys[k].abs_diff(r.y) as u32
+                + zs[k].abs_diff(r.z) as u32;
+            sink(k, d);
+        }
+    }
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        // SAFETY: SSE2 statically enabled; every load/store touches four
+        // f32 values inside the equal-length slices.
+        unsafe {
+            let va = _mm_set1_ps(a);
+            for c in 0..chunks {
+                let i = c * 4;
+                let vx = _mm_loadu_ps(x.as_ptr().add(i));
+                let vy = _mm_loadu_ps(y.as_ptr().add(i));
+                // mul then add as two separately-rounded ops — exactly
+                // the scalar `y += a * x`, never a fused multiply-add.
+                _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(vy, _mm_mul_ps(va, vx)));
+            }
+        }
+        for i in chunks * 4..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    pub fn relu_in_place(v: &mut [f32]) {
+        let n = v.len();
+        let chunks = n / 4;
+        // SAFETY: SSE2 statically enabled; loads/stores stay inside `v`.
+        unsafe {
+            let zero = _mm_setzero_ps();
+            for c in 0..chunks {
+                let i = c * 4;
+                let x = _mm_loadu_ps(v.as_ptr().add(i));
+                // Mask-select rather than max_ps: `v < 0.0` is false for
+                // NaN and for −0.0, so both pass through like the scalar.
+                let neg = _mm_cmplt_ps(x, zero);
+                _mm_storeu_ps(v.as_mut_ptr().add(i), _mm_andnot_ps(neg, x));
+            }
+        }
+        for o in &mut v[chunks * 4..] {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+
+    pub fn max_in_place(acc: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let chunks = n / 4;
+        // SAFETY: SSE2 statically enabled; loads/stores stay inside the
+        // equal-length slices.
+        unsafe {
+            for c in 0..chunks {
+                let i = c * 4;
+                let va = _mm_loadu_ps(acc.as_ptr().add(i));
+                let vr = _mm_loadu_ps(row.as_ptr().add(i));
+                // Select on `row > acc` — the scalar comparison — so an
+                // accumulated NaN is kept and −0.0 never displaces +0.0
+                // (max_ps would get both wrong).
+                let gt = _mm_cmpgt_ps(vr, va);
+                let res = _mm_or_ps(_mm_and_ps(gt, vr), _mm_andnot_ps(gt, va));
+                _mm_storeu_ps(acc.as_mut_ptr().add(i), res);
+            }
+        }
+        for (o, &v) in acc[chunks * 4..].iter_mut().zip(&row[chunks * 4..]) {
+            if v > *o {
+                *o = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_round_trips_and_parses() {
+        assert_eq!("auto".parse::<SimdMode>().unwrap(), SimdMode::Auto);
+        assert_eq!("scalar".parse::<SimdMode>().unwrap(), SimdMode::Scalar);
+        assert!("avx999".parse::<SimdMode>().is_err());
+        assert_eq!(SimdMode::Auto.to_string(), "auto");
+        assert_eq!(SimdMode::Scalar.to_string(), "scalar");
+    }
+
+    #[test]
+    fn scalar_mode_forces_scalar_backend() {
+        let saved = mode();
+        set_mode(SimdMode::Scalar);
+        assert_eq!(active_backend(), "scalar");
+        set_mode(SimdMode::Auto);
+        if vector_available() {
+            assert_eq!(active_backend(), "sse2");
+        } else {
+            assert_eq!(active_backend(), "scalar");
+        }
+        set_mode(saved);
+    }
+
+    #[test]
+    fn l1_backends_agree_on_tailed_length() {
+        // 13 = one full 8-lane block plus a 5-element tail.
+        let xs: Vec<u16> = (0..13).map(|i| (i * 4099) as u16).collect();
+        let ys: Vec<u16> = (0..13).map(|i| (i * 257 + 9) as u16).collect();
+        let zs: Vec<u16> = (0..13).map(|i| 65_535 - (i * 31) as u16).collect();
+        let r = QPoint3 { x: 1000, y: 60_000, z: 3 };
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        l1_lanes_scalar(&xs, &ys, &zs, r, |k, d| a.push((k, d)));
+        l1_lanes_vector(&xs, &ys, &zs, r, |k, d| b.push((k, d)));
+        assert_eq!(a, b);
+        for (k, d) in a {
+            let want = xs[k].abs_diff(r.x) as u32
+                + ys[k].abs_diff(r.y) as u32
+                + zs[k].abs_diff(r.z) as u32;
+            assert_eq!(d, want, "member {k}");
+        }
+    }
+
+    #[test]
+    fn float_backends_preserve_nan_and_negative_zero() {
+        let mut a = vec![-1.0f32, -0.0, f32::NAN, 2.5, -3.0, 0.0, -0.5];
+        let mut b = a.clone();
+        relu_in_place_scalar(&mut a);
+        relu_in_place_vector(&mut b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        assert!(a[2].is_nan(), "ReLU must pass NaN through");
+        assert_eq!(a[1].to_bits(), (-0.0f32).to_bits(), "ReLU must pass -0.0 through");
+
+        let mut ma = vec![f32::NAN, -0.0, 1.0, f32::NEG_INFINITY, 0.5];
+        let mut mb = ma.clone();
+        let row = [0.0f32, 0.0, f32::NAN, -7.0, 0.5];
+        max_in_place_scalar(&mut ma, &row);
+        max_in_place_vector(&mut mb, &row);
+        assert_eq!(bits(&ma), bits(&mb));
+        assert!(ma[0].is_nan(), "accumulated NaN must not be displaced");
+        assert_eq!(ma[1].to_bits(), (-0.0f32).to_bits(), "0.0 > -0.0 is false");
+    }
+
+    #[test]
+    fn axpy_backends_bit_identical() {
+        let x: Vec<f32> = (0..11).map(|i| (i as f32 - 5.0) * 0.3).collect();
+        let mut a: Vec<f32> = (0..11).map(|i| (i as f32) * 0.7 - 2.0).collect();
+        let mut b = a.clone();
+        axpy_scalar(1.7, &x, &mut a);
+        axpy_vector(1.7, &x, &mut b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn pin_current_thread_never_panics() {
+        // Pinning is best-effort: success depends on the host's CPU set,
+        // but the call must be safe on any cpu index.
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(4096);
+    }
+}

@@ -181,6 +181,32 @@ fn warm_knn_is_allocator_silent() {
     assert_eq!(grew, 0, "warm pruned kNN hit the allocator {grew} times");
 }
 
+/// The open-loop load model rides the same warm-buffer discipline: once
+/// [`pc2im::coordinator::OpenLoopSim`] has simulated one schedule, every
+/// replay — arrival generation, per-request timestamping, queue-depth
+/// histogram and percentile accounting included — makes **zero** calls
+/// into the global allocator, even under different seeds and offered
+/// rates (the buffers are sized by request count, not by schedule).
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_open_loop_sim_is_allocator_silent() {
+    use pc2im::alloc_counter::allocation_count;
+    use pc2im::coordinator::OpenLoopSim;
+
+    let service = vec![1.5e-4f64; 256];
+    let mut sim = OpenLoopSim::new();
+    sim.simulate(&service, 8_000.0, 42, 4, 8); // warm
+    let before = allocation_count();
+    for seed in 42..46u64 {
+        for rate in [2_000.0, 8_000.0, 40_000.0] {
+            let stats = sim.simulate(&service, rate, seed, 4, 8);
+            assert_eq!(stats.completed + stats.shed, service.len());
+        }
+    }
+    let grew = allocation_count() - before;
+    assert_eq!(grew, 0, "warm open-loop replay hit the allocator {grew} times");
+}
+
 #[test]
 fn serve_lanes_are_isolated_across_requests() {
     let (a, b) = clouds_ab();

@@ -1,0 +1,206 @@
+//! Open-loop serving contracts, tested hermetically (no artifacts):
+//!
+//! 1. **Determinism** — the same seed reproduces the Poisson arrival
+//!    schedule, every per-request timestamp, the load metrics and both
+//!    digests bit-for-bit across repeat runs, warm or cold.
+//! 2. **Tail-latency shape** — p50 ≤ p99 ≤ p999 ≤ max at every offered
+//!    rate, and the in-system population never exceeds
+//!    `queue_depth + workers`.
+//! 3. **Digest invariance** — the serve stats digest is identical across
+//!    {1,4} workers × {bit-exact,fast} × {SIMD,scalar}: neither the load
+//!    model nor the kernel backend may reach the numeric stream.
+//! 4. **Shedding is a load-model outcome** — shed requests still carry
+//!    real classifications; only their virtual timestamps are infinite.
+
+use pc2im::config::{PipelineConfig, ServeConfig};
+use pc2im::coordinator::serve::{poisson_arrivals_into, stats_digest};
+use pc2im::coordinator::{PipelineBuilder, ServeEngine};
+use pc2im::engine::Fidelity;
+use pc2im::pointcloud::synthetic::make_labelled_batch;
+use pc2im::simd::{self, SimdMode};
+
+fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
+    PipelineConfig {
+        artifacts_dir: std::env::temp_dir()
+            .join("pc2im-serve-latency-no-artifacts")
+            .to_string_lossy()
+            .into_owned(),
+        fidelity,
+        ..PipelineConfig::default()
+    }
+}
+
+fn engine(fidelity: Fidelity, workers: usize, queue_depth: usize) -> ServeEngine {
+    PipelineBuilder::from_config(hermetic_cfg(fidelity))
+        .build_serve(ServeConfig { workers, queue_depth, ..ServeConfig::default() })
+        .unwrap()
+}
+
+/// ~0.166 ms simulated latency per 1024-point cloud means one worker
+/// sustains about 6000 req/s; the rates below sit under, near and far
+/// over that capacity.
+const UNDERLOAD: f64 = 2_000.0;
+const NEAR: f64 = 6_000.0;
+const OVERLOAD: f64 = 40_000.0;
+
+#[test]
+fn arrival_schedule_is_deterministic_and_monotone() {
+    let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+    poisson_arrivals_into(NEAR, 42, 512, &mut a);
+    poisson_arrivals_into(NEAR, 42, 512, &mut b);
+    poisson_arrivals_into(NEAR, 43, 512, &mut c);
+    assert_eq!(a, b, "same seed must reproduce the arrival schedule bit-for-bit");
+    assert_ne!(a, c, "different seeds must give different schedules");
+    let mut prev = 0.0f64;
+    for (i, &t) in a.iter().enumerate() {
+        assert!(t.is_finite() && t >= prev, "arrival {i} regressed: {t} < {prev}");
+        prev = t;
+    }
+}
+
+#[test]
+fn open_loop_runs_are_bit_identical_across_repeats() {
+    let mut eng = engine(Fidelity::Fast, 2, 4);
+    let n_points = eng.pipeline().meta().model.n_points;
+    let (clouds, labels) = make_labelled_batch(12, n_points, 4100);
+    let hw = *eng.pipeline().hardware();
+
+    let first = eng.run_open_loop(&clouds, &labels, NEAR, 4100).unwrap();
+    // Warm repeat on the same engine AND a cold repeat on a fresh one.
+    let warm = eng.run_open_loop(&clouds, &labels, NEAR, 4100).unwrap();
+    let mut fresh = engine(Fidelity::Fast, 2, 4);
+    let cold = fresh.run_open_loop(&clouds, &labels, NEAR, 4100).unwrap();
+
+    for (name, other) in [("warm", &warm), ("cold", &cold)] {
+        assert_eq!(first.load, other.load, "{name}: load metrics drifted");
+        assert_eq!(first.load.digest(), other.load.digest(), "{name}: load digest drifted");
+        assert_eq!(
+            stats_digest(&first.serve.stats, &hw),
+            stats_digest(&other.serve.stats, &hw),
+            "{name}: stats digest drifted"
+        );
+        for (i, (r1, r2)) in first.serve.results.iter().zip(&other.serve.results).enumerate() {
+            assert_eq!(r1.logits, r2.logits, "{name}: cloud {i} logits drifted");
+            assert_eq!(
+                r1.stats.enqueue_s.to_bits(),
+                r2.stats.enqueue_s.to_bits(),
+                "{name}: cloud {i} enqueue timestamp drifted"
+            );
+            assert_eq!(
+                r1.stats.dequeue_s.to_bits(),
+                r2.stats.dequeue_s.to_bits(),
+                "{name}: cloud {i} dequeue timestamp drifted"
+            );
+            assert_eq!(
+                r1.stats.complete_s.to_bits(),
+                r2.stats.complete_s.to_bits(),
+                "{name}: cloud {i} complete timestamp drifted"
+            );
+        }
+    }
+    // A different seed really changes the schedule (the repeat equality
+    // above is not vacuous).
+    let other_seed = eng.run_open_loop(&clouds, &labels, NEAR, 4101).unwrap();
+    assert_ne!(first.load.digest(), other_seed.load.digest());
+}
+
+#[test]
+fn percentiles_monotone_and_in_system_bounded_at_every_rate() {
+    let (workers, depth) = (2usize, 4usize);
+    let mut eng = engine(Fidelity::Fast, workers, depth);
+    let n_points = eng.pipeline().meta().model.n_points;
+    let (clouds, labels) = make_labelled_batch(24, n_points, 4200);
+    for rate in [UNDERLOAD, NEAR, OVERLOAD] {
+        let report = eng.run_open_loop(&clouds, &labels, rate, 4200).unwrap();
+        let load = &report.load;
+        assert!(
+            load.p50_s <= load.p99_s && load.p99_s <= load.p999_s,
+            "rate {rate}: percentiles not monotone: {load:?}"
+        );
+        assert!(load.p999_s <= load.max_latency_s, "rate {rate}: p999 above max: {load:?}");
+        assert!(
+            load.max_in_system <= depth + workers,
+            "rate {rate}: {} in system exceeds queue_depth + workers = {}",
+            load.max_in_system,
+            depth + workers
+        );
+        assert_eq!(load.queue_depth_hist.len(), depth + 1, "rate {rate}");
+        assert_eq!(
+            load.queue_depth_hist.iter().sum::<u64>(),
+            clouds.len() as u64,
+            "rate {rate}: histogram must sample every arrival"
+        );
+        assert_eq!(load.completed + load.shed, clouds.len(), "rate {rate}");
+    }
+}
+
+#[test]
+fn digest_invariant_across_workers_tiers_and_simd_modes() {
+    let (clouds, labels) = make_labelled_batch(4, 1024, 4300);
+    let mut reference: Option<(String, Vec<f32>, Vec<usize>)> = None;
+    for fidelity in Fidelity::ALL {
+        for workers in [1usize, 4] {
+            for mode in [SimdMode::Auto, SimdMode::Scalar] {
+                simd::set_mode(mode);
+                let mut eng = engine(fidelity, workers, 4);
+                let hw = *eng.pipeline().hardware();
+                let report = eng.run_open_loop(&clouds, &labels, NEAR, 4300).unwrap();
+                let digest = stats_digest(&report.serve.stats, &hw);
+                let logits = report.serve.results[0].logits.clone();
+                let preds = report.serve.preds();
+                match &reference {
+                    None => reference = Some((digest, logits, preds)),
+                    Some((d, l, p)) => {
+                        assert_eq!(
+                            d, &digest,
+                            "digest depends on fidelity={fidelity} workers={workers} \
+                             simd={mode}"
+                        );
+                        assert_eq!(
+                            l, &logits,
+                            "logits depend on fidelity={fidelity} workers={workers} \
+                             simd={mode}"
+                        );
+                        assert_eq!(p, &preds, "preds depend on the cell");
+                    }
+                }
+            }
+        }
+    }
+    simd::set_mode(SimdMode::Auto);
+}
+
+#[test]
+fn overload_sheds_but_still_classifies_everything() {
+    let mut eng = engine(Fidelity::Fast, 1, 2);
+    let n_points = eng.pipeline().meta().model.n_points;
+    let (clouds, labels) = make_labelled_batch(16, n_points, 4400);
+    let hw = *eng.pipeline().hardware();
+    let report = eng.run_open_loop(&clouds, &labels, OVERLOAD, 4400).unwrap();
+    assert!(report.load.shed > 0, "6x overload on one worker must shed: {:?}", report.load);
+    let mut saw_shed = false;
+    for (i, r) in report.serve.results.iter().enumerate() {
+        assert_eq!(r.logits.len(), 8, "cloud {i}: shed request lost its classification");
+        assert!(r.stats.enqueue_s.is_finite(), "cloud {i}: arrivals are always finite");
+        if r.stats.dequeue_s.is_infinite() {
+            saw_shed = true;
+            assert!(r.stats.complete_s.is_infinite(), "cloud {i}: shed but completed");
+        } else {
+            assert_eq!(
+                r.stats.complete_s,
+                r.stats.dequeue_s + r.stats.simulated_latency_s(&hw),
+                "cloud {i}: completion must be dequeue + simulated service"
+            );
+        }
+    }
+    assert!(saw_shed, "shed counter and per-request timestamps disagree");
+    // The open-loop digest equals the closed-loop digest at the same
+    // scale: load modeling must never touch the numeric stream.
+    let mut closed = engine(Fidelity::Fast, 1, 2);
+    let closed_report = closed.run(&clouds, &labels).unwrap();
+    assert_eq!(
+        stats_digest(&report.serve.stats, &hw),
+        stats_digest(&closed_report.stats, &hw),
+        "open-loop vs closed-loop digests diverged"
+    );
+}

@@ -1,0 +1,159 @@
+//! SIMD ↔ scalar bit-identity, property-style (the same hand-rolled
+//! generator harness as `property_invariants.rs`: seeded [`Rng64`] cases,
+//! failing case index in every assert message).
+//!
+//! The contract under test is `crate::simd`'s: the `_vector` and
+//! `_scalar` entry points of every kernel return **bit-identical**
+//! results — exact integers for the L1 distances, identical IEEE-754
+//! rounding sequences for axpy, identical NaN/−0.0 semantics for ReLU
+//! and running max — over randomized lengths including the
+//! non-multiple-of-lane-width tails, and therefore so do the MLP
+//! microkernels and the serve digest built on top of them.
+
+use pc2im::quant::QPoint3;
+use pc2im::rng::Rng64;
+use pc2im::runtime::reference::{grouped_max_ref_into, mlp_layer_ref_into, DenseLayer};
+use pc2im::simd::{self, SimdMode};
+
+const CASES: u64 = 60;
+
+/// f32 values that stress the bit-identity rules: ordinary magnitudes
+/// plus the special values (±0.0, subnormal, huge, NaN cannot appear in
+/// real activations but the kernels must not canonicalize it away).
+fn gen_f32(rng: &mut Rng64, allow_nan: bool) -> f32 {
+    match rng.below(if allow_nan { 10 } else { 9 }) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::MIN_POSITIVE / 2.0, // subnormal
+        3 => 3.4e37,
+        4 => -3.4e37,
+        9 => f32::NAN,
+        _ => (rng.gaussian()) * 10f32.powi(rng.below(7) as i32 - 3),
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn l1_lanes_backends_bit_identical_over_random_lengths() {
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0x51D0 + case);
+        // 0..=67 covers empty, sub-block, exact-block and tailed lengths.
+        let n = rng.range_usize(0, 68);
+        let gen_u16 = |rng: &mut Rng64| match rng.below(8) {
+            0 => 0u16,
+            1 => u16::MAX,
+            _ => rng.below(1 << 16) as u16,
+        };
+        let xs: Vec<u16> = (0..n).map(|_| gen_u16(&mut rng)).collect();
+        let ys: Vec<u16> = (0..n).map(|_| gen_u16(&mut rng)).collect();
+        let zs: Vec<u16> = (0..n).map(|_| gen_u16(&mut rng)).collect();
+        let r = QPoint3 { x: gen_u16(&mut rng), y: gen_u16(&mut rng), z: gen_u16(&mut rng) };
+        let mut scalar = Vec::new();
+        let mut vector = Vec::new();
+        simd::l1_lanes_scalar(&xs, &ys, &zs, r, |k, d| scalar.push((k, d)));
+        simd::l1_lanes_vector(&xs, &ys, &zs, r, |k, d| vector.push((k, d)));
+        assert_eq!(scalar, vector, "case {case} (n={n}): backends disagree");
+        assert_eq!(scalar.len(), n, "case {case}: missing emissions");
+        for (i, &(k, d)) in scalar.iter().enumerate() {
+            assert_eq!(k, i, "case {case}: emission order broke at {i}");
+            let want = xs[k].abs_diff(r.x) as u32
+                + ys[k].abs_diff(r.y) as u32
+                + zs[k].abs_diff(r.z) as u32;
+            assert_eq!(d, want, "case {case}: wrong distance for member {k}");
+        }
+    }
+}
+
+#[test]
+fn axpy_backends_bit_identical_over_random_lengths() {
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0xA1971 + case);
+        let n = rng.range_usize(0, 70);
+        let a = gen_f32(&mut rng, false);
+        let x: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, false)).collect();
+        let y0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, false)).collect();
+        let mut ys = y0.clone();
+        let mut yv = y0.clone();
+        simd::axpy_scalar(a, &x, &mut ys);
+        simd::axpy_vector(a, &x, &mut yv);
+        assert_eq!(bits(&ys), bits(&yv), "case {case} (n={n}, a={a}): axpy bits diverged");
+    }
+}
+
+#[test]
+fn relu_and_max_backends_bit_identical_including_specials() {
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0x3E1 + case);
+        let n = rng.range_usize(0, 70);
+        let v0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
+        let mut vs = v0.clone();
+        let mut vv = v0.clone();
+        simd::relu_in_place_scalar(&mut vs);
+        simd::relu_in_place_vector(&mut vv);
+        assert_eq!(bits(&vs), bits(&vv), "case {case} (n={n}): ReLU bits diverged");
+
+        let acc0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
+        let row: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
+        let mut accs = acc0.clone();
+        let mut accv = acc0.clone();
+        simd::max_in_place_scalar(&mut accs, &row);
+        simd::max_in_place_vector(&mut accv, &row);
+        assert_eq!(bits(&accs), bits(&accv), "case {case} (n={n}): max bits diverged");
+    }
+}
+
+/// The composed contract: the reference executor's MLP microkernels —
+/// dense layer (axpy + ReLU over the zero-skip row loop) and grouped max
+/// pooling — are bit-identical under the two process-wide [`SimdMode`]s,
+/// over random shapes whose channel counts are deliberately not
+/// multiples of the vector width.
+#[test]
+fn mlp_microkernels_bit_identical_across_modes() {
+    let saved = simd::mode();
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0x317D + case);
+        let rows = rng.range_usize(1, 7);
+        let cin = rng.range_usize(1, 9);
+        let cout = rng.range_usize(1, 39); // tails: rarely a multiple of 4
+        let w: Vec<f32> = (0..cin * cout).map(|_| gen_f32(&mut rng, false)).collect();
+        let b: Vec<f32> = (0..cout).map(|_| gen_f32(&mut rng, false)).collect();
+        let layer = DenseLayer::new(cin, cout, w, b).unwrap();
+        // Inject exact zeros so the sparsity skip runs in both modes.
+        let x: Vec<f32> = (0..rows * cin)
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { gen_f32(&mut rng, false) })
+            .collect();
+        let relu = rng.below(2) == 0;
+
+        simd::set_mode(SimdMode::Scalar);
+        let mut dense_scalar = Vec::new();
+        mlp_layer_ref_into(&x, rows, &layer, relu, &mut dense_scalar);
+        simd::set_mode(SimdMode::Auto);
+        let mut dense_auto = Vec::new();
+        mlp_layer_ref_into(&x, rows, &layer, relu, &mut dense_auto);
+        assert_eq!(
+            bits(&dense_scalar),
+            bits(&dense_auto),
+            "case {case} (rows={rows} cin={cin} cout={cout} relu={relu}): dense bits diverged"
+        );
+
+        let s = rng.range_usize(1, 5);
+        let k = rng.range_usize(1, 6);
+        let c = rng.range_usize(1, 23);
+        let pool_in: Vec<f32> = (0..s * k * c).map(|_| gen_f32(&mut rng, false)).collect();
+        simd::set_mode(SimdMode::Scalar);
+        let mut pool_scalar = Vec::new();
+        grouped_max_ref_into(&pool_in, s, k, c, &mut pool_scalar);
+        simd::set_mode(SimdMode::Auto);
+        let mut pool_auto = Vec::new();
+        grouped_max_ref_into(&pool_in, s, k, c, &mut pool_auto);
+        assert_eq!(
+            bits(&pool_scalar),
+            bits(&pool_auto),
+            "case {case} (s={s} k={k} c={c}): grouped-max bits diverged"
+        );
+    }
+    simd::set_mode(saved);
+}

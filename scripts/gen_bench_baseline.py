@@ -21,7 +21,118 @@ Run from the repo root:  python3 scripts/gen_bench_baseline.py
 """
 
 import json
+import math
 import os
+
+# ---- deterministic PRNG mirror (rust/src/rng.rs) ----
+
+_M64 = (1 << 64) - 1
+
+
+def _rotl(v: int, k: int) -> int:
+    return ((v << k) | (v >> (64 - k))) & _M64
+
+
+class Rng64:
+    """Exact mirror of the crate's xoshiro256** (SplitMix64 seeding)."""
+
+    def __init__(self, seed: int):
+        x = (seed + 0x9E3779B97F4A7C15) & _M64
+
+        def nxt():
+            nonlocal x
+            x = (x + 0x9E3779B97F4A7C15) & _M64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+            return z ^ (z >> 31)
+
+        self.s = [nxt(), nxt(), nxt(), nxt()]
+
+    def next_u64(self) -> int:
+        s = self.s
+        r = (_rotl((s[1] * 5) & _M64, 7) * 9) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) / (1 << 53)
+
+
+# ---- open-loop queue-sim mirror (rust/src/coordinator/serve.rs) ----
+
+ARRIVAL_SEED_SALT = 0x4F50454E4C4F4F50  # ASCII "OPENLOOP"
+
+
+def poisson_arrivals(rate: float, seed: int, n: int):
+    rng = Rng64(seed ^ ARRIVAL_SEED_SALT)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += -math.log(1.0 - rng.f64()) / rate
+        out.append(t)
+    return out
+
+
+def _percentile(sorted_v, p: float) -> float:
+    if not sorted_v:
+        return 0.0
+    return sorted_v[int(p * (len(sorted_v) - 1))]
+
+
+def open_loop_sim(service_s, rate, seed, workers, queue_depth):
+    """Mirror of OpenLoopSim::simulate: FIFO of capacity queue_depth in
+    front of `workers` virtual servers, arrivals in schedule order,
+    earliest-free server lowest-index-first, shed when the queue is full
+    at arrival."""
+    n = len(service_s)
+    arrivals = poisson_arrivals(rate, seed, n)
+    server_free = [0.0] * workers
+    waiting, head = [], 0
+    hist = [0] * (queue_depth + 1)
+    completed = shed = backpressured = max_in_system = 0
+    latencies = []
+    for i, t in enumerate(arrivals):
+        while head < len(waiting) and waiting[head] <= t:
+            head += 1
+        queued = len(waiting) - head
+        hist[queued] += 1
+        busy = sum(1 for f in server_free if f > t)
+        if queued >= queue_depth:
+            shed += 1
+            max_in_system = max(max_in_system, queued + busy)
+            continue
+        s = min(range(workers), key=lambda j: server_free[j])
+        free = server_free[s]
+        if free > t:
+            backpressured += 1
+            waiting.append(free)
+            start = free
+        else:
+            start = t
+        done = start + service_s[i]
+        server_free[s] = done
+        completed += 1
+        latencies.append(done - t)
+        max_in_system = max(max_in_system, queued + busy + 1)
+    latencies.sort()
+    return {
+        "offered": n,
+        "completed": completed,
+        "shed": shed,
+        "backpressured": backpressured,
+        "max_in_system": max_in_system,
+        "queue_depth_hist": hist,
+        "p50_s": _percentile(latencies, 0.50),
+        "p99_s": _percentile(latencies, 0.99),
+        "p999_s": _percentile(latencies, 0.999),
+        "max_s": latencies[-1] if latencies else 0.0,
+    }
 
 # ---- Table II hardware + energy constants (rust/src/config, rust/src/energy) ----
 
@@ -314,16 +425,46 @@ def main():
                 str(w): round(w / lat, 2) for w in worker_sweep
             },
         }
+    # Latency-under-load rows: the open-loop queue sim replayed over each
+    # scale's analytic service time at a utilization sweep (offered rate =
+    # utilization * workers / latency). Virtual-clock seconds, so the
+    # numbers are machine-independent like everything else in this file.
+    ol_workers, ol_depth, ol_requests, ol_seed = 4, 8, 512, 0
+    utilization_sweep = [0.5, 0.9, 1.2]
+    latency_under_load = {}
+    for name, net in scales:
+        lat = latency_s(pc2im_run(net))
+        rows = []
+        for util in utilization_sweep:
+            rate = util * ol_workers / lat
+            r = open_loop_sim([lat] * ol_requests, rate, ol_seed, ol_workers, ol_depth)
+            rows.append({
+                "utilization": util,
+                "arrival_rate_per_s": round(rate, 2),
+                "offered": r["offered"],
+                "completed": r["completed"],
+                "shed": r["shed"],
+                "backpressured": r["backpressured"],
+                "max_in_system": r["max_in_system"],
+                "p50_ms": round(r["p50_s"] * 1e3, 6),
+                "p99_ms": round(r["p99_s"] * 1e3, 6),
+                "p999_ms": round(r["p999_s"] * 1e3, 6),
+                "max_ms": round(r["max_s"] * 1e3, 6),
+            })
+        latency_under_load[name] = rows
     serve_out = {
-        "schema": 1,
+        "schema": 2,
         "source": "scripts/gen_bench_baseline.py — serving-layer mirror of "
                   "rust/src/coordinator/serve.rs over the accel models",
         "note": (
             "Modeled accelerator-side serving throughput: each worker lane is one "
             "simulated PC2IM instance, so clouds/sec = workers / per-cloud simulated "
             "latency (ideal linear scaling; the shared-executor host path saturates "
-            "earlier). Host clouds/sec is machine-dependent and recorded by the CI "
-            "bench smoke lane (benches/serve_throughput.rs, PC2IM_BENCH_JSON)."
+            "earlier). Schema 2 adds latency_under_load: the deterministic open-loop "
+            "queue sim (seeded Poisson arrivals, virtual clock) replayed over each "
+            "scale's analytic service time. Host clouds/sec is machine-dependent and "
+            "recorded by the CI bench smoke lane (benches/serve_throughput.rs, "
+            "PC2IM_BENCH_JSON)."
         ),
         "engine": {
             "queue_contract": "in-flight clouds <= queue_depth + workers",
@@ -331,8 +472,25 @@ def main():
                 "n", "correct", "preproc_cycles", "feature_cycles", "energy_uj",
             ],
             "worker_sweep": worker_sweep,
+            "open_loop": {
+                "arrival_model": "Poisson: gaps -ln(1 - u)/rate from the crate's "
+                                 "xoshiro256** (seed XOR ASCII 'OPENLOOP')",
+                "clock": "virtual seconds (simulated accelerator latency as the "
+                         "service time), bit-reproducible per seed",
+                "shed_rule": "arrival with queue_depth requests already waiting is "
+                             "shed; open-loop clients are never blocked",
+                "percentile_rule": "nearest-rank: sorted[int(p * (len - 1))]",
+                "sim_params": {
+                    "workers": ol_workers,
+                    "queue_depth": ol_depth,
+                    "requests": ol_requests,
+                    "seed": ol_seed,
+                    "utilization_sweep": utilization_sweep,
+                },
+            },
         },
         "serve_throughput": serve_scales,
+        "latency_under_load": latency_under_load,
     }
     serve_path = os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_serve.json"
@@ -357,6 +515,17 @@ def main():
         one = s["modeled_clouds_per_s"]["1"]
         assert abs(one * s["pc2im_latency_ms"] / 1e3 - 1.0) < 0.01, (name, s)
         assert abs(s["modeled_clouds_per_s"]["8"] / one - 8.0) < 0.05, (name, s)
+    # open-loop sanity: every row conserves requests with monotone
+    # percentiles; half-utilization sheds nothing, 1.2x overload sheds,
+    # and the in-system population respects the queue contract.
+    for name, rows in latency_under_load.items():
+        for r in rows:
+            assert r["completed"] + r["shed"] == r["offered"], (name, r)
+            assert r["p50_ms"] <= r["p99_ms"] <= r["p999_ms"] <= r["max_ms"], (name, r)
+            assert r["max_in_system"] <= ol_depth + ol_workers, (name, r)
+        assert rows[0]["shed"] == 0, (name, rows[0])
+        assert rows[-1]["shed"] > 0, (name, rows[-1])
+        assert rows[0]["p99_ms"] <= rows[-1]["p99_ms"], (name, rows)
     # ---- BENCH_fidelity.json: the engine-tier axis of the serve bench ----
     #
     # Simulated metrics (cycles, ledgers, digests, modeled clouds/sec) are
