@@ -15,6 +15,12 @@
 //! `stats_digest` actually prints, and the presence/shape of the
 //! latency-under-load rows are all checked before any cell runs.
 //!
+//! The temporal-streaming axis (`ServeEngine::run_stream`) serves
+//! correlated sweeps through persistent per-session indices and asserts
+//! the stream digest equals stateless serving of the flattened frames;
+//! the committed BENCH_stream.json anchor is cross-pinned against the
+//! Rust sweep generator before any cell runs.
+//!
 //! Run with: `cargo bench --bench serve_throughput`
 //! (CI runs it in smoke mode — 1 iteration, reduced sweep — via
 //! `PC2IM_BENCH_SMOKE=1`; `PC2IM_BENCH_JSON=<path>` appends one JSON line
@@ -31,7 +37,8 @@ use pc2im::config::{HardwareConfig, ServeConfig};
 use pc2im::coordinator::serve::stats_digest;
 use pc2im::coordinator::{BatchStats, PipelineBuilder};
 use pc2im::engine::Fidelity;
-use pc2im::pointcloud::synthetic::make_labelled_batch;
+use pc2im::pointcloud::synthetic::{make_labelled_batch, make_sweep, make_sweep_batch};
+use pc2im::pointcloud::PointCloud;
 use pc2im::runtime::json::{self, Value};
 
 /// The workload seed shared by every cell (same stream prefix per batch
@@ -110,8 +117,69 @@ fn check_bench_serve_contract() {
     }
 }
 
+/// Fail loudly if BENCH_stream.json and the Rust sweep generator
+/// disagree: the anchor's pinned sweep digests must match `make_sweep`
+/// bit-for-bit (they are produced by the exact Python mirror in
+/// `scripts/gen_bench_baseline.py`), and its modeled steady-state frames
+/// must do strictly fewer host ops than cold frames for drift <= 10% at
+/// every Table-I scale.
+fn check_bench_stream_contract() {
+    let text = std::fs::read_to_string("BENCH_stream.json")
+        .expect("BENCH_stream.json must sit at the repo root");
+    let doc = json::parse(&text).expect("BENCH_stream.json must parse");
+    assert_eq!(
+        doc.get("schema").and_then(Value::as_usize),
+        Some(1),
+        "BENCH_stream.json schema drifted from this harness (want 1); \
+         regenerate with scripts/gen_bench_baseline.py"
+    );
+
+    let wl = doc.get("workload").expect("BENCH_stream.json: workload missing");
+    let seed = wl.get("seed").and_then(Value::as_usize).expect("workload.seed") as u64;
+    let frames = wl.get("frames").and_then(Value::as_usize).expect("workload.frames");
+    let drift = wl.get("drift").and_then(Value::as_f64).expect("workload.drift");
+    let Some(Value::Obj(digests)) = wl.get("sweep_digests") else {
+        panic!("BENCH_stream.json: workload.sweep_digests must be an object");
+    };
+    assert!(!digests.is_empty(), "BENCH_stream.json: no pinned sweep digests");
+    for (scale, pinned) in digests {
+        let n: usize = scale.parse().expect("sweep_digests keys are point counts");
+        let live = format!("{:#018x}", make_sweep(seed, frames, n, drift).digest);
+        assert_eq!(
+            pinned.as_str().expect("sweep digests are hex strings"),
+            live,
+            "BENCH_stream.json sweep digest for n={scale} drifted from make_sweep: \
+             the Python mirror and the Rust generator disagree"
+        );
+    }
+
+    let Some(Value::Obj(rows_by_scale)) = doc.get("stream_host_ops") else {
+        panic!("BENCH_stream.json: stream_host_ops must be an object");
+    };
+    for (scale, rows) in rows_by_scale {
+        let rows = rows.as_arr().unwrap_or_else(|| panic!("{scale}: rows must be an array"));
+        assert!(!rows.is_empty(), "{scale}: empty stream_host_ops");
+        for row in rows {
+            let num = |k: &str| {
+                row.get(k)
+                    .and_then(Value::as_f64)
+                    .unwrap_or_else(|| panic!("{scale}: stream row missing key {k:?}"))
+            };
+            let (d, cold, steady) = (num("drift"), num("cold_frame"), num("steady_frame"));
+            if d <= 0.10 {
+                assert!(
+                    steady < cold,
+                    "{scale}: steady-state frame at drift {d} must do strictly fewer \
+                     modeled host ops than a cold frame ({steady} >= {cold})"
+                );
+            }
+        }
+    }
+}
+
 fn main() {
     check_bench_serve_contract();
+    check_bench_stream_contract();
 
     let smoke = harness::smoke_mode();
     let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
@@ -197,5 +265,55 @@ fn main() {
             );
             check(batch, digest, &name);
         }
+    }
+
+    harness::header("temporal streaming (persistent sessions x workers)");
+    let (sessions, frames) = if smoke { (2usize, 4usize) } else { (4, 8) };
+    for &workers in worker_sweep {
+        let serve_cfg = ServeConfig { workers, queue_depth: 8, ..ServeConfig::default() };
+        let mut engine = PipelineBuilder::new()
+            .fidelity(Fidelity::Fast)
+            .build_serve(serve_cfg)
+            .expect("serving engine must build hermetically");
+        let n_points = engine.pipeline().meta().model.n_points;
+        let hw = *engine.pipeline().hardware();
+        let sweeps = make_sweep_batch(sessions, frames, n_points, STREAM_SEED, 0.05);
+        // The shared-digest check: warm stream serving must print the
+        // same stats digest as stateless serving of the flattened frames.
+        let clouds: Vec<PointCloud> =
+            sweeps.iter().flat_map(|s| s.frames.iter().cloned()).collect();
+        let labels: Vec<i32> =
+            sweeps.iter().flat_map(|s| vec![s.label as i32; s.frames.len()]).collect();
+        let mut cold_engine = PipelineBuilder::new()
+            .fidelity(Fidelity::Fast)
+            .build_serve(serve_cfg)
+            .expect("serving engine must build hermetically");
+        let cold = cold_engine.run(&clouds, &labels).expect("stateless serve run");
+        let cold_digest = stats_digest(&cold.stats, &hw);
+
+        let total = sessions * frames;
+        let name = format!("serve stream workers={workers} sessions={sessions} frames={frames}");
+        let mut digest = String::new();
+        let mut reused = 0u64;
+        let mean = harness::bench(&name, iters, || {
+            let report = engine.run_stream(&sweeps).expect("stream run");
+            digest = stats_digest(&report.stats, &hw);
+            reused = report.stats.index_reused;
+            report.results.len()
+        });
+        println!(
+            "{:56} {:>10.2} clouds/sec (index reused {reused}/{total})",
+            "",
+            total as f64 / mean.max(1e-12)
+        );
+        assert_eq!(
+            digest, cold_digest,
+            "{name}: stream digest must match stateless serving of the same frames"
+        );
+        assert_eq!(
+            reused as usize,
+            sessions * (frames - 1),
+            "{name}: every warm frame at 5% drift must reuse its session index"
+        );
     }
 }

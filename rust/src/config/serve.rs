@@ -43,6 +43,21 @@ pub struct ServeConfig {
     /// serving (`--arrival-rate R`). Ignored (and allowed to stay 0) in
     /// closed-loop mode.
     pub arrival_rate: f64,
+    /// Temporal-streaming mode (`--stream`): the synthetic workload
+    /// becomes `n_clouds` correlated sweeps of [`ServeConfig::frames`]
+    /// frames each, served with sticky session-to-lane routing and
+    /// persistent per-session indices
+    /// ([`crate::coordinator::ServeEngine::run_stream`]). Composes with
+    /// [`ServeConfig::open_loop`].
+    pub stream: bool,
+    /// Frames per sweep in stream mode (`--frames F`). Must be at least
+    /// 1 when `stream` is set; ignored otherwise.
+    pub frames: usize,
+    /// Per-frame drift of the synthetic sweeps (`--drift D`): the seeded
+    /// fraction of points perturbed between consecutive frames (half
+    /// jittered in place, half replaced). Must be finite and in [0, 1]
+    /// when `stream` is set; ignored otherwise.
+    pub drift: f64,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +69,9 @@ impl Default for ServeConfig {
             seed: 0,
             open_loop: false,
             arrival_rate: 0.0,
+            stream: false,
+            frames: 8,
+            drift: 0.05,
         }
     }
 }
@@ -83,6 +101,18 @@ impl ServeConfig {
                 self.arrival_rate.is_finite() && self.arrival_rate > 0.0,
                 "open-loop serving needs a finite positive --arrival-rate (got {})",
                 self.arrival_rate
+            );
+        }
+        if self.stream {
+            ensure!(
+                self.frames >= 1,
+                "stream serving needs at least one frame per sweep (got --frames {})",
+                self.frames
+            );
+            ensure!(
+                self.drift.is_finite() && (0.0..=1.0).contains(&self.drift),
+                "stream serving needs a drift in [0, 1] (got --drift {})",
+                self.drift
             );
         }
         Ok(())
@@ -123,5 +153,32 @@ mod tests {
         ServeConfig { open_loop: true, arrival_rate: 1000.0, ..ServeConfig::default() }
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn stream_bounds_are_enforced() {
+        // Non-stream runs never look at frames/drift.
+        ServeConfig { frames: 0, drift: 9.0, ..ServeConfig::default() }.validate().unwrap();
+        let err = ServeConfig { stream: true, frames: 0, ..ServeConfig::default() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--frames 0"), "{err}");
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let err = ServeConfig { stream: true, drift: bad, ..ServeConfig::default() }
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--drift"), "{err}");
+        }
+        ServeConfig { stream: true, ..ServeConfig::default() }.validate().unwrap();
+        ServeConfig {
+            stream: true,
+            open_loop: true,
+            arrival_rate: 8000.0,
+            ..ServeConfig::default()
+        }
+        .validate()
+        .unwrap();
     }
 }

@@ -9,11 +9,14 @@
 //! next clouds with feature execution of the current one on a single
 //! authoritative thread (the ping-pong idea at request granularity);
 //! [`serve`] scales that overlap across N worker lanes behind a bounded
-//! queue (the `pc2im serve` engine); [`scratch`] is the per-lane arena
-//! that keeps every per-cloud temporary (quantized views, CSR groups,
-//! gather buffers, engine models) alive across the whole request stream;
-//! [`stats`] aggregates accuracy/latency/energy plus the arena's
-//! allocation accounting.
+//! queue (the `pc2im serve` engine); [`stream`] adds temporal streaming
+//! on top — per-session persistent indices with incremental repair and
+//! warm-started (verify-then-accept) FPS, byte-identical to cold
+//! per-frame processing; [`scratch`] is the per-lane arena that keeps
+//! every per-cloud temporary (quantized views, CSR groups, gather
+//! buffers, engine models, stream session state) alive across the whole
+//! request stream; [`stats`] aggregates accuracy/latency/energy plus the
+//! arena's allocation accounting.
 
 pub mod builder;
 pub mod pipeline;
@@ -21,10 +24,12 @@ pub mod scheduler;
 pub mod scratch;
 pub mod serve;
 pub mod stats;
+pub mod stream;
 
 pub use builder::PipelineBuilder;
-pub use pipeline::{argmax_logits, CloudResult, Pipeline};
+pub use pipeline::{argmax_logits, CloudResult, Pipeline, StreamMode};
 pub use scheduler::BatchScheduler;
 pub use scratch::CloudScratch;
 pub use serve::{OpenLoopReport, OpenLoopSim, OpenLoopStats, ServeEngine, ServeReport};
 pub use stats::{BatchStats, CloudStats};
+pub use stream::StreamSession;

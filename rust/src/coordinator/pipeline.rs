@@ -39,7 +39,7 @@ use crate::engine::{DistanceEngine, MaxSearchEngine};
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
-use crate::sampling::{self, GroupsCsr, MedianIndex, LATTICE_SCALE};
+use crate::sampling::{self, GroupsCsr, MedianIndex, RepairOutcome, LATTICE_SCALE};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 use std::time::Instant;
@@ -87,6 +87,28 @@ enum Activations<'a> {
     },
     /// Zero-fill the activation buffers at the model's channel widths.
     Zero,
+}
+
+/// How a cloud relates to the lane's stream session (the temporal
+/// streaming subsystem — see DESIGN.md "Temporal streaming").
+///
+/// `Off` is the stateless request path. `Cold` starts a session: the
+/// level-1 index is built into the lane's *persistent* session slot and
+/// the sample set is recorded as next frame's warm-start hint. `Warm`
+/// continues one: the session index is repaired in place (moved points
+/// patched, cells re-fit; full in-arena rebuild when the repair bounds
+/// trip) and FPS runs with the previous frame's samples as a
+/// verify-then-accept hint. All three modes produce byte-identical
+/// outputs, cycles and ledgers for the same cloud — stream mode only
+/// changes *host* work and the reuse counters in [`CloudStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamMode {
+    /// Stateless classification (the default request path).
+    Off,
+    /// First frame of a stream session: build + remember.
+    Cold,
+    /// Subsequent frame: repair + warm-start against session state.
+    Warm,
 }
 
 /// Deterministic arg-max over raw logits: the first strictly-greatest
@@ -302,6 +324,12 @@ impl Pipeline {
     /// host work), or the float reference (exact ablation, itself
     /// partition-pruned through the float spatial index unless pruning
     /// is disabled), refilling the arena's [`LevelIndices`] in place.
+    ///
+    /// `stream`/`prev_fps` carry the temporal-streaming session state
+    /// (level 1 only — level 2 always passes [`StreamMode::Off`]). The
+    /// warm path engages only on the pruned branch; on the engine and
+    /// exact branches stream mode degenerates to the stateless path,
+    /// which is trivially byte-identical frame by frame.
     fn level_into(
         cfg: &PipelineConfig,
         apd: &mut dyn DistanceEngine,
@@ -313,6 +341,8 @@ impl Pipeline {
         pruned: &mut PrunedPreprocessor,
         findex: &mut sampling::FloatIndex,
         fq: &mut sampling::FloatQuery,
+        stream: StreamMode,
+        prev_fps: &mut Vec<u32>,
         pts_f: &[Point3],
         pts_q: &[QPoint3],
         m: usize,
@@ -354,8 +384,40 @@ impl Pipeline {
             // form the engines charge, so every simulated statistic is
             // identical to the engine-driven path below.
             pruned.reset();
-            index.build(pts_q);
-            pruned.fps_into(index, m, 0, &mut out.centroids);
+            match stream {
+                StreamMode::Off => {
+                    index.build(pts_q);
+                    pruned.fps_into(index, m, 0, &mut out.centroids);
+                }
+                StreamMode::Cold => {
+                    // Session start: full build into the persistent slot,
+                    // then remember the sample set as next frame's hint.
+                    index.build(pts_q);
+                    pruned.fps_into(index, m, 0, &mut out.centroids);
+                    prev_fps.clear();
+                    prev_fps.extend(out.centroids.iter().map(|&i| i as u32));
+                }
+                StreamMode::Warm => {
+                    // Warm frame: patch the session index in place (exact
+                    // tight cell boxes are restored, so the pruned
+                    // kernels' skip decisions stay exactness-preserving
+                    // and every charge is unchanged), then FPS with the
+                    // previous frame's samples as a verify-then-accept
+                    // hint. Falls back to an in-arena rebuild when the
+                    // repair bounds trip — byte-identical either way.
+                    match index.repair(pts_q) {
+                        RepairOutcome::Repaired { moved } => {
+                            stats.index_reused += 1;
+                            stats.repaired_points += moved as u64;
+                        }
+                        RepairOutcome::Rebuilt { .. } => {}
+                    }
+                    stats.fps_warm_hits +=
+                        pruned.fps_warm_into(index, m, 0, prev_fps, &mut out.centroids);
+                    prev_fps.clear();
+                    prev_fps.extend(out.centroids.iter().map(|&i| i as u32));
+                }
+            }
             let grid_range = quant::radius_to_grid(LATTICE_SCALE * radius);
             pruned.lattice_query_into(
                 index,
@@ -402,6 +464,7 @@ impl Pipeline {
         scratch: &mut CloudScratch,
         cloud: &PointCloud,
         acts: Activations<'_>,
+        stream: StreamMode,
         stats: &mut CloudStats,
     ) -> Result<(usize, usize)> {
         // On the approximate path the network "sees" PTQ16 coordinates:
@@ -416,6 +479,8 @@ impl Pipeline {
         }
 
         // ---- level 1: sample S1 centroids, group K1, MLP1 ----
+        // Stream sessions keep their level-1 index in the persistent
+        // session slot; the stateless path keeps using the per-level one.
         Self::level_into(
             cfg,
             scratch.apd.as_mut(),
@@ -423,10 +488,12 @@ impl Pipeline {
             &mut scratch.sorter,
             &mut scratch.dist,
             &mut scratch.fps_ds,
-            &mut scratch.index,
+            if stream == StreamMode::Off { &mut scratch.index } else { &mut scratch.stream_index },
             &mut scratch.pruned,
             &mut scratch.findex,
             &mut scratch.fq,
+            stream,
+            &mut scratch.prev_fps,
             &scratch.pts1_f,
             &scratch.q1,
             m.s1,
@@ -464,6 +531,8 @@ impl Pipeline {
             &mut scratch.pruned,
             &mut scratch.findex,
             &mut scratch.fq,
+            StreamMode::Off,
+            &mut scratch.prev_fps,
             &scratch.c1_f,
             &scratch.q2,
             m.s2,
@@ -501,6 +570,27 @@ impl Pipeline {
     /// shapes; segmentation-scale clouds go through MSP first — see
     /// `examples/segmentation_tiles.rs`).
     pub fn classify(&mut self, cloud: &PointCloud) -> Result<CloudResult> {
+        self.classify_inner(cloud, StreamMode::Off)
+    }
+
+    /// Classify one frame of a stream session (the temporal-streaming
+    /// subsystem's entry point — see [`crate::coordinator::stream`]).
+    /// `first_frame` starts the session: the lane's persistent session
+    /// index is (re)built from this cloud. Subsequent frames repair it in
+    /// place and warm-start FPS from the previous frame's sample set.
+    /// Outputs, cycles and ledgers are byte-identical to [`Self::classify`]
+    /// on the same cloud — only host work and the [`CloudStats`] reuse
+    /// counters differ.
+    pub fn classify_stream(
+        &mut self,
+        cloud: &PointCloud,
+        first_frame: bool,
+    ) -> Result<CloudResult> {
+        let mode = if first_frame { StreamMode::Cold } else { StreamMode::Warm };
+        self.classify_inner(cloud, mode)
+    }
+
+    fn classify_inner(&mut self, cloud: &PointCloud, stream: StreamMode) -> Result<CloudResult> {
         ensure!(
             cloud.len() == self.rt.meta.model.n_points,
             "classifier expects {} points, got {}",
@@ -517,7 +607,8 @@ impl Pipeline {
 
         let acts =
             Activations::Execute { rt, art_sa1: art_sa1.as_str(), art_sa2: art_sa2.as_str() };
-        let (c1_dim, c2_dim) = Self::preprocess_stages(cfg, m, scratch, cloud, acts, &mut stats)?;
+        let (c1_dim, c2_dim) =
+            Self::preprocess_stages(cfg, m, scratch, cloud, acts, stream, &mut stats)?;
         rt.execute_into(art_head, &scratch.g3, &mut scratch.logits)?;
         ensure!(scratch.logits.len() == m.num_classes, "bad head output");
 
@@ -559,6 +650,24 @@ impl Pipeline {
     /// contract covers, with identical preprocessing cycle/energy
     /// accounting to [`Self::classify`].
     pub fn preprocess(&mut self, cloud: &PointCloud) -> Result<CloudStats> {
+        self.preprocess_inner(cloud, StreamMode::Off)
+    }
+
+    /// The stream-mode spelling of [`Self::preprocess`]: the same
+    /// zero-activation preprocessing probe, but driving the persistent
+    /// session slot (`first_frame` builds it, later frames repair +
+    /// warm-start). This is what the warm-frame allocator-silence lane
+    /// in `rust/tests/scratch_reuse.rs` measures.
+    pub fn preprocess_stream(
+        &mut self,
+        cloud: &PointCloud,
+        first_frame: bool,
+    ) -> Result<CloudStats> {
+        let mode = if first_frame { StreamMode::Cold } else { StreamMode::Warm };
+        self.preprocess_inner(cloud, mode)
+    }
+
+    fn preprocess_inner(&mut self, cloud: &PointCloud, stream: StreamMode) -> Result<CloudStats> {
         ensure!(
             cloud.len() == self.rt.meta.model.n_points,
             "preprocess expects {} points, got {}",
@@ -570,7 +679,7 @@ impl Pipeline {
         self.scratch.begin_cloud();
         let Self { rt, cfg, scratch, .. } = self;
         let m = &rt.meta.model;
-        Self::preprocess_stages(cfg, m, scratch, cloud, Activations::Zero, &mut stats)?;
+        Self::preprocess_stages(cfg, m, scratch, cloud, Activations::Zero, stream, &mut stats)?;
         scratch.end_cloud(&mut stats);
         stats.host_wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)

@@ -44,9 +44,10 @@ use crate::sampling::{FloatIndex, FloatQuery, MedianIndex};
 
 /// Capacity-tracked buffers in the arena (see
 /// [`CloudScratch::buffer_bytes`]): 19 refill buffers plus the median
-/// partition index's 7, the pruned grid kernels' 4, the float spatial
-/// index's 4 and the float pruned kernels' 4 working buffers.
-const TRACKED_BUFFERS: usize = 38;
+/// partition index's 9, the stream session index's 9, the warm-FPS hint
+/// buffer, the pruned grid kernels' 4, the float spatial index's 4 and
+/// the float pruned kernels' 4 working buffers.
+const TRACKED_BUFFERS: usize = 50;
 
 /// All reusable per-cloud state of one pipeline lane: the fidelity-tier
 /// engine models, the streaming top-k sorter, and every coordinate /
@@ -76,6 +77,16 @@ pub struct CloudScratch {
     pub(crate) findex: FloatIndex,
     /// Pruned float FPS/ball-query/kNN kernels of the exact ablation.
     pub(crate) fq: FloatQuery,
+    /// The stream session's persistent level-1 median index (and the
+    /// quantized SoA inside it). Unlike [`Self::index`], which is rebuilt
+    /// in place per level, this one survives across the frames of a sweep
+    /// and is *repaired* on warm frames ([`MedianIndex::repair`]). Idle
+    /// (empty) outside `--stream` serving.
+    pub(crate) stream_index: MedianIndex,
+    /// Previous frame's level-1 FPS sample set — the warm-start hint the
+    /// verify-then-accept FPS re-checks every iteration. Refilled in
+    /// place each frame; empty outside stream mode.
+    pub(crate) prev_fps: Vec<u32>,
     /// Quantized level-1 cloud (PTQ16 grid view).
     pub(crate) q1: Vec<QPoint3>,
     /// Quantized level-2 input (level-1 centroids on the grid).
@@ -124,6 +135,8 @@ impl CloudScratch {
             pruned: PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default()),
             findex: FloatIndex::new(),
             fq: FloatQuery::new(),
+            stream_index: MedianIndex::new(),
+            prev_fps: Vec::new(),
             q1: Vec::new(),
             q2: Vec::new(),
             pts1_f: Vec::new(),
@@ -148,6 +161,7 @@ impl CloudScratch {
         use std::mem::size_of;
         let v = |cap: usize, elem: usize| (cap * elem) as u64;
         let idx = self.index.buffer_bytes();
+        let sidx = self.stream_index.buffer_bytes();
         let pp = self.pruned.buffer_bytes();
         let fidx = self.findex.buffer_bytes();
         let fq = self.fq.buffer_bytes();
@@ -159,6 +173,18 @@ impl CloudScratch {
             idx[4],
             idx[5],
             idx[6],
+            idx[7],
+            idx[8],
+            sidx[0],
+            sidx[1],
+            sidx[2],
+            sidx[3],
+            sidx[4],
+            sidx[5],
+            sidx[6],
+            sidx[7],
+            sidx[8],
+            v(self.prev_fps.capacity(), size_of::<u32>()),
             pp[0],
             pp[1],
             pp[2],

@@ -36,6 +36,8 @@
 use crate::config::HardwareConfig;
 use crate::coordinator::pipeline::{CloudResult, Pipeline};
 use crate::coordinator::stats::BatchStats;
+use crate::coordinator::stream::StreamSession;
+use crate::pointcloud::synthetic::Sweep;
 use crate::pointcloud::PointCloud;
 use crate::rng::Rng64;
 use anyhow::{anyhow, ensure, Result};
@@ -516,7 +518,126 @@ impl ServeEngine {
             arrival_rate.is_finite() && arrival_rate > 0.0,
             "open-loop serving needs a finite positive --arrival-rate (got {arrival_rate})"
         );
-        let mut serve = self.run(clouds, labels)?;
+        let serve = self.run(clouds, labels)?;
+        Ok(self.attach_open_loop(serve, arrival_rate, seed))
+    }
+
+    /// Serve a batch of correlated sweeps with **sticky session-to-lane
+    /// routing**: sweep `s` is pinned to lane `s % workers`, and each
+    /// lane classifies its sessions' frames strictly in order through a
+    /// [`StreamSession`] — so warm frames reuse the lane's persistent
+    /// session index and FPS hint. Sequence ids are session-major
+    /// (`seq = s * frames + f`) and aggregation folds in sequence order,
+    /// so the [`stats_digest`] is invariant across worker counts and —
+    /// by the stream determinism contract — byte-identical to serving
+    /// every frame through the stateless [`ServeEngine::run`] path.
+    ///
+    /// All sweeps must have the same frame count (what
+    /// [`crate::pointcloud::synthetic::make_sweep_batch`] produces).
+    pub fn run_stream(&mut self, sweeps: &[Sweep]) -> Result<ServeReport> {
+        ensure!(!sweeps.is_empty(), "stream serving needs at least one sweep");
+        let frames = sweeps[0].frames.len();
+        ensure!(
+            sweeps.iter().all(|s| s.frames.len() == frames),
+            "stream serving needs equal-length sweeps"
+        );
+        let n = sweeps.len() * frames;
+        let workers = self.lanes.len();
+        let t0 = Instant::now();
+
+        let mut slots: Vec<Option<Result<CloudResult>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<CloudResult>)>();
+
+        let cpus = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        std::thread::scope(|scope| {
+            for (lane_idx, lane) in self.lanes.iter_mut().enumerate() {
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    crate::simd::pin_current_thread(lane_idx % cpus);
+                    // Sticky routing: this lane owns every `s % workers ==
+                    // lane_idx` session, processed in increasing session
+                    // order, frames in order — the session state in the
+                    // lane's scratch arena is never shared or interleaved.
+                    for (s, sweep) in sweeps.iter().enumerate() {
+                        if s % workers != lane_idx {
+                            continue;
+                        }
+                        let mut session = StreamSession::new(s);
+                        for (f, frame) in sweep.frames.iter().enumerate() {
+                            let seq = s * frames + f;
+                            let out = catch_unwind(AssertUnwindSafe(|| {
+                                session.classify_frame(lane, frame)
+                            }))
+                            .unwrap_or_else(|_| {
+                                Err(anyhow!(
+                                    "worker lane panicked while classifying stream frame {seq}"
+                                ))
+                            });
+                            if res_tx.send((seq, out)).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+            drop(res_tx);
+
+            for (seq, out) in res_rx {
+                slots[seq] = Some(out);
+            }
+        });
+
+        let mut results = Vec::with_capacity(n);
+        for (seq, slot) in slots.into_iter().enumerate() {
+            let out = slot.ok_or_else(|| anyhow!("stream frame {seq} produced no result"))?;
+            results.push(out.map_err(|e| anyhow!("stream frame {seq}: {e:?}"))?);
+        }
+        let mut labels = Vec::with_capacity(n);
+        for sweep in sweeps {
+            labels.resize(labels.len() + frames, sweep.label as i32);
+        }
+        let stats = aggregate(&results, &labels);
+        Ok(ServeReport {
+            results,
+            stats,
+            workers,
+            wall_s: t0.elapsed().as_secs_f64(),
+            // No request queue in sticky mode: at most one frame per lane
+            // is in flight at any instant.
+            max_in_flight: workers.min(n),
+        })
+    }
+
+    /// [`Self::run_stream`] composed with the open-loop load model —
+    /// the stream counterpart of [`Self::run_open_loop`]: frames arrive
+    /// on the seeded Poisson schedule in sequence (session-major) order
+    /// and are replayed through the virtual-clock queue, so cold first
+    /// frames and warm steady-state frames are both visible in the tail
+    /// latency accounting.
+    pub fn run_stream_open_loop(
+        &mut self,
+        sweeps: &[Sweep],
+        arrival_rate: f64,
+        seed: u64,
+    ) -> Result<OpenLoopReport> {
+        ensure!(
+            arrival_rate.is_finite() && arrival_rate > 0.0,
+            "open-loop serving needs a finite positive --arrival-rate (got {arrival_rate})"
+        );
+        let serve = self.run_stream(sweeps)?;
+        Ok(self.attach_open_loop(serve, arrival_rate, seed))
+    }
+
+    /// Replay an already-served report through the open-loop load model
+    /// and stamp the virtual timestamps into the per-cloud stats (the
+    /// shared tail of both `run_open_loop` flavors).
+    fn attach_open_loop(
+        &mut self,
+        mut serve: ServeReport,
+        arrival_rate: f64,
+        seed: u64,
+    ) -> OpenLoopReport {
         let hw = *self.lanes[0].hardware();
         self.service.clear();
         self.service.reserve(serve.results.len());
@@ -529,12 +650,12 @@ impl ServeEngine {
             r.stats.dequeue_s = deq;
             r.stats.complete_s = com;
         }
-        Ok(OpenLoopReport {
+        OpenLoopReport {
             serve,
             load: self.sim.stats().clone(),
             arrival_rate,
             arrival_seed: seed,
-        })
+        }
     }
 }
 
@@ -686,6 +807,56 @@ mod tests {
         }
         // A rejected rate fails loudly before any classification.
         assert!(engine.run_open_loop(&clouds, &labels, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn stream_run_matches_stateless_serve_digest() {
+        use crate::engine::Fidelity;
+        use crate::pointcloud::synthetic::make_sweep_batch;
+        let sweeps = make_sweep_batch(3, 2, 1024, 40, 0.05);
+        let mut flat = Vec::new();
+        let mut labels = Vec::new();
+        for s in &sweeps {
+            for f in &s.frames {
+                flat.push(f.clone());
+                labels.push(s.label as i32);
+            }
+        }
+        let hw = HardwareConfig::default();
+        let mut stateless = PipelineBuilder::from_config(hermetic_cfg())
+            .fidelity(Fidelity::Fast)
+            .build_serve(ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() })
+            .unwrap();
+        let base = stateless.run(&flat, &labels).unwrap();
+        for workers in [1usize, 2] {
+            let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+                .fidelity(Fidelity::Fast)
+                .build_serve(ServeConfig { workers, queue_depth: 2, ..ServeConfig::default() })
+                .unwrap();
+            let report = engine.run_stream(&sweeps).unwrap();
+            assert_eq!(
+                stats_digest(&report.stats, &hw),
+                stats_digest(&base.stats, &hw),
+                "stream digest must match stateless serving ({workers} workers)"
+            );
+            assert!(report.stats.index_reused >= 1, "warm frames must reuse");
+            assert_eq!(base.stats.index_reused, 0, "stateless serving never reuses");
+            for (seq, (a, b)) in report.results.iter().zip(&base.results).enumerate() {
+                assert_eq!(a.logits, b.logits, "frame {seq}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_run_rejects_ragged_sweeps() {
+        use crate::pointcloud::synthetic::make_sweep;
+        let mut sweeps = vec![make_sweep(1, 2, 64, 0.1), make_sweep(2, 3, 64, 0.1)];
+        let mut engine = PipelineBuilder::from_config(hermetic_cfg())
+            .build_serve(ServeConfig { workers: 1, queue_depth: 1, ..ServeConfig::default() })
+            .unwrap();
+        assert!(engine.run_stream(&sweeps).is_err(), "ragged sweeps must fail loudly");
+        sweeps.clear();
+        assert!(engine.run_stream(&sweeps).is_err(), "empty stream must fail loudly");
     }
 
     #[test]

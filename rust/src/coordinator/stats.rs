@@ -39,6 +39,23 @@ pub struct CloudStats {
     /// cloud's simulated accelerator latency); `f64::INFINITY` when shed.
     /// 0 on closed-loop runs.
     pub complete_s: f64,
+    /// 1 when this frame reused the session's persistent median index
+    /// via in-place repair instead of a full rebuild (stream mode, warm
+    /// frames on the pruned Fast path only; 0 everywhere else). Fully
+    /// deterministic — the repair/rebuild decision depends only on the
+    /// sweep — and reported on the CLI's `stream` line, never inside the
+    /// 5-field [`crate::coordinator::serve::stats_digest`], which stays
+    /// byte-identical to cold per-frame processing by contract.
+    pub index_reused: u64,
+    /// Moved points patched in place by the session index repair on this
+    /// frame (0 on rebuilds and on every non-stream cloud). Deterministic,
+    /// reported alongside [`Self::index_reused`].
+    pub repaired_points: u64,
+    /// Warm-FPS hint hits: iterations whose verified arg-max matched the
+    /// previous frame's sample at the same position. Pure observability —
+    /// the hint never steers selection (verify-then-accept), so samples,
+    /// cycles and ledgers are byte-identical with or without it.
+    pub fps_warm_hits: u64,
 }
 
 impl CloudStats {
@@ -79,6 +96,15 @@ pub struct BatchStats {
     /// Summed arena-buffer growth events — on a warmed lane only the
     /// first clouds of a stream contribute (host-side).
     pub scratch_allocs: u64,
+    /// Frames that reused their session's median index via in-place
+    /// repair (deterministic stream counter, summed).
+    pub index_reused: u64,
+    /// Total moved points patched in place by session index repairs
+    /// (deterministic stream counter, summed).
+    pub repaired_points: u64,
+    /// Total warm-FPS hint hits across all frames (deterministic stream
+    /// counter, summed).
+    pub fps_warm_hits: u64,
 }
 
 impl BatchStats {
@@ -92,6 +118,9 @@ impl BatchStats {
         self.host_wall_s += s.host_wall_s;
         self.scratch_bytes = self.scratch_bytes.max(s.scratch_bytes);
         self.scratch_allocs += s.scratch_allocs;
+        self.index_reused += s.index_reused;
+        self.repaired_points += s.repaired_points;
+        self.fps_warm_hits += s.fps_warm_hits;
     }
 
     /// Fraction of clouds classified correctly (0 when empty).
@@ -136,6 +165,9 @@ mod tests {
         s.scratch_bytes = 512;
         s.scratch_allocs = 3;
         s.ledger.charge(Event::SramBit, 10);
+        s.index_reused = 1;
+        s.repaired_points = 40;
+        s.fps_warm_hits = 7;
         b.push(&s, true);
         b.push(&s, false);
         assert_eq!(b.n, 2);
@@ -145,6 +177,9 @@ mod tests {
         assert_eq!(b.ledger.count(Event::SramBit), 20);
         assert_eq!(b.scratch_bytes, 512, "footprint folds as a max");
         assert_eq!(b.scratch_allocs, 6, "growth events fold as a sum");
+        assert_eq!(b.index_reused, 2, "stream counters fold as sums");
+        assert_eq!(b.repaired_points, 80);
+        assert_eq!(b.fps_warm_hits, 14);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Temporal streaming: frame-coherent sessions over a serve lane.
+//!
+//! Real point-cloud traffic is LiDAR/depth *sweeps* — sequences of highly
+//! correlated frames — yet the stateless request path rebuilds the
+//! level-1 [`crate::sampling::MedianIndex`] and re-runs FPS from scratch
+//! for every cloud. A [`StreamSession`] amortizes that host work across a
+//! sweep:
+//!
+//! - **Session lifecycle.** The first frame runs the cold path into the
+//!   lane's *persistent* session slot ([`crate::coordinator::CloudScratch`]
+//!   keeps the session `MedianIndex`, its quantized SoA and the previous
+//!   frame's FPS sample set alive across frames, so warm frames stay
+//!   allocator-silent). Every later frame is warm.
+//! - **Incremental repair.** A warm frame diffs the new quantized cloud
+//!   against the session SoA, patches only the moved points in place and
+//!   re-fits their cells' bounding boxes exactly
+//!   ([`crate::sampling::MedianIndex::repair`]). When a repair bound
+//!   trips — more than a quarter of the cloud moved, more than
+//!   [`crate::sampling::REPAIR_ESCAPE_BOUND`] members of one cell outside
+//!   its build-time box, or a point-count change — the session index is
+//!   rebuilt in its own arena instead.
+//! - **Warm-started FPS, verify-then-accept.** FPS runs with the
+//!   previous frame's sample set as a hint, but the hint never steers
+//!   selection: every iteration recomputes the true min-TD arg-max under
+//!   the same lowest-original-index tie rule and only *counts* whether
+//!   the hint agreed ([`crate::coordinator::CloudStats::fps_warm_hits`]).
+//!
+//! **Determinism contract:** outputs, simulated cycles and energy
+//! ledgers of a warm frame are byte-identical to stateless per-frame
+//! classification of the same cloud, for every fidelity tier × prune ×
+//! SIMD combination (the warm machinery engages only on the pruned Fast
+//! path; everywhere else stream mode degenerates to the stateless path).
+//! Pinned end-to-end by `rust/tests/stream_determinism.rs`.
+
+use crate::coordinator::pipeline::{CloudResult, Pipeline};
+use crate::pointcloud::PointCloud;
+use anyhow::Result;
+
+/// One coherent frame sequence bound to one serve lane.
+///
+/// The session object itself is tiny bookkeeping — the heavy state (the
+/// persistent index, quantized SoA and warm-FPS hint) lives in the
+/// lane's [`crate::coordinator::CloudScratch`], so a lane serves many
+/// sessions back-to-back and each new session's first (cold) frame
+/// simply rebuilds the slot.
+#[derive(Debug, Clone)]
+pub struct StreamSession {
+    session: usize,
+    frames_done: usize,
+}
+
+impl StreamSession {
+    /// A fresh session with the given id (its global sweep number —
+    /// sticky lane routing and sequence ids derive from it).
+    pub fn new(session: usize) -> Self {
+        Self { session, frames_done: 0 }
+    }
+
+    /// The session id this object was created with.
+    pub fn session(&self) -> usize {
+        self.session
+    }
+
+    /// Frames classified so far (0 means the next frame is cold).
+    pub fn frames_done(&self) -> usize {
+        self.frames_done
+    }
+
+    /// Classify the session's next frame on `lane`. The first call runs
+    /// the cold path (building the lane's session state); every later
+    /// call runs the warm repair + verify-then-accept path. Results are
+    /// byte-identical to [`Pipeline::classify`] on the same cloud either
+    /// way — see the module docs for the contract.
+    pub fn classify_frame(
+        &mut self,
+        lane: &mut Pipeline,
+        cloud: &PointCloud,
+    ) -> Result<CloudResult> {
+        let first = self.frames_done == 0;
+        let out = lane.classify_stream(cloud, first)?;
+        self.frames_done += 1;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineConfig;
+    use crate::coordinator::PipelineBuilder;
+    use crate::engine::Fidelity;
+    use crate::pointcloud::synthetic::make_sweep;
+
+    fn hermetic(fidelity: Fidelity) -> Pipeline {
+        PipelineBuilder::from_config(PipelineConfig {
+            artifacts_dir: std::env::temp_dir()
+                .join("pc2im-stream-no-artifacts")
+                .to_string_lossy()
+                .into_owned(),
+            ..PipelineConfig::default()
+        })
+        .fidelity(fidelity)
+        .build()
+        .unwrap()
+    }
+
+    #[test]
+    fn warm_frames_match_stateless_classification() {
+        let mut cold = hermetic(Fidelity::Fast);
+        let mut lane = hermetic(Fidelity::Fast);
+        let sweep = make_sweep(3, 4, 1024, 0.05);
+        let mut session = StreamSession::new(0);
+        for (f, frame) in sweep.frames.iter().enumerate() {
+            let a = cold.classify(frame).unwrap();
+            let b = session.classify_frame(&mut lane, frame).unwrap();
+            assert_eq!(a.logits, b.logits, "frame {f}");
+            assert_eq!(a.pred, b.pred, "frame {f}");
+            assert_eq!(a.stats.preproc_cycles, b.stats.preproc_cycles, "frame {f}");
+            assert_eq!(a.stats.feature_cycles, b.stats.feature_cycles, "frame {f}");
+            assert_eq!(a.stats.ledger, b.stats.ledger, "frame {f}");
+            assert_eq!(a.stats.index_reused, 0, "stateless path never reuses");
+            if f == 0 {
+                assert_eq!(b.stats.index_reused, 0, "first frame is cold");
+                assert_eq!(b.stats.repaired_points, 0);
+            } else {
+                // 5% drift moves ~51 of 1024 points — far below both the
+                // moved-fraction and per-cell escape rebuild bounds, so
+                // every warm frame must repair in place.
+                assert_eq!(b.stats.index_reused, 1, "frame {f} must reuse the session index");
+                assert!(b.stats.repaired_points > 0, "frame {f} must patch moved points");
+                assert!(b.stats.fps_warm_hits > 0, "coherent frames share early samples");
+            }
+        }
+        assert_eq!(session.frames_done(), 4);
+        assert_eq!(session.session(), 0);
+    }
+
+    #[test]
+    fn bit_exact_tier_streams_via_the_stateless_path() {
+        // The gate-level tier full-scans (no partition pruning), so
+        // stream mode degenerates to per-frame cold processing there —
+        // trivially byte-identical, with all reuse counters at zero.
+        let mut cold = hermetic(Fidelity::BitExact);
+        let mut lane = hermetic(Fidelity::BitExact);
+        let sweep = make_sweep(5, 3, 1024, 0.1);
+        let mut session = StreamSession::new(1);
+        for frame in &sweep.frames {
+            let a = cold.classify(frame).unwrap();
+            let b = session.classify_frame(&mut lane, frame).unwrap();
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.stats.ledger, b.stats.ledger);
+            assert_eq!(b.stats.index_reused, 0, "engine path has no session index");
+            assert_eq!(b.stats.fps_warm_hits, 0);
+        }
+    }
+
+    #[test]
+    fn back_to_back_sessions_rebuild_the_slot() {
+        // A lane serves sweeps sequentially; each new session's first
+        // frame is cold and must not inherit the previous session's
+        // state (different point count included).
+        let mut lane = hermetic(Fidelity::Fast);
+        let mut cold = hermetic(Fidelity::Fast);
+        for seed in [11u64, 12u64] {
+            let sweep = make_sweep(seed, 2, 1024, 0.05);
+            let mut session = StreamSession::new(seed as usize);
+            for (f, frame) in sweep.frames.iter().enumerate() {
+                let a = cold.classify(frame).unwrap();
+                let b = session.classify_frame(&mut lane, frame).unwrap();
+                assert_eq!(a.logits, b.logits, "seed {seed} frame {f}");
+                assert_eq!(a.stats.ledger, b.stats.ledger, "seed {seed} frame {f}");
+                assert_eq!(b.stats.index_reused, u64::from(f > 0));
+            }
+        }
+    }
+}

@@ -292,6 +292,43 @@ impl PrunedPreprocessor {
     /// byte-identical to [`crate::coordinator::Pipeline::cam_fps_into`]
     /// driven over either engine tier — indices, cycle total and ledger.
     pub fn fps_into(&mut self, index: &MedianIndex, m: usize, start: usize, idx: &mut Vec<usize>) {
+        self.fps_core(index, m, start, None, idx);
+    }
+
+    /// Warm-started FPS for frame-coherent streams: identical to
+    /// [`Self::fps_into`] in every output, cycle and ledger byte —
+    /// `hint` (the previous frame's sample sequence) is **never
+    /// trusted**. Each iteration recomputes the true min-TD arg-max
+    /// under the same lowest-original-index tie rule (verify), and the
+    /// hint entry merely gets credited as a *warm hit* when it matches
+    /// (accept); a mismatch simply keeps the recomputed centroid — the
+    /// cold path — so correctness never rests on frame coherence.
+    /// Returns the warm-hit count (how much of the previous sample set
+    /// re-verified), which feeds
+    /// `crate::coordinator::CloudStats::fps_warm_hits` and the
+    /// BENCH_stream steady-state model.
+    pub fn fps_warm_into(
+        &mut self,
+        index: &MedianIndex,
+        m: usize,
+        start: usize,
+        hint: &[u32],
+        idx: &mut Vec<usize>,
+    ) -> u64 {
+        self.fps_core(index, m, start, Some(hint), idx)
+    }
+
+    /// Shared body of [`Self::fps_into`] / [`Self::fps_warm_into`]; the
+    /// hint only counts verified re-hits and never steers selection, so
+    /// both entry points are one algorithm with one accounting.
+    fn fps_core(
+        &mut self,
+        index: &MedianIndex,
+        m: usize,
+        start: usize,
+        hint: Option<&[u32]>,
+        idx: &mut Vec<usize>,
+    ) -> u64 {
         let n = index.len();
         assert!(
             n <= self.apd_cfg.capacity(),
@@ -328,7 +365,8 @@ impl PrunedPreprocessor {
         idx.clear();
         idx.push(start);
 
-        for _ in 1..m {
+        let mut warm_hits = 0u64;
+        for iter in 1..m {
             // --- MAX search: arg-max from the per-cell maxima, lowest
             // original index winning ties (matchline priority). ---
             let best_val = self.cellmax.iter().copied().max().expect("non-empty tile");
@@ -358,6 +396,15 @@ impl PrunedPreprocessor {
             self.ledger.charge(Event::CamSearchCell, n as u64);
             self.cycles += 1;
 
+            // Verify-then-accept: the recomputed arg-max is always what
+            // gets sampled; a matching hint entry only counts as a warm
+            // hit (the previous frame's pick re-verified exactly).
+            if let Some(h) = hint {
+                if h.get(iter).is_some_and(|&p| p as usize == best_orig) {
+                    warm_hits += 1;
+                }
+            }
+
             idx.push(best_orig);
             self.invalidate(index, best_orig);
 
@@ -383,6 +430,7 @@ impl PrunedPreprocessor {
                 self.cellmax[c] = mx;
             }
         }
+        warm_hits
     }
 
     /// Pruned lattice query over an indexed tile: one simulated
@@ -804,6 +852,39 @@ mod tests {
         want_ledger.merge(DistanceEngine::ledger(&apd));
         want_ledger.merge(MaxSearchEngine::ledger(&cam));
         assert_eq!(pp.ledger(), &want_ledger);
+    }
+
+    #[test]
+    fn warm_fps_verifies_hint_and_never_diverges() {
+        let t = tile(512, 17);
+        let mut index = MedianIndex::new();
+        index.build(&t);
+        let m = 128usize;
+        let mut cold = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut cold_idx = Vec::new();
+        cold.fps_into(&index, m, 0, &mut cold_idx);
+        // A perfect hint (the cold result itself) re-verifies fully...
+        let hint: Vec<u32> = cold_idx.iter().map(|&i| i as u32).collect();
+        let mut warm = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+        let mut warm_idx = Vec::new();
+        let hits = warm.fps_warm_into(&index, m, 0, &hint, &mut warm_idx);
+        assert_eq!(hits, (m - 1) as u64, "perfect hint must re-verify every pick");
+        // ...and the warm path is byte-identical to cold: outputs,
+        // cycles, ledger.
+        assert_eq!(warm_idx, cold_idx);
+        assert_eq!(warm.cycles(), cold.cycles());
+        assert_eq!(warm.ledger(), cold.ledger());
+        // A garbage hint changes nothing but the hit count — including
+        // an empty and a wrong-length hint.
+        for bad in [vec![], vec![9999u32; 3], hint.iter().map(|&p| p ^ 1).collect()] {
+            let mut pp = PrunedPreprocessor::new(ApdCimConfig::default(), CamConfig::default());
+            let mut idx = Vec::new();
+            let h = pp.fps_warm_into(&index, m, 0, &bad, &mut idx);
+            assert_eq!(idx, cold_idx, "hint steered selection");
+            assert_eq!(pp.cycles(), cold.cycles());
+            assert_eq!(pp.ledger(), cold.ledger());
+            assert!(h < (m - 1) as u64, "bad hint cannot fully re-verify");
+        }
     }
 
     #[test]

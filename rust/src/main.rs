@@ -21,11 +21,13 @@
 //! (--key value / --flag).
 
 use anyhow::{anyhow, bail, Result};
-use pc2im::config::{PipelineConfig, ServeConfig};
+use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
 use pc2im::coordinator::{serve, PipelineBuilder};
 use pc2im::engine::Fidelity;
 use pc2im::pointcloud::io::read_testset;
-use pc2im::pointcloud::synthetic::{make_class_cloud, make_labelled_batch, NUM_CLASSES};
+use pc2im::pointcloud::synthetic::{
+    make_class_cloud, make_labelled_batch, make_sweep_batch, NUM_CLASSES,
+};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -218,8 +220,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "fidelity",
         "arrival-rate",
         "simd",
+        "frames",
+        "drift",
+        "stats-json",
     ];
-    let known_flags = ["quantized", "exact", "no-prune", "open-loop"];
+    let known_flags = ["quantized", "exact", "no-prune", "open-loop", "stream"];
     for key in args.opts.keys() {
         if !known_opts.contains(&key.as_str()) {
             bail!("unknown serve option --{key}; see `pc2im help`");
@@ -247,10 +252,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: parse_opt(args, "seed", d.seed)?,
         open_loop: args.flags.iter().any(|f| f == "open-loop"),
         arrival_rate: parse_opt(args, "arrival-rate", d.arrival_rate)?,
+        stream: args.flags.iter().any(|f| f == "stream"),
+        frames: parse_opt(args, "frames", d.frames)?,
+        drift: parse_opt(args, "drift", d.drift)?,
     };
     // Zero values are rejected here, at parse time — never clamped
-    // (including a missing/bad --arrival-rate when --open-loop is set).
+    // (including a missing/bad --arrival-rate when --open-loop is set,
+    // and a bad --frames/--drift when --stream is).
     serve_cfg.validate()?;
+    let stats_json = args.opts.get("stats-json").cloned();
     // SIMD backend selection is process-wide: both backends are
     // bit-identical, so --simd scalar only changes host speed (an A/B
     // switch and the fallback escape hatch).
@@ -266,6 +276,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fidelity = cfg.fidelity;
     let n = serve_cfg.n_clouds;
     let seed = serve_cfg.seed;
+
+    if serve_cfg.stream {
+        // Temporal streaming: --clouds counts *sessions* (correlated
+        // sweeps of --frames frames each), served with sticky
+        // session-to-lane routing and persistent per-session indices.
+        // Outputs and the stats digest are byte-identical to serving the
+        // same frames statelessly — reuse only changes host work, which
+        // the cold/steady split below makes visible.
+        let frames = serve_cfg.frames;
+        let drift = serve_cfg.drift;
+        let rate = serve_cfg.arrival_rate;
+        let open_loop = serve_cfg.open_loop;
+        let mut engine = PipelineBuilder::from_config(cfg).build_serve(serve_cfg)?;
+        let hw = *engine.pipeline().hardware();
+        let n_points = engine.pipeline().meta().model.n_points;
+        let sweeps = make_sweep_batch(n, frames, n_points, seed, drift);
+        println!(
+            "serving {n} sweeps x {frames} frames (drift {drift}) on {} workers (sticky \
+             sessions, seed {seed}, {fidelity} engines, {} kernels)...",
+            engine.workers(),
+            pc2im::simd::active_backend(),
+        );
+        let (report, load) = if open_loop {
+            let r = engine.run_stream_open_loop(&sweeps, rate, seed)?;
+            (r.serve, Some(r.load))
+        } else {
+            (engine.run_stream(&sweeps)?, None)
+        };
+        let total = report.results.len();
+        println!(
+            "done: {total} frames in {:.2} s ({:.2} clouds/s) | accuracy {:.1}%",
+            report.wall_s,
+            report.clouds_per_s(),
+            report.stats.accuracy() * 100.0,
+        );
+        // Cold-vs-steady split: the first frame of every session pays
+        // the full index build + FPS, warm frames ride the repair path.
+        let (mut cold_s, mut cold_n, mut steady_s, mut steady_n) =
+            (0.0f64, 0usize, 0.0f64, 0usize);
+        for (seq, r) in report.results.iter().enumerate() {
+            if seq % frames == 0 {
+                cold_s += r.stats.host_wall_s;
+                cold_n += 1;
+            } else {
+                steady_s += r.stats.host_wall_s;
+                steady_n += 1;
+            }
+        }
+        println!(
+            "cold {:.2} clouds/s over {cold_n} first frames | steady {:.2} clouds/s over \
+             {steady_n} warm frames",
+            cold_n as f64 / cold_s.max(1e-12),
+            steady_n as f64 / steady_s.max(1e-12),
+        );
+        println!(
+            "scratch: {:.1} KiB max lane footprint | {} grow events across {total} clouds",
+            report.stats.scratch_bytes as f64 / 1024.0,
+            report.stats.scratch_allocs,
+        );
+        if let Some(load) = &load {
+            println!(
+                "virtual latency p50 {:.3} ms | p99 {:.3} ms | p999 {:.3} ms | max {:.3} ms",
+                load.p50_s * 1e3,
+                load.p99_s * 1e3,
+                load.p999_s * 1e3,
+                load.max_latency_s * 1e3,
+            );
+        }
+        println!(
+            "stream reused={} repaired={} warm_hits={}",
+            report.stats.index_reused,
+            report.stats.repaired_points,
+            report.stats.fps_warm_hits,
+        );
+        println!("stats {}", serve::stats_digest(&report.stats, &hw));
+        if let Some(load) = &load {
+            println!("load {}", load.digest());
+        }
+        if let Some(path) = &stats_json {
+            write_stats_json(path, &report.stats, &hw, load.as_ref())?;
+            println!("wrote machine-readable stats to {path}");
+        }
+        return Ok(());
+    }
 
     if serve_cfg.open_loop {
         // Open-loop mode always runs the serving engine (one virtual
@@ -307,6 +401,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("queue depth at arrival (histogram): {:?}", load.queue_depth_hist);
         println!("stats {}", serve::stats_digest(&report.serve.stats, &hw));
         println!("load {}", load.digest());
+        if let Some(path) = &stats_json {
+            write_stats_json(path, &report.serve.stats, &hw, Some(load))?;
+            println!("wrote machine-readable stats to {path}");
+        }
         return Ok(());
     }
 
@@ -335,6 +433,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.scratch_bytes as f64 / 1024.0,
             stats.scratch_allocs,
         );
+        if let Some(path) = &stats_json {
+            write_stats_json(path, &stats, &hw, None)?;
+            println!("wrote machine-readable stats to {path}");
+        }
     } else {
         let mut engine = PipelineBuilder::from_config(cfg).build_serve(serve_cfg)?;
         let hw = *engine.pipeline().hardware();
@@ -371,7 +473,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.stats.scratch_allocs,
             engine.workers(),
         );
+        if let Some(path) = &stats_json {
+            write_stats_json(path, &report.stats, &hw, None)?;
+            println!("wrote machine-readable stats to {path}");
+        }
     }
+    Ok(())
+}
+
+/// Dump the deterministic serve aggregate — plus the open-loop load
+/// metrics when present — as machine-readable JSON (`--stats-json PATH`).
+/// Hand-rolled like the CLI parser: the vendored crate set has no serde,
+/// and every field is a counter, a float or a u64 histogram, so the
+/// encoding is trivial and stable for regression tracking.
+fn write_stats_json(
+    path: &str,
+    stats: &pc2im::coordinator::BatchStats,
+    hw: &HardwareConfig,
+    load: Option<&serve::OpenLoopStats>,
+) -> Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"n\": {},\n", stats.n));
+    s.push_str(&format!("  \"correct\": {},\n", stats.correct));
+    s.push_str(&format!("  \"preproc_cycles\": {},\n", stats.preproc_cycles));
+    s.push_str(&format!("  \"feature_cycles\": {},\n", stats.feature_cycles));
+    s.push_str(&format!(
+        "  \"energy_uj\": {:.6},\n",
+        stats.ledger.total_pj(&hw.energy()) * 1e-6
+    ));
+    s.push_str(&format!("  \"scratch_bytes\": {},\n", stats.scratch_bytes));
+    s.push_str(&format!("  \"scratch_allocs\": {},\n", stats.scratch_allocs));
+    s.push_str(&format!(
+        "  \"stream\": {{\"index_reused\": {}, \"repaired_points\": {}, \"fps_warm_hits\": {}}},\n",
+        stats.index_reused, stats.repaired_points, stats.fps_warm_hits
+    ));
+    match load {
+        None => s.push_str("  \"open_loop\": null\n"),
+        Some(l) => {
+            s.push_str("  \"open_loop\": {\n");
+            s.push_str(&format!("    \"completed\": {},\n", l.completed));
+            s.push_str(&format!("    \"shed\": {},\n", l.shed));
+            s.push_str(&format!("    \"backpressured\": {},\n", l.backpressured));
+            s.push_str(&format!("    \"max_in_system\": {},\n", l.max_in_system));
+            s.push_str(&format!("    \"p50_s\": {:e},\n", l.p50_s));
+            s.push_str(&format!("    \"p99_s\": {:e},\n", l.p99_s));
+            s.push_str(&format!("    \"p999_s\": {:e},\n", l.p999_s));
+            s.push_str(&format!("    \"max_latency_s\": {:e},\n", l.max_latency_s));
+            s.push_str(&format!("    \"queue_depth_hist\": {:?}\n", l.queue_depth_hist));
+            s.push_str("  }\n");
+        }
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)
+        .map_err(|e| anyhow!("cannot write --stats-json file {path:?}: {e}"))?;
     Ok(())
 }
 
@@ -409,6 +564,14 @@ fn help() {
          \u{20}               load at R req/s on a virtual clock: p50/p99/p999 tail\n\
          \u{20}               latency, queue-depth histogram, shed/backpressure counters\n\
          \u{20}               (bit-reproducible per seed; digest unchanged)\n\
+         \u{20}               [--stream --frames F --drift D]  temporal streaming: --clouds\n\
+         \u{20}               correlated sweeps of F frames each (drift D per frame),\n\
+         \u{20}               sticky session-to-lane routing, persistent per-session\n\
+         \u{20}               indices with incremental repair + warm-started FPS —\n\
+         \u{20}               byte-identical outputs/digest, cold-vs-steady clouds/sec\n\
+         \u{20}               split and stream reuse counters (composes with --open-loop)\n\
+         \u{20}               [--stats-json PATH]  dump the deterministic aggregate, the\n\
+         \u{20}               stream counters and (open-loop) the load metrics as JSON\n\
          \u{20}               [--simd auto|scalar]  kernel backend A/B (bit-identical)\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
          \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\

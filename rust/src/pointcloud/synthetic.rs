@@ -7,6 +7,7 @@
 //! results depend on.
 
 use super::{Point3, PointCloud};
+use crate::quant;
 use crate::rng::Rng64;
 
 /// The three dataset scales from the paper's Table I.
@@ -81,6 +82,135 @@ pub fn make_labelled_batch(
         .collect();
     let labels = (0..n).map(|i| (i % NUM_CLASSES) as i32).collect();
     (clouds, labels)
+}
+
+/// Salt XOR'd into the sweep seed so correlated sweeps draw from a
+/// different deterministic stream than the per-cloud generators that
+/// share the CLI `--seed` (ASCII "SWEP3D!!").
+const SWEEP_SALT: u64 = 0x5357_4550_3344_2121;
+
+/// FNV-1a 64-bit offset basis / prime (the sweep digest hash).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a 64-bit running hash.
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One correlated LiDAR/depth-like sweep: `frames.len()` clouds where
+/// frame *t+1* is derived from frame *t* by moving a seeded `drift`
+/// fraction of points (half jittered locally, half replaced), so
+/// consecutive frames share most of their exact quantized coordinates —
+/// the workload [`crate::coordinator::StreamSession`] amortizes index
+/// builds across.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    /// The frames, oldest first; every coordinate sits exactly on the
+    /// u16 quantization grid (see [`make_sweep`]).
+    pub frames: Vec<PointCloud>,
+    /// Nominal class label of the whole sweep (`seed % NUM_CLASSES`) —
+    /// sweeps are uniform clouds, so the label shapes the *stats* stream,
+    /// not the geometry.
+    pub label: usize,
+    /// FNV-1a 64-bit digest over every frame's u16 grid coordinates (in
+    /// little-endian byte order), seeded with `n_points` and `frames`.
+    /// The Python mirror in `scripts/gen_bench_baseline.py` reproduces it
+    /// bit-for-bit, pinning the two generators together.
+    pub digest: u64,
+}
+
+/// Generate one correlated sweep, fully deterministic from the crate
+/// [`Rng64`].
+///
+/// Frame 0 draws `n_points` coordinates uniformly on the u16 grid via
+/// [`Rng64::below`] (pure integer arithmetic — mirrorable exactly in
+/// Python). For each later frame, every point draws `u = below(1e6)`:
+/// `u < drift/2 * 1e6` jitters each axis by a uniform offset in
+/// [-8, +8] grid units (clamped), `u < drift * 1e6` replaces the point
+/// uniformly, anything else keeps its exact coordinates. Points are
+/// *stored* dequantized to [-1, 1] floats, and because the quantizer's
+/// round-trip `quantize(dequantize(q)) == q` holds for every u16 `q`
+/// (pinned in `crate::quant`), the pipeline's re-quantization recovers
+/// the exact grid coordinates — unmoved points are bit-identical across
+/// frames after quantization, which is what makes incremental index
+/// repair sound.
+pub fn make_sweep(seed: u64, frames: usize, n_points: usize, drift: f64) -> Sweep {
+    assert!(frames >= 1, "a sweep needs at least one frame");
+    assert!(n_points >= 1, "a sweep needs at least one point per frame");
+    assert!(
+        drift.is_finite() && (0.0..=1.0).contains(&drift),
+        "drift must be a finite fraction in [0, 1] (got {drift})"
+    );
+    let mut rng = Rng64::new(seed ^ SWEEP_SALT);
+    // Per-point outcome thresholds on a millionths scale: u < t_jitter
+    // jitters, t_jitter <= u < t_replace replaces, the rest keep their
+    // exact grid coordinates — together the moved classes are a `drift`
+    // fraction of the cloud in expectation. The f64-multiply-truncate
+    // matches Python's int() exactly.
+    let t_jitter = (drift * 500_000.0) as u64;
+    let t_replace = (drift * 1_000_000.0) as u64;
+    let mut digest = fnv1a(FNV_OFFSET, &(n_points as u64).to_le_bytes());
+    digest = fnv1a(digest, &(frames as u64).to_le_bytes());
+    let mut grid: Vec<[u16; 3]> = (0..n_points)
+        .map(|_| [rng.below(65536) as u16, rng.below(65536) as u16, rng.below(65536) as u16])
+        .collect();
+    let mut out = Vec::with_capacity(frames);
+    for f in 0..frames {
+        if f > 0 {
+            for p in grid.iter_mut() {
+                let u = rng.below(1_000_000);
+                if u < t_jitter {
+                    for c in p.iter_mut() {
+                        let d = rng.below(17) as i64 - 8;
+                        *c = (*c as i64 + d).clamp(0, 65535) as u16;
+                    }
+                } else if u < t_replace {
+                    for c in p.iter_mut() {
+                        *c = rng.below(65536) as u16;
+                    }
+                }
+            }
+        }
+        for p in &grid {
+            for &c in p {
+                digest = fnv1a(digest, &c.to_le_bytes());
+            }
+        }
+        // No normalization here: it would shift points off the grid and
+        // break the unmoved-points-requantize-identically property.
+        out.push(PointCloud::new(
+            grid.iter()
+                .map(|p| {
+                    Point3::new(
+                        quant::dequantize_coord(p[0]),
+                        quant::dequantize_coord(p[1]),
+                        quant::dequantize_coord(p[2]),
+                    )
+                })
+                .collect(),
+        ));
+    }
+    Sweep { frames: out, label: (seed % NUM_CLASSES as u64) as usize, digest }
+}
+
+/// A batch of independent correlated sweeps — session `s` is
+/// `make_sweep(seed + s, ...)`. This is *the* stream workload behind
+/// `pc2im serve --stream`, the stream bench and `stream_determinism.rs`;
+/// one definition keeps their digest comparisons meaningful.
+pub fn make_sweep_batch(
+    sessions: usize,
+    frames: usize,
+    n_points: usize,
+    seed: u64,
+    drift: f64,
+) -> Vec<Sweep> {
+    (0..sessions).map(|s| make_sweep(seed + s as u64, frames, n_points, drift)).collect()
 }
 
 /// One synthetic primitive cloud of class `label` (0..NUM_CLASSES).
@@ -305,6 +435,61 @@ mod tests {
         // so most points sit below z = 0.
         let low = pc.points.iter().filter(|p| p.z < 0.0).count();
         assert!(low * 10 > pc.len() * 6, "expected bottom-heavy street scene");
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_on_grid() {
+        let a = make_sweep(11, 4, 256, 0.1);
+        let b = make_sweep(11, 4, 256, 0.1);
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.label, b.label);
+        for (fa, fb) in a.frames.iter().zip(&b.frames) {
+            assert_eq!(fa.points, fb.points);
+        }
+        assert_ne!(a.digest, make_sweep(12, 4, 256, 0.1).digest);
+        // Every stored coordinate round-trips through the quantizer
+        // exactly — the property incremental repair relies on.
+        for frame in &a.frames {
+            for p in &frame.points {
+                let q = quant::quantize_point(p);
+                assert_eq!(quant::dequantize_point(&q), *p);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_drift_bounds_frame_deltas() {
+        // drift = 0: every frame is bit-identical to frame 0.
+        let frozen = make_sweep(3, 3, 128, 0.0);
+        for f in &frozen.frames[1..] {
+            assert_eq!(f.points, frozen.frames[0].points);
+        }
+        // drift = 0.1: consecutive frames share most exact coordinates.
+        let s = make_sweep(3, 3, 1024, 0.1);
+        for w in s.frames.windows(2) {
+            let same = w[0].points.iter().zip(&w[1].points).filter(|(a, b)| a == b).count();
+            assert!(same > 800, "only {same}/1024 points survived a 10% drift frame");
+        }
+        // drift = 1.0: essentially everything moves.
+        let churn = make_sweep(3, 2, 1024, 1.0);
+        let same = churn.frames[0]
+            .points
+            .iter()
+            .zip(&churn.frames[1].points)
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(same < 64, "{same}/1024 points unmoved at drift 1.0");
+    }
+
+    #[test]
+    fn sweep_batch_sessions_are_independent_sweeps() {
+        let batch = make_sweep_batch(3, 2, 64, 40, 0.05);
+        assert_eq!(batch.len(), 3);
+        for (s, sweep) in batch.iter().enumerate() {
+            let solo = make_sweep(40 + s as u64, 2, 64, 0.05);
+            assert_eq!(sweep.digest, solo.digest);
+            assert_eq!(sweep.label, (40 + s as u64) as usize % NUM_CLASSES);
+        }
     }
 
     #[test]

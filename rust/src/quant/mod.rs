@@ -138,6 +138,17 @@ mod tests {
     }
 
     #[test]
+    fn grid_roundtrip_is_exact_for_every_u16() {
+        // quantize(dequantize(q)) == q for the full grid: dequantized
+        // sweep frames re-enter the pipeline on exactly the grid points
+        // they were generated on (the foundation of the stream subsystem's
+        // unmoved-point detection).
+        for q in 0..=u16::MAX {
+            assert_eq!(quantize_coord(dequantize_coord(q)), q, "grid point {q} drifted");
+        }
+    }
+
+    #[test]
     fn coord_extremes() {
         assert_eq!(quantize_coord(-1.0), 0);
         assert_eq!(quantize_coord(1.0), u16::MAX);

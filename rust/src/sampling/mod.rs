@@ -16,7 +16,8 @@ pub mod spatial;
 
 pub use fps::{fps_l1, fps_l1_grid, fps_l2, fps_l2_into, FpsTrace};
 pub use msp::{
-    msp_partition, msp_partition_into, IndexCell, MedianIndex, Tile, TilePartition, INDEX_LEAF,
+    msp_partition, msp_partition_into, IndexCell, MedianIndex, RepairOutcome, Tile, TilePartition,
+    INDEX_LEAF, REPAIR_ESCAPE_BOUND,
 };
 pub use query::{
     ball_query, ball_query_into, knn, lattice_query, lattice_query_grid, lattice_query_grid_into,

@@ -217,10 +217,18 @@ pub struct IndexCell {
     pub start: u32,
     /// One-past-last member's position in the index permutation.
     pub end: u32,
-    /// Per-axis bounding-box minimum (grid coordinates).
+    /// Per-axis bounding-box minimum (grid coordinates). Kept **exact**
+    /// (the tight bbox of the current members) by both [`MedianIndex::build`]
+    /// and [`MedianIndex::repair`] — the pruning lower bound depends on it.
     pub lo: [u16; 3],
-    /// Per-axis bounding-box maximum (grid coordinates).
+    /// Per-axis bounding-box maximum (grid coordinates); exact like `lo`.
     pub hi: [u16; 3],
+    /// Build-time bounding-box minimum (the cell's "home" box). Repair
+    /// re-fits `lo`/`hi` but never touches the home box; members drifting
+    /// outside it count toward the rebuild trigger.
+    pub home_lo: [u16; 3],
+    /// Build-time bounding-box maximum (see `home_lo`).
+    pub home_hi: [u16; 3],
 }
 
 impl IndexCell {
@@ -274,7 +282,38 @@ pub struct MedianIndex {
     zs: Vec<u16>,
     /// Leaf cells, covering the permutation exactly.
     cells: Vec<IndexCell>,
+    /// Repair scratch: permutation positions of moved points (refilled
+    /// per [`Self::repair`] call, zero-alloc once warm).
+    moved: Vec<u32>,
+    /// Repair scratch: ids of cells holding at least one moved point.
+    dirty: Vec<u32>,
 }
+
+/// What [`MedianIndex::repair`] did with a new frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepairOutcome {
+    /// The index was patched in place: moved points got their new
+    /// coordinates and every dirty cell's bbox was re-fit exactly.
+    Repaired {
+        /// Points whose quantized coordinates changed since the index
+        /// was last (re)built or repaired.
+        moved: usize,
+    },
+    /// The frame violated a repair bound (size change, more than a
+    /// quarter of the tile moved, or a cell exceeded its escape budget);
+    /// the index was fully rebuilt in the arena instead.
+    Rebuilt {
+        /// Moved-point count observed before falling back (equals the
+        /// tile size when the tile was resized).
+        moved: usize,
+    },
+}
+
+/// Per-cell budget of members allowed outside their build-time home
+/// bounding box before [`MedianIndex::repair`] falls back to a rebuild.
+/// A quarter of a leaf keeps cell bboxes close to their median-split
+/// shape, so the pruning lower bounds stay sharp on drifting streams.
+pub const REPAIR_ESCAPE_BOUND: usize = INDEX_LEAF / 4;
 
 impl MedianIndex {
     /// An empty index (build one with [`Self::build`]).
@@ -368,9 +407,91 @@ impl MedianIndex {
         }
     }
 
+    /// Bring the index up to date with a new frame of the same tile
+    /// **without rebuilding** when the frame is coherent: moved points
+    /// (those whose coordinates differ from the indexed ones) keep their
+    /// permutation slot and cell, get their new coordinates written into
+    /// the SoA, and every dirty cell's bbox is re-fit **exactly** over
+    /// its members — so `l1_lower_bound` stays a true (and tight) lower
+    /// bound and every pruned-kernel result is byte-identical to a fresh
+    /// [`Self::build`] over the same frame (the kernels' outputs and
+    /// closed-form charges never depend on the split structure, only on
+    /// bbox validity; pinned in `rust/tests/stream_determinism.rs`).
+    ///
+    /// Falls back to a full in-arena rebuild when the tile was resized,
+    /// more than a quarter of the points moved, or any dirty cell ends up
+    /// with more than [`REPAIR_ESCAPE_BOUND`] members outside its
+    /// build-time home bbox (drift has degraded the partition enough
+    /// that pruning sharpness is worth the rebuild). Either way this
+    /// allocates nothing once the buffers are warm.
+    pub fn repair(&mut self, pts: &[QPoint3]) -> RepairOutcome {
+        let n = pts.len();
+        if n != self.perm.len() {
+            self.build(pts);
+            return RepairOutcome::Rebuilt { moved: n };
+        }
+        self.moved.clear();
+        for (i, q) in pts.iter().enumerate() {
+            let p = self.inv[i] as usize;
+            if self.xs[p] != q.x || self.ys[p] != q.y || self.zs[p] != q.z {
+                self.moved.push(p as u32);
+            }
+        }
+        let moved = self.moved.len();
+        if moved == 0 {
+            return RepairOutcome::Repaired { moved: 0 };
+        }
+        if moved * 4 > n {
+            self.build(pts);
+            return RepairOutcome::Rebuilt { moved };
+        }
+        // Patch the SoA at the moved permutation slots and collect the
+        // cells that now need a bbox re-fit.
+        self.dirty.clear();
+        for d in 0..self.moved.len() {
+            let p = self.moved[d] as usize;
+            let i = self.perm[p] as usize;
+            let q = pts[i];
+            self.xs[p] = q.x;
+            self.ys[p] = q.y;
+            self.zs[p] = q.z;
+            self.dirty.push(self.cellof[i]);
+        }
+        self.dirty.sort_unstable();
+        self.dirty.dedup();
+        for d in 0..self.dirty.len() {
+            let c = self.dirty[d] as usize;
+            let cell = self.cells[c];
+            let mut lo = [u16::MAX; 3];
+            let mut hi = [u16::MIN; 3];
+            let mut escapes = 0usize;
+            for p in cell.start as usize..cell.end as usize {
+                let (x, y, z) = (self.xs[p], self.ys[p], self.zs[p]);
+                for (a, v) in [x, y, z].into_iter().enumerate() {
+                    lo[a] = lo[a].min(v);
+                    hi[a] = hi[a].max(v);
+                }
+                let out = x < cell.home_lo[0]
+                    || x > cell.home_hi[0]
+                    || y < cell.home_lo[1]
+                    || y > cell.home_hi[1]
+                    || z < cell.home_lo[2]
+                    || z > cell.home_hi[2];
+                escapes += out as usize;
+            }
+            if escapes > REPAIR_ESCAPE_BOUND {
+                self.build(pts);
+                return RepairOutcome::Rebuilt { moved };
+            }
+            self.cells[c].lo = lo;
+            self.cells[c].hi = hi;
+        }
+        RepairOutcome::Repaired { moved }
+    }
+
     /// Byte capacities of the index's growable buffers (scratch-arena
     /// accounting; order is stable).
-    pub fn buffer_bytes(&self) -> [u64; 7] {
+    pub fn buffer_bytes(&self) -> [u64; 9] {
         use std::mem::size_of;
         [
             (self.perm.capacity() * size_of::<u32>()) as u64,
@@ -380,6 +501,8 @@ impl MedianIndex {
             (self.ys.capacity() * size_of::<u16>()) as u64,
             (self.zs.capacity() * size_of::<u16>()) as u64,
             (self.cells.capacity() * size_of::<IndexCell>()) as u64,
+            (self.moved.capacity() * size_of::<u32>()) as u64,
+            (self.dirty.capacity() * size_of::<u32>()) as u64,
         ]
     }
 }
@@ -403,7 +526,14 @@ fn split_cells(pts: &[QPoint3], range: &mut [u32], base: u32, cells: &mut Vec<In
         }
     }
     if range.len() <= INDEX_LEAF {
-        cells.push(IndexCell { start: base, end: base + range.len() as u32, lo, hi });
+        cells.push(IndexCell {
+            start: base,
+            end: base + range.len() as u32,
+            lo,
+            hi,
+            home_lo: lo,
+            home_hi: hi,
+        });
         return;
     }
     let axis = (0..3).max_by_key(|&a| hi[a] - lo[a]).unwrap();
@@ -544,6 +674,121 @@ mod tests {
         let bytes = index.buffer_bytes();
         index.build(&q);
         assert_eq!(index.buffer_bytes(), bytes);
+    }
+
+    /// Every cell bbox is the exact (tight) bbox of its current members —
+    /// the invariant both `build` and `repair` must maintain for the
+    /// pruned kernels' lower bounds to stay exact.
+    fn assert_tight_cells(index: &MedianIndex) {
+        for cell in index.cells() {
+            let (xs, ys, zs) = index.cell_soa(cell);
+            let mut lo = [u16::MAX; 3];
+            let mut hi = [u16::MIN; 3];
+            for k in 0..xs.len() {
+                for (a, v) in [xs[k], ys[k], zs[k]].into_iter().enumerate() {
+                    lo[a] = lo[a].min(v);
+                    hi[a] = hi[a].max(v);
+                }
+            }
+            assert_eq!(cell.lo, lo, "cell bbox min not tight");
+            assert_eq!(cell.hi, hi, "cell bbox max not tight");
+        }
+    }
+
+    #[test]
+    fn repair_patches_in_place_and_keeps_cells_tight() {
+        use crate::quant::quantize_cloud;
+        let pc = make_workload_cloud(DatasetScale::Small, 21);
+        let mut q = quantize_cloud(&pc);
+        let mut index = MedianIndex::new();
+        index.build(&q);
+        let cells_before = index.cells().len();
+        // Nudge a handful of points by a few grid units (coherent drift).
+        for (k, i) in [3usize, 97, 511, 800].into_iter().enumerate() {
+            q[i].x = q[i].x.wrapping_add(k as u16 + 1);
+            q[i].z = q[i].z.wrapping_sub(2);
+        }
+        let outcome = index.repair(&q);
+        assert_eq!(outcome, RepairOutcome::Repaired { moved: 4 });
+        // Same split structure, exact coordinates, tight bboxes.
+        assert_eq!(index.cells().len(), cells_before);
+        for i in 0..q.len() {
+            assert_eq!(index.point(i), q[i], "point {i} not patched");
+        }
+        assert_tight_cells(&index);
+        // An identical frame is a no-op repair.
+        assert_eq!(index.repair(&q), RepairOutcome::Repaired { moved: 0 });
+    }
+
+    #[test]
+    fn repair_rebuilds_on_heavy_drift_and_resize() {
+        use crate::quant::quantize_cloud;
+        let pc = make_workload_cloud(DatasetScale::Small, 22);
+        let mut q = quantize_cloud(&pc);
+        let mut index = MedianIndex::new();
+        index.build(&q);
+        // Move well over a quarter of the tile: must rebuild. XOR of a
+        // high bit guarantees every touched coordinate really changes.
+        for p in q.iter_mut().take(600) {
+            p.y ^= 0x4000;
+        }
+        match index.repair(&q) {
+            RepairOutcome::Rebuilt { moved } => assert_eq!(moved, 600),
+            o => panic!("expected rebuild after 600/1024 moved, got {o:?}"),
+        }
+        // A rebuild leaves the index byte-equivalent to a fresh build.
+        let mut fresh = MedianIndex::new();
+        fresh.build(&q);
+        assert_eq!(index.perm, fresh.perm);
+        assert_eq!(index.xs, fresh.xs);
+        for (a, b) in index.cells().iter().zip(fresh.cells()) {
+            assert_eq!((a.start, a.end, a.lo, a.hi), (b.start, b.end, b.lo, b.hi));
+        }
+        assert_tight_cells(&index);
+        // A resized tile always rebuilds.
+        q.truncate(512);
+        assert_eq!(index.repair(&q), RepairOutcome::Rebuilt { moved: 512 });
+        assert_eq!(index.len(), 512);
+    }
+
+    #[test]
+    fn repair_escape_budget_triggers_rebuild() {
+        use crate::quant::quantize_cloud;
+        let pc = make_workload_cloud(DatasetScale::Small, 23);
+        let mut q = quantize_cloud(&pc);
+        let mut index = MedianIndex::new();
+        index.build(&q);
+        // Teleport REPAIR_ESCAPE_BOUND + 1 members of one cell far away:
+        // under the moved/4 bound overall, but the cell blows its escape
+        // budget, so repair must fall back to a rebuild. Pick a cell whose
+        // home box provably excludes x = 60000 so every teleport counts
+        // as an escape.
+        let cell = *index
+            .cells()
+            .iter()
+            .find(|c| {
+                c.home_hi[0] < 50_000 && (c.end - c.start) as usize > REPAIR_ESCAPE_BOUND
+            })
+            .expect("a full leaf left of x=50000 exists in a normalized cloud");
+        let victims: Vec<usize> = (cell.start as usize..cell.end as usize)
+            .take(REPAIR_ESCAPE_BOUND + 1)
+            .map(|p| index.orig(p))
+            .collect();
+        for (k, &i) in victims.iter().enumerate() {
+            q[i] = QPoint3 { x: 60_000, y: (k as u16) * 17, z: q[i].z };
+        }
+        match index.repair(&q) {
+            RepairOutcome::Rebuilt { moved } => assert_eq!(moved, victims.len()),
+            o => panic!("expected escape-budget rebuild, got {o:?}"),
+        }
+        assert_tight_cells(&index);
+        // Duplicate-coordinate endgame: collapse everything onto one grid
+        // point via rebuild, then repair an identical frame — no panic,
+        // no movement.
+        let dup = vec![QPoint3 { x: 7, y: 7, z: 7 }; 64];
+        index.build(&dup);
+        assert_eq!(index.repair(&dup), RepairOutcome::Repaired { moved: 0 });
+        assert_tight_cells(&index);
     }
 
     #[test]

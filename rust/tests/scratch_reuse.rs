@@ -134,6 +134,45 @@ fn warm_preprocess_is_allocator_silent() {
     }
 }
 
+/// The allocator-level contract for temporal streaming: once a lane has
+/// served one cold frame (building the persistent session index) and one
+/// warm frame (growing the repair bookkeeping to steady size), every
+/// further warm frame — incremental repair, warm-started FPS and the
+/// hint-set refresh included — makes **zero** calls into the global
+/// allocator. This is the property that makes the stream path's host-ops
+/// savings real rather than traded for allocator traffic.
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_stream_frames_are_allocator_silent() {
+    use pc2im::alloc_counter::allocation_count;
+    use pc2im::pointcloud::synthetic::make_sweep;
+
+    let sweep = make_sweep(70, 6, 1024, 0.05);
+    let mut pipe =
+        PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast)).prune(true).build().unwrap();
+    // Warm-up: serve the whole sweep once. The cold frame builds the
+    // session slot and every warm frame grows the moved/dirty repair
+    // bookkeeping to exactly the capacity the replay below needs.
+    for (f, frame) in sweep.frames.iter().enumerate() {
+        pipe.preprocess_stream(frame, f == 0).unwrap();
+    }
+    // Replay the identical sweep as a second session: same per-frame
+    // moved counts, so the whole session — cold rebuild included — must
+    // be allocator-silent.
+    let before = allocation_count();
+    for (f, frame) in sweep.frames.iter().enumerate() {
+        let stats = pipe.preprocess_stream(frame, f == 0).unwrap();
+        assert_eq!(stats.scratch_allocs, 0, "tracked-buffer contract");
+        assert_eq!(
+            stats.index_reused,
+            u64::from(f > 0),
+            "frame {f}: 5% drift must stay on the repair path"
+        );
+    }
+    let grew = allocation_count() - before;
+    assert_eq!(grew, 0, "warm stream frame hit the allocator {grew} times");
+}
+
 /// The same allocator-level contract for the standalone query layer:
 /// once a [`pc2im::sampling::KnnHeap`]/CSR pair (float full-scan path)
 /// and a sorter/index/kernel set (grid partition-pruned path) are warm,

@@ -1,0 +1,199 @@
+//! Temporal-streaming contracts, tested hermetically (no artifacts):
+//!
+//! 1. **Warm == cold, everywhere** — serving a batch of correlated
+//!    sweeps through the persistent-session stream path produces
+//!    byte-identical logits, preds and stats digests to stateless
+//!    per-frame serving of the flattened frame list, across
+//!    {bit-exact, fast} × {prune, no-prune} × {1, 4} workers and under
+//!    the scalar SIMD backend.
+//! 2. **Repair == rebuild under adversarial drift** — full replacement
+//!    (every point moved, the rebuild path), zero drift (no point
+//!    moved, the empty repair) and duplicate-coordinate endgames all
+//!    stay byte-identical to cold classification, with the reuse
+//!    counters pinning which path actually ran.
+
+use pc2im::config::{PipelineConfig, ServeConfig};
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::{Pipeline, PipelineBuilder, ServeEngine, StreamSession};
+use pc2im::engine::Fidelity;
+use pc2im::pointcloud::synthetic::{make_sweep, make_sweep_batch};
+use pc2im::pointcloud::{Point3, PointCloud};
+use pc2im::quant::dequantize_coord;
+use pc2im::simd::{self, SimdMode};
+
+fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
+    PipelineConfig {
+        artifacts_dir: std::env::temp_dir()
+            .join("pc2im-stream-determinism-no-artifacts")
+            .to_string_lossy()
+            .into_owned(),
+        fidelity,
+        ..PipelineConfig::default()
+    }
+}
+
+fn engine(fidelity: Fidelity, prune: bool, workers: usize) -> ServeEngine {
+    PipelineBuilder::from_config(hermetic_cfg(fidelity))
+        .prune(prune)
+        .build_serve(ServeConfig { workers, queue_depth: 4, ..ServeConfig::default() })
+        .unwrap()
+}
+
+fn pipeline(fidelity: Fidelity, prune: bool) -> Pipeline {
+    PipelineBuilder::from_config(hermetic_cfg(fidelity)).prune(prune).build().unwrap()
+}
+
+/// A cloud with every point on the exact same grid coordinate — the
+/// degenerate geometry where median splits cannot separate anything.
+fn dup_cloud(q: u16, n: usize) -> PointCloud {
+    let c = dequantize_coord(q);
+    PointCloud::new(vec![Point3::new(c, c, c); n])
+}
+
+#[test]
+fn warm_stream_matches_cold_serving_across_tiers_prune_and_workers() {
+    let sweeps = make_sweep_batch(2, 3, 1024, 8100, 0.05);
+    let clouds: Vec<PointCloud> = sweeps.iter().flat_map(|s| s.frames.iter().cloned()).collect();
+    let labels: Vec<i32> =
+        sweeps.iter().flat_map(|s| vec![s.label as i32; s.frames.len()]).collect();
+    for fidelity in Fidelity::ALL {
+        for prune in [true, false] {
+            for workers in [1usize, 4] {
+                let mut warm = engine(fidelity, prune, workers);
+                let mut cold = engine(fidelity, prune, workers);
+                let hw = *warm.pipeline().hardware();
+                let stream = warm.run_stream(&sweeps).unwrap();
+                let stateless = cold.run(&clouds, &labels).unwrap();
+                assert_eq!(
+                    stats_digest(&stream.stats, &hw),
+                    stats_digest(&stateless.stats, &hw),
+                    "fidelity={fidelity} prune={prune} workers={workers}: \
+                     stream digest diverged from cold per-frame serving"
+                );
+                for (i, (s, c)) in stream.results.iter().zip(&stateless.results).enumerate() {
+                    assert_eq!(
+                        s.logits, c.logits,
+                        "fidelity={fidelity} prune={prune} workers={workers}: \
+                         frame {i} logits diverged"
+                    );
+                    assert_eq!(s.pred, c.pred, "frame {i} pred diverged");
+                    assert_eq!(s.stats.ledger, c.stats.ledger, "frame {i} ledger diverged");
+                }
+                // The warm machinery only engages on the pruned fast
+                // path; the stateless engine must never reuse.
+                assert_eq!(stateless.stats.index_reused, 0);
+                if fidelity == Fidelity::Fast && prune {
+                    assert!(
+                        stream.stats.index_reused >= 1,
+                        "workers={workers}: pruned fast stream never reused its index"
+                    );
+                    assert!(stream.stats.fps_warm_hits >= 1);
+                } else {
+                    assert_eq!(
+                        stream.stats.index_reused, 0,
+                        "fidelity={fidelity} prune={prune}: stateless-degenerate \
+                         stream path must not report reuse"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scalar_simd_stream_matches_auto() {
+    let sweeps = make_sweep_batch(2, 3, 1024, 8200, 0.05);
+    let mut auto_eng = engine(Fidelity::Fast, true, 2);
+    let hw = *auto_eng.pipeline().hardware();
+    let auto_report = auto_eng.run_stream(&sweeps).unwrap();
+    simd::set_mode(SimdMode::Scalar);
+    let mut scalar_eng = engine(Fidelity::Fast, true, 2);
+    let scalar_report = scalar_eng.run_stream(&sweeps).unwrap();
+    simd::set_mode(SimdMode::Auto);
+    assert_eq!(
+        stats_digest(&auto_report.stats, &hw),
+        stats_digest(&scalar_report.stats, &hw),
+        "stream digest depends on the SIMD backend"
+    );
+    for (i, (a, s)) in auto_report.results.iter().zip(&scalar_report.results).enumerate() {
+        assert_eq!(a.logits, s.logits, "frame {i}: scalar stream logits diverged");
+    }
+}
+
+#[test]
+fn full_replacement_drift_rebuilds_and_still_matches_cold() {
+    // drift = 1.0 replaces every point every frame: moved * 4 > n trips
+    // the rebuild bound, so warm frames take the in-arena rebuild path
+    // (index_reused stays 0) yet remain byte-identical to cold.
+    let sweep = make_sweep(8300, 4, 1024, 1.0);
+    let mut cold = pipeline(Fidelity::Fast, true);
+    let mut lane = pipeline(Fidelity::Fast, true);
+    let mut session = StreamSession::new(0);
+    for (f, frame) in sweep.frames.iter().enumerate() {
+        let a = cold.classify(frame).unwrap();
+        let b = session.classify_frame(&mut lane, frame).unwrap();
+        assert_eq!(a.logits, b.logits, "frame {f}");
+        assert_eq!(a.stats.ledger, b.stats.ledger, "frame {f}");
+        assert_eq!(b.stats.index_reused, 0, "frame {f}: full replacement must rebuild");
+        assert_eq!(b.stats.repaired_points, 0, "frame {f}");
+    }
+}
+
+#[test]
+fn zero_drift_repairs_nothing_and_matches_cold() {
+    // drift = 0.0 freezes the sweep: warm frames run the empty repair
+    // (index reused, zero points patched) and the warm-FPS hint agrees
+    // on every sample.
+    let sweep = make_sweep(8400, 3, 1024, 0.0);
+    let m = sweep.frames[0].points.len() / 4;
+    let mut cold = pipeline(Fidelity::Fast, true);
+    let mut lane = pipeline(Fidelity::Fast, true);
+    let mut session = StreamSession::new(0);
+    for (f, frame) in sweep.frames.iter().enumerate() {
+        let a = cold.classify(frame).unwrap();
+        let b = session.classify_frame(&mut lane, frame).unwrap();
+        assert_eq!(a.logits, b.logits, "frame {f}");
+        assert_eq!(a.stats.ledger, b.stats.ledger, "frame {f}");
+        if f > 0 {
+            assert_eq!(b.stats.index_reused, 1, "frame {f}: identical frame must repair");
+            assert_eq!(b.stats.repaired_points, 0, "frame {f}: nothing moved");
+            // The seed sample is never hint-checked, so a perfect
+            // replay scores m - 1 hits.
+            assert_eq!(
+                b.stats.fps_warm_hits,
+                (m - 1) as u64,
+                "frame {f}: identical geometry must replay the full sample set"
+            );
+        }
+    }
+}
+
+#[test]
+fn duplicate_coordinate_endgame_streams_exactly() {
+    // All points on one grid coordinate: median splits cannot separate
+    // anything, ties resolve by lowest original index everywhere. The
+    // frame sequence walks the three repair outcomes: empty repair
+    // (same cloud), full rebuild (all moved), then a small in-place
+    // patch (4 points back on the old coordinate).
+    let n = 1024;
+    let mut mixed = dup_cloud(41_000, n);
+    let back = dequantize_coord(700);
+    for p in mixed.points.iter_mut().take(4) {
+        *p = Point3::new(back, back, back);
+    }
+    let frames = [dup_cloud(700, n), dup_cloud(700, n), dup_cloud(41_000, n), mixed];
+    let mut cold = pipeline(Fidelity::Fast, true);
+    let mut lane = pipeline(Fidelity::Fast, true);
+    let mut session = StreamSession::new(0);
+    let expect_reuse = [0u64, 1, 0, 1];
+    let expect_repaired = [0u64, 0, 0, 4];
+    for (f, frame) in frames.iter().enumerate() {
+        let a = cold.classify(frame).unwrap();
+        let b = session.classify_frame(&mut lane, frame).unwrap();
+        assert_eq!(a.logits, b.logits, "frame {f}");
+        assert_eq!(a.pred, b.pred, "frame {f}");
+        assert_eq!(a.stats.ledger, b.stats.ledger, "frame {f}");
+        assert_eq!(b.stats.index_reused, expect_reuse[f], "frame {f} repair path");
+        assert_eq!(b.stats.repaired_points, expect_repaired[f], "frame {f} moved count");
+    }
+}

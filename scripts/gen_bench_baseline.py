@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Generate BENCH_seed/BENCH_serve/BENCH_fidelity/BENCH_prep/BENCH_prune.json baselines.
+"""Generate the committed BENCH_*.json baselines (seed/serve/fidelity/
+prep/prune/knn/stream).
 
 This is a line-for-line mirror of the *analytic* accelerator models in
 `rust/src/accel/` (Pc2imModel, Baseline1, Baseline2, GpuModel) over the
@@ -63,6 +64,53 @@ class Rng64:
 
     def f64(self) -> float:
         return (self.next_u64() >> 11) / (1 << 53)
+
+    def below(self, n: int) -> int:
+        """Exact mirror of Rng64::below: Lemire reduction
+        ((next_u64() * n) >> 64), pure integer arithmetic."""
+        return (self.next_u64() * n) >> 64
+
+
+# ---- correlated-sweep mirror (rust/src/pointcloud/synthetic.rs) ----
+
+SWEEP_SALT = 0x5357455033442121  # ASCII "SWEP3D!!"
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def _fnv1a(h: int, data: bytes) -> int:
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & _M64
+    return h
+
+
+def sweep_digest(seed: int, frames: int, n_points: int, drift: float) -> int:
+    """Exact mirror of make_sweep's u16-grid generator and FNV-1a digest
+    (rust/src/pointcloud/synthetic.rs). benches/serve_throughput.rs
+    recomputes the digests pinned in BENCH_stream.json with the Rust
+    generator, so the two sweep implementations cannot drift silently.
+    The threshold truncations below match Rust's `as u64` casts on the
+    same IEEE doubles bit-for-bit."""
+    rng = Rng64(seed ^ SWEEP_SALT)
+    t_jitter = int(drift * 500_000.0)
+    t_replace = int(drift * 1_000_000.0)
+    h = _fnv1a(FNV_OFFSET, n_points.to_bytes(8, "little"))
+    h = _fnv1a(h, frames.to_bytes(8, "little"))
+    grid = [[rng.below(65536) for _ in range(3)] for _ in range(n_points)]
+    for f in range(frames):
+        if f > 0:
+            for p in grid:
+                u = rng.below(1_000_000)
+                if u < t_jitter:
+                    for a in range(3):
+                        d = rng.below(17) - 8
+                        p[a] = min(65535, max(0, p[a] + d))
+                elif u < t_replace:
+                    for a in range(3):
+                        p[a] = rng.below(65536)
+        frame_bytes = b"".join(c.to_bytes(2, "little") for p in grid for c in p)
+        h = _fnv1a(h, frame_bytes)
+    return h
 
 
 # ---- open-loop queue-sim mirror (rust/src/coordinator/serve.rs) ----
@@ -338,7 +386,24 @@ def energy_pj(run):
     return ledger_pj(run["pre"]["led"]) + ledger_pj(run["feat"]["led"])
 
 
+EXISTING_ANCHORS = (
+    "BENCH_seed.json", "BENCH_serve.json", "BENCH_fidelity.json",
+    "BENCH_prep.json", "BENCH_prune.json", "BENCH_knn.json",
+)
+
+
 def main():
+    # Snapshot the committed anchors so additive extensions (like the
+    # BENCH_stream.json block below) provably do not perturb them; see
+    # the regeneration guard at the end of main().
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    anchors_before = {}
+    for fname in EXISTING_ANCHORS:
+        p = os.path.join(root, fname)
+        if os.path.exists(p):
+            with open(p, "rb") as f:
+                anchors_before[fname] = f.read()
+
     scales = [
         ("ModelNet-like (1k)", pointnet2_c()),
         ("S3DIS-like (4k)", pointnet2_s(4096)),
@@ -820,12 +885,130 @@ def main():
     for name, _net in scales:
         assert knn_scales[name]["modeled_max_speedup"] > 4.0, name
 
+    # ---- BENCH_stream.json: the temporal-streaming host-work model ----
+    #
+    # `pc2im serve --stream` serves correlated sweeps through persistent
+    # per-session MedianIndex state: a warm frame diffs the new quantized
+    # cloud against the session SoA, patches only moved points in place
+    # (re-fitting dirty cells' bounding boxes exactly) and warm-starts FPS
+    # under a verify-then-accept rule. Simulated cycles/ledgers never
+    # change (rust/tests/stream_determinism.rs pins warm == cold
+    # bit-for-bit), so this file records the deterministic host-op model:
+    #   cold frame   — full index build (n points x (depth+1) median
+    #     levels) + the pruned FPS pass (m iterations x (cells + leaf));
+    #   steady frame — one n-point diff pass + moved x depth re-bucket
+    #     touches + dirty-cell bbox refits (leaf points each) + the same
+    #     pruned FPS pass;
+    #   rebuild      — when moved * 4 > n the repair bails out to the
+    #     diff pass + a full rebuild (the adversarial-drift endgame).
+    stream_seed, stream_frames, stream_drift = 7000, 8, 0.05
+    drift_sweep = [0.01, 0.05, 0.10, 0.25, 0.50]
+    table_scales = [1024, 4096, 16384]
+    sweep_digests = {
+        str(n): "0x%016x" % sweep_digest(stream_seed, stream_frames, n, stream_drift)
+        for n in table_scales
+    }
+    stream_rows = {}
+    for n in table_scales:
+        depth = int(math.ceil(math.log2(n / index_leaf)))
+        cells = div_ceil(n, index_leaf)
+        m = n // 4
+        fps_pass = m * (cells + index_leaf)
+        cold_frame = n * (depth + 1) + fps_pass
+        rows = []
+        for d in drift_sweep:
+            moved = int(n * d)
+            if moved * 4 > n:
+                path_kind, dirty = "rebuild", cells
+                steady = n + cold_frame
+            else:
+                path_kind, dirty = "repair", min(cells, moved)
+                steady = n + moved * depth + dirty * index_leaf + fps_pass
+            rows.append({
+                "drift": d,
+                "moved_points": moved,
+                "dirty_cells": dirty,
+                "path": path_kind,
+                "cold_frame": cold_frame,
+                "steady_frame": steady,
+                "steady_over_cold": round(steady / cold_frame, 4),
+            })
+        stream_rows[str(n)] = rows
+    stream_out = {
+        "schema": 1,
+        "source": "scripts/gen_bench_baseline.py — temporal-streaming axis of "
+                  "benches/serve_throughput.rs (ServeEngine::run_stream)",
+        "note": (
+            "Deterministic host-op model of frame-coherent serving: cold vs "
+            "steady-state per-frame host work over the persistent session "
+            "index, per Table-I scale and drift. Simulated cycles/ledgers are "
+            "identical warm or cold by construction (rust/tests/"
+            "stream_determinism.rs pins the byte-identity), and measured host "
+            "clouds/sec is machine-dependent and recorded by the CI bench "
+            "smoke lane (benches/serve_throughput.rs, PC2IM_BENCH_JSON)."
+        ),
+        "workload": {
+            "seed": stream_seed,
+            "frames": stream_frames,
+            "drift": stream_drift,
+            "generator": "make_sweep (rust/src/pointcloud/synthetic.rs); the "
+                         "digests below are recomputed and asserted by "
+                         "benches/serve_throughput.rs",
+            "sweep_digests": sweep_digests,
+        },
+        "repair_bounds": {
+            "rebuild_if": "moved * 4 > n, a point-count change, or more than "
+                          "escape_bound members of one cell outside its "
+                          "build-time bounding box",
+            "escape_bound": 8,
+            "verify_then_accept": "warm-FPS hints are never trusted: every "
+                                  "iteration recomputes the exact min-TD "
+                                  "arg-max under the lowest-index tie rule",
+        },
+        "stream_host_ops": stream_rows,
+    }
+    stream_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_stream.json"
+    )
+    with open(stream_path, "w") as f:
+        json.dump(stream_out, f, indent=1)
+        f.write("\n")
+    # stream sanity: steady-state frames must do strictly fewer modeled
+    # host ops than cold frames at every Table-I scale for drift <= 10%
+    # (the acceptance bar), and the 50% endgame must take the rebuild
+    # path so the model is honest about the crossover.
+    for n in table_scales:
+        for r in stream_rows[str(n)]:
+            if r["drift"] <= 0.10:
+                assert r["steady_frame"] < r["cold_frame"], (n, r)
+                assert r["path"] == "repair", (n, r)
+        assert stream_rows[str(n)][-1]["path"] == "rebuild", n
+    # digest sanity: the canonical digests are reproducible and distinct
+    # across scales (a stuck RNG state would collapse them).
+    assert len(set(sweep_digests.values())) == len(table_scales), sweep_digests
+    assert sweep_digests["1024"] == (
+        "0x%016x" % sweep_digest(stream_seed, stream_frames, 1024, stream_drift)
+    )
+
+    # Regeneration guard: additive extensions must not perturb the other
+    # committed anchors. A deliberate cost-model change reruns with
+    # PC2IM_EXPECT_BENCH_DRIFT=1 to accept the new numbers.
+    if os.environ.get("PC2IM_EXPECT_BENCH_DRIFT") != "1":
+        for fname, old in anchors_before.items():
+            with open(os.path.join(root, fname), "rb") as f:
+                new = f.read()
+            assert new == old, (
+                f"{fname} changed on regeneration; rerun with "
+                "PC2IM_EXPECT_BENCH_DRIFT=1 if the model change is intentional"
+            )
+
     print(f"wrote {os.path.normpath(path)}")
     print(f"wrote {os.path.normpath(serve_path)}")
     print(f"wrote {os.path.normpath(fidelity_path)}")
     print(f"wrote {os.path.normpath(prep_path)}")
     print(f"wrote {os.path.normpath(prune_path)}")
     print(f"wrote {os.path.normpath(knn_path)}")
+    print(f"wrote {os.path.normpath(stream_path)}")
     print(json.dumps(out["fig13a_latency"], indent=1))
     print(json.dumps(serve_out["serve_throughput"], indent=1))
     print(json.dumps(fidelity_out["serve_fidelity"], indent=1))
