@@ -35,7 +35,7 @@ use pc2im::coordinator::serve::stats_digest;
 use pc2im::coordinator::{BatchStats, CloudStats, Pipeline, PipelineBuilder};
 use pc2im::energy::{EnergyLedger, Event};
 use pc2im::engine::fast::PrunedPreprocessor;
-use pc2im::engine::{distance_engine, max_search_engine, Fidelity};
+use pc2im::engine::{distance_engine, max_search_engine, Dataflow, Fidelity};
 use pc2im::pointcloud::synthetic::{make_labelled_batch, make_workload_cloud, DatasetScale};
 use pc2im::quant::{quantize_cloud, QPoint3};
 use pc2im::sampling::{GroupsCsr, MedianIndex};
@@ -147,6 +147,37 @@ fn main() {
             means[1]
         );
     }
+
+    // ---- dataflow axis (preprocessing must be dataflow-invariant) ----
+    harness::header("gather-first vs delayed dataflow (preprocess digest asserted equal)");
+    let (clouds, _) = make_labelled_batch(batch, 1024, 33000);
+    let mut flow_digests: Vec<String> = Vec::new();
+    for dataflow in Dataflow::ALL {
+        let mut pipe = PipelineBuilder::new()
+            .fidelity(Fidelity::Fast)
+            .dataflow(dataflow)
+            .build()
+            .expect("hermetic pipeline");
+        flow_digests.push(preprocess_digest(&mut pipe, &clouds)); // also warms scratch
+        let name = format!("preprocess fid=fast batch={batch} dataflow={dataflow}");
+        let mean = harness::bench(&name, iters, || {
+            let mut allocs = 0u64;
+            for c in &clouds {
+                allocs += pipe.preprocess(c).expect("preprocess").scratch_allocs;
+            }
+            assert_eq!(
+                allocs, 0,
+                "warm preprocessing must stay allocation-free under dataflow={dataflow}"
+            );
+            allocs
+        });
+        println!("{:56} {:>10.2} clouds/sec", "", batch as f64 / mean.max(1e-12));
+    }
+    assert_eq!(
+        flow_digests[0], flow_digests[1],
+        "the dataflow reordered the *preprocessing* stages — sampling, grouping and \
+         their accounting must be byte-identical; only the feature stage may differ"
+    );
 
     // ---- kernel-level FPS sweep across Table-I tile scales ----
     harness::header("pruned vs engine-loop FPS kernels (per Table-I tile scale)");

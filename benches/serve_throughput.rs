@@ -36,8 +36,11 @@ use std::collections::HashMap;
 use pc2im::config::{HardwareConfig, ServeConfig};
 use pc2im::coordinator::serve::stats_digest;
 use pc2im::coordinator::{BatchStats, PipelineBuilder};
-use pc2im::engine::Fidelity;
-use pc2im::pointcloud::synthetic::{make_labelled_batch, make_sweep, make_sweep_batch};
+use pc2im::engine::{Dataflow, Fidelity};
+use pc2im::network::pointnet2::NetworkDef;
+use pc2im::pointcloud::synthetic::{
+    make_labelled_batch, make_sweep, make_sweep_batch, DatasetScale,
+};
 use pc2im::pointcloud::PointCloud;
 use pc2im::runtime::json::{self, Value};
 
@@ -177,9 +180,84 @@ fn check_bench_stream_contract() {
     }
 }
 
+/// Fail loudly if BENCH_dataflow.json and the Rust closed forms
+/// disagree: every pinned per-scale cost row must match
+/// [`NetworkDef`]'s dataflow pricing bit-for-bit (the anchor is written
+/// by the exact Python mirror in `scripts/gen_bench_baseline.py`), and
+/// delayed aggregation must be strictly cheaper than gather-first in
+/// MAC cycles and gathered FLOPs at every Table-I scale.
+fn check_bench_dataflow_contract() {
+    let text = std::fs::read_to_string("BENCH_dataflow.json")
+        .expect("BENCH_dataflow.json must sit at the repo root");
+    let doc = json::parse(&text).expect("BENCH_dataflow.json must parse");
+    assert_eq!(
+        doc.get("schema").and_then(Value::as_usize),
+        Some(1),
+        "BENCH_dataflow.json schema drifted from this harness (want 1); \
+         regenerate with scripts/gen_bench_baseline.py"
+    );
+    let par = HardwareConfig::default().parallel_macs();
+    assert_eq!(
+        doc.get("hardware").and_then(|h| h.get("parallel_macs")).and_then(Value::as_usize),
+        Some(par as usize),
+        "BENCH_dataflow.json pinned a different MAC array width"
+    );
+    let Some(Value::Obj(by_scale)) = doc.get("dataflow_costs") else {
+        panic!("BENCH_dataflow.json: dataflow_costs must be an object");
+    };
+    for scale in DatasetScale::ALL {
+        let key = scale.n_points().to_string();
+        let rows = by_scale
+            .get(&key)
+            .and_then(Value::as_arr)
+            .unwrap_or_else(|| panic!("dataflow_costs missing rows for n={key}"));
+        let net = NetworkDef::for_scale(scale);
+        let mut cost = std::collections::HashMap::new();
+        for row in rows {
+            let df: Dataflow = row
+                .get("dataflow")
+                .and_then(Value::as_str)
+                .unwrap_or_else(|| panic!("n={key}: row missing dataflow name"))
+                .parse()
+                .expect("dataflow rows name a valid dataflow");
+            let num = |k: &str| {
+                row.get(k)
+                    .and_then(Value::as_usize)
+                    .unwrap_or_else(|| panic!("n={key} {df}: row missing key {k:?}"))
+                    as u64
+            };
+            assert_eq!(num("mac_cycles"), net.mac_cycles_for(df, par), "n={key} {df}: MAC cycles");
+            assert_eq!(
+                num("feature_cycles"),
+                net.feature_cycles_for(df, par),
+                "n={key} {df}: feature cycles"
+            );
+            assert_eq!(
+                num("gathered_flops"),
+                net.gathered_flops_for(df),
+                "n={key} {df}: gathered FLOPs"
+            );
+            assert_eq!(num("total_macs"), net.total_macs_for(df), "n={key} {df}: total MACs");
+            cost.insert(df, (num("mac_cycles"), num("gathered_flops")));
+        }
+        let g = cost[&Dataflow::GatherFirst];
+        let d = cost[&Dataflow::Delayed];
+        assert!(
+            d.0 < g.0 && d.1 < g.1,
+            "n={key}: committed delayed costs must be strictly below gather-first \
+             (mac cycles {} vs {}, gathered FLOPs {} vs {})",
+            d.0,
+            g.0,
+            d.1,
+            g.1
+        );
+    }
+}
+
 fn main() {
     check_bench_serve_contract();
     check_bench_stream_contract();
+    check_bench_dataflow_contract();
 
     let smoke = harness::smoke_mode();
     let worker_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
@@ -316,4 +394,52 @@ fn main() {
             "{name}: every warm frame at 5% drift must reuse its session index"
         );
     }
+
+    harness::header("dataflow axis (gather-first vs delayed, digest asserted per cell)");
+    let batch = batch_sweep[0];
+    let mut flow_digests: Vec<String> = Vec::new();
+    for dataflow in Dataflow::ALL {
+        // One expected digest per dataflow; every worker-count cell must
+        // land on it (the dataflow changes the digest, the lanes must not).
+        let mut flow_expected: Option<String> = None;
+        for &workers in worker_sweep {
+            let mut engine = PipelineBuilder::new()
+                .fidelity(Fidelity::Fast)
+                .dataflow(dataflow)
+                .build_serve(ServeConfig { workers, queue_depth: 8, ..ServeConfig::default() })
+                .expect("serving engine must build hermetically");
+            let n_points = engine.pipeline().meta().model.n_points;
+            let (clouds, labels) = make_labelled_batch(batch, n_points, STREAM_SEED);
+            let hw = *engine.pipeline().hardware();
+            let name = format!("serve dataflow={dataflow} workers={workers} batch={batch}");
+            let mut digest = String::new();
+            let mut flops = (0u64, 0u64);
+            let mean = harness::bench(&name, iters, || {
+                let report = engine.run(&clouds, &labels).expect("serve run");
+                digest = stats_digest(&report.stats, &hw);
+                flops = (report.stats.gathered_flops, report.stats.unique_mlp_flops);
+                report.results.len()
+            });
+            println!(
+                "{:56} {:>10.2} clouds/sec (gathered FLOPs {}, unique-MLP {})",
+                "",
+                batch as f64 / mean.max(1e-12),
+                flops.0,
+                flops.1
+            );
+            match &flow_expected {
+                None => flow_expected = Some(digest.clone()),
+                Some(want) => assert_eq!(
+                    want, &digest,
+                    "{name}: serve digest must not depend on worker count"
+                ),
+            }
+        }
+        flow_digests.push(flow_expected.expect("dataflow sweep ran"));
+    }
+    assert_ne!(
+        flow_digests[0], flow_digests[1],
+        "gather-first and delayed serving printed the same digest — \
+         the dataflow axis is not reaching the cost model"
+    );
 }

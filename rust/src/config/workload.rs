@@ -1,6 +1,6 @@
 //! Workload and pipeline configuration.
 
-use crate::engine::Fidelity;
+use crate::engine::{Dataflow, Fidelity};
 use crate::pointcloud::synthetic::DatasetScale;
 
 /// A benchmark workload: which dataset scale, how many clouds, which seed.
@@ -76,6 +76,15 @@ pub struct PipelineConfig {
     /// by the gate-level tier's approximate path (no partition-aware
     /// scans there).
     pub prune: bool,
+    /// Which dataflow the grouped SA levels run: the paper's
+    /// gather-first flow (MLP on every gathered neighbor copy) or the
+    /// Mesorasi-style delayed-aggregation flow (MLP once per unique
+    /// point, then grouped max over the CSR groups). For a fixed
+    /// dataflow every simulated statistic is invariant across tiers,
+    /// pruning, SIMD modes and worker counts; the two dataflows differ
+    /// from each other in cycles/energy (and may differ in logits — see
+    /// [`Dataflow`]).
+    pub dataflow: Dataflow,
 }
 
 impl Default for PipelineConfig {
@@ -87,6 +96,7 @@ impl Default for PipelineConfig {
             tile_parallelism: 2,
             fidelity: Fidelity::BitExact,
             prune: true,
+            dataflow: Dataflow::GatherFirst,
         }
     }
 }
@@ -111,5 +121,6 @@ mod tests {
         assert_eq!(p.artifacts_dir, "artifacts");
         assert_eq!(p.fidelity, Fidelity::BitExact);
         assert!(p.prune, "pruned kernels are the default fast path");
+        assert_eq!(p.dataflow, Dataflow::GatherFirst, "the paper's flow is the default");
     }
 }

@@ -21,7 +21,7 @@ use crate::config::{HardwareConfig, PipelineConfig, ServeConfig};
 use crate::coordinator::pipeline::Pipeline;
 use crate::coordinator::scheduler::BatchScheduler;
 use crate::coordinator::serve::ServeEngine;
-use crate::engine::Fidelity;
+use crate::engine::{Dataflow, Fidelity};
 use crate::runtime::{Executor, Meta, Runtime};
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -88,6 +88,15 @@ impl PipelineBuilder {
     /// loops, the bench's comparison axis.
     pub fn prune(mut self, on: bool) -> Self {
         self.cfg.prune = on;
+        self
+    }
+
+    /// Pipeline dataflow ([`Dataflow::GatherFirst`] — the paper's flow —
+    /// by default): `Dataflow::Delayed` runs each level's MLP once over
+    /// the unique points and aggregates over the CSR groups afterwards
+    /// (Mesorasi-style), with its own closed-form cycle/energy model.
+    pub fn dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.cfg.dataflow = dataflow;
         self
     }
 
@@ -179,11 +188,13 @@ mod tests {
             .quantized(true)
             .exact_sampling(true)
             .tile_parallelism(5)
-            .fidelity(Fidelity::Fast);
+            .fidelity(Fidelity::Fast)
+            .dataflow(Dataflow::Delayed);
         assert!(b.config().quantized);
         assert!(b.config().exact_sampling);
         assert_eq!(b.config().tile_parallelism, 5);
         assert_eq!(b.config().fidelity, Fidelity::Fast);
+        assert_eq!(b.config().dataflow, Dataflow::Delayed);
     }
 
     #[test]

@@ -35,7 +35,8 @@ use crate::config::{HardwareConfig, PipelineConfig};
 use crate::coordinator::scratch::CloudScratch;
 use crate::coordinator::stats::CloudStats;
 use crate::engine::fast::PrunedPreprocessor;
-use crate::engine::{DistanceEngine, MaxSearchEngine};
+use crate::engine::{Dataflow, DistanceEngine, MaxSearchEngine};
+use crate::network::pointnet2::AGG_LANES;
 use crate::pointcloud::{Point3, PointCloud};
 use crate::quant::{self, QPoint3};
 use crate::runtime::Runtime;
@@ -84,6 +85,11 @@ enum Activations<'a> {
         art_sa1: &'a str,
         /// Level-2 artifact name (`sa2` or `sa2_q16`).
         art_sa2: &'a str,
+        /// Level-1 per-point artifact (`sa1_pp`/`sa1_pp_q16`) — the
+        /// delayed dataflow's pre-aggregation MLP over unique points.
+        art_sa1_pp: &'a str,
+        /// Level-2 per-point artifact (`sa2_pp`/`sa2_pp_q16`).
+        art_sa2_pp: &'a str,
     },
     /// Zero-fill the activation buffers at the model's channel widths.
     Zero,
@@ -137,6 +143,8 @@ pub struct Pipeline {
     scratch: CloudScratch,
     art_sa1: String,
     art_sa2: String,
+    art_sa1_pp: String,
+    art_sa2_pp: String,
     art_head: String,
 }
 
@@ -153,8 +161,10 @@ impl Pipeline {
             }
         };
         let (art_sa1, art_sa2, art_head) = (artifact("sa1"), artifact("sa2"), artifact("head"));
-        let scratch = CloudScratch::new(cfg.fidelity);
-        Self { rt, hw, cfg, scratch, art_sa1, art_sa2, art_head }
+        let (art_sa1_pp, art_sa2_pp) = (artifact("sa1_pp"), artifact("sa2_pp"));
+        let mut scratch = CloudScratch::new(cfg.fidelity);
+        scratch.reserve(&rt.meta.model, cfg.dataflow);
+        Self { rt, hw, cfg, scratch, art_sa1, art_sa2, art_sa1_pp, art_sa2_pp, art_head }
     }
 
     /// A shareable handle to the runtime's executor (for
@@ -502,14 +512,37 @@ impl Pipeline {
             &mut scratch.l1,
             stats,
         );
-        gather_level1(&scratch.l1, &scratch.pts1_f, &mut scratch.c1_f, &mut scratch.g1);
-        match acts {
-            Activations::Execute { rt, art_sa1, .. } => {
-                rt.execute_into(art_sa1, &scratch.g1, &mut scratch.f1)?; // [S1, 128]
+        match cfg.dataflow {
+            Dataflow::GatherFirst => {
+                gather_level1(&scratch.l1, &scratch.pts1_f, &mut scratch.c1_f, &mut scratch.g1);
+                match acts {
+                    Activations::Execute { rt, art_sa1, .. } => {
+                        rt.execute_into(art_sa1, &scratch.g1, &mut scratch.f1)?; // [S1, 128]
+                    }
+                    Activations::Zero => {
+                        scratch.f1.clear();
+                        scratch.f1.resize(m.s1 * m.mlp1.last().expect("mlp1 dims"), 0.0);
+                    }
+                }
             }
-            Activations::Zero => {
-                scratch.f1.clear();
-                scratch.f1.resize(m.s1 * m.mlp1.last().expect("mlp1 dims"), 0.0);
+            Dataflow::Delayed => {
+                // Delayed aggregation (Mesorasi-style): MLP1 runs once
+                // over the N unique points, then the grouped max pools
+                // over the CSR groups in member order — no gathered
+                // [S1, K1, 3] tensor is ever materialized.
+                fill_centroids(&scratch.l1, &scratch.pts1_f, &mut scratch.c1_f);
+                match acts {
+                    Activations::Execute { rt, art_sa1_pp, .. } => {
+                        flatten_points(&scratch.pts1_f, &mut scratch.pp_x);
+                        rt.execute_into(art_sa1_pp, &scratch.pp_x, &mut scratch.phi)?;
+                        let c_out = scratch.phi.len() / m.n_points;
+                        aggregate_max_csr(&scratch.l1.groups, &scratch.phi, c_out, &mut scratch.f1);
+                    }
+                    Activations::Zero => {
+                        scratch.f1.clear();
+                        scratch.f1.resize(m.s1 * m.mlp1.last().expect("mlp1 dims"), 0.0);
+                    }
+                }
             }
         }
         let c1_dim = scratch.f1.len() / m.s1;
@@ -541,21 +574,45 @@ impl Pipeline {
             &mut scratch.l2,
             stats,
         );
-        gather_level2(
-            &scratch.l2,
-            &scratch.c1_f,
-            &scratch.f1,
-            c1_dim,
-            &mut scratch.c2_f,
-            &mut scratch.g2,
-        );
-        match acts {
-            Activations::Execute { rt, art_sa2, .. } => {
-                rt.execute_into(art_sa2, &scratch.g2, &mut scratch.f2)?; // [S2, 256]
+        match cfg.dataflow {
+            Dataflow::GatherFirst => {
+                gather_level2(
+                    &scratch.l2,
+                    &scratch.c1_f,
+                    &scratch.f1,
+                    c1_dim,
+                    &mut scratch.c2_f,
+                    &mut scratch.g2,
+                );
+                match acts {
+                    Activations::Execute { rt, art_sa2, .. } => {
+                        rt.execute_into(art_sa2, &scratch.g2, &mut scratch.f2)?; // [S2, 256]
+                    }
+                    Activations::Zero => {
+                        scratch.f2.clear();
+                        scratch.f2.resize(m.s2 * m.mlp2.last().expect("mlp2 dims"), 0.0);
+                    }
+                }
             }
-            Activations::Zero => {
-                scratch.f2.clear();
-                scratch.f2.resize(m.s2 * m.mlp2.last().expect("mlp2 dims"), 0.0);
+            Dataflow::Delayed => {
+                // MLP2's unique-point input is the level-1 centroid rows
+                // `[x, y, z, f1]` — raw (uncentered) coordinates, the
+                // documented numeric divergence from the gather-first
+                // flow (see [`crate::engine::Dataflow`]). `gather_global`
+                // already builds exactly this row layout.
+                fill_centroids(&scratch.l2, &scratch.c1_f, &mut scratch.c2_f);
+                match acts {
+                    Activations::Execute { rt, art_sa2_pp, .. } => {
+                        gather_global(&scratch.c1_f, &scratch.f1, c1_dim, &mut scratch.pp_x);
+                        rt.execute_into(art_sa2_pp, &scratch.pp_x, &mut scratch.phi)?;
+                        let c_out = scratch.phi.len() / m.s1;
+                        aggregate_max_csr(&scratch.l2.groups, &scratch.phi, c_out, &mut scratch.f2);
+                    }
+                    Activations::Zero => {
+                        scratch.f2.clear();
+                        scratch.f2.resize(m.s2 * m.mlp2.last().expect("mlp2 dims"), 0.0);
+                    }
+                }
             }
         }
         let c2_dim = scratch.f2.len() / m.s2;
@@ -600,13 +657,19 @@ impl Pipeline {
         let t0 = Instant::now();
         let mut stats = CloudStats::default();
         self.scratch.begin_cloud();
-        let Self { rt, cfg, scratch, art_sa1, art_sa2, art_head, .. } = self;
+        let Self { rt, cfg, scratch, art_sa1, art_sa2, art_sa1_pp, art_sa2_pp, art_head, .. } =
+            self;
         let rt: &Runtime = rt;
         let m = &rt.meta.model;
         scratch.sc.reset();
 
-        let acts =
-            Activations::Execute { rt, art_sa1: art_sa1.as_str(), art_sa2: art_sa2.as_str() };
+        let acts = Activations::Execute {
+            rt,
+            art_sa1: art_sa1.as_str(),
+            art_sa2: art_sa2.as_str(),
+            art_sa1_pp: art_sa1_pp.as_str(),
+            art_sa2_pp: art_sa2_pp.as_str(),
+        };
         let (c1_dim, c2_dim) =
             Self::preprocess_stages(cfg, m, scratch, cloud, acts, stream, &mut stats)?;
         rt.execute_into(art_head, &scratch.g3, &mut scratch.logits)?;
@@ -615,26 +678,78 @@ impl Pipeline {
         // SC-CIM pricing of the full matmul schedule the executor ran
         // (running totals, so pricing after the fact charges the exact
         // same cycles and ledger events as the old interleaved order).
+        // Row counts are the dataflow's: gather-first prices every MLP
+        // layer over the gathered copies (S*K rows), delayed over the
+        // unique points — that is the Mesorasi MAC-cycle win.
         let (in2, in3) = (3 + c1_dim, 3 + c2_dim);
-        scratch.sc.matmul_cost(m.s1 * m.k1, 3, 64);
-        scratch.sc.matmul_cost(m.s1 * m.k1, 64, 64);
-        scratch.sc.matmul_cost(m.s1 * m.k1, 64, 128);
-        scratch.sc.matmul_cost(m.s2 * m.k2, in2, 128);
-        scratch.sc.matmul_cost(m.s2 * m.k2, 128, 128);
-        scratch.sc.matmul_cost(m.s2 * m.k2, 128, 256);
-        scratch.sc.matmul_cost(m.s2, in3, 256);
-        scratch.sc.matmul_cost(m.s2, 256, 512);
-        scratch.sc.matmul_cost(1, 512, 256);
-        scratch.sc.matmul_cost(1, 256, 128);
-        scratch.sc.matmul_cost(1, 128, m.num_classes);
+        let (rows1, rows2) = match cfg.dataflow {
+            Dataflow::GatherFirst => (m.s1 * m.k1, m.s2 * m.k2),
+            Dataflow::Delayed => (m.n_points, m.s1),
+        };
+        {
+            let sc = &mut scratch.sc;
+            let mut charge = |dims: &[usize], first_in: usize, rows: usize| {
+                for (i, w) in dims.windows(2).enumerate() {
+                    sc.matmul_cost(rows, if i == 0 { first_in } else { w[0] }, w[1]);
+                }
+            };
+            charge(&m.mlp1, *m.mlp1.first().expect("mlp1 dims"), rows1);
+            charge(&m.mlp2, in2, rows2);
+            charge(&m.mlp3, in3, m.s2);
+            charge(&m.head, *m.head.first().expect("head dims"), 1);
+        }
 
         stats.feature_cycles += scratch.sc.cycles();
         stats.ledger.merge(scratch.sc.ledger());
-        // grouped tensors spill through on-chip SRAM once each way
-        stats.ledger.charge(
-            crate::energy::Event::SramBit,
-            16 * (scratch.g1.len() as u64 + scratch.g2.len() as u64 + scratch.g3.len() as u64),
-        );
+        let stack_macs = |dims: &[usize], first_in: usize, rows: usize| -> u64 {
+            dims.windows(2)
+                .enumerate()
+                .map(|(i, w)| (rows * if i == 0 { first_in } else { w[0] } * w[1]) as u64)
+                .sum()
+        };
+        let head_in = *m.head.first().expect("head dims");
+        match cfg.dataflow {
+            Dataflow::GatherFirst => {
+                stats.gathered_flops = 2
+                    * (stack_macs(&m.mlp1, *m.mlp1.first().expect("mlp1 dims"), m.s1 * m.k1)
+                        + stack_macs(&m.mlp2, in2, m.s2 * m.k2));
+                stats.unique_mlp_flops =
+                    2 * (stack_macs(&m.mlp3, in3, m.s2) + stack_macs(&m.head, head_in, 1));
+                // grouped tensors spill through on-chip SRAM once each way
+                stats.ledger.charge(
+                    crate::energy::Event::SramBit,
+                    16 * (scratch.g1.len() as u64
+                        + scratch.g2.len() as u64
+                        + scratch.g3.len() as u64),
+                );
+            }
+            Dataflow::Delayed => {
+                // The aggregation stage replaces the gathered-copy MLPs:
+                // one max-compare per gathered feature value, through a
+                // 128-lane comparator array, with each value spilling
+                // through on-chip SRAM once.
+                let v1 = (m.s1 * m.k1 * c1_dim) as u64;
+                let v2 = (m.s2 * m.k2 * c2_dim) as u64;
+                stats.feature_cycles += v1.div_ceil(AGG_LANES) + v2.div_ceil(AGG_LANES);
+                stats.ledger.charge(crate::energy::Event::SramBit, 16 * (v1 + v2));
+                stats.ledger.charge(crate::energy::Event::DigitalCompareBit, 16 * (v1 + v2));
+                stats.gathered_flops = 2 * (v1 + v2);
+                stats.unique_mlp_flops = 2
+                    * (stack_macs(&m.mlp1, *m.mlp1.first().expect("mlp1 dims"), m.n_points)
+                        + stack_macs(&m.mlp2, in2, m.s1)
+                        + stack_macs(&m.mlp3, in3, m.s2)
+                        + stack_macs(&m.head, head_in, 1));
+                // unique-point matrices spill through on-chip SRAM once
+                // each way (closed form — the pp buffer is reused across
+                // both levels, so buffer lengths cannot be read off here)
+                let pp1 = (m.n_points * 3) as u64;
+                let pp2 = (m.s1 * in2) as u64;
+                stats.ledger.charge(
+                    crate::energy::Event::SramBit,
+                    16 * (pp1 + pp2 + scratch.g3.len() as u64),
+                );
+            }
+        }
         let pred = argmax_logits(&scratch.logits);
         let logits = scratch.logits.clone();
         scratch.end_cloud(&mut stats);
@@ -735,11 +850,47 @@ fn gather_level2(
 }
 
 /// Gather the global-layer input (`g3 = [S2, 3 + C2]`) into the arena.
+/// The delayed dataflow reuses the same row layout (`[x, y, z, feat]`)
+/// to build MLP2's unique-point input from the level-1 centroids.
 fn gather_global(c2_f: &[Point3], f2: &[f32], c2_dim: usize, g3: &mut Vec<f32>) {
     g3.clear();
     for (s, c) in c2_f.iter().enumerate() {
         g3.extend_from_slice(&[c.x, c.y, c.z]);
         g3.extend_from_slice(&f2[s * c2_dim..(s + 1) * c2_dim]);
+    }
+}
+
+/// Refill `out` with the level's centroid coordinates (the delayed
+/// dataflow's stand-in for the gather stage, which fills the same buffer
+/// as a side effect on the gather-first flow).
+fn fill_centroids(l: &LevelIndices, pts: &[Point3], out: &mut Vec<Point3>) {
+    out.clear();
+    out.extend(l.centroids.iter().map(|&i| pts[i]));
+}
+
+/// Flatten `[x, y, z]` rows into the delayed flow's unique-point matrix.
+fn flatten_points(pts: &[Point3], out: &mut Vec<f32>) {
+    out.clear();
+    for p in pts {
+        out.extend_from_slice(&[p.x, p.y, p.z]);
+    }
+}
+
+/// Grouped max over per-point activations: for each CSR group, the
+/// element-wise max of its members' `dim`-wide rows of `phi`, appended to
+/// `out`. Members are folded in CSR order with the same
+/// [`crate::simd::max_in_place`] kernel the gather-first executor pools
+/// with, so for identical member multisets the two dataflows pool
+/// bit-identically.
+fn aggregate_max_csr(groups: &GroupsCsr, phi: &[f32], dim: usize, out: &mut Vec<f32>) {
+    out.clear();
+    for grp in groups.iter() {
+        let start = out.len();
+        out.resize(start + dim, f32::NEG_INFINITY);
+        let acc = &mut out[start..];
+        for &j in grp {
+            crate::simd::max_in_place(acc, &phi[j * dim..(j + 1) * dim]);
+        }
     }
 }
 
@@ -768,6 +919,22 @@ mod tests {
         assert_eq!(argmax_logits(&[f32::NAN, f32::NAN]), 0); // all-NaN: no panic
         assert_eq!(argmax_logits(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
         assert_eq!(argmax_logits(&[]), 0);
+    }
+
+    #[test]
+    fn aggregate_max_csr_pools_member_rows() {
+        let mut groups = GroupsCsr::new();
+        groups.indices.extend([0usize, 2]);
+        groups.seal_group();
+        groups.indices.push(1);
+        groups.seal_group();
+        let phi = [1.0f32, -2.0, 0.5, 9.0, 3.0, -1.0]; // 3 rows, dim 2
+        let mut out = Vec::new();
+        aggregate_max_csr(&groups, &phi, 2, &mut out);
+        assert_eq!(out, vec![3.0, -1.0, 0.5, 9.0]);
+        // warm reuse refills in place
+        aggregate_max_csr(&groups, &phi, 2, &mut out);
+        assert_eq!(out, vec![3.0, -1.0, 0.5, 9.0]);
     }
 
     #[test]

@@ -37,17 +37,18 @@ use crate::cim::sorter::TopKSorter;
 use crate::coordinator::pipeline::LevelIndices;
 use crate::coordinator::stats::CloudStats;
 use crate::engine::fast::PrunedPreprocessor;
-use crate::engine::{self, DistanceEngine, Fidelity, MacEngine, MaxSearchEngine};
+use crate::engine::{self, Dataflow, DistanceEngine, Fidelity, MacEngine, MaxSearchEngine};
 use crate::pointcloud::Point3;
 use crate::quant::QPoint3;
+use crate::runtime::ModelMeta;
 use crate::sampling::{FloatIndex, FloatQuery, MedianIndex};
 
 /// Capacity-tracked buffers in the arena (see
-/// [`CloudScratch::buffer_bytes`]): 19 refill buffers plus the median
+/// [`CloudScratch::buffer_bytes`]): 21 refill buffers plus the median
 /// partition index's 9, the stream session index's 9, the warm-FPS hint
 /// buffer, the pruned grid kernels' 4, the float spatial index's 4 and
 /// the float pruned kernels' 4 working buffers.
-const TRACKED_BUFFERS: usize = 50;
+const TRACKED_BUFFERS: usize = 52;
 
 /// All reusable per-cloud state of one pipeline lane: the fidelity-tier
 /// engine models, the streaming top-k sorter, and every coordinate /
@@ -111,6 +112,14 @@ pub struct CloudScratch {
     pub(crate) g2: Vec<f32>,
     /// Gathered global input, `[S2, 3 + C2]` flattened.
     pub(crate) g3: Vec<f32>,
+    /// Unique-point MLP input of the delayed dataflow, `[rows, c_in]`
+    /// flattened (level-1 raw coordinates, then level-2
+    /// coordinate+feature rows). Idle (empty) on the gather-first flow.
+    pub(crate) pp_x: Vec<f32>,
+    /// Unique-point MLP activations of the delayed dataflow,
+    /// `[rows, c_out]` flattened, aggregated over the CSR groups into
+    /// [`Self::f1`]/[`Self::f2`]. Idle on the gather-first flow.
+    pub(crate) phi: Vec<f32>,
     /// Level-1 MLP activations from the executor.
     pub(crate) f1: Vec<f32>,
     /// Level-2 MLP activations from the executor.
@@ -149,10 +158,33 @@ impl CloudScratch {
             g1: Vec::new(),
             g2: Vec::new(),
             g3: Vec::new(),
+            pp_x: Vec::new(),
+            phi: Vec::new(),
             f1: Vec::new(),
             f2: Vec::new(),
             logits: Vec::new(),
             caps_before: [0; TRACKED_BUFFERS],
+        }
+    }
+
+    /// Pre-size the activation buffers whose steady-state shapes are
+    /// fully determined by the model geometry, so the first cloud's
+    /// warm-path `resize`/`execute_into` refills land in already-owned
+    /// storage instead of growing mid-request (the fix for the old
+    /// warm-path `f1`/`f2` resize allocations). Called once per lane by
+    /// `Pipeline::from_parts` — never by [`Self::new`], which the
+    /// cold-arena accounting test pins as byte-empty.
+    pub(crate) fn reserve(&mut self, m: &ModelMeta, dataflow: Dataflow) {
+        let last = |dims: &[usize]| dims.last().copied().unwrap_or(0);
+        let first = |dims: &[usize]| dims.first().copied().unwrap_or(0);
+        self.f1.reserve(m.s1 * last(&m.mlp1));
+        self.f2.reserve(m.s2 * last(&m.mlp2));
+        self.logits.reserve(m.num_classes);
+        if dataflow == Dataflow::Delayed {
+            let rows_in = (m.n_points * first(&m.mlp1)).max(m.s1 * first(&m.mlp2));
+            let rows_out = (m.n_points * last(&m.mlp1)).max(m.s1 * last(&m.mlp2));
+            self.pp_x.reserve(rows_in);
+            self.phi.reserve(rows_out);
         }
     }
 
@@ -213,6 +245,8 @@ impl CloudScratch {
             v(self.g1.capacity(), size_of::<f32>()),
             v(self.g2.capacity(), size_of::<f32>()),
             v(self.g3.capacity(), size_of::<f32>()),
+            v(self.pp_x.capacity(), size_of::<f32>()),
+            v(self.phi.capacity(), size_of::<f32>()),
             v(self.f1.capacity(), size_of::<f32>()),
             v(self.f2.capacity(), size_of::<f32>()),
             v(self.logits.capacity(), size_of::<f32>()),
@@ -253,6 +287,24 @@ mod tests {
         // offsets element (GroupsCsr::new starts offsets at [0]).
         let cold = 2 * std::mem::size_of::<usize>() as u64;
         assert_eq!(stats.scratch_bytes, cold);
+    }
+
+    #[test]
+    fn reserve_presizes_activation_buffers_per_dataflow() {
+        let m = ModelMeta::canonical();
+        let mut g = CloudScratch::new(Fidelity::Fast);
+        g.reserve(&m, Dataflow::GatherFirst);
+        assert!(g.f1.capacity() >= m.s1 * m.mlp1.last().unwrap());
+        assert!(g.f2.capacity() >= m.s2 * m.mlp2.last().unwrap());
+        assert!(g.logits.capacity() >= m.num_classes);
+        assert_eq!(g.pp_x.capacity(), 0, "pp buffers are idle on gather-first");
+        assert_eq!(g.phi.capacity(), 0);
+        let mut d = CloudScratch::new(Fidelity::Fast);
+        d.reserve(&m, Dataflow::Delayed);
+        assert!(d.pp_x.capacity() >= m.s1 * m.mlp2.first().unwrap());
+        assert!(d.pp_x.capacity() >= m.n_points * m.mlp1.first().unwrap());
+        assert!(d.phi.capacity() >= m.n_points * m.mlp1.last().unwrap());
+        assert!(d.phi.capacity() >= m.s1 * m.mlp2.last().unwrap());
     }
 
     #[test]

@@ -97,6 +97,14 @@ pub fn aggregate(results: &[CloudResult], labels: &[i32]) -> BatchStats {
 /// comparable line (host wall-clock is intentionally excluded — it is
 /// timing, not simulation). `serve --workers N` prints this digest, and
 /// the determinism test asserts byte equality across worker counts.
+///
+/// The digest stays 5-field by contract: newer deterministic counters
+/// (stream reuse, the dataflow FLOP counters) are printed on their own
+/// CLI lines instead, so historical digests remain comparable. For a
+/// fixed [`crate::engine::Dataflow`] the digest is invariant across
+/// tiers × prune × SIMD × workers × stream; the two dataflows produce
+/// *different* digests from each other (delayed prices fewer MAC cycles
+/// and different energy — that is the point).
 pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
     format!(
         "n={} correct={} preproc_cycles={} feature_cycles={} energy_uj={:.6}",

@@ -56,6 +56,18 @@ pub struct CloudStats {
     /// the hint never steers selection (verify-then-accept), so samples,
     /// cycles and ledgers are byte-identical with or without it.
     pub fps_warm_hits: u64,
+    /// FLOPs spent on *gathered* work this cloud: on the gather-first
+    /// flow, the MLP layers that run over every gathered neighbor copy
+    /// (2 FLOPs per MAC); on the delayed flow, the grouped-max
+    /// aggregation (2 FLOPs per gathered feature value compared). The
+    /// dataflow comparison's headline counter — deterministic, printed
+    /// by eval/serve, but outside the 5-field determinism digest.
+    pub gathered_flops: u64,
+    /// FLOPs spent on MLP layers that run once per *unique* row
+    /// (2 FLOPs per MAC): mlp3 + head on the gather-first flow, every
+    /// MLP stack on the delayed flow. Deterministic; outside the
+    /// 5-field determinism digest.
+    pub unique_mlp_flops: u64,
 }
 
 impl CloudStats {
@@ -105,6 +117,12 @@ pub struct BatchStats {
     /// Total warm-FPS hint hits across all frames (deterministic stream
     /// counter, summed).
     pub fps_warm_hits: u64,
+    /// Summed gathered-work FLOPs (deterministic dataflow counter — see
+    /// [`CloudStats::gathered_flops`]).
+    pub gathered_flops: u64,
+    /// Summed unique-row MLP FLOPs (deterministic dataflow counter — see
+    /// [`CloudStats::unique_mlp_flops`]).
+    pub unique_mlp_flops: u64,
 }
 
 impl BatchStats {
@@ -121,6 +139,8 @@ impl BatchStats {
         self.index_reused += s.index_reused;
         self.repaired_points += s.repaired_points;
         self.fps_warm_hits += s.fps_warm_hits;
+        self.gathered_flops += s.gathered_flops;
+        self.unique_mlp_flops += s.unique_mlp_flops;
     }
 
     /// Fraction of clouds classified correctly (0 when empty).
@@ -168,6 +188,8 @@ mod tests {
         s.index_reused = 1;
         s.repaired_points = 40;
         s.fps_warm_hits = 7;
+        s.gathered_flops = 1000;
+        s.unique_mlp_flops = 300;
         b.push(&s, true);
         b.push(&s, false);
         assert_eq!(b.n, 2);
@@ -180,6 +202,8 @@ mod tests {
         assert_eq!(b.index_reused, 2, "stream counters fold as sums");
         assert_eq!(b.repaired_points, 80);
         assert_eq!(b.fps_warm_hits, 14);
+        assert_eq!(b.gathered_flops, 2000, "dataflow counters fold as sums");
+        assert_eq!(b.unique_mlp_flops, 600);
     }
 
     #[test]

@@ -84,6 +84,62 @@ impl std::fmt::Display for Fidelity {
     }
 }
 
+/// Which pipeline dataflow orders the MLPs against the neighbor
+/// aggregation.
+///
+/// Both dataflows run the same sampling/grouping front end and the same
+/// global + head layers; they differ in how the two grouped SA levels
+/// feed the MLPs. For a fixed dataflow every simulated statistic is
+/// byte-identical across fidelity tiers, pruning, SIMD modes, worker
+/// counts and stream warm/cold (enforced by
+/// `rust/tests/dataflow_equivalence.rs`); the two dataflows legitimately
+/// differ from each other in logits (centered vs raw coordinates at the
+/// MLP input) and in cycles/energy (the delayed flow's MAC count scales
+/// with unique points, not gathered copies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dataflow {
+    /// The paper's flow: gather K neighbors per centroid (centered
+    /// coordinates), then run the MLP on every gathered copy.
+    #[default]
+    GatherFirst,
+    /// Mesorasi-style delayed aggregation: run the MLP once per *unique*
+    /// input point, then aggregate (grouped max over the CSR groups) —
+    /// each point's features are computed once, however many groups it
+    /// appears in.
+    Delayed,
+}
+
+impl Dataflow {
+    /// Both dataflows, gather-first (the paper's) first.
+    pub const ALL: [Dataflow; 2] = [Dataflow::GatherFirst, Dataflow::Delayed];
+
+    /// The CLI spelling of this dataflow (`--dataflow` value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::GatherFirst => "gather-first",
+            Dataflow::Delayed => "delayed",
+        }
+    }
+}
+
+impl std::str::FromStr for Dataflow {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "gather-first" | "gatherfirst" | "gather_first" => Ok(Dataflow::GatherFirst),
+            "delayed" => Ok(Dataflow::Delayed),
+            other => bail!("unknown dataflow {other:?} (valid: gather-first, delayed)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// The APD-CIM distance-array contract: a resident tile of quantized
 /// points and full-array 19-bit L1 distance scans, with cycle and energy
 /// accounting charged exactly as the silicon would.
@@ -237,6 +293,23 @@ mod tests {
     #[test]
     fn default_is_bit_exact() {
         assert_eq!(Fidelity::default(), Fidelity::BitExact);
+    }
+
+    #[test]
+    fn dataflow_parses_and_prints() {
+        assert_eq!("gather-first".parse::<Dataflow>().unwrap(), Dataflow::GatherFirst);
+        assert_eq!("gather_first".parse::<Dataflow>().unwrap(), Dataflow::GatherFirst);
+        assert_eq!("delayed".parse::<Dataflow>().unwrap(), Dataflow::Delayed);
+        assert!("eager".parse::<Dataflow>().is_err());
+        for d in Dataflow::ALL {
+            assert_eq!(d.name().parse::<Dataflow>().unwrap(), d);
+            assert_eq!(format!("{d}"), d.name());
+        }
+    }
+
+    #[test]
+    fn default_dataflow_is_gather_first() {
+        assert_eq!(Dataflow::default(), Dataflow::GatherFirst);
     }
 
     #[test]

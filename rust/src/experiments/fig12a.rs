@@ -14,7 +14,7 @@
 use super::print_table;
 use crate::config::PipelineConfig;
 use crate::coordinator::{BatchStats, PipelineBuilder};
-use crate::engine::Fidelity;
+use crate::engine::{Dataflow, Fidelity};
 use crate::pointcloud::io::read_testset;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -26,12 +26,14 @@ pub fn eval_config(
     quantized: bool,
     limit: usize,
     fidelity: Fidelity,
+    dataflow: Dataflow,
 ) -> Result<(f64, BatchStats)> {
     let cfg = PipelineConfig {
         exact_sampling: exact,
         quantized,
         artifacts_dir: artifacts_dir.to_string(),
         fidelity,
+        dataflow,
         ..PipelineConfig::default()
     };
     let mut pipe = PipelineBuilder::from_config(cfg).build()?;
@@ -46,15 +48,16 @@ pub fn eval_config(
     Ok((stats.accuracy(), stats))
 }
 
-/// Regenerate the Fig. 12(a) accuracy table on the given engine tier.
-pub fn run(artifacts_dir: &str, fidelity: Fidelity) -> Result<()> {
+/// Regenerate the Fig. 12(a) accuracy table on the given engine tier and
+/// pipeline dataflow.
+pub fn run(artifacts_dir: &str, fidelity: Fidelity, dataflow: Dataflow) -> Result<()> {
     let limit = std::env::var("PC2IM_FIG12A_LIMIT")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(200usize);
-    let (acc_exact, _) = eval_config(artifacts_dir, true, false, limit, fidelity)?;
-    let (acc_approx, _) = eval_config(artifacts_dir, false, false, limit, fidelity)?;
-    let (acc_q16, _) = eval_config(artifacts_dir, false, true, limit, fidelity)?;
+    let (acc_exact, _) = eval_config(artifacts_dir, true, false, limit, fidelity, dataflow)?;
+    let (acc_approx, _) = eval_config(artifacts_dir, false, false, limit, fidelity, dataflow)?;
+    let (acc_q16, _) = eval_config(artifacts_dir, false, true, limit, fidelity, dataflow)?;
     let rows = vec![
         vec![
             "exact L2 FPS + ball query (fp32)".into(),

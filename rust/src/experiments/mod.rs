@@ -6,6 +6,7 @@
 
 pub mod ablation;
 pub mod claims;
+pub mod dataflow;
 pub mod fig12a;
 pub mod fig12b;
 pub mod fig12c;
@@ -16,7 +17,7 @@ pub mod fig5a;
 pub mod table1;
 pub mod table2;
 
-use crate::engine::Fidelity;
+use crate::engine::{Dataflow, Fidelity};
 use anyhow::Result;
 
 /// Every experiment id in paper order.
@@ -28,19 +29,26 @@ pub const ALL_IDS: [&str; 9] = [
 /// authoritative tier for paper-figure reproduction). `artifacts_dir` is
 /// only used by the numerics-backed ones (fig12a).
 pub fn run(id: &str, artifacts_dir: &str) -> Result<()> {
-    run_with(id, artifacts_dir, Fidelity::BitExact)
+    run_with(id, artifacts_dir, Fidelity::BitExact, Dataflow::GatherFirst)
 }
 
-/// Run one experiment by id on an explicit engine tier. Both tiers
-/// produce identical numbers (rust/tests/fidelity_equivalence.rs); the
-/// tier only changes how fast the pipeline-backed experiments run on the
-/// host.
-pub fn run_with(id: &str, artifacts_dir: &str, fidelity: Fidelity) -> Result<()> {
+/// Run one experiment by id on an explicit engine tier and pipeline
+/// dataflow. Both tiers produce identical numbers
+/// (rust/tests/fidelity_equivalence.rs); the tier only changes how fast
+/// the pipeline-backed experiments run on the host. The dataflow steers
+/// the pipeline-backed experiments (fig12a); the `dataflow` ablation
+/// itself always compares both flows.
+pub fn run_with(
+    id: &str,
+    artifacts_dir: &str,
+    fidelity: Fidelity,
+    dataflow: Dataflow,
+) -> Result<()> {
     match id {
         "table1" => table1::run(),
         "table2" => table2::run(),
         "fig5a" => fig5a::run(),
-        "fig12a" => fig12a::run(artifacts_dir, fidelity),
+        "fig12a" => fig12a::run(artifacts_dir, fidelity, dataflow),
         "fig12b" => fig12b::run(),
         "fig12c" => fig12c::run(),
         "fig13a" => fig13a::run(),
@@ -48,17 +56,20 @@ pub fn run_with(id: &str, artifacts_dir: &str, fidelity: Fidelity) -> Result<()>
         "fig13c" => fig13c::run(),
         "claims" => claims::run(),
         "ablation" => ablation::run(),
+        "dataflow" => dataflow::run(artifacts_dir, fidelity),
         "all" => {
             for id in ALL_IDS {
-                run_with(id, artifacts_dir, fidelity)?;
+                run_with(id, artifacts_dir, fidelity, dataflow)?;
                 println!();
             }
             claims::run()?;
             println!();
-            ablation::run()
+            ablation::run()?;
+            println!();
+            dataflow::run(artifacts_dir, fidelity)
         }
         other => anyhow::bail!(
-            "unknown experiment id {other:?} (try: all, claims, ablation, {})",
+            "unknown experiment id {other:?} (try: all, claims, ablation, dataflow, {})",
             ALL_IDS.join(", ")
         ),
     }

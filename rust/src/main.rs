@@ -23,7 +23,7 @@
 use anyhow::{anyhow, bail, Result};
 use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
 use pc2im::coordinator::{serve, PipelineBuilder};
-use pc2im::engine::Fidelity;
+use pc2im::engine::{Dataflow, Fidelity};
 use pc2im::pointcloud::io::read_testset;
 use pc2im::pointcloud::synthetic::{
     make_class_cloud, make_labelled_batch, make_sweep_batch, NUM_CLASSES,
@@ -74,6 +74,15 @@ fn fidelity_arg(args: &Args, default: Fidelity) -> Result<Fidelity> {
     }
 }
 
+/// Parse `--dataflow`; a bad value fails loudly, a missing one means the
+/// paper's gather-first flow.
+fn dataflow_arg(args: &Args) -> Result<Dataflow> {
+    match args.opts.get("dataflow") {
+        None => Ok(Dataflow::GatherFirst),
+        Some(v) => v.parse::<Dataflow>(),
+    }
+}
+
 fn pipeline_config(args: &Args, default_fidelity: Fidelity) -> Result<PipelineConfig> {
     Ok(PipelineConfig {
         quantized: args.flags.iter().any(|f| f == "quantized"),
@@ -90,6 +99,7 @@ fn pipeline_config(args: &Args, default_fidelity: Fidelity) -> Result<PipelineCo
             .and_then(|v| v.parse().ok())
             .unwrap_or(2),
         fidelity: fidelity_arg(args, default_fidelity)?,
+        dataflow: dataflow_arg(args)?,
     })
 }
 
@@ -188,6 +198,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
         stats.scratch_allocs,
         stats.n,
     );
+    println!(
+        "flops gathered={} unique_mlp={}",
+        stats.gathered_flops, stats.unique_mlp_flops,
+    );
     Ok(())
 }
 
@@ -218,6 +232,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "artifacts",
         "parallelism",
         "fidelity",
+        "dataflow",
         "arrival-rate",
         "simd",
         "frames",
@@ -351,6 +366,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.stats.fps_warm_hits,
         );
         println!("stats {}", serve::stats_digest(&report.stats, &hw));
+        println!(
+            "flops gathered={} unique_mlp={}",
+            report.stats.gathered_flops, report.stats.unique_mlp_flops,
+        );
         if let Some(load) = &load {
             println!("load {}", load.digest());
         }
@@ -400,6 +419,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         println!("queue depth at arrival (histogram): {:?}", load.queue_depth_hist);
         println!("stats {}", serve::stats_digest(&report.serve.stats, &hw));
+        println!(
+            "flops gathered={} unique_mlp={}",
+            report.serve.stats.gathered_flops, report.serve.stats.unique_mlp_flops,
+        );
         println!("load {}", load.digest());
         if let Some(path) = &stats_json {
             write_stats_json(path, &report.serve.stats, &hw, Some(load))?;
@@ -428,6 +451,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.accuracy() * 100.0
         );
         println!("stats {}", serve::stats_digest(&stats, &hw));
+        println!(
+            "flops gathered={} unique_mlp={}",
+            stats.gathered_flops, stats.unique_mlp_flops,
+        );
         println!(
             "scratch: {:.1} KiB lane footprint | {} grow events across {n} clouds",
             stats.scratch_bytes as f64 / 1024.0,
@@ -467,6 +494,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         println!("stats {}", serve::stats_digest(&report.stats, &hw));
         println!(
+            "flops gathered={} unique_mlp={}",
+            report.stats.gathered_flops, report.stats.unique_mlp_flops,
+        );
+        println!(
             "scratch: {:.1} KiB max lane footprint | {} grow events across {n} clouds \
              ({} lanes warm up independently)",
             report.stats.scratch_bytes as f64 / 1024.0,
@@ -504,6 +535,8 @@ fn write_stats_json(
     ));
     s.push_str(&format!("  \"scratch_bytes\": {},\n", stats.scratch_bytes));
     s.push_str(&format!("  \"scratch_allocs\": {},\n", stats.scratch_allocs));
+    s.push_str(&format!("  \"gathered_flops\": {},\n", stats.gathered_flops));
+    s.push_str(&format!("  \"unique_mlp_flops\": {},\n", stats.unique_mlp_flops));
     s.push_str(&format!(
         "  \"stream\": {{\"index_reused\": {}, \"repaired_points\": {}, \"fps_warm_hits\": {}}},\n",
         stats.index_reused, stats.repaired_points, stats.fps_warm_hits
@@ -574,8 +607,10 @@ fn help() {
          \u{20}               stream counters and (open-loop) the load metrics as JSON\n\
          \u{20}               [--simd auto|scalar]  kernel backend A/B (bit-identical)\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
-         \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|all\n\
+         \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|dataflow|all\n\
          \u{20}               [--fidelity T]  (default: bit-exact)\n\
+         \u{20}               (--id dataflow ablates gather-first vs delayed across the\n\
+         \u{20}               Table I scales; --dataflow steers the pipeline-backed ones)\n\
          \u{20}  info         print hardware + artifact inventory\n\
          \n\
          common options: --artifacts DIR (default: artifacts)\n\
@@ -583,7 +618,12 @@ fn help() {
          \u{20}               cycles and energy ledgers on both; only host speed differs)\n\
          \u{20}               --no-prune  force full-scan preprocessing on the fast tier\n\
          \u{20}               (median-partition pruned kernels are on by default and\n\
-         \u{20}               byte-identical; the flag exists for A/B timing)"
+         \u{20}               byte-identical; the flag exists for A/B timing)\n\
+         \u{20}               --dataflow gather-first|delayed  pipeline dataflow: delayed\n\
+         \u{20}               runs each level's MLP once per unique point and aggregates\n\
+         \u{20}               afterwards (Mesorasi-style) — fewer MACs and gathered FLOPs,\n\
+         \u{20}               its own deterministic cycle/energy model (default:\n\
+         \u{20}               gather-first, the paper's flow)"
     );
 }
 
@@ -601,7 +641,8 @@ fn main() -> Result<()> {
                 .cloned()
                 .unwrap_or_else(|| "artifacts".to_string());
             let fidelity = fidelity_arg(&args, Fidelity::BitExact)?;
-            pc2im::experiments::run_with(&id, &dir, fidelity)
+            let dataflow = dataflow_arg(&args)?;
+            pc2im::experiments::run_with(&id, &dir, fidelity, dataflow)
         }
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {

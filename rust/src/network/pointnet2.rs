@@ -9,7 +9,14 @@
 //! counts, including the feature-propagation (PFP) layers with kNN(3)
 //! interpolation.
 
+use crate::engine::Dataflow;
 use crate::pointcloud::synthetic::DatasetScale;
+
+/// Comparator lanes of the SC-CIM aggregation stage: gathered feature
+/// values the delayed dataflow's grouped-max reduction consumes per
+/// cycle. Shared by the pipeline's cycle pricing and the closed-form
+/// [`NetworkDef::feature_cycles_for`] model so the two always agree.
+pub const AGG_LANES: u64 = 128;
 
 /// A set-abstraction layer: sample `n_out` centroids from `n_in` points,
 /// group `k` neighbors within `radius`, run the point-wise MLP.
@@ -187,6 +194,148 @@ impl NetworkDef {
         sa + fp + head
     }
 
+    /// MLP rows a set-abstraction layer's stack runs over under a
+    /// dataflow: every gathered neighbor copy on gather-first, every
+    /// unique input point on delayed. The global layer (`n_out == 1`)
+    /// groups all its inputs once, so both flows run it per input point.
+    fn sa_rows(l: &SaLayer, dataflow: Dataflow) -> u64 {
+        match dataflow {
+            Dataflow::GatherFirst if l.n_out > 1 => (l.n_out * l.k) as u64,
+            _ => l.n_in as u64,
+        }
+    }
+
+    /// MLP rows a feature-propagation layer runs over: every kNN
+    /// interpolation source copy on gather-first, every fine point on
+    /// delayed (interpolate *after* the MLP, Mesorasi-style).
+    fn fp_rows(l: &FpLayer, dataflow: Dataflow) -> u64 {
+        match dataflow {
+            Dataflow::GatherFirst => (l.n_fine * l.k) as u64,
+            Dataflow::Delayed => l.n_fine as u64,
+        }
+    }
+
+    /// MACs of one MLP stack over `rows` rows.
+    fn stack_macs(rows: u64, mlp: &[usize]) -> u64 {
+        rows * mlp.windows(2).map(|w| (w[0] * w[1]) as u64).sum::<u64>()
+    }
+
+    /// SC-CIM cycles of one MLP stack over `rows` rows: each layer is a
+    /// tiled matmul priced at `ceil(rows*in*out / parallel_macs)` tile
+    /// waves of 4 pipeline stages — the same formula the pipeline's
+    /// engine model charges per `matmul_cost` call.
+    fn stack_cycles(rows: u64, mlp: &[usize], parallel_macs: u64) -> u64 {
+        mlp.windows(2)
+            .map(|w| (rows * (w[0] * w[1]) as u64).div_ceil(parallel_macs) * 4)
+            .sum()
+    }
+
+    /// Total feature-computing MACs of one forward pass under an explicit
+    /// dataflow (the head always runs once). Unlike [`Self::total_macs`],
+    /// which models the historical `delayed_aggregation` flag, this prices
+    /// both executable pipeline flows including gathered FP copies.
+    pub fn total_macs_for(&self, dataflow: Dataflow) -> u64 {
+        let sa: u64 = self
+            .sa_layers
+            .iter()
+            .map(|l| Self::stack_macs(Self::sa_rows(l, dataflow), &l.mlp))
+            .sum();
+        let fp: u64 = self
+            .fp_layers
+            .iter()
+            .map(|l| Self::stack_macs(Self::fp_rows(l, dataflow), &l.mlp))
+            .sum();
+        sa + fp + Self::stack_macs(1, &self.head)
+    }
+
+    /// Gathered feature values the delayed flow's aggregation stage
+    /// reduces: one output-channel value per grouped neighbor copy on
+    /// every grouping layer (SA layers with `n_out > 1`, kNN sources on
+    /// FP layers). The global SA layer and the head never gather.
+    pub fn aggregation_values(&self) -> u64 {
+        let sa: u64 = self
+            .sa_layers
+            .iter()
+            .filter(|l| l.n_out > 1)
+            .map(|l| (l.n_out * l.k * l.mlp.last().copied().unwrap_or(0)) as u64)
+            .sum();
+        let fp: u64 = self
+            .fp_layers
+            .iter()
+            .map(|l| (l.n_fine * l.k * l.mlp.last().copied().unwrap_or(0)) as u64)
+            .sum();
+        sa + fp
+    }
+
+    /// SC-CIM MAC cycles of one forward pass under a dataflow.
+    pub fn mac_cycles_for(&self, dataflow: Dataflow, parallel_macs: u64) -> u64 {
+        let sa: u64 = self
+            .sa_layers
+            .iter()
+            .map(|l| Self::stack_cycles(Self::sa_rows(l, dataflow), &l.mlp, parallel_macs))
+            .sum();
+        let fp: u64 = self
+            .fp_layers
+            .iter()
+            .map(|l| Self::stack_cycles(Self::fp_rows(l, dataflow), &l.mlp, parallel_macs))
+            .sum();
+        sa + fp + Self::stack_cycles(1, &self.head, parallel_macs)
+    }
+
+    /// Total feature-stage cycles under a dataflow: MAC cycles, plus the
+    /// [`AGG_LANES`]-wide grouped-max reduction the delayed flow pays per
+    /// grouping layer. Matches the pipeline's measured `feature_cycles`
+    /// on the classification model (rust/tests/dataflow_equivalence.rs).
+    pub fn feature_cycles_for(&self, dataflow: Dataflow, parallel_macs: u64) -> u64 {
+        let mac = self.mac_cycles_for(dataflow, parallel_macs);
+        match dataflow {
+            Dataflow::GatherFirst => mac,
+            Dataflow::Delayed => {
+                let sa: u64 = self
+                    .sa_layers
+                    .iter()
+                    .filter(|l| l.n_out > 1)
+                    .map(|l| {
+                        ((l.n_out * l.k * l.mlp.last().copied().unwrap_or(0)) as u64)
+                            .div_ceil(AGG_LANES)
+                    })
+                    .sum();
+                let fp: u64 = self
+                    .fp_layers
+                    .iter()
+                    .map(|l| {
+                        ((l.n_fine * l.k * l.mlp.last().copied().unwrap_or(0)) as u64)
+                            .div_ceil(AGG_LANES)
+                    })
+                    .sum();
+                mac + sa + fp
+            }
+        }
+    }
+
+    /// FLOPs spent on gathered work (2 per MAC / per compared value):
+    /// the grouped layers' MLP stacks on gather-first, the aggregation
+    /// reduction on delayed — the dataflow comparison's headline counter.
+    pub fn gathered_flops_for(&self, dataflow: Dataflow) -> u64 {
+        match dataflow {
+            Dataflow::GatherFirst => {
+                let sa: u64 = self
+                    .sa_layers
+                    .iter()
+                    .filter(|l| l.n_out > 1)
+                    .map(|l| Self::stack_macs(Self::sa_rows(l, dataflow), &l.mlp))
+                    .sum();
+                let fp: u64 = self
+                    .fp_layers
+                    .iter()
+                    .map(|l| Self::stack_macs(Self::fp_rows(l, dataflow), &l.mlp))
+                    .sum();
+                2 * (sa + fp)
+            }
+            Dataflow::Delayed => 2 * self.aggregation_values(),
+        }
+    }
+
     /// Derive the per-cloud workload numbers the simulators consume.
     pub fn workload(&self) -> Workload {
         let mut fps_iterations = 0u64;
@@ -270,6 +419,47 @@ mod tests {
             delayed < eager,
             "delayed {delayed} must be < eager {eager} (Mesorasi-style saving)"
         );
+    }
+
+    #[test]
+    fn closed_form_cycles_match_hand_counts_on_classification_model() {
+        // Hand-verified against the pipeline's matmul-by-matmul pricing
+        // at PARALLEL_MACS = 16384 (see coordinator/pipeline.rs).
+        let net = NetworkDef::pointnet2_c();
+        assert_eq!(net.mac_cycles_for(Dataflow::GatherFirst, 16384), 44_568);
+        assert_eq!(net.mac_cycles_for(Dataflow::Delayed, 16384), 10_368);
+        assert_eq!(net.aggregation_values(), 1_310_720);
+        assert_eq!(net.feature_cycles_for(Dataflow::Delayed, 16384), 20_608);
+        assert_eq!(
+            net.feature_cycles_for(Dataflow::GatherFirst, 16384),
+            net.mac_cycles_for(Dataflow::GatherFirst, 16384),
+            "gather-first pays no aggregation stage"
+        );
+        assert_eq!(net.gathered_flops_for(Dataflow::GatherFirst), 339_476_480);
+        assert_eq!(net.gathered_flops_for(Dataflow::Delayed), 2_621_440);
+    }
+
+    #[test]
+    fn delayed_closed_forms_strictly_lower_at_every_scale() {
+        for scale in [DatasetScale::Small, DatasetScale::Medium, DatasetScale::Large] {
+            let net = NetworkDef::for_scale(scale);
+            let (g, d) = (Dataflow::GatherFirst, Dataflow::Delayed);
+            assert!(
+                net.total_macs_for(d) < net.total_macs_for(g),
+                "{scale:?}: delayed MACs must shrink"
+            );
+            assert!(
+                net.feature_cycles_for(d, 16384) < net.feature_cycles_for(g, 16384),
+                "{scale:?}: delayed cycles must shrink even with the aggregation stage"
+            );
+            assert!(
+                net.gathered_flops_for(d) < net.gathered_flops_for(g),
+                "{scale:?}: delayed gathered FLOPs must shrink"
+            );
+            // The historical flag models exactly the delayed per-point
+            // count, so the two stay tied.
+            assert_eq!(net.total_macs_for(d), net.total_macs());
+        }
     }
 
     #[test]

@@ -119,6 +119,39 @@ pub struct Meta {
     pub weights: Option<ModelWeights>,
 }
 
+/// Register the per-point MLP artifacts (`sa1_pp`, `sa2_pp`, plus their
+/// `_q16` twins) used by the delayed-aggregation dataflow. They run the
+/// same SA weight stacks as `sa1`/`sa2` but over a flat `[rows, c_in]`
+/// matrix of *unique* points instead of the gathered `[s, k, c_in]`
+/// tensor, so the reference executor can serve them from the weights it
+/// already holds. Entries are only added when absent, which keeps
+/// meta.json files free to override shapes/files if a future exporter
+/// lowers them for real.
+fn add_pp_artifacts(model: &ModelMeta, artifacts: &mut HashMap<String, ArtifactMeta>) {
+    let specs: [(&str, Vec<usize>, Vec<usize>); 2] = [
+        (
+            "sa1_pp",
+            vec![model.n_points, *model.mlp1.first().unwrap_or(&0)],
+            vec![model.n_points, *model.mlp1.last().unwrap_or(&0)],
+        ),
+        (
+            "sa2_pp",
+            vec![model.s1, *model.mlp2.first().unwrap_or(&0)],
+            vec![model.s1, *model.mlp2.last().unwrap_or(&0)],
+        ),
+    ];
+    for (base, input_shape, output_shape) in specs {
+        for suffix in ["", "_q16"] {
+            let name = format!("{base}{suffix}");
+            artifacts.entry(name).or_insert_with(|| ArtifactMeta {
+                file: format!("{base}{suffix}.hlo.txt"),
+                input_shape: input_shape.clone(),
+                output_shape: output_shape.clone(),
+            });
+        }
+    }
+}
+
 impl Meta {
     /// Parse `meta.json` out of an artifacts directory.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
@@ -190,6 +223,7 @@ impl Meta {
             Some(w) => Some(reference::parse_weights(w).context("meta.json 'weights' section")?),
             None => None,
         };
+        add_pp_artifacts(&model, &mut artifacts);
         Ok(Self { model, artifacts, testset_file, weights })
     }
 
@@ -224,6 +258,7 @@ impl Meta {
                 );
             }
         }
+        add_pp_artifacts(&model, &mut artifacts);
         Self { model, artifacts, testset_file: "testset.bin".to_string(), weights: None }
     }
 }
@@ -423,6 +458,18 @@ mod tests {
         assert_eq!(rt.meta.artifacts["sa1"].input_shape, vec![256, 32, 3]);
         assert_eq!(rt.meta.artifacts["sa1"].output_shape, vec![256, 128]);
         assert_eq!(rt.backend(), "reference");
+    }
+
+    #[test]
+    fn per_point_artifacts_are_registered_for_delayed_dataflow() {
+        let rt = Runtime::new(no_artifacts()).unwrap();
+        for name in ["sa1_pp", "sa1_pp_q16", "sa2_pp", "sa2_pp_q16"] {
+            assert!(rt.meta.artifacts.contains_key(name), "missing {name}");
+        }
+        assert_eq!(rt.meta.artifacts["sa1_pp"].input_shape, vec![1024, 3]);
+        assert_eq!(rt.meta.artifacts["sa1_pp"].output_shape, vec![1024, 128]);
+        assert_eq!(rt.meta.artifacts["sa2_pp"].input_shape, vec![256, 131]);
+        assert_eq!(rt.meta.artifacts["sa2_pp"].output_shape, vec![256, 256]);
     }
 
     #[test]

@@ -404,6 +404,38 @@ impl ReferenceExecutor {
         Ok(())
     }
 
+    /// Run a per-point MLP artifact (`sa1_pp`/`sa2_pp`, the delayed
+    /// dataflow's pre-aggregation stage): the same all-ReLU weight stack
+    /// as the matching SA graph, applied to a flat `[rows, cin]` matrix
+    /// of unique points with *no* pooling — the coordinator aggregates
+    /// over its CSR groups afterwards. Intermediates ping-pong between
+    /// pooled lane buffers, so a warm executor runs it allocation-free.
+    fn run_pp_into(
+        &self,
+        stack: &[DenseLayer],
+        meta: &ArtifactMeta,
+        data: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let cin = stack[0].cin;
+        let rows = match meta.input_shape.as_slice() {
+            [r, c] => {
+                ensure!(*c == cin, "artifact channel {c} vs stack cin {cin}");
+                *r
+            }
+            _ => {
+                ensure!(cin > 0 && data.len() % cin == 0, "bad pp input length");
+                data.len() / cin
+            }
+        };
+        let mut sc = self.take_scratch();
+        let h = apply_stack_ref_into(stack, data, rows, true, &mut sc.a, &mut sc.b);
+        out.clear();
+        out.extend_from_slice(h);
+        self.put_scratch(sc);
+        Ok(())
+    }
+
     /// Run the head artifact: MLP3 stack, global max over the point sets,
     /// then the head stack with raw logits written into `out` — all
     /// intermediates in pooled lane buffers.
@@ -450,7 +482,7 @@ impl Executor for ReferenceExecutor {
         // single-input graph, so `execute` rejects it).
         let base = name.strip_suffix("_q16").unwrap_or(name);
         ensure!(
-            matches!(base, "sa1" | "sa2" | "head" | "l1_distance"),
+            matches!(base, "sa1" | "sa2" | "sa1_pp" | "sa2_pp" | "head" | "l1_distance"),
             "reference executor cannot interpret artifact {name:?}"
         );
         // Read-lock fast path: execute() calls load() every time, so the
@@ -482,6 +514,8 @@ impl Executor for ReferenceExecutor {
         match base {
             "sa1" => self.run_sa_into(&w.mlp1, meta, self.model.k1, data, out),
             "sa2" => self.run_sa_into(&w.mlp2, meta, self.model.k2, data, out),
+            "sa1_pp" => self.run_pp_into(&w.mlp1, meta, data, out),
+            "sa2_pp" => self.run_pp_into(&w.mlp2, meta, data, out),
             "head" => self.run_head_into(w, meta, data, out),
             other => {
                 bail!("reference executor cannot execute artifact {other:?} as a one-input graph")
@@ -572,6 +606,45 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.mlp1[0].cin, 3);
         assert_eq!(a.head.last().unwrap().cout, model.num_classes);
+    }
+
+    #[test]
+    fn per_point_then_pool_matches_sa_on_gathered_copies() {
+        // The commute lemma behind the delayed dataflow: running the SA
+        // stack once per unique row and max-pooling afterwards is
+        // bit-identical to running it on a gathered [s, k, c] tensor
+        // whose k copies are drawn from those rows (same member order).
+        let model = ModelMeta::canonical();
+        let exec = ReferenceExecutor::new(&model, None).unwrap();
+        let (s, k, c) = (4usize, 3usize, model.mlp1[0]);
+        let mut rng = Rng64::new(0xD00D);
+        let unique: Vec<f32> = (0..s * 2 * c).map(|_| rng.gaussian() * 0.3).collect();
+        let members: Vec<usize> = (0..s * k).map(|i| (i * 5 + 1) % (s * 2)).collect();
+        let gathered: Vec<f32> = members
+            .iter()
+            .flat_map(|&m| unique[m * c..(m + 1) * c].iter().copied())
+            .collect();
+        let pp_meta = ArtifactMeta {
+            file: String::new(),
+            input_shape: vec![s * 2, c],
+            output_shape: vec![s * 2, *model.mlp1.last().unwrap()],
+        };
+        let sa_meta = ArtifactMeta {
+            file: String::new(),
+            input_shape: vec![s, k, c],
+            output_shape: vec![s, *model.mlp1.last().unwrap()],
+        };
+        let phi = exec.execute("sa1_pp", &pp_meta, &unique).unwrap();
+        let c_out = *model.mlp1.last().unwrap();
+        let pooled_from_pp: Vec<f32> = {
+            let gathered_phi: Vec<f32> = members
+                .iter()
+                .flat_map(|&m| phi[m * c_out..(m + 1) * c_out].iter().copied())
+                .collect();
+            grouped_max_ref(&gathered_phi, s, k, c_out)
+        };
+        let pooled_from_sa = exec.execute("sa1", &sa_meta, &gathered).unwrap();
+        assert_eq!(pooled_from_pp, pooled_from_sa);
     }
 
     #[test]

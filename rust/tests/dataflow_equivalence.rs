@@ -1,0 +1,275 @@
+//! The dataflow boundary contract: gather-first (the paper's flow) and
+//! Mesorasi-style delayed aggregation are two priced schedules over the
+//! same network, so for a **fixed** dataflow every axis the repo already
+//! holds bit-stable — fidelity tier, partition pruning, SIMD backend,
+//! worker count, warm streaming — must keep holding byte-identically,
+//! while **between** the dataflows the cost model must separate:
+//! strictly fewer MAC cycles and gathered FLOPs for delayed aggregation
+//! at every Table-I scale, exactly as the [`NetworkDef`] closed forms
+//! predict.
+//!
+//! Cross-dataflow *logits* are deliberately not asserted equal: the
+//! delayed level-2 MLP consumes raw centroid coordinates where
+//! gather-first consumes centered `p - c` offsets, so end-to-end outputs
+//! legitimately diverge (see DESIGN.md). The algebraic piece that *does*
+//! commute — per-point MLP then grouped max equals the MLP over gathered
+//! copies — is pinned bitwise by
+//! `per_point_then_pool_matches_sa_on_gathered_copies` in
+//! `rust/src/runtime/reference.rs`.
+
+use pc2im::config::{HardwareConfig, PipelineConfig, ServeConfig};
+use pc2im::coordinator::serve::stats_digest;
+use pc2im::coordinator::{Pipeline, PipelineBuilder, StreamSession};
+use pc2im::energy::EnergyLedger;
+use pc2im::engine::{Dataflow, Fidelity};
+use pc2im::network::pointnet2::NetworkDef;
+use pc2im::pointcloud::synthetic::{
+    make_class_cloud, make_labelled_batch, make_sweep, DatasetScale,
+};
+use pc2im::simd::{self, SimdMode};
+
+fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
+    PipelineConfig {
+        artifacts_dir: std::env::temp_dir()
+            .join("pc2im-dataflow-no-artifacts")
+            .to_string_lossy()
+            .into_owned(),
+        fidelity,
+        ..PipelineConfig::default()
+    }
+}
+
+/// Build through the public builder setter (not the config literal) so
+/// the `--dataflow` plumbing path is what every test exercises.
+fn pipeline(fidelity: Fidelity, dataflow: Dataflow, prune: bool) -> Pipeline {
+    PipelineBuilder::from_config(hermetic_cfg(fidelity))
+        .dataflow(dataflow)
+        .prune(prune)
+        .build()
+        .unwrap()
+}
+
+/// Per-dataflow serve digests: the bit-exact single-threaded scheduler
+/// fixes one reference digest per dataflow, and every (tier, prune,
+/// worker-count) serving combination must land on it exactly. The two
+/// dataflows themselves must *not* share a digest — delayed aggregation
+/// prices fewer feature cycles by design.
+#[test]
+fn serve_digest_invariant_per_dataflow_across_tiers_prune_and_workers() {
+    let hw = HardwareConfig::default();
+    let (clouds, labels) = make_labelled_batch(4, 1024, 9100);
+    let mut references = Vec::new();
+    for dataflow in Dataflow::ALL {
+        let mut sched = PipelineBuilder::from_config(hermetic_cfg(Fidelity::BitExact))
+            .dataflow(dataflow)
+            .build_scheduler()
+            .unwrap();
+        let (_, ref_stats) = sched.classify_batch(&clouds, &labels).unwrap();
+        let reference = stats_digest(&ref_stats, &hw);
+        for fidelity in Fidelity::ALL {
+            for prune in [true, false] {
+                for workers in [1usize, 4] {
+                    let mut engine = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                        .dataflow(dataflow)
+                        .prune(prune)
+                        .build_serve(ServeConfig {
+                            workers,
+                            queue_depth: 2,
+                            ..ServeConfig::default()
+                        })
+                        .unwrap();
+                    let report = engine.run(&clouds, &labels).unwrap();
+                    assert_eq!(
+                        stats_digest(&report.stats, &hw),
+                        reference,
+                        "dataflow={dataflow} fidelity={fidelity} prune={prune} \
+                         workers={workers}: serve digest diverged from the \
+                         bit-exact scheduler reference"
+                    );
+                }
+            }
+        }
+        references.push(reference);
+    }
+    assert_ne!(
+        references[0], references[1],
+        "gather-first and delayed aggregation priced identical digests — \
+         the dataflow axis is not reaching the cost model"
+    );
+}
+
+/// The SIMD axis: forcing the scalar backends must not move a single
+/// digest byte or logit bit under either dataflow (the delayed flow's
+/// per-point MLP and CSR max-pooling run through the same
+/// bit-identical kernel pairs as gather-first's).
+#[test]
+fn scalar_simd_serving_matches_auto_for_both_dataflows() {
+    let hw = HardwareConfig::default();
+    let (clouds, labels) = make_labelled_batch(3, 1024, 9200);
+    for dataflow in Dataflow::ALL {
+        let serve = |dataflow| {
+            PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
+                .dataflow(dataflow)
+                .build_serve(ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() })
+                .unwrap()
+        };
+        let auto_report = serve(dataflow).run(&clouds, &labels).unwrap();
+        simd::set_mode(SimdMode::Scalar);
+        let scalar_report = serve(dataflow).run(&clouds, &labels).unwrap();
+        simd::set_mode(SimdMode::Auto);
+        assert_eq!(
+            stats_digest(&auto_report.stats, &hw),
+            stats_digest(&scalar_report.stats, &hw),
+            "dataflow={dataflow}: serve digest depends on the SIMD backend"
+        );
+        for (i, (a, s)) in auto_report.results.iter().zip(&scalar_report.results).enumerate() {
+            assert_eq!(a.logits, s.logits, "dataflow={dataflow} cloud {i}: scalar logits");
+            assert_eq!(a.stats.ledger, s.stats.ledger, "dataflow={dataflow} cloud {i}: ledger");
+        }
+    }
+}
+
+/// Warm streaming == cold classification under both dataflows: the
+/// persistent-session path reuses indices and scratch but must stay
+/// byte-identical in logits, ledgers and the new FLOP counters.
+#[test]
+fn warm_stream_matches_cold_classification_for_both_dataflows() {
+    for dataflow in Dataflow::ALL {
+        let sweep = make_sweep(9300, 4, 1024, 0.05);
+        let mut cold = pipeline(Fidelity::Fast, dataflow, true);
+        let mut lane = pipeline(Fidelity::Fast, dataflow, true);
+        let mut session = StreamSession::new(0);
+        for (f, frame) in sweep.frames.iter().enumerate() {
+            let a = cold.classify(frame).unwrap();
+            let b = session.classify_frame(&mut lane, frame).unwrap();
+            assert_eq!(a.logits, b.logits, "dataflow={dataflow} frame {f}: logits");
+            assert_eq!(a.pred, b.pred, "dataflow={dataflow} frame {f}: pred");
+            assert_eq!(a.stats.ledger, b.stats.ledger, "dataflow={dataflow} frame {f}: ledger");
+            assert_eq!(
+                a.stats.feature_cycles, b.stats.feature_cycles,
+                "dataflow={dataflow} frame {f}: feature cycles"
+            );
+            assert_eq!(
+                a.stats.gathered_flops, b.stats.gathered_flops,
+                "dataflow={dataflow} frame {f}: gathered FLOPs"
+            );
+            assert_eq!(
+                a.stats.unique_mlp_flops, b.stats.unique_mlp_flops,
+                "dataflow={dataflow} frame {f}: unique-MLP FLOPs"
+            );
+        }
+    }
+}
+
+/// For a fixed dataflow, classification is bit-identical across
+/// fidelity tiers and pruning: same logits, preds, cycle counts,
+/// ledgers and FLOP counters on every cloud. (Cross-dataflow logit
+/// divergence is the documented exception — see the module doc.)
+#[test]
+fn classify_bit_identical_across_tiers_and_prune_within_each_dataflow() {
+    type Row = (Vec<f32>, usize, u64, u64, u64, u64, EnergyLedger);
+    let (clouds, _) = make_labelled_batch(3, 1024, 9500);
+    for dataflow in Dataflow::ALL {
+        let mut want: Option<Vec<Row>> = None;
+        for fidelity in Fidelity::ALL {
+            for prune in [true, false] {
+                let mut p = pipeline(fidelity, dataflow, prune);
+                let got: Vec<Row> = clouds
+                    .iter()
+                    .map(|c| {
+                        let r = p.classify(c).unwrap();
+                        (
+                            r.logits.clone(),
+                            r.pred,
+                            r.stats.preproc_cycles,
+                            r.stats.feature_cycles,
+                            r.stats.gathered_flops,
+                            r.stats.unique_mlp_flops,
+                            r.stats.ledger.clone(),
+                        )
+                    })
+                    .collect();
+                match &want {
+                    None => want = Some(got),
+                    Some(w) => assert!(
+                        &got == w,
+                        "dataflow={dataflow} fidelity={fidelity} prune={prune}: \
+                         classification diverged from the first combination"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// The 1k pipeline measurements pin the closed forms exactly, warm
+/// re-classification is allocator-silent under both dataflows, and the
+/// delayed flow is strictly cheaper end to end: fewer feature cycles,
+/// fewer gathered FLOPs, less energy — on identical preprocessing.
+#[test]
+fn measured_costs_pin_closed_forms_and_delayed_is_strictly_cheaper() {
+    let hw = HardwareConfig::default();
+    let par = hw.parallel_macs();
+    let net = NetworkDef::pointnet2_c();
+    let mut rows = Vec::new();
+    for dataflow in Dataflow::ALL {
+        let mut p = pipeline(Fidelity::Fast, dataflow, true);
+        let cloud = make_class_cloud(0, p.meta().model.n_points, 0);
+        let r = p.classify(&cloud).unwrap();
+        assert_eq!(
+            r.stats.feature_cycles,
+            net.feature_cycles_for(dataflow, par),
+            "dataflow={dataflow}: measured feature cycles diverge from the closed form"
+        );
+        assert_eq!(
+            r.stats.gathered_flops,
+            net.gathered_flops_for(dataflow),
+            "dataflow={dataflow}: measured gathered FLOPs diverge from the closed form"
+        );
+        let warm = p.classify(&cloud).unwrap();
+        assert_eq!(warm.stats.scratch_allocs, 0, "dataflow={dataflow}: warm classify allocated");
+        assert_eq!(warm.stats.feature_cycles, r.stats.feature_cycles, "dataflow={dataflow}");
+        rows.push((
+            r.stats.preproc_cycles,
+            r.stats.feature_cycles,
+            r.stats.gathered_flops,
+            r.stats.unique_mlp_flops,
+            r.stats.energy_pj(&hw.energy()),
+        ));
+    }
+    let (gf, de) = (&rows[0], &rows[1]);
+    // FLOP-counter closed forms: gathered + unique covers the whole
+    // gather-first network; the delayed unique counter covers all of its
+    // (unique-point) MAC work.
+    assert_eq!(gf.2 + gf.3, 2 * net.total_macs_for(Dataflow::GatherFirst));
+    assert_eq!(de.3, 2 * net.total_macs_for(Dataflow::Delayed));
+    assert_eq!(gf.0, de.0, "preprocessing must be dataflow-independent");
+    assert!(de.1 < gf.1, "delayed feature cycles {} !< gather-first {}", de.1, gf.1);
+    assert!(de.2 < gf.2, "delayed gathered FLOPs {} !< gather-first {}", de.2, gf.2);
+    assert!(de.4 < gf.4, "delayed energy {} !< gather-first {}", de.4, gf.4);
+}
+
+/// The separation holds at every Table-I scale on the closed forms: MAC
+/// cycles, feature cycles and gathered FLOPs are all strictly lower
+/// under delayed aggregation (the aggregation comparator never eats the
+/// MAC savings).
+#[test]
+fn delayed_closed_forms_strictly_lower_at_every_table1_scale() {
+    let par = HardwareConfig::default().parallel_macs();
+    for scale in DatasetScale::ALL {
+        let net = NetworkDef::for_scale(scale);
+        let (gf, de) = (Dataflow::GatherFirst, Dataflow::Delayed);
+        assert!(
+            net.mac_cycles_for(de, par) < net.mac_cycles_for(gf, par),
+            "{scale:?}: delayed MAC cycles not strictly lower"
+        );
+        assert!(
+            net.feature_cycles_for(de, par) < net.feature_cycles_for(gf, par),
+            "{scale:?}: delayed feature cycles not strictly lower"
+        );
+        assert!(
+            net.gathered_flops_for(de) < net.gathered_flops_for(gf),
+            "{scale:?}: delayed gathered FLOPs not strictly lower"
+        );
+    }
+}

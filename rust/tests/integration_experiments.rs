@@ -10,8 +10,10 @@ use pc2im::pointcloud::synthetic::DatasetScale;
 
 #[test]
 fn all_analytic_experiments_run() {
-    let ids =
-        ["table1", "table2", "fig5a", "fig12b", "fig12c", "fig13a", "fig13b", "fig13c", "claims"];
+    let ids = [
+        "table1", "table2", "fig5a", "fig12b", "fig12c", "fig13a", "fig13b", "fig13c", "claims",
+        "dataflow",
+    ];
     for id in ids {
         experiments::run(id, "artifacts").unwrap_or_else(|e| panic!("{id}: {e:?}"));
     }

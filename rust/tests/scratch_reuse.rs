@@ -134,6 +134,48 @@ fn warm_preprocess_is_allocator_silent() {
     }
 }
 
+/// The allocator lane for the dataflow axis: a warm lane's *full
+/// classify* makes the same number of allocator calls under delayed
+/// aggregation as under gather-first (the per-request `CloudResult`
+/// allocates either way; the point is that `pp_x`/`phi`/`f1`/`f2` are
+/// arena buffers like everything else, so switching dataflow adds zero
+/// steady-state allocator traffic), and the tracked-buffer counter stays
+/// at zero for both.
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_classify_allocator_traffic_is_dataflow_invariant() {
+    use pc2im::alloc_counter::allocation_count;
+    use pc2im::engine::Dataflow;
+
+    let clouds: Vec<_> = (0..4).map(|s| make_class_cloud(s % 8, 1024, 60 + s as u64)).collect();
+    let mut per_flow = Vec::new();
+    for dataflow in Dataflow::ALL {
+        let mut pipe = PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
+            .dataflow(dataflow)
+            .prune(true)
+            .build()
+            .unwrap();
+        for c in &clouds {
+            pipe.classify(c).unwrap(); // warm the arena, both SA levels
+        }
+        let before = allocation_count();
+        for c in &clouds {
+            let r = pipe.classify(c).unwrap();
+            assert_eq!(
+                r.stats.scratch_allocs, 0,
+                "dataflow={dataflow}: warm classify grew a tracked buffer"
+            );
+        }
+        per_flow.push(allocation_count() - before);
+    }
+    assert_eq!(
+        per_flow[0], per_flow[1],
+        "delayed aggregation changed warm-classify allocator traffic \
+         (gather-first {} calls vs delayed {})",
+        per_flow[0], per_flow[1]
+    );
+}
+
 /// The allocator-level contract for temporal streaming: once a lane has
 /// served one cold frame (building the persistent session index) and one
 /// warm frame (growing the repair bookkeeping to steady size), every
