@@ -1,0 +1,138 @@
+//! MLP feature-computing throughput on the host floor: the cache-blocked
+//! packed-panel GEMM driver vs the per-row reference loop, swept over the
+//! layer shapes the canonical PointNet++ pipeline actually runs (sa1/sa2
+//! gathered rows, the wide sa2/sa3 reductions, the single-row head) plus
+//! one deliberately ragged shape that is a multiple of nothing.
+//!
+//! Every cell asserts the two drivers **bit-identical** (same digest over
+//! `f32::to_bits`), and re-runs the blocked driver under every `--simd`
+//! dispatch mode asserting the same — the bench is the contract's
+//! loudest canary, because it runs the exact shapes serving runs. Outside
+//! smoke mode the blocked driver must also be *faster* in aggregate over
+//! the sweep, or the bench fails: the packed panels exist to buy speed,
+//! not just to match bits.
+//!
+//! Run with: `cargo bench --bench mlp_throughput`
+//! (CI runs it in smoke mode — 1 iteration — via `PC2IM_BENCH_SMOKE=1`;
+//! `PC2IM_BENCH_JSON=<path>` appends one JSON line per cell. The
+//! committed deterministic anchor is BENCH_mlp.json; host GFLOP/s printed
+//! here is machine-dependent.)
+
+#[path = "harness.rs"]
+mod harness;
+
+use pc2im::rng::Rng64;
+use pc2im::runtime::reference::{
+    mlp_layer_blocked_into, mlp_layer_ref_into, DenseLayer, PackedLayer,
+};
+use pc2im::simd::{self, SimdMode};
+
+/// (rows, cin, cout) — the canonical pipeline's layer shapes: sa1 gathered
+/// rows (256 centroids × 32 neighbors) through its first and widest
+/// layers, sa2's gathered rows (64 × 16) with the concat-widened inputs,
+/// the sa3/head single-batch shapes, and a ragged shape aligned to
+/// neither the row block (8) nor the panel width (16).
+const CELLS: &[(usize, usize, usize)] = &[
+    (8192, 3, 64),
+    (8192, 64, 128),
+    (1024, 131, 128),
+    (1024, 128, 256),
+    (64, 259, 512),
+    (1, 512, 256),
+    (37, 19, 23),
+];
+
+/// All dispatch modes the digest is asserted invariant across.
+const MODES: [SimdMode; 4] = [SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2, SimdMode::Auto];
+
+/// Order-independent digest of an activation buffer, exact over bits.
+fn digest(v: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for x in v {
+        h = (h ^ u64::from(x.to_bits())).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn main() {
+    let smoke = harness::smoke_mode();
+    let iters = if smoke { 1 } else { 7 };
+    simd::set_mode(SimdMode::Auto);
+
+    harness::header("blocked packed-panel GEMM vs per-row reference (digest asserted equal)");
+    let mut total_flops = 0u64;
+    let (mut total_ref, mut total_blocked) = (0.0f64, 0.0f64);
+    for (cell, &(rows, cin, cout)) in CELLS.iter().enumerate() {
+        let mut rng = Rng64::new(0x91E0 + cell as u64);
+        let w: Vec<f32> = (0..cin * cout).map(|_| rng.gaussian() * 0.2).collect();
+        let b: Vec<f32> = (0..cout).map(|_| rng.gaussian() * 0.1).collect();
+        let layer = DenseLayer::new(cin, cout, w, b).expect("well-formed layer");
+        let packed = PackedLayer::pack(&layer);
+        // ~25% exact zeros: serving activations are post-ReLU, so the
+        // zero-skip path must be on the measured path too.
+        let x: Vec<f32> = (0..rows * cin)
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { rng.gaussian() })
+            .collect();
+        let relu = cell % 2 == 0;
+        let flops = 2 * (rows * cin * cout) as u64;
+        total_flops += flops;
+
+        let mut out_ref = Vec::new();
+        let name = format!("gemm reference rows={rows} cin={cin} cout={cout}");
+        let mean_ref = harness::bench(&name, iters, || {
+            mlp_layer_ref_into(&x, rows, &layer, relu, &mut out_ref);
+            out_ref[0].to_bits()
+        });
+        println!("{:56} {:>10.2} GFLOP/s", "", flops as f64 / mean_ref.max(1e-12) / 1e9);
+
+        let mut out_blk = Vec::new();
+        let name = format!("gemm blocked   rows={rows} cin={cin} cout={cout}");
+        let mean_blk = harness::bench(&name, iters, || {
+            mlp_layer_blocked_into(&x, rows, &layer, &packed, relu, &mut out_blk);
+            out_blk[0].to_bits()
+        });
+        println!("{:56} {:>10.2} GFLOP/s", "", flops as f64 / mean_blk.max(1e-12) / 1e9);
+
+        // Digest asserted equal per cell, then re-pinned under every
+        // dispatch mode for both drivers.
+        let want = digest(&out_ref);
+        assert_eq!(
+            want,
+            digest(&out_blk),
+            "rows={rows} cin={cin} cout={cout}: blocked driver diverged from reference"
+        );
+        for mode in MODES {
+            simd::set_mode(mode);
+            mlp_layer_ref_into(&x, rows, &layer, relu, &mut out_ref);
+            mlp_layer_blocked_into(&x, rows, &layer, &packed, relu, &mut out_blk);
+            assert_eq!(
+                want,
+                digest(&out_ref),
+                "rows={rows} cin={cin} cout={cout} simd={mode}: reference digest moved"
+            );
+            assert_eq!(
+                want,
+                digest(&out_blk),
+                "rows={rows} cin={cin} cout={cout} simd={mode}: blocked digest moved"
+            );
+        }
+        simd::set_mode(SimdMode::Auto);
+
+        total_ref += mean_ref;
+        total_blocked += mean_blk;
+    }
+
+    println!(
+        "\nsweep total: reference {:.2} GFLOP/s, blocked {:.2} GFLOP/s ({:.2}x)",
+        total_flops as f64 / total_ref.max(1e-12) / 1e9,
+        total_flops as f64 / total_blocked.max(1e-12) / 1e9,
+        total_ref.max(1e-12) / total_blocked.max(1e-12),
+    );
+    if !smoke {
+        assert!(
+            total_blocked < total_ref,
+            "blocked GEMM ({total_blocked:.6}s over the sweep) must beat the reference \
+             loop ({total_ref:.6}s) — the packed panels are a speed lever, not a no-op"
+        );
+    }
+}

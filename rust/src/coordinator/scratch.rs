@@ -29,6 +29,13 @@
 //! place, so a warm open-loop replay — timestamp and percentile
 //! accounting included — makes zero allocator calls (pinned by the
 //! alloc-counter lane in `rust/tests/scratch_reuse.rs`).
+//!
+//! The blocked GEMM driver keeps the same contract from the other side:
+//! its packed weight panels live in the shared executor (built once at
+//! construction — see `runtime::reference::PackedLayer`), not in this
+//! arena, so switching `--gemm` or `--simd` adds nothing to the per-cloud
+//! data plane and warm classify stays allocator-silent under every
+//! kernel combination (also pinned in `rust/tests/scratch_reuse.rs`).
 
 use crate::cim::apd_cim::ApdCimConfig;
 use crate::cim::max_cam::CamConfig;

@@ -102,9 +102,9 @@ pub fn aggregate(results: &[CloudResult], labels: &[i32]) -> BatchStats {
 /// (stream reuse, the dataflow FLOP counters) are printed on their own
 /// CLI lines instead, so historical digests remain comparable. For a
 /// fixed [`crate::engine::Dataflow`] the digest is invariant across
-/// tiers × prune × SIMD × workers × stream; the two dataflows produce
-/// *different* digests from each other (delayed prices fewer MAC cycles
-/// and different energy — that is the point).
+/// tiers × prune × SIMD × GEMM kernel × workers × stream; the two
+/// dataflows produce *different* digests from each other (delayed prices
+/// fewer MAC cycles and different energy — that is the point).
 pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
     format!(
         "n={} correct={} preproc_cycles={} feature_cycles={} energy_uj={:.6}",
@@ -113,6 +113,22 @@ pub fn stats_digest(stats: &BatchStats, hw: &HardwareConfig) -> String {
         stats.preproc_cycles,
         stats.feature_cycles,
         stats.ledger.total_pj(&hw.energy()) * 1e-6,
+    )
+}
+
+/// Render the `kernel ...` line every serve output path prints alongside
+/// the stats digest: which SIMD backend actually ran (the `--simd`
+/// ceiling lowered to CPU reality by the runtime probe) and which GEMM
+/// driver the dense layers used. Deliberately its **own** line, outside
+/// [`stats_digest`]: the kernel axes never move a digest byte — that is
+/// the bit-identity contract — so deployments can verify what ran
+/// without forking the historical digest format.
+pub fn kernel_line() -> String {
+    format!(
+        "kernel backend={} gemm={} (simd mode {})",
+        crate::simd::active_backend(),
+        crate::simd::gemm_kernel(),
+        crate::simd::mode(),
     )
 }
 

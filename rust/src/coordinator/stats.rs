@@ -88,7 +88,11 @@ impl CloudStats {
 /// `scratch_allocs` is deterministic (simulated cycles and event
 /// counts); the host-side fields are timing/memory observability and are
 /// excluded from the serving determinism contract
-/// ([`crate::coordinator::serve::stats_digest`]).
+/// ([`crate::coordinator::serve::stats_digest`]). Host kernel choices —
+/// the `--simd` backend and the `--gemm` driver — are bit-identity
+/// levers, so no field here can depend on them; the active kernel is
+/// surfaced separately ([`crate::coordinator::serve::kernel_line`] and
+/// the `kernel` object of `--stats-json`).
 #[derive(Debug, Clone, Default)]
 pub struct BatchStats {
     /// Clouds aggregated so far.

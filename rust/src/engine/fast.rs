@@ -87,10 +87,10 @@ impl FastDistance {
 
 /// Blocked SoA L1-distance microkernel: computes every member's 19-bit
 /// L1 distance to `r` from the coordinate lane slices and hands
-/// `(member_offset, distance)` to `sink` in order,
-/// [`crate::simd::LANES`]-wide blocks first then a scalar tail. Routed
-/// through [`crate::simd::l1_lanes`], which picks the SSE2 or scalar body
-/// at runtime — both emit identical distances in identical order (exact
+/// `(member_offset, distance)` to `sink` in increasing-index order.
+/// Routed through [`crate::simd::l1_lanes`], which dispatches at runtime
+/// between the AVX2, SSE2 and scalar bodies (`--simd` ceiling × cached
+/// CPU probe) — all emit identical distances in identical order (exact
 /// integer arithmetic), so the choice never reaches cycles, ledgers or
 /// digests.
 #[inline]

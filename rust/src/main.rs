@@ -235,6 +235,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "dataflow",
         "arrival-rate",
         "simd",
+        "gemm",
         "frames",
         "drift",
         "stats-json",
@@ -276,11 +277,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and a bad --frames/--drift when --stream is).
     serve_cfg.validate()?;
     let stats_json = args.opts.get("stats-json").cloned();
-    // SIMD backend selection is process-wide: both backends are
-    // bit-identical, so --simd scalar only changes host speed (an A/B
-    // switch and the fallback escape hatch).
+    // Kernel selection is process-wide and bit-identical across every
+    // choice, so --simd / --gemm only change host speed (A/B switches
+    // and fallback escape hatches). --simd is a ceiling: an unavailable
+    // backend degrades to the best the CPU has, and the `kernel ...`
+    // line below reports what actually ran.
     if let Some(v) = args.opts.get("simd") {
         pc2im::simd::set_mode(v.parse()?);
+    }
+    if let Some(v) = args.opts.get("gemm") {
+        pc2im::simd::set_gemm_kernel(v.parse()?);
     }
     // Serving defaults to the fast tier (identical outputs and digests,
     // only host throughput differs).
@@ -365,6 +371,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.stats.repaired_points,
             report.stats.fps_warm_hits,
         );
+        println!("{}", serve::kernel_line());
         println!("stats {}", serve::stats_digest(&report.stats, &hw));
         println!(
             "flops gathered={} unique_mlp={}",
@@ -418,6 +425,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             load.max_latency_s * 1e3,
         );
         println!("queue depth at arrival (histogram): {:?}", load.queue_depth_hist);
+        println!("{}", serve::kernel_line());
         println!("stats {}", serve::stats_digest(&report.serve.stats, &hw));
         println!(
             "flops gathered={} unique_mlp={}",
@@ -450,6 +458,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n as f64 / wall,
             stats.accuracy() * 100.0
         );
+        println!("{}", serve::kernel_line());
         println!("stats {}", serve::stats_digest(&stats, &hw));
         println!(
             "flops gathered={} unique_mlp={}",
@@ -492,6 +501,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             pct(0.99),
             lat.last().unwrap() * 1e3
         );
+        println!("{}", serve::kernel_line());
         println!("stats {}", serve::stats_digest(&report.stats, &hw));
         println!(
             "flops gathered={} unique_mlp={}",
@@ -537,6 +547,11 @@ fn write_stats_json(
     s.push_str(&format!("  \"scratch_allocs\": {},\n", stats.scratch_allocs));
     s.push_str(&format!("  \"gathered_flops\": {},\n", stats.gathered_flops));
     s.push_str(&format!("  \"unique_mlp_flops\": {},\n", stats.unique_mlp_flops));
+    s.push_str(&format!(
+        "  \"kernel\": {{\"backend\": \"{}\", \"gemm\": \"{}\"}},\n",
+        pc2im::simd::active_backend(),
+        pc2im::simd::gemm_kernel(),
+    ));
     s.push_str(&format!(
         "  \"stream\": {{\"index_reused\": {}, \"repaired_points\": {}, \"fps_warm_hits\": {}}},\n",
         stats.index_reused, stats.repaired_points, stats.fps_warm_hits
@@ -604,8 +619,13 @@ fn help() {
          \u{20}               byte-identical outputs/digest, cold-vs-steady clouds/sec\n\
          \u{20}               split and stream reuse counters (composes with --open-loop)\n\
          \u{20}               [--stats-json PATH]  dump the deterministic aggregate, the\n\
-         \u{20}               stream counters and (open-loop) the load metrics as JSON\n\
-         \u{20}               [--simd auto|scalar]  kernel backend A/B (bit-identical)\n\
+         \u{20}               stream counters, the active kernel and (open-loop) the load\n\
+         \u{20}               metrics as JSON\n\
+         \u{20}               [--simd auto|scalar|sse2|avx2]  SIMD backend ceiling (runtime\n\
+         \u{20}               CPU probe lowers it; all backends bit-identical — the\n\
+         \u{20}               `kernel ...` line reports what actually ran)\n\
+         \u{20}               [--gemm blocked|reference]  dense-layer GEMM driver A/B\n\
+         \u{20}               (packed-panel blocked kernel is the default; bit-identical)\n\
          \u{20}  experiments  regenerate a paper table/figure\n\
          \u{20}               --id table1|table2|fig5a|fig12a|fig12b|fig12c|fig13a|fig13b|fig13c|claims|dataflow|all\n\
          \u{20}               [--fidelity T]  (default: bit-exact)\n\

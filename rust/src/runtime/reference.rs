@@ -19,6 +19,15 @@
 //!   head stack with no ReLU on the last layer (raw logits)
 //! - `*_q16` artifacts: the same graphs over 16-bit PTQ weights, mirroring
 //!   `python/compile/aot.py::quantize_params`
+//!
+//! Dense layers run through one of two bit-identical GEMM drivers,
+//! selected process-wide by [`crate::simd::GemmKernel`] (`--gemm`): the
+//! default **blocked** driver ([`mlp_layer_blocked_into`]) drives
+//! row-blocks of activations against pre-packed column panels
+//! ([`PackedLayer`], built once per executor), while the **reference**
+//! driver ([`mlp_layer_ref_into`]) re-streams the row-major weights per
+//! row — kept for A/B timing and verification. See DESIGN.md §"Host GEMM
+//! floor" for the layout and the bit-identity argument.
 
 use super::{ArtifactMeta, Executor, ModelMeta};
 use crate::rng::Rng64;
@@ -92,9 +101,9 @@ pub fn mlp_layer_ref_into(
         let or = &mut out[r * cout..(r + 1) * cout];
         or.copy_from_slice(&layer.b);
         // The row loop stays scalar control flow (incl. the zero-input
-        // skip), so the per-output accumulation order is the same in both
-        // SIMD modes; the vectorized axpy/ReLU bodies are bit-identical
-        // to their scalar twins (crate::simd's contract).
+        // skip), so the per-output accumulation order is the same in
+        // every SIMD mode; the vectorized axpy/ReLU bodies are
+        // bit-identical to their scalar twins (crate::simd's contract).
         for (i, &xi) in xr.iter().enumerate() {
             if xi == 0.0 {
                 continue;
@@ -104,6 +113,140 @@ pub fn mlp_layer_ref_into(
         if relu {
             crate::simd::relu_in_place(or);
         }
+    }
+}
+
+/// Output columns per packed weight panel: 16 f32 strips span two AVX2
+/// registers (four SSE2 registers), and `cin * 16` floats — at most 32
+/// KiB for the widest layer in the model — keep a whole panel resident
+/// in L1/L2 while a row block drives it.
+pub const PANEL_WIDTH: usize = 16;
+
+/// Activation rows driven against one resident panel before moving on:
+/// every weight fetched into cache is reused `ROW_BLOCK` times instead
+/// of once per point.
+pub const ROW_BLOCK: usize = 8;
+
+/// Column-panel packing of one [`DenseLayer`]'s weights for the blocked
+/// GEMM driver: the `cout` output columns split into
+/// [`PANEL_WIDTH`]-wide panels (the last one narrower when `cout` is not
+/// a multiple), and each panel stores its `cin` weight strips
+/// contiguously — panel `p`, strip `k` holds
+/// `w[k][p*PANEL_WIDTH .. p*PANEL_WIDTH + width]`. Packing is a pure
+/// permutation of the same f32 values, so numerics are untouched; it
+/// runs once at executor build / artifact load, never on the request
+/// path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    /// Input channels (matches the source layer).
+    pub cin: usize,
+    /// Output channels (matches the source layer).
+    pub cout: usize,
+    /// Panel-major weight storage, `cin * cout` values.
+    panels: Vec<f32>,
+}
+
+impl PackedLayer {
+    /// Pack a layer's row-major weights into column panels.
+    pub fn pack(layer: &DenseLayer) -> Self {
+        let (cin, cout) = (layer.cin, layer.cout);
+        let mut panels = Vec::with_capacity(cin * cout);
+        let mut col0 = 0;
+        while col0 < cout {
+            let w = PANEL_WIDTH.min(cout - col0);
+            for k in 0..cin {
+                panels.extend_from_slice(&layer.w[k * cout + col0..k * cout + col0 + w]);
+            }
+            col0 += w;
+        }
+        Self { cin, cout, panels }
+    }
+
+    /// Number of column panels (`ceil(cout / PANEL_WIDTH)`).
+    pub fn panels(&self) -> usize {
+        self.cout.div_ceil(PANEL_WIDTH)
+    }
+
+    /// Panel `p` as `(first_column, width, strips)`: `strips` holds
+    /// `cin` contiguous rows of `width` weights each.
+    fn panel(&self, p: usize) -> (usize, usize, &[f32]) {
+        let col0 = p * PANEL_WIDTH;
+        let w = PANEL_WIDTH.min(self.cout - col0);
+        let off = self.cin * col0;
+        (col0, w, &self.panels[off..off + self.cin * w])
+    }
+}
+
+/// Packed-panel mirror of a [`Stack`] (same layer order).
+pub type PackedStack = Vec<PackedLayer>;
+
+/// Pack every layer of a stack (see [`PackedLayer::pack`]).
+pub fn pack_stack(stack: &[DenseLayer]) -> PackedStack {
+    stack.iter().map(PackedLayer::pack).collect()
+}
+
+/// Cache-blocked twin of [`mlp_layer_ref_into`]: drives [`ROW_BLOCK`]
+/// activation rows against each resident weight panel of `packed`, so
+/// weight bytes are served from L1/L2 instead of re-streamed from memory
+/// per point.
+///
+/// # Bit-identity
+///
+/// Per output element `out[r][j]` this is the reference loop verbatim:
+/// start from `b[j]`, then `+= x[r][k] * w[k][j]` in exact `k = 0..cin`
+/// order with the same `x[r][k] == 0.0` skip (numerically observable
+/// under NaN/±0.0 weights) and the same separately-rounded mul-then-add.
+/// Only the `(row, column-panel)` iteration *around* each element is
+/// reordered, which no single element's value can observe — so blocked
+/// and reference outputs are byte-identical in every SIMD mode (pinned
+/// by `rust/tests/simd_equivalence.rs`).
+pub fn mlp_layer_blocked_into(
+    x: &[f32],
+    rows: usize,
+    layer: &DenseLayer,
+    packed: &PackedLayer,
+    relu: bool,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * layer.cin, "input is not [rows, cin]");
+    assert!(
+        packed.cin == layer.cin && packed.cout == layer.cout,
+        "packed panels {}x{} do not match layer {}x{}",
+        packed.cin,
+        packed.cout,
+        layer.cin,
+        layer.cout
+    );
+    let (cin, cout) = (layer.cin, layer.cout);
+    out.clear();
+    out.resize(rows * cout, 0.0);
+    // Hoist the SIMD dispatch out of the hot loops: one atomic read per
+    // layer instead of one per (row, k).
+    let axpy = crate::simd::axpy_kernel();
+    let relu_k = crate::simd::relu_kernel();
+    let n_panels = packed.panels();
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        for p in 0..n_panels {
+            let (col0, wp, strips) = packed.panel(p);
+            let bias = &layer.b[col0..col0 + wp];
+            for r in r0..r0 + rb {
+                let xr = &x[r * cin..(r + 1) * cin];
+                let or = &mut out[r * cout + col0..r * cout + col0 + wp];
+                or.copy_from_slice(bias);
+                for (k, &xk) in xr.iter().enumerate() {
+                    if xk == 0.0 {
+                        continue;
+                    }
+                    axpy(xk, &strips[k * wp..(k + 1) * wp], or);
+                }
+                if relu {
+                    relu_k(or);
+                }
+            }
+        }
+        r0 += rb;
     }
 }
 
@@ -176,6 +319,58 @@ pub fn apply_stack_ref_into<'v>(
         }
     }
     cur
+}
+
+/// Blocked-GEMM twin of [`apply_stack_ref_into`]: same ping-pong buffer
+/// discipline, each layer running [`mlp_layer_blocked_into`] against its
+/// pre-packed panels. `packed` must mirror `stack` layer for layer.
+pub fn apply_stack_blocked_into<'v>(
+    stack: &[DenseLayer],
+    packed: &[PackedLayer],
+    x: &[f32],
+    rows: usize,
+    last_relu: bool,
+    a: &'v mut Vec<f32>,
+    b: &'v mut Vec<f32>,
+) -> &'v [f32] {
+    assert_eq!(stack.len(), packed.len(), "packed stack does not mirror the layer stack");
+    if stack.is_empty() {
+        a.clear();
+        a.extend_from_slice(x);
+        return a;
+    }
+    let (mut cur, mut nxt) = (a, b);
+    for (i, (layer, pk)) in stack.iter().zip(packed).enumerate() {
+        let relu = last_relu || i + 1 < stack.len();
+        if i == 0 {
+            mlp_layer_blocked_into(x, rows, layer, pk, relu, cur);
+        } else {
+            mlp_layer_blocked_into(cur, rows, layer, pk, relu, nxt);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+    }
+    cur
+}
+
+/// Run a stack through whichever GEMM driver `--gemm` selected — the
+/// cache-blocked packed-panel kernel (the default) or the per-row
+/// reference loop. Bit-identical either way, so the choice is purely a
+/// host-speed lever.
+fn apply_stack_into<'v>(
+    stack: &[DenseLayer],
+    packed: &[PackedLayer],
+    x: &[f32],
+    rows: usize,
+    last_relu: bool,
+    a: &'v mut Vec<f32>,
+    b: &'v mut Vec<f32>,
+) -> &'v [f32] {
+    match crate::simd::gemm_kernel() {
+        crate::simd::GemmKernel::Blocked => {
+            apply_stack_blocked_into(stack, packed, x, rows, last_relu, a, b)
+        }
+        crate::simd::GemmKernel::Reference => apply_stack_ref_into(stack, x, rows, last_relu, a, b),
+    }
 }
 
 /// Symmetric per-tensor 16-bit post-training quantization of one tensor,
@@ -275,6 +470,27 @@ fn synthetic_weights(model: &ModelMeta) -> ModelWeights {
     }
 }
 
+/// Packed-panel mirrors of all four stacks, built once per executor —
+/// pooled alongside the weights (never per cloud), so the warm request
+/// path dispatches straight into resident panels without allocating.
+struct PackedWeights {
+    mlp1: PackedStack,
+    mlp2: PackedStack,
+    mlp3: PackedStack,
+    head: PackedStack,
+}
+
+impl PackedWeights {
+    fn pack(w: &ModelWeights) -> Self {
+        Self {
+            mlp1: pack_stack(&w.mlp1),
+            mlp2: pack_stack(&w.mlp2),
+            mlp3: pack_stack(&w.mlp3),
+            head: pack_stack(&w.head),
+        }
+    }
+}
+
 /// One checkout of reusable interpreter scratch: the ping-pong pair the
 /// MLP stacks alternate between, plus the pooled-feature staging buffer
 /// of the head graph. Pooled per executor so steady-state execution
@@ -298,6 +514,10 @@ pub struct ReferenceExecutor {
     model: ModelMeta,
     fp: ModelWeights,
     q16: ModelWeights,
+    /// Column-panel mirror of `fp` for the blocked GEMM driver.
+    fp_packed: PackedWeights,
+    /// Column-panel mirror of `q16` for the blocked GEMM driver.
+    q16_packed: PackedWeights,
     loaded: RwLock<HashSet<String>>,
     /// Warm [`LayerScratch`] checkouts; grows to at most the number of
     /// concurrently executing lanes, then every call reuses a warm pair.
@@ -341,10 +561,16 @@ impl ReferenceExecutor {
             mlp3: ptq16_stack(&fp.mlp3),
             head: ptq16_stack(&fp.head),
         };
+        // Pack both weight sets into column panels here, once: serving
+        // never packs per cloud, so the warm path stays zero-alloc.
+        let fp_packed = PackedWeights::pack(&fp);
+        let q16_packed = PackedWeights::pack(&q16);
         Ok(Self {
             model: model.clone(),
             fp,
             q16,
+            fp_packed,
+            q16_packed,
             loaded: RwLock::new(HashSet::new()),
             scratch: Mutex::new(Vec::new()),
         })
@@ -355,6 +581,14 @@ impl ReferenceExecutor {
             &self.q16
         } else {
             &self.fp
+        }
+    }
+
+    fn packed_for(&self, quantized: bool) -> &PackedWeights {
+        if quantized {
+            &self.q16_packed
+        } else {
+            &self.fp_packed
         }
     }
 
@@ -376,6 +610,7 @@ impl ReferenceExecutor {
     fn run_sa_into(
         &self,
         stack: &[DenseLayer],
+        packed: &[PackedLayer],
         meta: &ArtifactMeta,
         k_default: usize,
         data: &[f32],
@@ -397,7 +632,7 @@ impl ReferenceExecutor {
         };
         let rows = s * k;
         let mut sc = self.take_scratch();
-        let h = apply_stack_ref_into(stack, data, rows, true, &mut sc.a, &mut sc.b);
+        let h = apply_stack_into(stack, packed, data, rows, true, &mut sc.a, &mut sc.b);
         let c_out = stack.last().unwrap().cout;
         grouped_max_ref_into(h, s, k, c_out, out);
         self.put_scratch(sc);
@@ -413,6 +648,7 @@ impl ReferenceExecutor {
     fn run_pp_into(
         &self,
         stack: &[DenseLayer],
+        packed: &[PackedLayer],
         meta: &ArtifactMeta,
         data: &[f32],
         out: &mut Vec<f32>,
@@ -429,7 +665,7 @@ impl ReferenceExecutor {
             }
         };
         let mut sc = self.take_scratch();
-        let h = apply_stack_ref_into(stack, data, rows, true, &mut sc.a, &mut sc.b);
+        let h = apply_stack_into(stack, packed, data, rows, true, &mut sc.a, &mut sc.b);
         out.clear();
         out.extend_from_slice(h);
         self.put_scratch(sc);
@@ -442,6 +678,7 @@ impl ReferenceExecutor {
     fn run_head_into(
         &self,
         w: &ModelWeights,
+        packed: &PackedWeights,
         meta: &ArtifactMeta,
         data: &[f32],
         out: &mut Vec<f32>,
@@ -458,11 +695,12 @@ impl ReferenceExecutor {
             }
         };
         let mut sc = self.take_scratch();
-        let h = apply_stack_ref_into(&w.mlp3, data, rows, true, &mut sc.a, &mut sc.b);
+        let h = apply_stack_into(&w.mlp3, &packed.mlp3, data, rows, true, &mut sc.a, &mut sc.b);
         let c = w.mlp3.last().unwrap().cout;
         // global max over the S2 sets
         grouped_max_ref_into(h, 1, rows, c, &mut sc.pooled);
-        let logits = apply_stack_ref_into(&w.head, &sc.pooled, 1, false, &mut sc.a, &mut sc.b);
+        let logits =
+            apply_stack_into(&w.head, &packed.head, &sc.pooled, 1, false, &mut sc.a, &mut sc.b);
         out.clear();
         out.extend_from_slice(logits);
         self.put_scratch(sc);
@@ -511,12 +749,13 @@ impl Executor for ReferenceExecutor {
         let quantized = name.ends_with("_q16");
         let base = name.strip_suffix("_q16").unwrap_or(name);
         let w = self.weights_for(quantized);
+        let p = self.packed_for(quantized);
         match base {
-            "sa1" => self.run_sa_into(&w.mlp1, meta, self.model.k1, data, out),
-            "sa2" => self.run_sa_into(&w.mlp2, meta, self.model.k2, data, out),
-            "sa1_pp" => self.run_pp_into(&w.mlp1, meta, data, out),
-            "sa2_pp" => self.run_pp_into(&w.mlp2, meta, data, out),
-            "head" => self.run_head_into(w, meta, data, out),
+            "sa1" => self.run_sa_into(&w.mlp1, &p.mlp1, meta, self.model.k1, data, out),
+            "sa2" => self.run_sa_into(&w.mlp2, &p.mlp2, meta, self.model.k2, data, out),
+            "sa1_pp" => self.run_pp_into(&w.mlp1, &p.mlp1, meta, data, out),
+            "sa2_pp" => self.run_pp_into(&w.mlp2, &p.mlp2, meta, data, out),
+            "head" => self.run_head_into(w, p, meta, data, out),
             other => {
                 bail!("reference executor cannot execute artifact {other:?} as a one-input graph")
             }
@@ -584,6 +823,77 @@ mod tests {
         // Empty stack passes the input through via buffer `a`.
         let empty: Stack = Vec::new();
         assert_eq!(apply_stack_ref_into(&empty, &x, 2, false, &mut a, &mut b), &x[..]);
+    }
+
+    #[test]
+    fn packed_panels_are_a_pure_permutation() {
+        // cin=3, cout=21: one full 16-wide panel plus a 5-wide tail.
+        let (cin, cout) = (3usize, 21usize);
+        let w: Vec<f32> = (0..cin * cout).map(|i| i as f32).collect();
+        let l = DenseLayer::new(cin, cout, w.clone(), vec![0.0; cout]).unwrap();
+        let p = PackedLayer::pack(&l);
+        assert_eq!(p.panels(), 2);
+        let mut widths = 0;
+        for pi in 0..p.panels() {
+            let (col0, wp, strips) = p.panel(pi);
+            assert_eq!(col0, pi * PANEL_WIDTH);
+            assert_eq!(strips.len(), cin * wp);
+            for k in 0..cin {
+                for j in 0..wp {
+                    assert_eq!(strips[k * wp + j], w[k * cout + col0 + j]);
+                }
+            }
+            widths += wp;
+        }
+        assert_eq!(widths, cout);
+    }
+
+    #[test]
+    fn blocked_layer_matches_reference_bitwise() {
+        // rows=19 exercises a row-block remainder; cout=21 a panel tail.
+        // Weights include NaN/±0.0 so the zero-input skip is observable.
+        let (rows, cin, cout) = (19usize, 7usize, 21usize);
+        let mut rng = Rng64::new(0xB10C);
+        let mut w: Vec<f32> = (0..cin * cout).map(|_| rng.gaussian()).collect();
+        w[3] = f32::NAN;
+        w[10] = -0.0;
+        w[25] = 0.0;
+        let b: Vec<f32> = (0..cout).map(|i| i as f32 * 0.1 - 1.0).collect();
+        let l = DenseLayer::new(cin, cout, w, b).unwrap();
+        let p = PackedLayer::pack(&l);
+        let x: Vec<f32> = (0..rows * cin)
+            .map(|i| if i % 4 == 0 { 0.0 } else { rng.gaussian() })
+            .collect();
+        for relu in [false, true] {
+            let (mut r, mut bl) = (Vec::new(), Vec::new());
+            mlp_layer_ref_into(&x, rows, &l, relu, &mut r);
+            mlp_layer_blocked_into(&x, rows, &l, &p, relu, &mut bl);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&r), bits(&bl), "relu={relu}");
+        }
+    }
+
+    #[test]
+    fn executor_output_invariant_across_gemm_kernels() {
+        use crate::simd::{gemm_kernel, set_gemm_kernel, GemmKernel};
+        let model = ModelMeta::canonical();
+        let exec = ReferenceExecutor::new(&model, None).unwrap();
+        let (s, k, c) = (4usize, 3usize, model.mlp1[0]);
+        let mut rng = Rng64::new(0x6E44);
+        let data: Vec<f32> = (0..s * k * c).map(|_| rng.gaussian() * 0.5).collect();
+        let meta = ArtifactMeta {
+            file: String::new(),
+            input_shape: vec![s, k, c],
+            output_shape: vec![s, *model.mlp1.last().unwrap()],
+        };
+        let saved = gemm_kernel();
+        set_gemm_kernel(GemmKernel::Blocked);
+        let blocked = exec.execute("sa1", &meta, &data).unwrap();
+        set_gemm_kernel(GemmKernel::Reference);
+        let reference = exec.execute("sa1", &meta, &data).unwrap();
+        set_gemm_kernel(saved);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&blocked), bits(&reference));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! SIMD host floor: vectorized twins of the request path's hot
-//! microkernels with a runtime-selected scalar fallback, plus best-effort
+//! microkernels behind **runtime** backend dispatch, plus best-effort
 //! worker-lane CPU affinity.
 //!
 //! Three kernels carry almost all host time once the architectural wins
@@ -7,48 +7,78 @@
 //! distance scan ([`l1_lanes`], behind `engine::fast::l1_soa_lanes`) and
 //! the reference executor's MLP microkernels ([`axpy`] +
 //! [`relu_in_place`] for the dense layers, [`max_in_place`] for grouped
-//! max pooling). Each has two entry points — a `_vector` variant using
-//! SSE2 intrinsics and a `_scalar` variant — and a dispatching wrapper
-//! that picks one at runtime via the process-wide [`SimdMode`].
+//! max pooling). Each has three entry points — an `_avx2` variant using
+//! 256-bit AVX2 intrinsics, a `_vector` variant using the SSE2 baseline
+//! and a `_scalar` variant — and a dispatching wrapper that picks one at
+//! runtime from the process-wide [`SimdMode`] and a cached CPUID probe.
+//!
+//! # Runtime dispatch
+//!
+//! SSE2 is part of the x86_64 baseline, so its availability is a
+//! compile-time fact; AVX2 is **not** baseline and is probed once at
+//! runtime (`is_x86_feature_detected!`, cached in an atomic). The
+//! selected [`SimdMode`] is a *ceiling*, not a demand: requesting a
+//! backend the CPU lacks silently falls back to the best available one,
+//! and [`active_backend`] always reports what will actually run — the
+//! serve CLI prints it (with the active [`GemmKernel`]) on its own
+//! `kernel ...` line and in `--stats-json` so deployments can verify the
+//! floor they got.
+//!
+//! | `--simd` | AVX2 CPU        | SSE2-only CPU | non-x86_64 |
+//! |----------|-----------------|---------------|------------|
+//! | `auto`   | avx2            | sse2          | scalar     |
+//! | `avx2`   | avx2            | sse2          | scalar     |
+//! | `sse2`   | sse2            | sse2          | scalar     |
+//! | `scalar` | scalar          | scalar        | scalar     |
+//!
+//! The executor's dense layers additionally dispatch between two GEMM
+//! drivers — the cache-blocked packed-panel kernel and the per-row
+//! reference loop — via the process-wide [`GemmKernel`] selector
+//! (`--gemm blocked|reference`); see DESIGN.md §"Host GEMM floor".
 //!
 //! # Bit-identity contract
 //!
-//! The vector and scalar variants return **bit-identical** results — not
-//! merely approximately equal — so the serving determinism digest cannot
-//! depend on which backend ran (pinned by `rust/tests/simd_equivalence.rs`
-//! and `rust/tests/serve_latency.rs`). The rules that make this true:
+//! All backend variants return **bit-identical** results — not merely
+//! approximately equal — so the serving determinism digest cannot depend
+//! on which backend ran (pinned by `rust/tests/simd_equivalence.rs` and
+//! `rust/tests/serve_latency.rs`). The rules that make this true:
 //!
 //! - **L1 distances are exact integers.** `|a - b|` over u16 lanes is
 //!   computed as `(a -sat b) | (b -sat a)` (one side is always zero), and
 //!   the three widened u32 sums stay below 2^18 — no overflow, no
-//!   rounding, any summation order.
-//! - **axpy preserves the scalar rounding sequence.** The vector body is
-//!   `y = y + a * x` as a separate round-after-multiply then
-//!   round-after-add (`_mm_mul_ps` + `_mm_add_ps`, never a fused
-//!   multiply-add), which is exactly the scalar `*o += a * v` under
-//!   IEEE-754, lane by lane. Accumulation *order* across calls is the
-//!   caller's (the MLP row loop is scalar control flow in both modes).
+//!   rounding, any summation order. Every backend emits `(index,
+//!   distance)` pairs in strictly increasing index order, so the
+//!   sequences are identical too.
+//! - **axpy preserves the scalar rounding sequence.** The vector bodies
+//!   are `y = y + a * x` as a separate round-after-multiply then
+//!   round-after-add (`mul_ps` + `add_ps`, never a fused multiply-add),
+//!   which is exactly the scalar `*o += a * v` under IEEE-754, lane by
+//!   lane. Accumulation *order* across calls is the caller's (the MLP
+//!   row loop is scalar control flow in every mode).
 //! - **ReLU and max keep the scalar's NaN/−0.0 semantics.** ReLU is
-//!   `if v < 0.0 { 0.0 }` — implemented with a `cmplt` mask (NOT
-//!   `max_ps`), so NaN and −0.0 pass through unchanged in both modes.
-//!   Grouped max is `if v > acc { acc = v }` — a `cmpgt` select, so an
-//!   accumulated NaN is never displaced and −0.0 never replaces +0.0.
-//!
-//! SSE2 is the x86_64 baseline, so the vector path needs no CPU probing;
-//! on other architectures the `_vector` entry points compile to the
-//! scalar body and the dispatcher reports the `"scalar"` backend.
+//!   `if v < 0.0 { 0.0 }` — implemented with an ordered `cmplt`/`CMP_LT_OQ`
+//!   mask (NOT `max_ps`), so NaN and −0.0 pass through unchanged in every
+//!   mode. Grouped max is `if v > acc { acc = v }` — an ordered `cmpgt`
+//!   select, so an accumulated NaN is never displaced and −0.0 never
+//!   replaces +0.0.
 
 use crate::quant::QPoint3;
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Which kernel backend the dispatching wrappers select.
+/// Which kernel backend the dispatching wrappers may select (a ceiling:
+/// unavailable backends degrade to the best one the CPU has).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimdMode {
-    /// Use the vector kernels when the target has them (the default).
+    /// Use the widest backend the CPU supports (the default).
     Auto,
     /// Force the scalar fallback everywhere (`--simd scalar`); outputs
     /// are bit-identical by contract, so this only changes host speed.
     Scalar,
+    /// Cap dispatch at the SSE2 baseline bodies (`--simd sse2`).
+    Sse2,
+    /// Request the AVX2 bodies (`--simd avx2`); falls back to SSE2 or
+    /// scalar when the CPU probe says no, as [`active_backend`] reports.
+    Avx2,
 }
 
 impl std::str::FromStr for SimdMode {
@@ -58,7 +88,9 @@ impl std::str::FromStr for SimdMode {
         match s {
             "auto" => Ok(SimdMode::Auto),
             "scalar" => Ok(SimdMode::Scalar),
-            other => anyhow::bail!("unknown SIMD mode {other:?} (valid: auto, scalar)"),
+            "sse2" => Ok(SimdMode::Sse2),
+            "avx2" => Ok(SimdMode::Avx2),
+            other => anyhow::bail!("unknown SIMD mode {other:?} (valid: auto, scalar, sse2, avx2)"),
         }
     }
 }
@@ -68,23 +100,30 @@ impl std::fmt::Display for SimdMode {
         f.write_str(match self {
             SimdMode::Auto => "auto",
             SimdMode::Scalar => "scalar",
+            SimdMode::Sse2 => "sse2",
+            SimdMode::Avx2 => "avx2",
         })
     }
 }
 
 const MODE_AUTO: u8 = 0;
 const MODE_SCALAR: u8 = 1;
+const MODE_SSE2: u8 = 2;
+const MODE_AVX2: u8 = 3;
 
 /// Process-wide backend selector. Relaxed ordering is enough: the value
-/// only gates *which* of two bit-identical kernels runs, so a racing
+/// only gates *which* of several bit-identical kernels runs, so a racing
 /// reader observing a stale mode cannot change any output.
 static MODE: AtomicU8 = AtomicU8::new(MODE_AUTO);
 
-/// Select the kernel backend process-wide (the CLI's `--simd` flag).
+/// Select the kernel backend ceiling process-wide (the CLI's `--simd`
+/// flag).
 pub fn set_mode(mode: SimdMode) {
     let v = match mode {
         SimdMode::Auto => MODE_AUTO,
         SimdMode::Scalar => MODE_SCALAR,
+        SimdMode::Sse2 => MODE_SSE2,
+        SimdMode::Avx2 => MODE_AVX2,
     };
     MODE.store(v, Ordering::Relaxed);
 }
@@ -93,47 +132,167 @@ pub fn set_mode(mode: SimdMode) {
 pub fn mode() -> SimdMode {
     match MODE.load(Ordering::Relaxed) {
         MODE_SCALAR => SimdMode::Scalar,
+        MODE_SSE2 => SimdMode::Sse2,
+        MODE_AVX2 => SimdMode::Avx2,
         _ => SimdMode::Auto,
     }
 }
 
-/// Whether this build carries vector kernel bodies at all (SSE2 is the
-/// x86_64 baseline; other targets compile the scalar body into the
-/// `_vector` entry points).
-pub fn vector_available() -> bool {
-    cfg!(all(target_arch = "x86_64", target_feature = "sse2"))
+/// Which dense-layer GEMM driver the reference executor runs: the
+/// cache-blocked packed-panel kernel (the default) or the per-row
+/// reference loop kept for A/B timing and verification. Both produce
+/// bit-identical outputs by the accumulation-order/zero-skip contract
+/// (see `runtime::reference::mlp_layer_blocked_into`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// Packed column panels driven by row blocks (`--gemm blocked`).
+    Blocked,
+    /// The original per-row axpy loop (`--gemm reference`).
+    Reference,
 }
 
-/// The backend the dispatching wrappers will actually run right now.
-pub fn active_backend() -> &'static str {
-    if vector_enabled() {
-        "sse2"
-    } else {
-        "scalar"
+impl std::str::FromStr for GemmKernel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "blocked" => Ok(GemmKernel::Blocked),
+            "reference" => Ok(GemmKernel::Reference),
+            other => anyhow::bail!("unknown GEMM kernel {other:?} (valid: blocked, reference)"),
+        }
     }
 }
 
+impl std::fmt::Display for GemmKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            GemmKernel::Blocked => "blocked",
+            GemmKernel::Reference => "reference",
+        })
+    }
+}
+
+const GEMM_BLOCKED: u8 = 0;
+const GEMM_REFERENCE: u8 = 1;
+
+/// Process-wide GEMM driver selector; same Relaxed rationale as [`MODE`].
+static GEMM: AtomicU8 = AtomicU8::new(GEMM_BLOCKED);
+
+/// Select the dense-layer GEMM driver process-wide (the CLI's `--gemm`
+/// flag).
+pub fn set_gemm_kernel(kernel: GemmKernel) {
+    let v = match kernel {
+        GemmKernel::Blocked => GEMM_BLOCKED,
+        GemmKernel::Reference => GEMM_REFERENCE,
+    };
+    GEMM.store(v, Ordering::Relaxed);
+}
+
+/// The currently selected [`GemmKernel`].
+pub fn gemm_kernel() -> GemmKernel {
+    match GEMM.load(Ordering::Relaxed) {
+        GEMM_REFERENCE => GemmKernel::Reference,
+        _ => GemmKernel::Blocked,
+    }
+}
+
+/// Whether this build's SSE2 bodies are real vector code (SSE2 is the
+/// x86_64 baseline; other targets compile the scalar body into the
+/// `_vector` entry points).
+pub fn sse2_available() -> bool {
+    cfg!(all(target_arch = "x86_64", target_feature = "sse2"))
+}
+
+/// Whether the running CPU supports AVX2 — a runtime CPUID probe, taken
+/// once and cached in an atomic (the probe answer never changes within a
+/// process).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        const UNKNOWN: u8 = 0;
+        const NO: u8 = 1;
+        const YES: u8 = 2;
+        static PROBE: AtomicU8 = AtomicU8::new(UNKNOWN);
+        match PROBE.load(Ordering::Relaxed) {
+            YES => true,
+            NO => false,
+            _ => {
+                let yes = is_x86_feature_detected!("avx2");
+                PROBE.store(if yes { YES } else { NO }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Whether any vector backend (SSE2 or AVX2) can actually run on this
+/// CPU — a runtime answer, not a compile-time cfg echo.
+pub fn vector_available() -> bool {
+    sse2_available() || avx2_available()
+}
+
+/// The backend the dispatching wrappers will actually run right now —
+/// the selected [`mode`] ceiling lowered to what the CPU has.
+pub fn active_backend() -> &'static str {
+    match resolved() {
+        Backend::Avx2 => "avx2",
+        Backend::Sse2 => "sse2",
+        Backend::Scalar => "scalar",
+    }
+}
+
+/// The full active kernel description — `backend+gemm` — surfaced by the
+/// serve CLI's `kernel ...` line and `--stats-json`.
+pub fn active_kernel() -> String {
+    format!("{}+{}", active_backend(), gemm_kernel())
+}
+
+/// The backend a dispatching wrapper runs after lowering the mode
+/// ceiling to CPU reality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Backend {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
 #[inline]
-fn vector_enabled() -> bool {
-    vector_available() && mode() == SimdMode::Auto
+fn resolved() -> Backend {
+    let ceiling = match mode() {
+        SimdMode::Scalar => return Backend::Scalar,
+        SimdMode::Sse2 => Backend::Sse2,
+        SimdMode::Avx2 | SimdMode::Auto => Backend::Avx2,
+    };
+    if ceiling == Backend::Avx2 && avx2_available() {
+        Backend::Avx2
+    } else if sse2_available() {
+        Backend::Sse2
+    } else {
+        Backend::Scalar
+    }
 }
 
 /// Width of one blocked-SoA distance lane group: eight u16 lanes fill a
 /// 128-bit vector register, and the scalar fallback keeps the same block
-/// shape so both backends emit `(index, distance)` pairs in the same
-/// order.
+/// shape. The AVX2 body runs two lane groups per iteration, but every
+/// backend emits `(index, distance)` pairs in strictly increasing index
+/// order, so the emitted sequences stay identical.
 pub const LANES: usize = 8;
 
 /// Blocked SoA L1-distance microkernel: computes every member's 19-bit
 /// L1 distance to `r` from the coordinate lane slices and hands
-/// `(member_offset, distance)` to `sink` in order — [`LANES`]-wide blocks
-/// first, then a scalar tail. Dispatches on [`mode`].
+/// `(member_offset, distance)` to `sink` in increasing-index order.
+/// Dispatches on [`mode`] and the CPU probe.
 #[inline]
 pub fn l1_lanes(xs: &[u16], ys: &[u16], zs: &[u16], r: QPoint3, sink: impl FnMut(usize, u32)) {
-    if vector_enabled() {
-        l1_lanes_vector(xs, ys, zs, r, sink)
-    } else {
-        l1_lanes_scalar(xs, ys, zs, r, sink)
+    match resolved() {
+        Backend::Avx2 => l1_lanes_avx2(xs, ys, zs, r, sink),
+        Backend::Sse2 => l1_lanes_vector(xs, ys, zs, r, sink),
+        Backend::Scalar => l1_lanes_scalar(xs, ys, zs, r, sink),
     }
 }
 
@@ -169,7 +328,7 @@ pub fn l1_lanes_scalar(
     }
 }
 
-/// Vector body of [`l1_lanes`] (SSE2 on x86_64, scalar elsewhere).
+/// SSE2 body of [`l1_lanes`] (scalar on non-x86_64 targets).
 pub fn l1_lanes_vector(
     xs: &[u16],
     ys: &[u16],
@@ -187,15 +346,35 @@ pub fn l1_lanes_vector(
     }
 }
 
+/// AVX2 body of [`l1_lanes`]; falls back to the scalar body when the
+/// runtime probe says the CPU lacks AVX2 (so the entry point is always
+/// safe to call directly, e.g. from the equivalence tests).
+pub fn l1_lanes_avx2(
+    xs: &[u16],
+    ys: &[u16],
+    zs: &[u16],
+    r: QPoint3,
+    sink: impl FnMut(usize, u32),
+) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 support was verified by the runtime probe above.
+        unsafe { avx2::l1_lanes(xs, ys, zs, r, sink) };
+        return;
+    }
+    l1_lanes_scalar(xs, ys, zs, r, sink)
+}
+
 /// `y[i] += a * x[i]` — the dense-layer inner loop of the reference
-/// executor. Dispatches on [`mode`]; both backends round multiply and add
-/// separately (no FMA), so results are bit-identical.
+/// executor. Dispatches on [`mode`] and the CPU probe; every backend
+/// rounds multiply and add separately (no FMA), so results are
+/// bit-identical.
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    if vector_enabled() {
-        axpy_vector(a, x, y)
-    } else {
-        axpy_scalar(a, x, y)
+    match resolved() {
+        Backend::Avx2 => axpy_avx2(a, x, y),
+        Backend::Sse2 => axpy_vector(a, x, y),
+        Backend::Scalar => axpy_scalar(a, x, y),
     }
 }
 
@@ -207,7 +386,7 @@ pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// Vector body of [`axpy`] (SSE2 on x86_64, scalar elsewhere).
+/// SSE2 body of [`axpy`] (scalar on non-x86_64 targets).
 pub fn axpy_vector(a: f32, x: &[f32], y: &mut [f32]) {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
     {
@@ -219,14 +398,52 @@ pub fn axpy_vector(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// AVX2 body of [`axpy`]; scalar fallback when the probe says no.
+pub fn axpy_avx2(a: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 support was verified by the runtime probe above.
+        unsafe { avx2::axpy(a, x, y) };
+        return;
+    }
+    axpy_scalar(a, x, y)
+}
+
+/// Signature of a resolved [`axpy`] backend body; [`axpy_kernel`] lets a
+/// caller hoist the dispatch out of a hot loop.
+pub type AxpyFn = fn(f32, &[f32], &mut [f32]);
+
+/// Signature of a resolved [`relu_in_place`] backend body.
+pub type ReluFn = fn(&mut [f32]);
+
+/// Resolve the [`axpy`] dispatch once — the blocked GEMM driver calls
+/// this per layer and then runs the returned body per `(row, k)` without
+/// re-reading the mode atomics.
+pub fn axpy_kernel() -> AxpyFn {
+    match resolved() {
+        Backend::Avx2 => axpy_avx2,
+        Backend::Sse2 => axpy_vector,
+        Backend::Scalar => axpy_scalar,
+    }
+}
+
+/// Resolve the [`relu_in_place`] dispatch once (see [`axpy_kernel`]).
+pub fn relu_kernel() -> ReluFn {
+    match resolved() {
+        Backend::Avx2 => relu_in_place_avx2,
+        Backend::Sse2 => relu_in_place_vector,
+        Backend::Scalar => relu_in_place_scalar,
+    }
+}
+
 /// In-place ReLU: `v[i] = 0.0 if v[i] < 0.0`. NaN and −0.0 pass through
-/// unchanged in both backends. Dispatches on [`mode`].
+/// unchanged in every backend. Dispatches on [`mode`] and the CPU probe.
 #[inline]
 pub fn relu_in_place(v: &mut [f32]) {
-    if vector_enabled() {
-        relu_in_place_vector(v)
-    } else {
-        relu_in_place_scalar(v)
+    match resolved() {
+        Backend::Avx2 => relu_in_place_avx2(v),
+        Backend::Sse2 => relu_in_place_vector(v),
+        Backend::Scalar => relu_in_place_scalar(v),
     }
 }
 
@@ -239,7 +456,7 @@ pub fn relu_in_place_scalar(v: &mut [f32]) {
     }
 }
 
-/// Vector body of [`relu_in_place`] (SSE2 on x86_64, scalar elsewhere).
+/// SSE2 body of [`relu_in_place`] (scalar on non-x86_64 targets).
 pub fn relu_in_place_vector(v: &mut [f32]) {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
     {
@@ -251,15 +468,28 @@ pub fn relu_in_place_vector(v: &mut [f32]) {
     }
 }
 
+/// AVX2 body of [`relu_in_place`]; scalar fallback when the probe says
+/// no.
+pub fn relu_in_place_avx2(v: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 support was verified by the runtime probe above.
+        unsafe { avx2::relu_in_place(v) };
+        return;
+    }
+    relu_in_place_scalar(v)
+}
+
 /// Elementwise running max: `acc[i] = row[i] if row[i] > acc[i]` — the
 /// grouped max-pooling inner loop. An accumulated NaN is never displaced,
-/// matching the scalar comparison. Dispatches on [`mode`].
+/// matching the scalar comparison. Dispatches on [`mode`] and the CPU
+/// probe.
 #[inline]
 pub fn max_in_place(acc: &mut [f32], row: &[f32]) {
-    if vector_enabled() {
-        max_in_place_vector(acc, row)
-    } else {
-        max_in_place_scalar(acc, row)
+    match resolved() {
+        Backend::Avx2 => max_in_place_avx2(acc, row),
+        Backend::Sse2 => max_in_place_vector(acc, row),
+        Backend::Scalar => max_in_place_scalar(acc, row),
     }
 }
 
@@ -273,7 +503,7 @@ pub fn max_in_place_scalar(acc: &mut [f32], row: &[f32]) {
     }
 }
 
-/// Vector body of [`max_in_place`] (SSE2 on x86_64, scalar elsewhere).
+/// SSE2 body of [`max_in_place`] (scalar on non-x86_64 targets).
 pub fn max_in_place_vector(acc: &mut [f32], row: &[f32]) {
     #[cfg(all(target_arch = "x86_64", target_feature = "sse2"))]
     {
@@ -283,6 +513,18 @@ pub fn max_in_place_vector(acc: &mut [f32], row: &[f32]) {
     {
         max_in_place_scalar(acc, row)
     }
+}
+
+/// AVX2 body of [`max_in_place`]; scalar fallback when the probe says
+/// no.
+pub fn max_in_place_avx2(acc: &mut [f32], row: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 support was verified by the runtime probe above.
+        unsafe { avx2::max_in_place(acc, row) };
+        return;
+    }
+    max_in_place_scalar(acc, row)
 }
 
 /// Best-effort pin of the calling thread to one CPU — the serving
@@ -460,45 +702,258 @@ mod sse2 {
     }
 }
 
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 kernel bodies. Unlike SSE2, AVX2 is **not** part of the
+    //! x86_64 baseline, so every function here carries
+    //! `#[target_feature(enable = "avx2")]` and is `unsafe` to call: the
+    //! public `_avx2` entry points in the parent module gate each call on
+    //! the cached runtime probe. Arithmetic rules match the SSE2 bodies
+    //! exactly — separate `mul_ps`/`add_ps` rounding (never FMA), ordered
+    //! compare masks for ReLU/max — so all backends stay bit-identical.
+
+    use super::LANES;
+    use crate::quant::QPoint3;
+    use std::arch::x86_64::*;
+
+    /// Distance elements per AVX2 iteration: two [`LANES`]-wide groups
+    /// fill one 256-bit register of u16 lanes.
+    const WIDE: usize = 2 * LANES;
+
+    /// AVX2 body of the blocked-SoA L1 distance scan.
+    ///
+    /// # Safety
+    ///
+    /// The CPU must support AVX2 (verified by the caller's runtime
+    /// probe).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l1_lanes(
+        xs: &[u16],
+        ys: &[u16],
+        zs: &[u16],
+        r: QPoint3,
+        mut sink: impl FnMut(usize, u32),
+    ) {
+        debug_assert!(xs.len() == ys.len() && ys.len() == zs.len());
+        let n = xs.len();
+        let blocks = n / WIDE;
+        // SAFETY: the caller verified AVX2; every load reads WIDE u16
+        // values inside the equal-length slices, every store writes into
+        // the local block array.
+        unsafe {
+            let rx = _mm256_set1_epi16(r.x as i16);
+            let ry = _mm256_set1_epi16(r.y as i16);
+            let rz = _mm256_set1_epi16(r.z as i16);
+            for b in 0..blocks {
+                let base = b * WIDE;
+                let vx = _mm256_loadu_si256(xs.as_ptr().add(base) as *const __m256i);
+                let vy = _mm256_loadu_si256(ys.as_ptr().add(base) as *const __m256i);
+                let vz = _mm256_loadu_si256(zs.as_ptr().add(base) as *const __m256i);
+                // |a - b| over unsigned 16-bit lanes, as in the SSE2 body.
+                let dx = _mm256_or_si256(_mm256_subs_epu16(vx, rx), _mm256_subs_epu16(rx, vx));
+                let dy = _mm256_or_si256(_mm256_subs_epu16(vy, ry), _mm256_subs_epu16(ry, vy));
+                let dz = _mm256_or_si256(_mm256_subs_epu16(vz, rz), _mm256_subs_epu16(rz, vz));
+                // Widen each 128-bit half with cvtepu16 (in-order across
+                // the register, unlike the lane-local unpack) and sum:
+                // exact integers, max 3 * 65535 < 2^18.
+                let lo = _mm256_add_epi32(
+                    _mm256_add_epi32(
+                        _mm256_cvtepu16_epi32(_mm256_castsi256_si128(dx)),
+                        _mm256_cvtepu16_epi32(_mm256_castsi256_si128(dy)),
+                    ),
+                    _mm256_cvtepu16_epi32(_mm256_castsi256_si128(dz)),
+                );
+                let hi = _mm256_add_epi32(
+                    _mm256_add_epi32(
+                        _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(dx)),
+                        _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(dy)),
+                    ),
+                    _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(dz)),
+                );
+                let mut d = [0u32; WIDE];
+                _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, lo);
+                _mm256_storeu_si256(d.as_mut_ptr().add(LANES) as *mut __m256i, hi);
+                for (j, dj) in d.into_iter().enumerate() {
+                    sink(base + j, dj);
+                }
+            }
+        }
+        for k in blocks * WIDE..n {
+            let d = xs[k].abs_diff(r.x) as u32
+                + ys[k].abs_diff(r.y) as u32
+                + zs[k].abs_diff(r.z) as u32;
+            sink(k, d);
+        }
+    }
+
+    /// AVX2 body of `axpy` (separately-rounded mul then add, no FMA).
+    ///
+    /// # Safety
+    ///
+    /// The CPU must support AVX2 (verified by the caller's runtime
+    /// probe).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 8;
+        // SAFETY: the caller verified AVX2; every load/store touches
+        // eight f32 values inside the equal-length slices.
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            for c in 0..chunks {
+                let i = c * 8;
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+                // mul then add as two separately-rounded ops — exactly
+                // the scalar `y += a * x`, never a fused multiply-add.
+                _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            }
+        }
+        for i in chunks * 8..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    /// AVX2 body of `relu_in_place` (ordered compare mask).
+    ///
+    /// # Safety
+    ///
+    /// The CPU must support AVX2 (verified by the caller's runtime
+    /// probe).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn relu_in_place(v: &mut [f32]) {
+        let n = v.len();
+        let chunks = n / 8;
+        // SAFETY: the caller verified AVX2; loads/stores stay inside `v`.
+        unsafe {
+            let zero = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let i = c * 8;
+                let x = _mm256_loadu_ps(v.as_ptr().add(i));
+                // Ordered compare mask, as in the SSE2 body: `v < 0.0` is
+                // false for NaN and −0.0, so both pass through.
+                let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(x, zero);
+                _mm256_storeu_ps(v.as_mut_ptr().add(i), _mm256_andnot_ps(neg, x));
+            }
+        }
+        for o in &mut v[chunks * 8..] {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+
+    /// AVX2 body of `max_in_place` (ordered `row > acc` select).
+    ///
+    /// # Safety
+    ///
+    /// The CPU must support AVX2 (verified by the caller's runtime
+    /// probe).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_in_place(acc: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(acc.len(), row.len());
+        let n = acc.len();
+        let chunks = n / 8;
+        // SAFETY: the caller verified AVX2; loads/stores stay inside the
+        // equal-length slices.
+        unsafe {
+            for c in 0..chunks {
+                let i = c * 8;
+                let va = _mm256_loadu_ps(acc.as_ptr().add(i));
+                let vr = _mm256_loadu_ps(row.as_ptr().add(i));
+                // Ordered `row > acc` select — an accumulated NaN is kept
+                // and −0.0 never displaces +0.0 (max_ps would get both
+                // wrong).
+                let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(vr, va);
+                let res = _mm256_or_ps(_mm256_and_ps(gt, vr), _mm256_andnot_ps(gt, va));
+                _mm256_storeu_ps(acc.as_mut_ptr().add(i), res);
+            }
+        }
+        for (o, &v) in acc[chunks * 8..].iter_mut().zip(&row[chunks * 8..]) {
+            if v > *o {
+                *o = v;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn mode_round_trips_and_parses() {
-        assert_eq!("auto".parse::<SimdMode>().unwrap(), SimdMode::Auto);
-        assert_eq!("scalar".parse::<SimdMode>().unwrap(), SimdMode::Scalar);
+        for m in [SimdMode::Auto, SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2] {
+            assert_eq!(m.to_string().parse::<SimdMode>().unwrap(), m);
+        }
         assert!("avx999".parse::<SimdMode>().is_err());
         assert_eq!(SimdMode::Auto.to_string(), "auto");
-        assert_eq!(SimdMode::Scalar.to_string(), "scalar");
+        assert_eq!(SimdMode::Avx2.to_string(), "avx2");
+        for k in [GemmKernel::Blocked, GemmKernel::Reference] {
+            assert_eq!(k.to_string().parse::<GemmKernel>().unwrap(), k);
+        }
+        assert!("strassen".parse::<GemmKernel>().is_err());
     }
 
     #[test]
-    fn scalar_mode_forces_scalar_backend() {
+    fn mode_is_a_ceiling_and_active_backend_reports_truth() {
         let saved = mode();
         set_mode(SimdMode::Scalar);
         assert_eq!(active_backend(), "scalar");
-        set_mode(SimdMode::Auto);
-        if vector_available() {
-            assert_eq!(active_backend(), "sse2");
-        } else {
-            assert_eq!(active_backend(), "scalar");
+        set_mode(SimdMode::Sse2);
+        assert_eq!(active_backend(), if sse2_available() { "sse2" } else { "scalar" });
+        for m in [SimdMode::Auto, SimdMode::Avx2] {
+            set_mode(m);
+            let want = if avx2_available() {
+                "avx2"
+            } else if sse2_available() {
+                "sse2"
+            } else {
+                "scalar"
+            };
+            assert_eq!(active_backend(), want);
         }
         set_mode(saved);
     }
 
     #[test]
+    fn gemm_kernel_round_trips_and_defaults_to_blocked() {
+        let saved = gemm_kernel();
+        set_gemm_kernel(GemmKernel::Blocked);
+        assert_eq!(gemm_kernel(), GemmKernel::Blocked);
+        assert!(active_kernel().ends_with("+blocked"));
+        set_gemm_kernel(GemmKernel::Reference);
+        assert_eq!(gemm_kernel(), GemmKernel::Reference);
+        assert!(active_kernel().ends_with("+reference"));
+        set_gemm_kernel(saved);
+    }
+
+    #[test]
+    fn vector_available_is_runtime_truthful() {
+        // On any x86_64 build SSE2 is baseline, so the answer is true; on
+        // other targets it must be false *unless* the probe says AVX2 —
+        // which can't happen off x86_64. Either way the answer agrees
+        // with the probes, not with a compile-time echo.
+        assert_eq!(vector_available(), sse2_available() || avx2_available());
+    }
+
+    #[test]
     fn l1_backends_agree_on_tailed_length() {
-        // 13 = one full 8-lane block plus a 5-element tail.
-        let xs: Vec<u16> = (0..13).map(|i| (i * 4099) as u16).collect();
-        let ys: Vec<u16> = (0..13).map(|i| (i * 257 + 9) as u16).collect();
-        let zs: Vec<u16> = (0..13).map(|i| 65_535 - (i * 31) as u16).collect();
+        // 21 = one full 16-lane AVX2 block plus a 5-element tail (and,
+        // for SSE2/scalar, two 8-lane blocks plus the same tail).
+        let xs: Vec<u16> = (0..21).map(|i| (i * 4099) as u16).collect();
+        let ys: Vec<u16> = (0..21).map(|i| (i * 257 + 9) as u16).collect();
+        let zs: Vec<u16> = (0..21).map(|i| 65_535 - (i * 31) as u16).collect();
         let r = QPoint3 { x: 1000, y: 60_000, z: 3 };
         let mut a = Vec::new();
         let mut b = Vec::new();
+        let mut c = Vec::new();
         l1_lanes_scalar(&xs, &ys, &zs, r, |k, d| a.push((k, d)));
         l1_lanes_vector(&xs, &ys, &zs, r, |k, d| b.push((k, d)));
+        l1_lanes_avx2(&xs, &ys, &zs, r, |k, d| c.push((k, d)));
         assert_eq!(a, b);
+        assert_eq!(a, c);
         for (k, d) in a {
             let want = xs[k].abs_diff(r.x) as u32
                 + ys[k].abs_diff(r.y) as u32
@@ -509,34 +964,66 @@ mod tests {
 
     #[test]
     fn float_backends_preserve_nan_and_negative_zero() {
-        let mut a = vec![-1.0f32, -0.0, f32::NAN, 2.5, -3.0, 0.0, -0.5];
-        let mut b = a.clone();
+        let src = vec![-1.0f32, -0.0, f32::NAN, 2.5, -3.0, 0.0, -0.5, 9.0, -9.0, 1.5e-40];
+        let mut a = src.clone();
+        let mut b = src.clone();
+        let mut c = src.clone();
         relu_in_place_scalar(&mut a);
         relu_in_place_vector(&mut b);
+        relu_in_place_avx2(&mut c);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&b));
+        assert_eq!(bits(&a), bits(&c));
         assert!(a[2].is_nan(), "ReLU must pass NaN through");
         assert_eq!(a[1].to_bits(), (-0.0f32).to_bits(), "ReLU must pass -0.0 through");
 
-        let mut ma = vec![f32::NAN, -0.0, 1.0, f32::NEG_INFINITY, 0.5];
-        let mut mb = ma.clone();
-        let row = [0.0f32, 0.0, f32::NAN, -7.0, 0.5];
+        let macc = vec![f32::NAN, -0.0, 1.0, f32::NEG_INFINITY, 0.5, 2.0, -1.0, 0.0, 7.0];
+        let row = [0.0f32, 0.0, f32::NAN, -7.0, 0.5, 3.0, -2.0, -0.0, 6.0];
+        let mut ma = macc.clone();
+        let mut mb = macc.clone();
+        let mut mc = macc.clone();
         max_in_place_scalar(&mut ma, &row);
         max_in_place_vector(&mut mb, &row);
+        max_in_place_avx2(&mut mc, &row);
         assert_eq!(bits(&ma), bits(&mb));
+        assert_eq!(bits(&ma), bits(&mc));
         assert!(ma[0].is_nan(), "accumulated NaN must not be displaced");
         assert_eq!(ma[1].to_bits(), (-0.0f32).to_bits(), "0.0 > -0.0 is false");
     }
 
     #[test]
     fn axpy_backends_bit_identical() {
-        let x: Vec<f32> = (0..11).map(|i| (i as f32 - 5.0) * 0.3).collect();
-        let mut a: Vec<f32> = (0..11).map(|i| (i as f32) * 0.7 - 2.0).collect();
-        let mut b = a.clone();
+        // 19 = two full AVX2 chunks plus a 3-element tail (four SSE2
+        // chunks plus the same tail).
+        let x: Vec<f32> = (0..19).map(|i| (i as f32 - 5.0) * 0.3).collect();
+        let base: Vec<f32> = (0..19).map(|i| (i as f32) * 0.7 - 2.0).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let mut c = base.clone();
         axpy_scalar(1.7, &x, &mut a);
         axpy_vector(1.7, &x, &mut b);
+        axpy_avx2(1.7, &x, &mut c);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&b));
+        assert_eq!(bits(&a), bits(&c));
+    }
+
+    #[test]
+    fn hoisted_kernels_match_dispatching_wrappers() {
+        let saved = mode();
+        for m in [SimdMode::Auto, SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2] {
+            set_mode(m);
+            let x: Vec<f32> = (0..13).map(|i| (i as f32) * 0.25 - 1.5).collect();
+            let mut a: Vec<f32> = (0..13).map(|i| 1.0 - (i as f32) * 0.5).collect();
+            let mut b = a.clone();
+            axpy(0.75, &x, &mut a);
+            axpy_kernel()(0.75, &x, &mut b);
+            relu_in_place(&mut a);
+            relu_kernel()(&mut b);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "mode {m}");
+        }
+        set_mode(saved);
     }
 
     #[test]

@@ -26,7 +26,7 @@ use pc2im::network::pointnet2::NetworkDef;
 use pc2im::pointcloud::synthetic::{
     make_class_cloud, make_labelled_batch, make_sweep, DatasetScale,
 };
-use pc2im::simd::{self, SimdMode};
+use pc2im::simd::{self, GemmKernel, SimdMode};
 
 fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
     PipelineConfig {
@@ -98,14 +98,16 @@ fn serve_digest_invariant_per_dataflow_across_tiers_prune_and_workers() {
     );
 }
 
-/// The SIMD axis: forcing the scalar backends must not move a single
-/// digest byte or logit bit under either dataflow (the delayed flow's
-/// per-point MLP and CSR max-pooling run through the same
-/// bit-identical kernel pairs as gather-first's).
+/// The host-kernel axes: forcing any SIMD backend ceiling
+/// (scalar/sse2/avx2) or either GEMM driver (blocked/reference) must not
+/// move a single digest byte or logit bit under either dataflow (the
+/// delayed flow's per-point MLP and CSR max-pooling run through the same
+/// bit-identical kernel set as gather-first's).
 #[test]
-fn scalar_simd_serving_matches_auto_for_both_dataflows() {
+fn kernel_choices_match_auto_blocked_for_both_dataflows() {
     let hw = HardwareConfig::default();
     let (clouds, labels) = make_labelled_batch(3, 1024, 9200);
+    let saved_gemm = simd::gemm_kernel();
     for dataflow in Dataflow::ALL {
         let serve = |dataflow| {
             PipelineBuilder::from_config(hermetic_cfg(Fidelity::Fast))
@@ -113,20 +115,36 @@ fn scalar_simd_serving_matches_auto_for_both_dataflows() {
                 .build_serve(ServeConfig { workers: 2, queue_depth: 2, ..ServeConfig::default() })
                 .unwrap()
         };
-        let auto_report = serve(dataflow).run(&clouds, &labels).unwrap();
-        simd::set_mode(SimdMode::Scalar);
-        let scalar_report = serve(dataflow).run(&clouds, &labels).unwrap();
         simd::set_mode(SimdMode::Auto);
-        assert_eq!(
-            stats_digest(&auto_report.stats, &hw),
-            stats_digest(&scalar_report.stats, &hw),
-            "dataflow={dataflow}: serve digest depends on the SIMD backend"
-        );
-        for (i, (a, s)) in auto_report.results.iter().zip(&scalar_report.results).enumerate() {
-            assert_eq!(a.logits, s.logits, "dataflow={dataflow} cloud {i}: scalar logits");
-            assert_eq!(a.stats.ledger, s.stats.ledger, "dataflow={dataflow} cloud {i}: ledger");
+        simd::set_gemm_kernel(GemmKernel::Blocked);
+        let auto_report = serve(dataflow).run(&clouds, &labels).unwrap();
+        for mode in [SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2] {
+            for gemm in [GemmKernel::Blocked, GemmKernel::Reference] {
+                simd::set_mode(mode);
+                simd::set_gemm_kernel(gemm);
+                let report = serve(dataflow).run(&clouds, &labels).unwrap();
+                simd::set_mode(SimdMode::Auto);
+                simd::set_gemm_kernel(GemmKernel::Blocked);
+                assert_eq!(
+                    stats_digest(&auto_report.stats, &hw),
+                    stats_digest(&report.stats, &hw),
+                    "dataflow={dataflow} simd={mode} gemm={gemm}: serve digest depends \
+                     on a host kernel choice"
+                );
+                for (i, (a, s)) in auto_report.results.iter().zip(&report.results).enumerate() {
+                    assert_eq!(
+                        a.logits, s.logits,
+                        "dataflow={dataflow} simd={mode} gemm={gemm} cloud {i}: logits"
+                    );
+                    assert_eq!(
+                        a.stats.ledger, s.stats.ledger,
+                        "dataflow={dataflow} simd={mode} gemm={gemm} cloud {i}: ledger"
+                    );
+                }
+            }
         }
     }
+    simd::set_gemm_kernel(saved_gemm);
 }
 
 /// Warm streaming == cold classification under both dataflows: the

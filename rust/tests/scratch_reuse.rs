@@ -176,6 +176,65 @@ fn warm_classify_allocator_traffic_is_dataflow_invariant() {
     );
 }
 
+/// The allocator lane for the host-kernel axes: weight panels are packed
+/// **once at executor build**, so on a warm lane, switching `--gemm`
+/// (blocked ↔ reference) or `--simd` (auto ↔ scalar ceiling) changes
+/// warm-classify allocator traffic by exactly zero calls — across both
+/// fidelity tiers and both dataflows. This is what makes the blocked
+/// kernel a pure speed lever: no per-cloud packing, no kernel-dependent
+/// scratch. CI runs this lane with `--test-threads=1`, so the
+/// process-wide mode/kernel toggles cannot race other tests.
+#[cfg(feature = "alloc-counter")]
+#[test]
+fn warm_classify_allocator_traffic_is_kernel_invariant() {
+    use pc2im::alloc_counter::allocation_count;
+    use pc2im::engine::Dataflow;
+    use pc2im::simd::{self, GemmKernel, SimdMode};
+
+    let saved_mode = simd::mode();
+    let saved_gemm = simd::gemm_kernel();
+    let clouds: Vec<_> = (0..3).map(|s| make_class_cloud(s % 8, 1024, 80 + s as u64)).collect();
+    for fidelity in Fidelity::ALL {
+        for dataflow in Dataflow::ALL {
+            let mut pipe = PipelineBuilder::from_config(hermetic_cfg(fidelity))
+                .dataflow(dataflow)
+                .prune(true)
+                .build()
+                .unwrap();
+            for c in &clouds {
+                pipe.classify(c).unwrap(); // warm the arena under the default kernel
+            }
+            let mut per_kernel: Vec<(String, u64)> = Vec::new();
+            for gemm in [GemmKernel::Blocked, GemmKernel::Reference] {
+                for mode in [SimdMode::Auto, SimdMode::Scalar] {
+                    simd::set_gemm_kernel(gemm);
+                    simd::set_mode(mode);
+                    let before = allocation_count();
+                    for c in &clouds {
+                        let r = pipe.classify(c).unwrap();
+                        assert_eq!(
+                            r.stats.scratch_allocs, 0,
+                            "fidelity={fidelity} dataflow={dataflow} gemm={gemm} mode={mode}: \
+                             warm classify grew a tracked buffer"
+                        );
+                    }
+                    per_kernel.push((format!("{gemm}+{mode}"), allocation_count() - before));
+                }
+            }
+            let (base_label, base) = &per_kernel[0];
+            for (label, n) in &per_kernel[1..] {
+                assert_eq!(
+                    n, base,
+                    "fidelity={fidelity} dataflow={dataflow}: kernel {label} made {n} \
+                     allocator calls vs {base} under {base_label}"
+                );
+            }
+        }
+    }
+    simd::set_mode(saved_mode);
+    simd::set_gemm_kernel(saved_gemm);
+}
+
 /// The allocator-level contract for temporal streaming: once a lane has
 /// served one cold frame (building the persistent session index) and one
 /// warm frame (growing the repair bookkeeping to steady size), every

@@ -7,8 +7,9 @@
 //!    rate, and the in-system population never exceeds
 //!    `queue_depth + workers`.
 //! 3. **Digest invariance** — the serve stats digest is identical across
-//!    {1,4} workers × {bit-exact,fast} × {SIMD,scalar}: neither the load
-//!    model nor the kernel backend may reach the numeric stream.
+//!    {1,4} workers × {bit-exact,fast} × {scalar,sse2,avx2,auto} ×
+//!    {blocked,reference GEMM}: neither the load model nor any kernel
+//!    choice may reach the numeric stream.
 //! 4. **Shedding is a load-model outcome** — shed requests still carry
 //!    real classifications; only their virtual timestamps are infinite.
 
@@ -17,7 +18,7 @@ use pc2im::coordinator::serve::{poisson_arrivals_into, stats_digest};
 use pc2im::coordinator::{PipelineBuilder, ServeEngine};
 use pc2im::engine::Fidelity;
 use pc2im::pointcloud::synthetic::make_labelled_batch;
-use pc2im::simd::{self, SimdMode};
+use pc2im::simd::{self, GemmKernel, SimdMode};
 
 fn hermetic_cfg(fidelity: Fidelity) -> PipelineConfig {
     PipelineConfig {
@@ -135,39 +136,44 @@ fn percentiles_monotone_and_in_system_bounded_at_every_rate() {
 }
 
 #[test]
-fn digest_invariant_across_workers_tiers_and_simd_modes() {
+fn digest_invariant_across_workers_tiers_simd_modes_and_gemm_kernels() {
     let (clouds, labels) = make_labelled_batch(4, 1024, 4300);
+    let saved_gemm = simd::gemm_kernel();
     let mut reference: Option<(String, Vec<f32>, Vec<usize>)> = None;
     for fidelity in Fidelity::ALL {
         for workers in [1usize, 4] {
-            for mode in [SimdMode::Auto, SimdMode::Scalar] {
-                simd::set_mode(mode);
-                let mut eng = engine(fidelity, workers, 4);
-                let hw = *eng.pipeline().hardware();
-                let report = eng.run_open_loop(&clouds, &labels, NEAR, 4300).unwrap();
-                let digest = stats_digest(&report.serve.stats, &hw);
-                let logits = report.serve.results[0].logits.clone();
-                let preds = report.serve.preds();
-                match &reference {
-                    None => reference = Some((digest, logits, preds)),
-                    Some((d, l, p)) => {
-                        assert_eq!(
-                            d, &digest,
-                            "digest depends on fidelity={fidelity} workers={workers} \
-                             simd={mode}"
-                        );
-                        assert_eq!(
-                            l, &logits,
-                            "logits depend on fidelity={fidelity} workers={workers} \
-                             simd={mode}"
-                        );
-                        assert_eq!(p, &preds, "preds depend on the cell");
+            for mode in [SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2, SimdMode::Auto] {
+                for gemm in [GemmKernel::Blocked, GemmKernel::Reference] {
+                    simd::set_mode(mode);
+                    simd::set_gemm_kernel(gemm);
+                    let mut eng = engine(fidelity, workers, 4);
+                    let hw = *eng.pipeline().hardware();
+                    let report = eng.run_open_loop(&clouds, &labels, NEAR, 4300).unwrap();
+                    let digest = stats_digest(&report.serve.stats, &hw);
+                    let logits = report.serve.results[0].logits.clone();
+                    let preds = report.serve.preds();
+                    match &reference {
+                        None => reference = Some((digest, logits, preds)),
+                        Some((d, l, p)) => {
+                            assert_eq!(
+                                d, &digest,
+                                "digest depends on fidelity={fidelity} workers={workers} \
+                                 simd={mode} gemm={gemm}"
+                            );
+                            assert_eq!(
+                                l, &logits,
+                                "logits depend on fidelity={fidelity} workers={workers} \
+                                 simd={mode} gemm={gemm}"
+                            );
+                            assert_eq!(p, &preds, "preds depend on the cell");
+                        }
                     }
                 }
             }
         }
     }
     simd::set_mode(SimdMode::Auto);
+    simd::set_gemm_kernel(saved_gemm);
 }
 
 #[test]

@@ -2,18 +2,28 @@
 //! generator harness as `property_invariants.rs`: seeded [`Rng64`] cases,
 //! failing case index in every assert message).
 //!
-//! The contract under test is `crate::simd`'s: the `_vector` and
-//! `_scalar` entry points of every kernel return **bit-identical**
-//! results — exact integers for the L1 distances, identical IEEE-754
-//! rounding sequences for axpy, identical NaN/−0.0 semantics for ReLU
-//! and running max — over randomized lengths including the
-//! non-multiple-of-lane-width tails, and therefore so do the MLP
-//! microkernels and the serve digest built on top of them.
+//! The contract under test is `crate::simd`'s: the `_avx2`, `_vector`
+//! (SSE2) and `_scalar` entry points of every kernel return
+//! **bit-identical** results — exact integers for the L1 distances,
+//! identical IEEE-754 rounding sequences for axpy, identical NaN/−0.0
+//! semantics for ReLU and running max — over randomized lengths
+//! including the non-multiple-of-lane-width tails, and therefore so do
+//! the MLP microkernels and the serve digest built on top of them. The
+//! second half extends the contract to the GEMM drivers: the blocked
+//! packed-panel kernel matches the per-row reference loop byte for byte
+//! under NaN/±0.0/inf weights, all-zero activation rows, row-block
+//! remainders and channel tails, in every dispatch mode.
 
 use pc2im::quant::QPoint3;
 use pc2im::rng::Rng64;
-use pc2im::runtime::reference::{grouped_max_ref_into, mlp_layer_ref_into, DenseLayer};
+use pc2im::runtime::reference::{
+    apply_stack_blocked_into, apply_stack_ref_into, grouped_max_ref_into, mlp_layer_blocked_into,
+    mlp_layer_ref_into, pack_stack, DenseLayer, PackedLayer, PANEL_WIDTH, ROW_BLOCK,
+};
 use pc2im::simd::{self, SimdMode};
+
+/// Every dispatch mode: explicit backends plus the probe-driven default.
+const MODES: [SimdMode; 4] = [SimdMode::Scalar, SimdMode::Sse2, SimdMode::Avx2, SimdMode::Auto];
 
 const CASES: u64 = 60;
 
@@ -53,9 +63,12 @@ fn l1_lanes_backends_bit_identical_over_random_lengths() {
         let r = QPoint3 { x: gen_u16(&mut rng), y: gen_u16(&mut rng), z: gen_u16(&mut rng) };
         let mut scalar = Vec::new();
         let mut vector = Vec::new();
+        let mut avx2 = Vec::new();
         simd::l1_lanes_scalar(&xs, &ys, &zs, r, |k, d| scalar.push((k, d)));
         simd::l1_lanes_vector(&xs, &ys, &zs, r, |k, d| vector.push((k, d)));
+        simd::l1_lanes_avx2(&xs, &ys, &zs, r, |k, d| avx2.push((k, d)));
         assert_eq!(scalar, vector, "case {case} (n={n}): backends disagree");
+        assert_eq!(scalar, avx2, "case {case} (n={n}): avx2 backend disagrees");
         assert_eq!(scalar.len(), n, "case {case}: missing emissions");
         for (i, &(k, d)) in scalar.iter().enumerate() {
             assert_eq!(k, i, "case {case}: emission order broke at {i}");
@@ -77,9 +90,12 @@ fn axpy_backends_bit_identical_over_random_lengths() {
         let y0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, false)).collect();
         let mut ys = y0.clone();
         let mut yv = y0.clone();
+        let mut ya = y0.clone();
         simd::axpy_scalar(a, &x, &mut ys);
         simd::axpy_vector(a, &x, &mut yv);
+        simd::axpy_avx2(a, &x, &mut ya);
         assert_eq!(bits(&ys), bits(&yv), "case {case} (n={n}, a={a}): axpy bits diverged");
+        assert_eq!(bits(&ys), bits(&ya), "case {case} (n={n}, a={a}): avx2 axpy bits diverged");
     }
 }
 
@@ -91,25 +107,31 @@ fn relu_and_max_backends_bit_identical_including_specials() {
         let v0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
         let mut vs = v0.clone();
         let mut vv = v0.clone();
+        let mut va = v0.clone();
         simd::relu_in_place_scalar(&mut vs);
         simd::relu_in_place_vector(&mut vv);
+        simd::relu_in_place_avx2(&mut va);
         assert_eq!(bits(&vs), bits(&vv), "case {case} (n={n}): ReLU bits diverged");
+        assert_eq!(bits(&vs), bits(&va), "case {case} (n={n}): avx2 ReLU bits diverged");
 
         let acc0: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
         let row: Vec<f32> = (0..n).map(|_| gen_f32(&mut rng, true)).collect();
         let mut accs = acc0.clone();
         let mut accv = acc0.clone();
+        let mut acca = acc0.clone();
         simd::max_in_place_scalar(&mut accs, &row);
         simd::max_in_place_vector(&mut accv, &row);
+        simd::max_in_place_avx2(&mut acca, &row);
         assert_eq!(bits(&accs), bits(&accv), "case {case} (n={n}): max bits diverged");
+        assert_eq!(bits(&accs), bits(&acca), "case {case} (n={n}): avx2 max bits diverged");
     }
 }
 
 /// The composed contract: the reference executor's MLP microkernels —
 /// dense layer (axpy + ReLU over the zero-skip row loop) and grouped max
-/// pooling — are bit-identical under the two process-wide [`SimdMode`]s,
+/// pooling — are bit-identical under every process-wide [`SimdMode`],
 /// over random shapes whose channel counts are deliberately not
-/// multiples of the vector width.
+/// multiples of either vector width.
 #[test]
 fn mlp_microkernels_bit_identical_across_modes() {
     let saved = simd::mode();
@@ -117,11 +139,11 @@ fn mlp_microkernels_bit_identical_across_modes() {
         let mut rng = Rng64::new(0x317D + case);
         let rows = rng.range_usize(1, 7);
         let cin = rng.range_usize(1, 9);
-        let cout = rng.range_usize(1, 39); // tails: rarely a multiple of 4
+        let cout = rng.range_usize(1, 39); // tails: rarely a multiple of 4 or 8
         let w: Vec<f32> = (0..cin * cout).map(|_| gen_f32(&mut rng, false)).collect();
         let b: Vec<f32> = (0..cout).map(|_| gen_f32(&mut rng, false)).collect();
         let layer = DenseLayer::new(cin, cout, w, b).unwrap();
-        // Inject exact zeros so the sparsity skip runs in both modes.
+        // Inject exact zeros so the sparsity skip runs in every mode.
         let x: Vec<f32> = (0..rows * cin)
             .map(|_| if rng.below(4) == 0 { 0.0 } else { gen_f32(&mut rng, false) })
             .collect();
@@ -130,30 +152,172 @@ fn mlp_microkernels_bit_identical_across_modes() {
         simd::set_mode(SimdMode::Scalar);
         let mut dense_scalar = Vec::new();
         mlp_layer_ref_into(&x, rows, &layer, relu, &mut dense_scalar);
-        simd::set_mode(SimdMode::Auto);
-        let mut dense_auto = Vec::new();
-        mlp_layer_ref_into(&x, rows, &layer, relu, &mut dense_auto);
-        assert_eq!(
-            bits(&dense_scalar),
-            bits(&dense_auto),
-            "case {case} (rows={rows} cin={cin} cout={cout} relu={relu}): dense bits diverged"
-        );
 
         let s = rng.range_usize(1, 5);
         let k = rng.range_usize(1, 6);
         let c = rng.range_usize(1, 23);
         let pool_in: Vec<f32> = (0..s * k * c).map(|_| gen_f32(&mut rng, false)).collect();
-        simd::set_mode(SimdMode::Scalar);
         let mut pool_scalar = Vec::new();
         grouped_max_ref_into(&pool_in, s, k, c, &mut pool_scalar);
-        simd::set_mode(SimdMode::Auto);
-        let mut pool_auto = Vec::new();
-        grouped_max_ref_into(&pool_in, s, k, c, &mut pool_auto);
-        assert_eq!(
-            bits(&pool_scalar),
-            bits(&pool_auto),
-            "case {case} (s={s} k={k} c={c}): grouped-max bits diverged"
-        );
+
+        for mode in MODES {
+            simd::set_mode(mode);
+            let mut dense = Vec::new();
+            mlp_layer_ref_into(&x, rows, &layer, relu, &mut dense);
+            assert_eq!(
+                bits(&dense_scalar),
+                bits(&dense),
+                "case {case} mode {mode} (rows={rows} cin={cin} cout={cout} relu={relu}): \
+                 dense bits diverged"
+            );
+            let mut pool = Vec::new();
+            grouped_max_ref_into(&pool_in, s, k, c, &mut pool);
+            assert_eq!(
+                bits(&pool_scalar),
+                bits(&pool),
+                "case {case} mode {mode} (s={s} k={k} c={c}): grouped-max bits diverged"
+            );
+        }
+    }
+    simd::set_mode(saved);
+}
+
+/// Weight generator for the GEMM sweeps: everything [`gen_f32`] emits
+/// plus ±inf. Weights hide behind the zero-skip rule — a NaN or inf
+/// weight multiplied by a *skipped* zero activation must never reach the
+/// output — so they are the strongest probe of driver equivalence.
+fn gen_weight(rng: &mut Rng64) -> f32 {
+    match rng.below(12) {
+        10 => f32::INFINITY,
+        11 => f32::NEG_INFINITY,
+        _ => gen_f32(rng, true),
+    }
+}
+
+/// Shape schedule for the GEMM sweeps: random shapes plus forced cases
+/// that sit exactly on and just past the row-block and panel boundaries.
+fn gemm_shape(rng: &mut Rng64, case: u64) -> (usize, usize, usize) {
+    const FORCED: [(usize, usize, usize); 8] = [
+        (ROW_BLOCK, 3, PANEL_WIDTH),         // exact block × exact panel
+        (ROW_BLOCK + 1, 3, PANEL_WIDTH + 1), // one-past remainders
+        (2 * ROW_BLOCK, 5, 2 * PANEL_WIDTH),
+        (2 * ROW_BLOCK + 1, 5, 2 * PANEL_WIDTH + 1),
+        (1, 1, 1),                           // degenerate minimum
+        (ROW_BLOCK - 1, 7, PANEL_WIDTH - 1), // just-under tails
+        (3, 131, 128),                       // sa2-like wide reduction
+        (ROW_BLOCK, 64, 40),                 // mid panel tail (40 = 2·16 + 8)
+    ];
+    if (case as usize) < FORCED.len() {
+        FORCED[case as usize]
+    } else {
+        (rng.range_usize(1, 20), rng.range_usize(1, 10), rng.range_usize(1, 40))
+    }
+}
+
+/// The tentpole contract at single-layer granularity: the packed-panel
+/// blocked driver is **bit-identical** to the per-row reference loop in
+/// every dispatch mode, including under NaN/±0.0/±inf weights, all-zero
+/// activation rows, row-block remainders and channel-panel tails.
+#[test]
+fn blocked_gemm_matches_reference_bitwise_across_modes() {
+    let saved = simd::mode();
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0x6E77 + case);
+        let (rows, cin, cout) = gemm_shape(&mut rng, case);
+        let w: Vec<f32> = (0..cin * cout).map(|_| gen_weight(&mut rng)).collect();
+        let b: Vec<f32> = (0..cout).map(|_| gen_weight(&mut rng)).collect();
+        let layer = DenseLayer::new(cin, cout, w, b).unwrap();
+        let packed = PackedLayer::pack(&layer);
+        // 25% exact zeros per element, plus entire rows zeroed 1-in-4:
+        // the zero-skip must fire identically in both drivers, and an
+        // all-zero row must come out as bias (ReLU'd), never NaN — even
+        // though the weight matrix holds NaN and ±inf.
+        let zero_row: Vec<bool> = (0..rows).map(|_| rng.below(4) == 0).collect();
+        let x: Vec<f32> = (0..rows * cin)
+            .map(|i| {
+                if zero_row[i / cin] || rng.below(4) == 0 {
+                    0.0
+                } else {
+                    gen_f32(&mut rng, false)
+                }
+            })
+            .collect();
+        let relu = rng.below(2) == 0;
+
+        simd::set_mode(SimdMode::Scalar);
+        let mut golden = Vec::new();
+        mlp_layer_ref_into(&x, rows, &layer, relu, &mut golden);
+
+        for mode in MODES {
+            simd::set_mode(mode);
+            let mut reference = Vec::new();
+            mlp_layer_ref_into(&x, rows, &layer, relu, &mut reference);
+            let mut blocked = Vec::new();
+            mlp_layer_blocked_into(&x, rows, &layer, &packed, relu, &mut blocked);
+            assert_eq!(
+                bits(&golden),
+                bits(&reference),
+                "case {case} mode {mode} (rows={rows} cin={cin} cout={cout} relu={relu}): \
+                 reference driver drifted across modes"
+            );
+            assert_eq!(
+                bits(&golden),
+                bits(&blocked),
+                "case {case} mode {mode} (rows={rows} cin={cin} cout={cout} relu={relu}): \
+                 blocked driver diverged from reference"
+            );
+        }
+    }
+    simd::set_mode(saved);
+}
+
+/// Stack-level twin of the test above: a whole random MLP stack driven
+/// through [`apply_stack_blocked_into`] matches [`apply_stack_ref_into`]
+/// bitwise in every dispatch mode, across layer-count and ping-pong
+/// parity (odd/even depth lands the result in different scratch
+/// buffers).
+#[test]
+fn blocked_stack_matches_reference_bitwise_across_modes() {
+    let saved = simd::mode();
+    for case in 0..CASES {
+        let mut rng = Rng64::new(0x57AC + case);
+        let rows = rng.range_usize(1, 2 * ROW_BLOCK + 2);
+        let depth = rng.range_usize(1, 5);
+        let mut dims = vec![rng.range_usize(1, 10)];
+        for _ in 0..depth {
+            dims.push(rng.range_usize(1, PANEL_WIDTH + 20));
+        }
+        let stack: Vec<DenseLayer> = (0..depth)
+            .map(|l| {
+                let (cin, cout) = (dims[l], dims[l + 1]);
+                let w: Vec<f32> = (0..cin * cout).map(|_| gen_weight(&mut rng)).collect();
+                let b: Vec<f32> = (0..cout).map(|_| gen_f32(&mut rng, false)).collect();
+                DenseLayer::new(cin, cout, w, b).unwrap()
+            })
+            .collect();
+        let packed = pack_stack(&stack);
+        let x: Vec<f32> = (0..rows * dims[0])
+            .map(|_| if rng.below(4) == 0 { 0.0 } else { gen_f32(&mut rng, false) })
+            .collect();
+        let last_relu = rng.below(2) == 0;
+
+        simd::set_mode(SimdMode::Scalar);
+        let (mut a, mut b_buf) = (Vec::new(), Vec::new());
+        let golden = apply_stack_ref_into(&stack, &x, rows, last_relu, &mut a, &mut b_buf).to_vec();
+
+        for mode in MODES {
+            simd::set_mode(mode);
+            let (mut a, mut b_buf) = (Vec::new(), Vec::new());
+            let got = apply_stack_blocked_into(
+                &stack, &packed, &x, rows, last_relu, &mut a, &mut b_buf,
+            );
+            assert_eq!(
+                bits(&golden),
+                bits(got),
+                "case {case} mode {mode} (rows={rows} dims={dims:?} last_relu={last_relu}): \
+                 blocked stack diverged"
+            );
+        }
     }
     simd::set_mode(saved);
 }

@@ -454,7 +454,7 @@ def energy_pj(run):
 EXISTING_ANCHORS = (
     "BENCH_seed.json", "BENCH_serve.json", "BENCH_fidelity.json",
     "BENCH_prep.json", "BENCH_prune.json", "BENCH_knn.json",
-    "BENCH_stream.json",
+    "BENCH_stream.json", "BENCH_dataflow.json",
 )
 
 
@@ -1125,6 +1125,67 @@ def main():
         for key in ("total_macs", "mac_cycles", "feature_cycles", "gathered_flops"):
             assert by["delayed"][key] < by["gather-first"][key], (n, key)
 
+    # ---- BENCH_mlp.json: blocked-GEMM host-floor shape sweep ----
+    #
+    # The deterministic side of benches/mlp_throughput.rs: the layer
+    # shapes the canonical pipeline drives through the host MLP floor
+    # (sa1/sa2 gathered rows, the wide sa2/sa3 reductions, the
+    # single-row head, one ragged shape aligned to neither the row
+    # block nor the panel width), with the FLOP count and the packed
+    # panel/row-block geometry per cell. Timing is machine-dependent and
+    # never committed; these counts are what the bench's digest and the
+    # blocked-vs-reference bit-identity contract range over. PANEL_WIDTH
+    # and ROW_BLOCK mirror rust/src/runtime/reference.rs.
+    panel_width, row_block = 16, 8
+    mlp_cells = []
+    for rows, cin, cout in ((8192, 3, 64), (8192, 64, 128), (1024, 131, 128),
+                            (1024, 128, 256), (64, 259, 512), (1, 512, 256),
+                            (37, 19, 23)):
+        mlp_cells.append({
+            "rows": rows, "cin": cin, "cout": cout,
+            "flops": 2 * rows * cin * cout,
+            "panels": -(-cout // panel_width),
+            "row_blocks": -(-rows // row_block),
+            "packed_floats": cin * cout,
+        })
+    mlp_out = {
+        "schema": 1,
+        "source": "scripts/gen_bench_baseline.py — shape sweep of "
+                  "benches/mlp_throughput.rs (host blocked-GEMM floor)",
+        "note": (
+            "Deterministic geometry of the blocked packed-panel GEMM sweep: "
+            "per cell, the FLOP count (2 per MAC), the number of "
+            "PANEL_WIDTH-column weight panels, ROW_BLOCK-row activation "
+            "blocks and packed weight floats. The bench asserts the blocked "
+            "driver bit-identical to the per-row reference loop on every "
+            "cell under every --simd mode, and faster in aggregate outside "
+            "smoke mode. Panels are packed once at executor build, so "
+            "--gemm/--simd add zero warm-path allocations (rust/tests/"
+            "scratch_reuse.rs)."
+        ),
+        "kernel": {
+            "panel_width": panel_width, "row_block": row_block,
+            "simd_modes": ["auto", "scalar", "sse2", "avx2"],
+            "gemm_kernels": ["blocked", "reference"],
+        },
+        "cells": mlp_cells,
+        "total_flops": sum(c["flops"] for c in mlp_cells),
+    }
+    mlp_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_mlp.json"
+    )
+    with open(mlp_path, "w") as f:
+        json.dump(mlp_out, f, indent=1)
+        f.write("\n")
+    # mlp sanity: the sweep total is pinned (a silent cell edit must fail
+    # here, not drift the committed anchor), the two big cells mirror the
+    # canonical gathered-row counts (256*32 and 64*16 rows), and the
+    # ragged cell really is aligned to nothing.
+    assert mlp_out["total_flops"] == 256_081_490, mlp_out["total_flops"]
+    assert mlp_cells[0]["rows"] == 256 * 32 and mlp_cells[2]["rows"] == 64 * 16
+    ragged = mlp_cells[-1]
+    assert ragged["rows"] % row_block and ragged["cout"] % panel_width, ragged
+
     # Regeneration guard: additive extensions must not perturb the other
     # committed anchors. A deliberate cost-model change reruns with
     # PC2IM_EXPECT_BENCH_DRIFT=1 to accept the new numbers.
@@ -1145,6 +1206,7 @@ def main():
     print(f"wrote {os.path.normpath(knn_path)}")
     print(f"wrote {os.path.normpath(stream_path)}")
     print(f"wrote {os.path.normpath(dataflow_path)}")
+    print(f"wrote {os.path.normpath(mlp_path)}")
     print(json.dumps(out["fig13a_latency"], indent=1))
     print(json.dumps(serve_out["serve_throughput"], indent=1))
     print(json.dumps(fidelity_out["serve_fidelity"], indent=1))
